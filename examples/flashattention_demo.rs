@@ -1,0 +1,52 @@
+//! Scenario: FlashAttention-2 on one cluster with the GPT-2 head
+//! configuration, checking numerics against exact attention and
+//! reporting the Fig. 6d-f metrics; also cross-checks against the
+//! PJRT-executed Pallas FA-2 artifact.
+//!
+//! Run: `cargo run --release --example flashattention_demo`
+
+use anyhow::Result;
+use vexp::energy::power::cluster_energy_pj;
+use vexp::kernels::flash_attention::{attention_ref, run_flash_attention, FaVariant};
+use vexp::runtime::pjrt::Input;
+use vexp::runtime::Runtime;
+
+fn mat(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed | 1;
+    (0..n).map(|_| {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+        ((s >> 33) as f64 / 2f64.powi(31) * 2.0 - 1.0) as f32
+    }).collect()
+}
+
+fn main() -> Result<()> {
+    let (sq, sk, d, bk) = (32u32, 128u32, 64u32, 32u32);
+    let q = mat((sq * d) as usize, 1);
+    let k = mat((sk * d) as usize, 2);
+    let v = mat((sk * d) as usize, 3);
+
+    let base = run_flash_attention(FaVariant::Baseline, &q, &k, &v, sq, sk, d, bk);
+    let opt = run_flash_attention(FaVariant::Optimized, &q, &k, &v, sq, sk, d, bk);
+    let want = attention_ref(&q, &k, &v, sq as usize, sk as usize, d as usize);
+    let max_err = opt.out.iter().zip(&want).map(|(g, w)| (g - w).abs()).fold(0.0f32, f32::max);
+    println!("simulator FA-2 vs exact attention: max|err| = {max_err:.4}");
+
+    let eb = cluster_energy_pj(&base.stats, false).total();
+    let eo = cluster_energy_pj(&opt.stats, true).total();
+    println!(
+        "speedup {:.1}x (paper: up to 8.2x), energy ratio {:.1}x (paper: up to 4.1x)",
+        base.stats.cycles as f64 / opt.stats.cycles as f64,
+        eb / eo
+    );
+
+    // cross-check against the Pallas artifact (128x64 Q, 256x64 K/V)
+    let mut rt = Runtime::open("artifacts")?;
+    let q2 = mat(128 * 64, 4);
+    let k2 = mat(256 * 64, 5);
+    let v2 = mat(256 * 64, 6);
+    let pj = rt.execute("fa2_vexp", &[Input::F32(&q2), Input::F32(&k2), Input::F32(&v2)])?;
+    let want2 = attention_ref(&q2, &k2, &v2, 128, 256, 64);
+    let err2 = pj.iter().zip(&want2).map(|(g, w)| (g - w).abs()).fold(0.0f32, f32::max);
+    println!("PJRT Pallas FA-2 artifact vs exact attention: max|err| = {err2:.4}");
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Scenario: sweep the four softmax configurations over sequence lengths
+//! (the Fig. 6a-c experiment as a library consumer would run it).
+//!
+//! Run: `cargo run --release --example softmax_comparison`
+
+use vexp::energy::power::cluster_energy_pj;
+use vexp::kernels::softmax::{run_softmax, softmax_ref, SoftmaxVariant};
+
+fn main() {
+    for n in [128usize, 512, 2048] {
+        let rows: Vec<Vec<f32>> = (0..8)
+            .map(|r| (0..n).map(|i| ((i * 11 + r * 17) % 89) as f32 * 0.2 - 8.0).collect())
+            .collect();
+        println!("=== sequence length {n} ===");
+        for v in SoftmaxVariant::ALL {
+            let run = run_softmax(v, &rows);
+            // numeric sanity against the f32 oracle
+            let mut max_err = 0.0f32;
+            for (row, out) in rows.iter().zip(&run.out) {
+                for (w, g) in softmax_ref(row).iter().zip(out) {
+                    max_err = max_err.max((g - w).abs());
+                }
+            }
+            let e = cluster_energy_pj(&run.stats, v == SoftmaxVariant::SwExpHw);
+            println!(
+                "{:24} {:>9.2} cyc/out  {:>10.1} pJ/out  max|err| {:.4}",
+                v.label(),
+                run.cycles_per_output,
+                e.total() / (8 * n) as f64,
+                max_err
+            );
+        }
+    }
+}

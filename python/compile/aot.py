@@ -1,0 +1,145 @@
+"""AOT compile path: lower every Layer-2 entry point to HLO *text*.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the Rust ``xla`` crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and README gotchas.
+
+Outputs (all under ``artifacts/``):
+  *.hlo.txt          one per entry point (f32/i32 I/O only — the Rust
+                     Literal API speaks f32/i32; BF16 casts live inside)
+  vexp_golden.bin    65536 u16 VEXP outputs, index = input bit pattern
+                     (the Rust exhaustive cross-check, see rust/src/vexp)
+  theta_random.bin   random-init flat parameter vector for the tiny model
+  manifest.json      artifact index: entry point -> input/output shapes
+
+Run via ``make artifacts``; Python never runs after this step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.flash_attention import flash_attention_pallas
+from .kernels.softmax import softmax_pallas
+from .kernels.vexp import vexp_numpy_bits, vexp_pallas
+from .model import TINY, forward_flat, init_params, flatten_params, num_params
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Entry points (f32 in / f32 out; bf16 internals)
+# ---------------------------------------------------------------------------
+def ep_vexp(x):
+    """Elementwise VEXP over a vector (the VFEXP instruction, en masse)."""
+    return (vexp_pallas(x.astype(jnp.bfloat16)).astype(jnp.float32),)
+
+
+def ep_softmax(x, use_vexp: bool):
+    return (softmax_pallas(x, use_vexp=use_vexp).astype(jnp.float32),)
+
+
+def ep_fa2(q, k, v, use_vexp: bool):
+    return (flash_attention_pallas(q, k, v, use_vexp=use_vexp)
+            .astype(jnp.float32),)
+
+
+def ep_model(tokens, theta, mode: str):
+    return (forward_flat(tokens, theta, TINY, mode=mode),)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points():
+    """(name, fn, example_args) for every artifact."""
+    n_theta = num_params(TINY)
+    f = jnp.float32
+    i = jnp.int32
+    return [
+        ("vexp", ep_vexp, [_spec((4096,), f)]),
+        ("softmax_vexp", functools.partial(ep_softmax, use_vexp=True),
+         [_spec((64, 512), f)]),
+        ("softmax_exact", functools.partial(ep_softmax, use_vexp=False),
+         [_spec((64, 512), f)]),
+        ("fa2_vexp", functools.partial(ep_fa2, use_vexp=True),
+         [_spec((128, 64), f), _spec((256, 64), f), _spec((256, 64), f)]),
+        ("fa2_exact", functools.partial(ep_fa2, use_vexp=False),
+         [_spec((128, 64), f), _spec((256, 64), f), _spec((256, 64), f)]),
+        ("gpt_tiny_vexp", functools.partial(ep_model, mode="bf16_exp"),
+         [_spec((1, 128), i), _spec((n_theta,), f)]),
+        ("gpt_tiny_fp32", functools.partial(ep_model, mode="fp32"),
+         [_spec((1, 128), i), _spec((n_theta,), f)]),
+        ("gpt_tiny_vexp_b8", functools.partial(ep_model, mode="bf16_exp"),
+         [_spec((8, 128), i), _spec((n_theta,), f)]),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated entry-point names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"model_config": {
+        "vocab": TINY.vocab, "d_model": TINY.d_model, "n_heads": TINY.n_heads,
+        "n_layers": TINY.n_layers, "d_ff": TINY.d_ff, "max_seq": TINY.max_seq,
+        "n_params": num_params(TINY),
+    }, "entry_points": {}}
+
+    for name, fn, specs in entry_points():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entry_points"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                       for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Exhaustive golden table: Rust replays all 2^16 BF16 inputs against it.
+    golden = vexp_numpy_bits(np.arange(65536, dtype=np.uint32).astype(np.uint16))
+    gpath = os.path.join(args.out_dir, "vexp_golden.bin")
+    golden.astype("<u2").tofile(gpath)
+    print(f"wrote {gpath} (65536 entries)")
+
+    # Random-init theta so the Rust e2e example runs before training exists.
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    theta = flatten_params(params, TINY)
+    tpath = os.path.join(args.out_dir, "theta_random.bin")
+    theta.astype("<f4").tofile(tpath)
+    print(f"wrote {tpath} ({theta.size} f32)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""FlashAttention-2 forward with partial softmax (paper §III-B/§IV-D).
+
+The kernel tiles K/V along the sequence axis and maintains running
+row statistics (max ``m`` and exp-sum ``l``) exactly as FlashAttention-2
+does on the Snitch SPM. The exponential inside the partial softmax is
+pluggable: exact (f32 exp) or VEXP (the paper's hardware approximation).
+
+On TPU this maps to: Q block resident in VMEM (BlockSpec over query rows),
+K/V streamed block-by-block HBM->VMEM (the fori_lax loop below), QK^T and
+PV on the MXU, the partial softmax on the VPU — the same split the paper
+implements with the DMA double buffer + FPU + EXP block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .vexp import vexp
+
+
+def _exp_fn(x, use_vexp: bool):
+    if use_vexp:
+        return vexp(x.astype(jnp.bfloat16)).astype(jnp.float32)
+    return jnp.exp(x.astype(jnp.float32))
+
+
+def flash_attention_rows(q, k, v, block_k: int = 64, use_vexp: bool = True,
+                         scale: float | None = None):
+    """Single-head FlashAttention-2 over (Sq, d), (Sk, d), (Sk, d).
+
+    Pure-jnp tiled implementation (the structural twin of the Rust kernel in
+    ``rust/src/kernels/flash_attention.rs``); used as the L2 building block
+    and as a readable reference for the Pallas kernel below.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    sq, d = q.shape
+    sk = k.shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    bk = min(block_k, sk)
+    if sk % bk != 0:
+        bk = sk
+    nblk = sk // bk
+
+    def body(i, carry):
+        acc, m, l = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * bk, bk, axis=0)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * bk, bk, axis=0)
+        s = (q @ kb.T) * scale                        # (Sq, bk) on the MXU
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))   # partial MAX
+        p = _exp_fn(s - m_new[:, None], use_vexp)     # partial EXP
+        corr = _exp_fn(m - m_new, use_vexp)           # rescale old stats
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ vb            # PV on the MXU
+        return acc, m_new, l
+
+    acc = jnp.zeros((sq, d), jnp.float32)
+    m0 = jnp.full((sq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((sq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nblk, body, (acc, m0, l0))
+    return acc / l[:, None]                           # NORM: one div per row
+
+
+def _fa2_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, use_vexp: bool,
+                scale: float):
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    sq, d = q.shape
+    sk = k.shape[0]
+    nblk = sk // block_k
+
+    def body(i, carry):
+        acc, m, l = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * block_k, block_k, axis=0)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * block_k, block_k, axis=0)
+        s = (q @ kb.T) * scale
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = _exp_fn(s - m_new[:, None], use_vexp)
+        corr = _exp_fn(m - m_new, use_vexp)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ vb
+        return acc, m_new, l
+
+    acc = jnp.zeros((sq, d), jnp.float32)
+    m0 = jnp.full((sq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((sq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nblk, body, (acc, m0, l0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, block_q: int = 64, block_k: int = 64,
+                           use_vexp: bool = True, scale: float | None = None):
+    """Single-head FlashAttention-2 as a Pallas kernel (interpret mode).
+
+    Grid over query blocks; K and V are passed whole per program (streamed
+    inside the kernel via the fori loop) so running statistics live in
+    registers for the lifetime of a Q block.
+    """
+    q = q.astype(jnp.bfloat16)
+    k = k.astype(jnp.bfloat16)
+    v = v.astype(jnp.bfloat16)
+    sq, d = q.shape
+    sk = k.shape[0]
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    bq = min(block_q, sq)
+    if sq % bq != 0:
+        bq = sq
+    bk = min(block_k, sk)
+    if sk % bk != 0:
+        bk = sk
+    kernel = functools.partial(_fa2_kernel, block_k=bk, use_vexp=use_vexp,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((sq, d), jnp.bfloat16),
+        grid=(sq // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((sk, d), lambda i: (0, 0)),
+            pl.BlockSpec((sk, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        interpret=True,
+    )(q, k, v)
+
+
+def mha_flash(q, k, v, use_vexp: bool = True, block_q: int = 64,
+              block_k: int = 64):
+    """Multi-head wrapper: q/k/v are (H, S, d); vmap over heads.
+
+    This is the per-cluster unit of work in the paper's §V-D mapping
+    (one attention head per Snitch cluster).
+    """
+    fn = functools.partial(flash_attention_pallas, block_q=block_q,
+                           block_k=block_k, use_vexp=use_vexp)
+    return jax.vmap(fn)(q, k, v)

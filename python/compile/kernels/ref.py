@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for every Layer-1 kernel.
+
+These run in float32 with exact transcendental functions and define what
+"numerically right" means for the Pallas kernels and for the Rust
+simulator's host-level references.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def exp_ref(x):
+    """Exact exponential in f32 (glibc-equivalent for our error metrics)."""
+    return jnp.exp(x.astype(jnp.float32))
+
+
+def softmax_ref(x, axis: int = -1):
+    """Numerically stable softmax with max subtraction (paper §III-B)."""
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention_ref(q, k, v, scale: float | None = None):
+    """Unfused exact attention: softmax(q k^T / sqrt(d)) v in f32."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    p = softmax_ref(s, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, v)
+
+
+def flash_attention_ref(q, k, v, scale: float | None = None):
+    """FlashAttention is exact attention; the oracle is the unfused form."""
+    return attention_ref(q, k, v, scale)
+
+
+def gelu_ref(x):
+    """tanh-approximation GELU (what the transformer FFN uses)."""
+    x = x.astype(jnp.float32)
+    c = jnp.sqrt(jnp.float32(2.0 / jnp.pi))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm over the last axis in f32."""
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,71 @@
+"""Row softmax kernels (paper §IV-C): MAX -> EXP -> NORM.
+
+Two Pallas variants:
+  * ``softmax_pallas(..., use_vexp=True)``  — the paper's optimized kernel:
+    max-subtract, VEXP exponentiation, reciprocal-multiply normalization.
+  * ``use_vexp=False`` — identical structure with the exact exponential
+    (the "BF16 baseline numeric" configuration of Table II).
+
+The row axis is the grid; each block holds ``block_rows`` full rows in VMEM
+so the row-wise reductions (max, sum) never leave the block — the VMEM
+analogue of keeping a row resident in the Snitch SPM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .vexp import vexp
+
+
+def softmax_rows(x, use_vexp: bool = True):
+    """Non-Pallas reference structure of the optimized kernel (BF16 math)."""
+    xb = x.astype(jnp.bfloat16)
+    m = jnp.max(xb, axis=-1, keepdims=True)
+    t = (xb - m).astype(jnp.bfloat16)
+    e = vexp(t) if use_vexp else jnp.exp(t.astype(jnp.float32)).astype(jnp.bfloat16)
+    s = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    recip = (1.0 / s).astype(jnp.bfloat16)           # one division per row
+    return (e * recip).astype(jnp.bfloat16)
+
+
+def _softmax_kernel_vexp(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.bfloat16)
+    m = jnp.max(x, axis=-1, keepdims=True)           # MAX  (VFMAX loop)
+    e = vexp((x - m).astype(jnp.bfloat16))           # EXP  (VFEXP loop)
+    s = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    recip = (1.0 / s).astype(jnp.bfloat16)           # single FDIV
+    o_ref[...] = (e * recip).astype(jnp.bfloat16)    # NORM (VFMUL loop)
+
+
+def _softmax_kernel_exact(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.bfloat16)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp((x - m).astype(jnp.float32)).astype(jnp.bfloat16)
+    s = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    recip = (1.0 / s).astype(jnp.bfloat16)
+    o_ref[...] = (e * recip).astype(jnp.bfloat16)
+
+
+def softmax_pallas(x, use_vexp: bool = True, block_rows: int = 64):
+    """Fused row softmax as a Pallas kernel over (rows, cols) bf16 input."""
+    x = x.astype(jnp.bfloat16)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        br = rows
+    kernel = _softmax_kernel_vexp if use_vexp else _softmax_kernel_exact
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.bfloat16),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+    return out[0] if squeeze else out

@@ -1,0 +1,195 @@
+"""Bit-exact model of the VEXP BF16 exponential block (paper Fig. 3c-e).
+
+This is Layer-1's numeric ground truth: the same fixed-point pipeline is
+implemented in Rust (``rust/src/vexp``) and the two are cross-checked
+exhaustively over all 2^16 BF16 bit patterns (``make artifacts`` dumps the
+golden table; ``cargo test`` replays it).
+
+Pipeline (DESIGN.md §6):
+  exps(x):  M = 1.m (Q1.7);  P = M * log2(e) (Q1.15) -> Q2.22;
+            r = round_half_up(P >> (142 - e)) -> Q8.7 int/frac split.
+  P(x):     two-branch fixed-point mantissa correction,
+            alpha=0.21875 beta=0.4375 gamma1=3.296875 gamma2=2.171875,
+            with 1-x approximated by bitwise not(x).
+
+Everything here is vectorized uint32 arithmetic so the identical code runs
+under numpy, plain jnp, and inside a Pallas kernel (interpret=True).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# ---------------------------------------------------------------------------
+# Fixed-point constants (locked; see DESIGN.md §6 and rust/src/vexp/consts.rs)
+# ---------------------------------------------------------------------------
+LOG2E_Q15 = 47274  # round(log2(e) * 2^15): Q1.15
+ALPHA_Q7 = 28      # 0.21875 * 128
+BETA_Q7 = 56       # 0.4375  * 128
+GAMMA1_Q7 = 422    # 3.296875 * 128
+GAMMA2_Q7 = 278    # 2.171875 * 128
+SHIFT_BIAS = 142   # Q2.22 -> Q8.7 alignment: shift = 142 - exponent
+MAX_SHIFT = 40     # beyond this the product is fully shifted out -> r = 0
+
+
+def _poly_q7(rf):
+    """Mantissa-correction polynomial P(frac) on a 7-bit fraction (Fig. 3e).
+
+    rf: uint32 array of Q0.7 fractions in [0, 128). Returns uint32 in [0, 128).
+    """
+    rf = rf.astype(jnp.uint32)
+    lo = rf < 64
+    # branch [0, 0.5): p = rnd14(alpha * f * (f + gamma1))
+    t_lo = rf * (rf + GAMMA1_Q7) * ALPHA_Q7            # Q2.21
+    p_lo = (t_lo + (1 << 13)) >> 14                    # Q0.7, round-half-up
+    # branch [0.5, 1): p = not(rnd14(beta * not(f) * (f + gamma2)))
+    t_hi = (127 - rf) * (rf + GAMMA2_Q7) * BETA_Q7     # Q2.21
+    q_hi = (t_hi + (1 << 13)) >> 14
+    p_hi = 127 - q_hi
+    p = jnp.where(lo, p_lo, p_hi)
+    return jnp.minimum(p, 127).astype(jnp.uint32)
+
+
+def vexp_bits(bits):
+    """Bit-exact VEXP on BF16 bit patterns.
+
+    bits: uint16/uint32 array of BF16 encodings. Returns uint16 BF16 encodings
+    of exp(x) under the paper's approximation.
+    """
+    b = bits.astype(jnp.uint32)
+    s = (b >> 15) & 0x1
+    e = (b >> 7) & 0xFF
+    m = b & 0x7F
+
+    # --- exps(x) stage -----------------------------------------------------
+    sig = (0x80 | m).astype(jnp.uint32)                # Q1.7 significand
+    prod = sig * jnp.uint32(LOG2E_Q15)                 # Q2.22, <= 24 bits
+    shift = SHIFT_BIAS - e.astype(jnp.int32)           # to Q8.7
+    sh = jnp.clip(shift, 1, MAX_SHIFT).astype(jnp.uint32)
+    r = (prod + (jnp.uint32(1) << (sh - 1))) >> sh     # round-half-up
+    r = jnp.where(shift <= 0, jnp.uint32(1 << 20), r)  # guaranteed overflow
+    r = jnp.where(shift > MAX_SHIFT, jnp.uint32(0), r)
+
+    ri = r >> 7
+    rf = r & 0x7F
+    # negative arguments: floor crosses down one, fraction complements
+    ri_n = ri + (rf != 0).astype(jnp.uint32)
+    rf_n = jnp.where(rf != 0, 128 - rf, 0).astype(jnp.uint32) & 0x7F
+    ri = jnp.where(s == 1, ri_n, ri)
+    rf = jnp.where(s == 1, rf_n, rf)
+
+    eo = jnp.where(
+        s == 1,
+        jnp.int32(127) - ri.astype(jnp.int32),
+        jnp.int32(127) + ri.astype(jnp.int32),
+    )
+
+    # --- P(x) stage --------------------------------------------------------
+    mant = _poly_q7(rf)
+
+    out = (jnp.clip(eo, 0, 255).astype(jnp.uint32) << 7) | mant
+    out = jnp.where(eo >= 255, jnp.uint32(0x7F80), out)   # overflow -> +inf
+    out = jnp.where(eo <= 0, jnp.uint32(0), out)          # underflow -> 0 (FTZ)
+
+    # --- specials ----------------------------------------------------------
+    is_nan = (e == 0xFF) & (m != 0)
+    is_inf = (e == 0xFF) & (m == 0)
+    is_zero = e == 0                                       # zero/subnormal FTZ
+    out = jnp.where(is_zero, jnp.uint32(0x3F80), out)      # exp(~0) = 1.0
+    out = jnp.where(is_inf & (s == 0), jnp.uint32(0x7F80), out)
+    out = jnp.where(is_inf & (s == 1), jnp.uint32(0), out)
+    out = jnp.where(is_nan, b | 0x40, out)                 # quiet the NaN
+    return out.astype(jnp.uint16)
+
+
+def bf16_to_bits(x):
+    """Reinterpret a bfloat16 array as uint16 bit patterns."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.uint16)
+
+
+def bits_to_bf16(b):
+    """Reinterpret uint16 bit patterns as bfloat16 values."""
+    return jax.lax.bitcast_convert_type(b.astype(jnp.uint16), jnp.bfloat16)
+
+
+def vexp(x):
+    """VEXP on values: bfloat16 in, bfloat16 out (the VFEXP instruction)."""
+    return bits_to_bf16(vexp_bits(bf16_to_bits(x)))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: elementwise VEXP over a VMEM block.
+# ---------------------------------------------------------------------------
+def _vexp_kernel(x_ref, o_ref):
+    o_ref[...] = vexp(x_ref[...])
+
+
+def vexp_pallas(x, block_rows: int = 256):
+    """Elementwise VEXP as a Pallas kernel (interpret mode on CPU).
+
+    The row axis is tiled into VMEM blocks of ``block_rows`` rows; each block
+    is pure VPU integer work (no MXU), mirroring the paper's "EXP on the
+    programmable unit, GEMM on the big unit" split.
+    """
+    x = x.astype(jnp.bfloat16)
+    if x.ndim == 1:
+        return vexp_pallas(x[None, :], block_rows)[0]
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        br = rows  # fall back to a single block for ragged shapes
+    return pl.pallas_call(
+        _vexp_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.bfloat16),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def vexp_numpy_bits(bits: np.ndarray) -> np.ndarray:
+    """Pure-numpy twin of :func:`vexp_bits` (used for golden-table dumps)."""
+    b = bits.astype(np.uint32)
+    s = (b >> 15) & 0x1
+    e = (b >> 7) & 0xFF
+    m = b & 0x7F
+
+    sig = (0x80 | m).astype(np.uint64)
+    prod = sig * np.uint64(LOG2E_Q15)
+    shift = SHIFT_BIAS - e.astype(np.int64)
+    sh = np.clip(shift, 1, MAX_SHIFT).astype(np.uint64)
+    r = ((prod + (np.uint64(1) << (sh - np.uint64(1)))) >> sh).astype(np.uint32)
+    r = np.where(shift <= 0, np.uint32(1 << 20), r)
+    r = np.where(shift > MAX_SHIFT, np.uint32(0), r)
+
+    ri = r >> 7
+    rf = r & 0x7F
+    ri_n = ri + (rf != 0).astype(np.uint32)
+    rf_n = np.where(rf != 0, 128 - rf, 0).astype(np.uint32) & 0x7F
+    ri = np.where(s == 1, ri_n, ri)
+    rf = np.where(s == 1, rf_n, rf)
+    eo = np.where(s == 1, 127 - ri.astype(np.int64), 127 + ri.astype(np.int64))
+
+    lo = rf < 64
+    t_lo = rf.astype(np.uint64) * (rf + GAMMA1_Q7) * ALPHA_Q7
+    p_lo = (t_lo + (1 << 13)) >> 14
+    t_hi = (127 - rf).astype(np.uint64) * (rf + GAMMA2_Q7) * BETA_Q7
+    p_hi = 127 - ((t_hi + (1 << 13)) >> 14)
+    mant = np.minimum(np.where(lo, p_lo, p_hi), 127).astype(np.uint32)
+
+    out = (np.clip(eo, 0, 255).astype(np.uint32) << 7) | mant
+    out = np.where(eo >= 255, np.uint32(0x7F80), out)
+    out = np.where(eo <= 0, np.uint32(0), out)
+
+    is_nan = (e == 0xFF) & (m != 0)
+    is_inf = (e == 0xFF) & (m == 0)
+    is_zero = e == 0
+    out = np.where(is_zero, np.uint32(0x3F80), out)
+    out = np.where(is_inf & (s == 0), np.uint32(0x7F80), out)
+    out = np.where(is_inf & (s == 1), np.uint32(0), out)
+    out = np.where(is_nan, b | 0x40, out)
+    return out.astype(np.uint16)

@@ -1,0 +1,216 @@
+"""Layer-2: decoder-only transformer with pluggable softmax numerics.
+
+The attention softmax can run in three configurations matching Table II of
+the paper: ``fp32`` (exact), ``bf16`` (BF16 math, exact exp) and
+``bf16_exp`` (BF16 math + the VEXP approximation). Everything else stays
+in float32 so the measured accuracy delta is attributable to the
+exponential approximation alone — exactly the paper's ablation.
+
+The forward pass is also exported with a *flat* parameter vector
+(``forward_flat``) so the AOT artifact takes two inputs (tokens, theta)
+and the Rust runtime can feed trained weights as a single PJRT literal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.flash_attention import flash_attention_rows
+from .kernels.ref import gelu_ref, layernorm_ref
+from .kernels.vexp import vexp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters (GPT-2-style decoder)."""
+
+    vocab: int = 64
+    d_model: int = 384
+    n_heads: int = 6
+    n_layers: int = 6
+    d_ff: int = 1536
+    max_seq: int = 128
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TINY = ModelConfig()  # ~10.7M params: the build-time trainable stand-in
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    """Initialize a parameter pytree with GPT-2-style scaling."""
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+    s = 0.02
+    params: Dict[str, Any] = {
+        "wte": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * s,
+        "wpe": jax.random.normal(keys[1], (cfg.max_seq, cfg.d_model)) * s,
+        "lnf_g": jnp.ones((cfg.d_model,)),
+        "lnf_b": jnp.zeros((cfg.d_model,)),
+        "layers": [],
+    }
+    out_s = s / np.sqrt(2 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        k = jax.random.split(keys[4 + i], 6)
+        params["layers"].append({
+            "ln1_g": jnp.ones((cfg.d_model,)),
+            "ln1_b": jnp.zeros((cfg.d_model,)),
+            "wqkv": jax.random.normal(k[0], (cfg.d_model, 3 * cfg.d_model)) * s,
+            "bqkv": jnp.zeros((3 * cfg.d_model,)),
+            "wo": jax.random.normal(k[1], (cfg.d_model, cfg.d_model)) * out_s,
+            "bo": jnp.zeros((cfg.d_model,)),
+            "ln2_g": jnp.ones((cfg.d_model,)),
+            "ln2_b": jnp.zeros((cfg.d_model,)),
+            "w1": jax.random.normal(k[2], (cfg.d_model, cfg.d_ff)) * s,
+            "b1": jnp.zeros((cfg.d_ff,)),
+            "w2": jax.random.normal(k[3], (cfg.d_ff, cfg.d_model)) * out_s,
+            "b2": jnp.zeros((cfg.d_model,)),
+        })
+    return params
+
+
+def _attention(q, k, v, mode: str):
+    """Causal attention for one head; ``mode`` selects softmax numerics."""
+    s_q, d = q.shape
+    s_k = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    scores = (q @ k.T) * scale
+    mask = jnp.tril(jnp.ones((s_q, s_k), bool), k=s_k - s_q)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    if mode == "fp32":
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+    elif mode == "bf16":
+        sb = scores.astype(jnp.bfloat16)
+        m = jnp.max(sb, axis=-1, keepdims=True)
+        e = jnp.exp((sb - m).astype(jnp.float32)).astype(jnp.bfloat16)
+        l = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+        p = (e * (1.0 / l).astype(jnp.bfloat16)).astype(jnp.float32)
+    elif mode == "bf16_exp":
+        sb = scores.astype(jnp.bfloat16)
+        m = jnp.max(sb, axis=-1, keepdims=True)
+        e = vexp((sb - m).astype(jnp.bfloat16))
+        l = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+        p = (e.astype(jnp.float32) * (1.0 / l))
+    else:
+        raise ValueError(f"unknown softmax mode {mode!r}")
+    return p.astype(jnp.float32) @ v
+
+
+def _block(x, lp, cfg: ModelConfig, mode: str):
+    """One pre-LN transformer block."""
+    h = layernorm_ref(x, lp["ln1_g"], lp["ln1_b"])
+    qkv = h @ lp["wqkv"] + lp["bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    seq = x.shape[0]
+    dh = cfg.d_head
+    q = q.reshape(seq, cfg.n_heads, dh).transpose(1, 0, 2)
+    k = k.reshape(seq, cfg.n_heads, dh).transpose(1, 0, 2)
+    v = v.reshape(seq, cfg.n_heads, dh).transpose(1, 0, 2)
+    attn = jax.vmap(lambda qq, kk, vv: _attention(qq, kk, vv, mode))(q, k, v)
+    attn = attn.transpose(1, 0, 2).reshape(seq, cfg.d_model)
+    x = x + attn @ lp["wo"] + lp["bo"]
+    h = layernorm_ref(x, lp["ln2_g"], lp["ln2_b"])
+    x = x + gelu_ref(h @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, mode: str = "fp32"):
+    """Logits for a batch of token sequences: (B, S) int32 -> (B, S, V)."""
+
+    def single(toks):
+        seq = toks.shape[0]
+        x = params["wte"][toks] + params["wpe"][:seq]
+        for lp in params["layers"]:
+            x = _block(x, lp, cfg, mode)
+        x = layernorm_ref(x, params["lnf_g"], params["lnf_b"])
+        return x @ params["wte"].T
+
+    return jax.vmap(single)(tokens)
+
+
+def loss_fn(params, tokens, cfg: ModelConfig, mode: str = "fp32"):
+    """Next-token cross-entropy (mean over all positions)."""
+    logits = forward(params, tokens[:, :-1], cfg, mode)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter packing for AOT export (theta: single f32 vector input).
+# ---------------------------------------------------------------------------
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list defining the theta layout."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("wte", (cfg.vocab, cfg.d_model)),
+        ("wpe", (cfg.max_seq, cfg.d_model)),
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+    ]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1_g", (cfg.d_model,)),
+            (f"l{i}.ln1_b", (cfg.d_model,)),
+            (f"l{i}.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{i}.bqkv", (3 * cfg.d_model,)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.bo", (cfg.d_model,)),
+            (f"l{i}.ln2_g", (cfg.d_model,)),
+            (f"l{i}.ln2_b", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.b1", (cfg.d_ff,)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{i}.b2", (cfg.d_model,)),
+        ]
+    return spec
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_spec(cfg))
+
+
+def flatten_params(params, cfg: ModelConfig) -> np.ndarray:
+    """Pack the pytree into the theta vector per :func:`param_spec`."""
+    flat: Dict[str, Any] = {
+        "wte": params["wte"], "wpe": params["wpe"],
+        "lnf_g": params["lnf_g"], "lnf_b": params["lnf_b"],
+    }
+    for i, lp in enumerate(params["layers"]):
+        for k, v in lp.items():
+            flat[f"l{i}.{k}"] = v
+    parts = [np.asarray(flat[name], np.float32).reshape(-1)
+             for name, _ in param_spec(cfg)]
+    return np.concatenate(parts)
+
+
+def unflatten_params(theta, cfg: ModelConfig):
+    """Inverse of :func:`flatten_params` (traceable: works on tracers)."""
+    spec = param_spec(cfg)
+    out: Dict[str, Any] = {"layers": [dict() for _ in range(cfg.n_layers)]}
+    off = 0
+    for name, shape in spec:
+        n = int(np.prod(shape))
+        t = jax.lax.dynamic_slice_in_dim(theta, off, n).reshape(shape)
+        off += n
+        if "." in name:
+            layer, key = name.split(".")
+            out["layers"][int(layer[1:])][key] = t
+        else:
+            out[name] = t
+    return out
+
+
+def forward_flat(tokens, theta, cfg: ModelConfig, mode: str = "bf16_exp"):
+    """AOT entry point: (B,S) int32 tokens + flat theta -> (B,S,V) logits."""
+    params = unflatten_params(theta, cfg)
+    return forward(params, tokens, cfg, mode)

@@ -1,0 +1,56 @@
+"""Table-II artifacts: accuracy table and golden-table consistency."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.kernels.vexp import vexp_numpy_bits
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_golden_table_matches_current_spec():
+    """The dumped golden table must match the in-tree kernel — catches
+    spec drift between `make artifacts` and later kernel edits."""
+    path = os.path.join(ART, "vexp_golden.bin")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    golden = np.fromfile(path, dtype="<u2")
+    assert golden.shape == (65536,)
+    now = vexp_numpy_bits(np.arange(65536, dtype=np.uint32).astype(np.uint16))
+    assert np.array_equal(golden, now), "golden table stale — re-run make artifacts"
+
+
+def test_accuracy_table_shape():
+    """After `make accuracy`: BF16+VEXP within 0.1% of BF16 (Table II)."""
+    path = os.path.join(ART, "accuracy_table.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make accuracy` first")
+    with open(path) as f:
+        table = json.load(f)
+    r = table["results"]
+    fp32 = r["FP32"]["perplexity"]
+    bf16 = r["BF16"]["perplexity"]
+    vexp = r["BF16 EXP"]["perplexity"]
+    # trained model: far below the uniform-vocabulary baseline of 64
+    assert fp32 < 32.0
+    # BF16 cast is benign
+    assert abs(bf16 - fp32) / fp32 < 0.02
+    # the paper's headline: VEXP adds <0.1% on top of BF16
+    assert abs(vexp - bf16) / bf16 < 0.001
+
+
+def test_manifest_covers_all_hlo_files():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        manifest = json.load(f)
+    for name, ep in manifest["entry_points"].items():
+        hlo = os.path.join(ART, ep["file"])
+        assert os.path.exists(hlo), f"{name}: {ep['file']} missing"
+        with open(hlo) as g:
+            head = g.read(4096)
+        assert "HloModule" in head, f"{name}: not HLO text"

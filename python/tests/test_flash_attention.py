@@ -1,0 +1,86 @@
+"""FlashAttention-2 kernel vs exact attention (paper §III-B / §IV-D)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_attention import (
+    flash_attention_pallas, flash_attention_rows, mha_flash,
+)
+from compile.kernels.ref import attention_ref
+
+
+def qkv(sq, sk, d, seed=0):
+    rng = np.random.RandomState(seed)
+    return (jnp.asarray(rng.normal(size=(sq, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(sk, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(sk, d)), jnp.float32))
+
+
+@pytest.mark.parametrize("sq,sk,d", [(16, 16, 16), (64, 128, 64),
+                                     (128, 256, 64), (32, 96, 32)])
+@pytest.mark.parametrize("use_vexp", [True, False])
+def test_close_to_exact_attention(sq, sk, d, use_vexp):
+    q, k, v = qkv(sq, sk, d, seed=sq + sk)
+    got = np.asarray(flash_attention_pallas(q, k, v, use_vexp=use_vexp)
+                     .astype(jnp.float32))
+    want = np.asarray(attention_ref(q, k, v))
+    assert np.abs(got - want).max() < 0.02
+
+
+def test_block_size_invariance():
+    """K-block tiling (the SPM double-buffer granularity) must be
+    numerically invisible for the exact-exp variant in f32 statistics."""
+    q, k, v = qkv(64, 256, 64, seed=1)
+    a = np.asarray(flash_attention_pallas(q, k, v, block_k=32,
+                                          use_vexp=False).astype(jnp.float32))
+    b = np.asarray(flash_attention_pallas(q, k, v, block_k=256,
+                                          use_vexp=False).astype(jnp.float32))
+    assert np.abs(a - b).max() < 2e-2
+
+
+def test_rows_matches_pallas():
+    q, k, v = qkv(32, 64, 32, seed=2)
+    a = np.asarray(flash_attention_rows(q.astype(jnp.bfloat16),
+                                        k.astype(jnp.bfloat16),
+                                        v.astype(jnp.bfloat16)))
+    b = np.asarray(flash_attention_pallas(q, k, v).astype(jnp.float32))
+    assert np.abs(a - b).max() < 2e-2
+
+
+def test_one_hot_value_passthrough():
+    """If one key dominates, the output must be ~that key's value row."""
+    d = 32
+    q = jnp.ones((4, d), jnp.float32) * 3.0
+    k = jnp.asarray(np.vstack([np.ones((1, d)) * 3.0,
+                               -np.ones((7, d)) * 3.0]), jnp.float32)
+    v = jnp.asarray(np.random.RandomState(3).normal(size=(8, d)), jnp.float32)
+    got = np.asarray(flash_attention_pallas(q, k, v).astype(jnp.float32))
+    assert np.abs(got - np.asarray(v)[0]).max() < 0.05
+
+
+def test_mha_vmap_heads():
+    h, s, d = 4, 64, 32
+    rng = np.random.RandomState(4)
+    q = jnp.asarray(rng.normal(size=(h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(h, s, d)), jnp.float32)
+    got = np.asarray(mha_flash(q, k, v).astype(jnp.float32))
+    for i in range(h):
+        want = np.asarray(attention_ref(q[i], k[i], v[i]))
+        assert np.abs(got[i] - want).max() < 0.02
+
+
+@settings(max_examples=12, deadline=None)
+@given(sq=st.integers(4, 64), sk=st.integers(4, 128),
+       d=st.sampled_from([8, 16, 32, 64]), seed=st.integers(0, 1000),
+       use_vexp=st.booleans())
+def test_hypothesis_sweep(sq, sk, d, seed, use_vexp):
+    q, k, v = qkv(sq, sk, d, seed=seed)
+    got = np.asarray(flash_attention_pallas(q, k, v, use_vexp=use_vexp)
+                     .astype(jnp.float32))
+    assert got.shape == (sq, d)
+    assert np.isfinite(got).all()
+    want = np.asarray(attention_ref(q, k, v))
+    assert np.abs(got - want).max() < 0.03

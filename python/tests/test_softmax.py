@@ -1,0 +1,99 @@
+"""Fused softmax kernel vs the exact oracle (paper §IV-C structure)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import softmax_ref
+from compile.kernels.softmax import softmax_pallas, softmax_rows
+
+
+def rand(shape, seed=0, lo=-10.0, hi=10.0):
+    return jnp.asarray(np.random.RandomState(seed).uniform(lo, hi, shape),
+                       jnp.float32)
+
+
+@pytest.mark.parametrize("shape", [(1, 8), (4, 64), (64, 512), (128, 100)])
+@pytest.mark.parametrize("use_vexp", [True, False])
+def test_close_to_oracle(shape, use_vexp):
+    x = rand(shape, seed=shape[1])
+    got = np.asarray(softmax_pallas(x, use_vexp=use_vexp).astype(jnp.float32))
+    want = np.asarray(softmax_ref(x))
+    # bf16 path carries ~2^-8 quantization + <=1% exp error
+    assert np.abs(got - want).max() < 0.01
+
+
+def test_vexp_mse_matches_paper_order():
+    """Paper Table IV: softmax MSE 1.62e-9 (BF16+VEXP). Same order here."""
+    x = rand((256, 512), seed=7, lo=-8, hi=8)
+    got = np.asarray(softmax_pallas(x, use_vexp=True).astype(jnp.float32))
+    want = np.asarray(softmax_ref(x))
+    mse = float(np.mean((got - want) ** 2))
+    assert mse < 1e-6, f"softmax MSE {mse:.3e}"
+
+
+@pytest.mark.parametrize("use_vexp", [True, False])
+def test_rows_sum_to_one(use_vexp):
+    x = rand((32, 256), seed=3)
+    got = np.asarray(softmax_pallas(x, use_vexp=use_vexp).astype(jnp.float32))
+    assert np.abs(got.sum(-1) - 1.0).max() < 0.02  # bf16 recip-mul norm
+    assert (got >= 0).all()
+
+
+def test_shift_invariance():
+    """softmax(x) == softmax(x + c): max-subtraction must make the kernel
+    invariant to row-wise shifts (the numerical-stability property)."""
+    # values on a 0.5 grid in [-8, 8) stay exactly representable in bf16
+    # after a +64 shift (quantum at 64..128 is 0.5), isolating the kernel's
+    # max-subtraction from input quantization effects.
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randint(-16, 16, (8, 128)) * 0.5, jnp.float32)
+    a = np.asarray(softmax_pallas(x).astype(jnp.float32))
+    b = np.asarray(softmax_pallas(x + 64.0).astype(jnp.float32))
+    assert np.abs(a - b).max() < 1e-6
+
+
+def test_extreme_negative_rows():
+    """Rows dominated by one large value must not NaN under VEXP."""
+    x = np.full((4, 64), -80.0, np.float32)
+    x[:, 0] = 10.0
+    got = np.asarray(softmax_pallas(jnp.asarray(x)).astype(jnp.float32))
+    assert np.isfinite(got).all()
+    assert np.abs(got[:, 0] - 1.0).max() < 1e-2
+
+
+def test_block_rows_partition_invariance():
+    """Tiling must not change results: block sizes are an implementation
+    detail (SPM/VMEM capacity), never a numeric one."""
+    x = rand((64, 128), seed=9)
+    a = np.asarray(softmax_pallas(x, block_rows=8).astype(jnp.float32))
+    b = np.asarray(softmax_pallas(x, block_rows=64).astype(jnp.float32))
+    assert np.array_equal(a, b)
+
+
+def test_rows_matches_pallas():
+    x = rand((16, 64), seed=11)
+    a = np.asarray(softmax_rows(x).astype(jnp.float32))
+    b = np.asarray(softmax_pallas(x).astype(jnp.float32))
+    assert np.array_equal(a, b)
+
+
+def test_1d_input():
+    x = rand((100,), seed=13)
+    got = np.asarray(softmax_pallas(x).astype(jnp.float32))
+    assert got.shape == (100,)
+    assert abs(got.sum() - 1.0) < 0.02
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 48), cols=st.integers(2, 300),
+       seed=st.integers(0, 10000), use_vexp=st.booleans())
+def test_hypothesis_sweep(rows, cols, seed, use_vexp):
+    x = rand((rows, cols), seed=seed)
+    got = np.asarray(softmax_pallas(x, use_vexp=use_vexp)
+                     .astype(jnp.float32))
+    want = np.asarray(softmax_ref(x))
+    assert got.shape == want.shape
+    assert np.isfinite(got).all()
+    assert np.abs(got - want).max() < 0.015

@@ -1,0 +1,23 @@
+//! Fig. 1: GPT-3 runtime breakdown vs sequence length, unoptimized vs
+//! optimized GEMM — softmax share grows from ~30% to ~70% as GEMM gets
+//! faster, motivating the whole paper.
+use vexp::coordinator::{KernelRates, SystemEstimator};
+use vexp::model::GPT3_XL;
+
+fn main() {
+    let est = SystemEstimator::new(KernelRates::calibrate());
+    println!("Fig. 1 — GPT-3 XL runtime breakdown (softmax share of runtime)");
+    println!("{:>6} {:>18} {:>18}", "seq", "unopt-GEMM", "opt-GEMM");
+    for seq in [128u32, 256, 512, 1024, 2048] {
+        let mut cfg = GPT3_XL;
+        cfg.seq = seq;
+        let unopt = est.estimate(&cfg, false, false);
+        let opt = est.estimate(&cfg, false, true);
+        println!(
+            "{seq:>6} {:>17.1}% {:>17.1}%",
+            unopt.softmax_share() * 100.0,
+            opt.softmax_share() * 100.0
+        );
+    }
+    println!("(paper: ~30% -> ~70% at seq 2048)");
+}

@@ -1,0 +1,16 @@
+//! Fig. 5: GF12 area breakdown, baseline vs EXP-extended cluster.
+use vexp::energy::AreaModel;
+
+fn main() {
+    let m = AreaModel::default();
+    let r = m.report();
+    println!("Fig. 5 — area breakdown (GF12, kGE)");
+    println!("EXP block/core: {:.0} um^2 = 8 kGE (paper: 968 um^2)", m.exp_block_um2());
+    println!("{:16} {:>10} {:>10} {:>10}", "level", "baseline", "extended", "overhead");
+    println!("{:16} {:>10.0} {:>10.0} {:>9.1}%  (paper: 2.3%)", "FPU subsystem",
+        m.fpu_ss_kge, r.fpu_ss_kge, r.fpu_ss_overhead * 100.0);
+    println!("{:16} {:>10.0} {:>10.0} {:>9.1}%  (paper: 1.9%)", "core complex",
+        m.core_complex_kge(false), r.core_complex_kge, r.core_complex_overhead * 100.0);
+    println!("{:16} {:>10.0} {:>10.0} {:>9.1}%  (paper: 1.0%)", "cluster",
+        m.cluster_kge(false), r.cluster_kge, r.cluster_overhead * 100.0);
+}

@@ -1,0 +1,18 @@
+//! Fig. 8: end-to-end runtime and energy, baseline vs softmax-optimized,
+//! on the 16-cluster Occamy-style system.
+use vexp::coordinator::{KernelRates, SystemEstimator};
+use vexp::model::config::ALL_MODELS;
+
+fn main() {
+    let est = SystemEstimator::new(KernelRates::calibrate());
+    println!("Fig. 8 — 16-cluster end-to-end (non-autoregressive)");
+    println!("{:12} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8}",
+        "model", "BL ms", "Optim ms", "speedup", "BL mJ", "Optim mJ", "E-ratio");
+    for cfg in ALL_MODELS {
+        let (b, o) = est.fig8_pair(&cfg);
+        println!("{:12} {:>10.2} {:>10.2} {:>7.1}x {:>10.1} {:>10.1} {:>7.1}x",
+            cfg.name, b.latency_ms(), o.latency_ms(), b.cycles / o.cycles,
+            b.energy_mj(), o.energy_mj(), b.energy_pj / o.energy_pj);
+    }
+    println!("(paper: GPT-2 5.8x/3.6x, GPT-3 2.9x/1.7x, ViT-B 1.9x/1.4x, ViT-H 1.4x/1.2x)");
+}

@@ -1,0 +1,25 @@
+//! Table II: accuracy under FP32 / BF16 / BF16+VEXP numerics.
+//! The measurement itself is build-time (python/compile/train.py on the
+//! synthetic corpus — see DESIGN.md §2 substitution log); this bench
+//! renders artifacts/accuracy_table.json next to the paper's numbers.
+use vexp::runtime::json::Json;
+
+fn main() {
+    println!("Table II — accuracy (tiny-GPT substitution; run `make accuracy`)");
+    match std::fs::read_to_string("artifacts/accuracy_table.json") {
+        Ok(s) => {
+            let j = Json::parse(&s).expect("accuracy_table.json parse");
+            println!("  model   : {}", j.get("model").and_then(Json::as_str).unwrap_or("?"));
+            println!("  dataset : {}", j.get("dataset").and_then(Json::as_str).unwrap_or("?"));
+            let r = j.get("results").expect("results");
+            println!("{:10} {:>12}", "config", "perplexity");
+            for key in ["FP32", "BF16", "BF16 EXP"] {
+                if let Some(row) = r.get(key) {
+                    println!("{key:10} {:>12.4}", row.get("perplexity").and_then(Json::as_f64).unwrap_or(f64::NAN));
+                }
+            }
+            println!("(paper GPT-2/WikiText: 37.4 / 37.8 / 37.8 — BF16+VEXP ~ BF16)");
+        }
+        Err(_) => println!("  artifacts/accuracy_table.json missing — run `make accuracy`"),
+    }
+}

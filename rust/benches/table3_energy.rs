@@ -1,0 +1,25 @@
+//! Table III: energy per operation for GEMM and EXP, baseline vs
+//! ISA-extended cluster.
+use vexp::energy::power::{cluster_energy_pj, exp_datapath_pj_per_op};
+use vexp::kernels::gemm::run_gemm;
+use vexp::kernels::softmax::{run_softmax, SoftmaxVariant};
+
+fn mat(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed | 1;
+    (0..n).map(|_| { s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+        ((s >> 33) as f64 / 2f64.powi(31) * 2.0 - 1.0) as f32 }).collect()
+}
+
+fn main() {
+    let g = run_gemm(&mat(48 * 48, 1), &mat(48 * 48, 2), 48, 48, 48);
+    let gemm_bl = cluster_energy_pj(&g.stats, false).total() / g.flops as f64;
+    let gemm_ext = cluster_energy_pj(&g.stats, true).total() / g.flops as f64;
+    let rows: Vec<Vec<f32>> = (0..8).map(|i| mat(64, i + 3)).collect();
+    let b = run_softmax(SoftmaxVariant::Baseline, &rows);
+    let exp_bl = cluster_energy_pj(&b.stats, false).total() / (8.0 * 64.0);
+    let exp_ext = exp_datapath_pj_per_op();
+    println!("Table III — energy per operation [pJ/Op]");
+    println!("{:8} {:>16} {:>14}", "", "Snitch Baseline", "ISA Extended");
+    println!("{:8} {:>16.2} {:>14.2}   (paper: 3.96 / 4.04)", "GEMM", gemm_bl, gemm_ext);
+    println!("{:8} {:>16.0} {:>14.2}   (paper: 3433 / 6.39)", "EXP", exp_bl, exp_ext);
+}

@@ -1,0 +1,120 @@
+//! Error statistics for the VEXP approximation (paper §V-A, Table IV).
+
+use crate::bf16::Bf16;
+use crate::vexp::exp_unit;
+
+/// Relative-error summary of an approximation against a reference.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorStats {
+    pub mean_rel: f64,
+    pub max_rel: f64,
+    pub mse: f64,
+    pub n: u64,
+}
+
+/// Exhaustive sweep of the ExpUnit over every BF16 input whose exact
+/// exponential is a normal BF16 (the paper's §V-A protocol).
+pub fn exp_error_exhaustive() -> ErrorStats {
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut mse = 0.0f64;
+    let mut n = 0u64;
+    for bits in 0..=u16::MAX {
+        let x = Bf16(bits);
+        if x.is_nan() || x.is_inf() {
+            continue;
+        }
+        let t = (x.to_f32() as f64).exp();
+        if !t.is_finite() || !(1e-38..=3.38e38).contains(&t) {
+            continue;
+        }
+        let y = exp_unit(x).to_f32() as f64;
+        let rel = (y - t).abs() / t;
+        sum += rel;
+        max = max.max(rel);
+        mse += (y - t) * (y - t);
+        n += 1;
+    }
+    ErrorStats { mean_rel: sum / n as f64, max_rel: max, mse: mse / n as f64, n }
+}
+
+/// Error stats restricted to a value range (e.g. the softmax domain
+/// `[-20, 0]` used for the Table IV MSE row).
+pub fn exp_error_in_range(lo: f32, hi: f32) -> ErrorStats {
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut mse = 0.0f64;
+    let mut n = 0u64;
+    for bits in 0..=u16::MAX {
+        let x = Bf16(bits);
+        let xf = x.to_f32();
+        if x.is_nan() || !(lo..=hi).contains(&xf) {
+            continue;
+        }
+        let t = (xf as f64).exp();
+        let y = exp_unit(x).to_f32() as f64;
+        let rel = (y - t).abs() / t.max(1e-300);
+        sum += rel;
+        max = max.max(rel);
+        mse += (y - t) * (y - t);
+        n += 1;
+    }
+    ErrorStats { mean_rel: sum / n.max(1) as f64, max_rel: max, mse: mse / n.max(1) as f64, n }
+}
+
+/// Softmax-output MSE of an approximate row softmax vs the f32 oracle.
+pub fn softmax_mse(rows: &[Vec<f32>], outs: &[Vec<f32>]) -> f64 {
+    let mut mse = 0.0f64;
+    let mut n = 0u64;
+    for (row, out) in rows.iter().zip(outs) {
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let e: Vec<f64> = row.iter().map(|&x| ((x - m) as f64).exp()).collect();
+        let s: f64 = e.iter().sum();
+        for (w, &g) in e.iter().map(|v| v / s).zip(out.iter()) {
+            mse += (g as f64 - w) * (g as f64 - w);
+            n += 1;
+        }
+    }
+    mse / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exhaustive_matches_design_spec() {
+        let s = exp_error_exhaustive();
+        // DESIGN.md §6 locked figures (paper: 0.14% / 0.78%)
+        assert!(s.mean_rel < 0.002, "mean {:.5}", s.mean_rel);
+        assert!(s.max_rel < 0.011, "max {:.5}", s.max_rel);
+        assert!(s.n > 30_000);
+    }
+
+    #[test]
+    fn softmax_domain_mse_is_tiny() {
+        let s = exp_error_in_range(-20.0, 0.0);
+        // outputs in (0, 1]: absolute MSE far below 1e-5
+        assert!(s.mse < 1e-5, "mse {:.3e}", s.mse);
+        assert!(s.max_rel < 0.011);
+    }
+
+    #[test]
+    fn error_grows_with_magnitude() {
+        // relative error amplifies ~linearly in |x| past the fraction
+        // quantization, so wide ranges must dominate narrow ones
+        let narrow = exp_error_in_range(-1.0, 1.0);
+        let wide = exp_error_in_range(-60.0, 60.0);
+        assert!(wide.max_rel >= narrow.max_rel);
+    }
+
+    #[test]
+    fn softmax_mse_zero_for_oracle() {
+        let rows = vec![vec![0.0f32, 1.0, 2.0, 3.0]];
+        let m = 3.0f32;
+        let e: Vec<f64> = rows[0].iter().map(|&x| ((x - m) as f64).exp()).collect();
+        let s: f64 = e.iter().sum();
+        let outs = vec![e.iter().map(|v| (v / s) as f32).collect::<Vec<_>>()];
+        assert!(softmax_mse(&rows, &outs) < 1e-14);
+    }
+}

@@ -1,0 +1,279 @@
+//! BF16 (Brain Floating-Point) software arithmetic.
+//!
+//! The numeric base of the whole Layer-3 stack: the Snitch FPU model, the
+//! VEXP block and every simulated kernel operate on this type. Semantics
+//! follow the Snitch FPU ([Bertaccini et al., ARITH'22] FPnew lineage):
+//! operations compute at full precision and round to nearest-even back to
+//! BF16; subnormal results flush to zero (the paper's §IV-A BF16
+//! simplification relative to IEEE-754).
+
+/// A BF16 value stored as its raw bit pattern.
+///
+/// `Bf16` is `Copy` + `repr(transparent)` over `u16` so SIMD registers can
+/// pack four lanes into a `u64` with plain shifts (see [`crate::vexp`]).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+pub const POS_INF: Bf16 = Bf16(0x7F80);
+pub const NEG_INF: Bf16 = Bf16(0xFF80);
+pub const NAN: Bf16 = Bf16(0x7FC0);
+pub const ZERO: Bf16 = Bf16(0x0000);
+pub const ONE: Bf16 = Bf16(0x3F80);
+/// Most negative finite BF16 (used as the MAX-reduction identity).
+pub const MIN_FINITE: Bf16 = Bf16(0xFF7F);
+
+impl Bf16 {
+    /// Round a f32 to BF16 with round-to-nearest-even, flushing subnormal
+    /// results to zero (sign-preserving).
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // quiet NaN, keep the sign/payload MSB
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // RNE on the low 16 bits
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let mut out = (rounded >> 16) as u16;
+        // carry into the exponent is handled naturally by the add above
+        if round_bit & bits != 0 && bits & 0x0000_7FFF == 0 && lsb == 0 {
+            // exact tie rounded to even: already handled by +lsb
+        }
+        // flush subnormals to signed zero
+        if out & 0x7F80 == 0 {
+            out &= 0x8000;
+        }
+        Bf16(out)
+    }
+
+    /// Widen to f32 (exact: BF16 is the top half of f32).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline]
+    pub fn sign(self) -> u16 {
+        self.0 >> 15
+    }
+
+    #[inline]
+    pub fn exponent(self) -> u16 {
+        (self.0 >> 7) & 0xFF
+    }
+
+    #[inline]
+    pub fn mantissa(self) -> u16 {
+        self.0 & 0x7F
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exponent() == 0xFF && self.mantissa() != 0
+    }
+
+    #[inline]
+    pub fn is_inf(self) -> bool {
+        self.exponent() == 0xFF && self.mantissa() == 0
+    }
+
+    #[inline]
+    pub fn is_zero_or_subnormal(self) -> bool {
+        self.exponent() == 0
+    }
+
+    // -- FPU operations (full-precision compute, RNE to BF16) -------------
+
+    #[inline]
+    pub fn add(self, rhs: Self) -> Self {
+        Self::from_f32(self.to_f32() + rhs.to_f32())
+    }
+
+    #[inline]
+    pub fn sub(self, rhs: Self) -> Self {
+        Self::from_f32(self.to_f32() - rhs.to_f32())
+    }
+
+    #[inline]
+    pub fn mul(self, rhs: Self) -> Self {
+        Self::from_f32(self.to_f32() * rhs.to_f32())
+    }
+
+    #[inline]
+    pub fn div(self, rhs: Self) -> Self {
+        Self::from_f32(self.to_f32() / rhs.to_f32())
+    }
+
+    /// Fused multiply-add `self * b + c` with a single final rounding
+    /// (the FPU's FMA module).
+    #[inline]
+    pub fn fma(self, b: Self, c: Self) -> Self {
+        Self::from_f32(f64::mul_add(self.to_f32() as f64, b.to_f32() as f64, c.to_f32() as f64) as f32)
+    }
+
+    /// RISC-V `fmax.h` semantics: if one operand is NaN, return the other.
+    #[inline]
+    pub fn max(self, rhs: Self) -> Self {
+        match (self.is_nan(), rhs.is_nan()) {
+            (true, true) => NAN,
+            (true, false) => rhs,
+            (false, true) => self,
+            _ => {
+                if self.to_f32() >= rhs.to_f32() {
+                    self
+                } else {
+                    rhs
+                }
+            }
+        }
+    }
+}
+
+/// Pack four BF16 lanes into a 64-bit SIMD register (lane 0 = bits 15:0).
+#[inline]
+pub fn pack4(lanes: [Bf16; 4]) -> u64 {
+    (lanes[0].0 as u64)
+        | ((lanes[1].0 as u64) << 16)
+        | ((lanes[2].0 as u64) << 32)
+        | ((lanes[3].0 as u64) << 48)
+}
+
+/// Unpack a 64-bit SIMD register into four BF16 lanes.
+#[inline]
+pub fn unpack4(v: u64) -> [Bf16; 4] {
+    [
+        Bf16(v as u16),
+        Bf16((v >> 16) as u16),
+        Bf16((v >> 32) as u16),
+        Bf16((v >> 48) as u16),
+    ]
+}
+
+/// Lane-wise SIMD apply over a packed u64 (the `vf*.h` instruction shape).
+#[inline]
+pub fn simd2<F: Fn(Bf16, Bf16) -> Bf16>(a: u64, b: u64, f: F) -> u64 {
+    let (la, lb) = (unpack4(a), unpack4(b));
+    pack4([f(la[0], lb[0]), f(la[1], lb[1]), f(la[2], lb[2]), f(la[3], lb[3])])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for bits in [0x0000u16, 0x3F80, 0xBF80, 0x4000, 0x7F7F, 0xFF7F] {
+            let b = Bf16(bits);
+            assert_eq!(Bf16::from_f32(b.to_f32()).0, bits);
+        }
+    }
+
+    #[test]
+    fn rne_rounds_to_even() {
+        // 1.0 + 2^-9 (exact tie between 1.0 and 1.0+2^-8) -> stays 1.0 (even)
+        let x = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(x).0, 0x3F80);
+        // 1.0 + 3*2^-9 -> rounds up to 1.0 + 2^-7 mantissa 2 (even)
+        let y = f32::from_bits(0x3F81_8000);
+        assert_eq!(Bf16::from_f32(y).0, 0x3F82);
+        // just above a tie rounds up
+        let z = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::from_f32(z).0, 0x3F81);
+    }
+
+    #[test]
+    fn rne_carries_into_exponent() {
+        // largest mantissa + round up must carry: 1.9921875 * (1+2^-8) -> 2.0
+        let x = f32::from_bits(0x3FFF_8001);
+        assert_eq!(Bf16::from_f32(x).0, 0x4000); // 2.0
+    }
+
+    #[test]
+    fn subnormals_flush_to_zero() {
+        let tiny = f32::from_bits(0x0001_0000); // subnormal in bf16 range
+        assert_eq!(Bf16::from_f32(tiny).0, 0x0000);
+        let ntiny = f32::from_bits(0x8001_0000);
+        assert_eq!(Bf16::from_f32(ntiny).0, 0x8000);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(Bf16::from_f32(f32::MAX), POS_INF);
+        assert_eq!(Bf16::from_f32(f32::MIN), NEG_INF);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        assert!(NAN.is_nan());
+        assert!(!POS_INF.is_nan());
+    }
+
+    #[test]
+    fn arithmetic_matches_f32_then_rounds() {
+        let a = Bf16::from_f32(1.5);
+        let b = Bf16::from_f32(2.25);
+        assert_eq!(a.add(b).to_f32(), 3.75);
+        assert_eq!(a.mul(b).to_f32(), 3.375);
+        assert_eq!(b.sub(a).to_f32(), 0.75);
+        assert!((a.div(b).to_f32() - 0.66796875).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fma_single_rounding() {
+        // fma(a, b, c) with a*b inexact in bf16 must differ from mul-then-add
+        let a = Bf16::from_f32(1.0078125); // 1 + 2^-7
+        let c = Bf16::from_f32(-1.015625);
+        let fused = a.fma(a, c).to_f32();
+        let unfused = a.mul(a).add(c).to_f32();
+        let exact = (a.to_f32() as f64 * a.to_f32() as f64 + c.to_f32() as f64) as f32;
+        assert!((fused - exact).abs() <= (unfused - exact).abs());
+    }
+
+    #[test]
+    fn max_riscv_nan_semantics() {
+        let x = Bf16::from_f32(3.0);
+        assert_eq!(NAN.max(x), x);
+        assert_eq!(x.max(NAN), x);
+        assert!(NAN.max(NAN).is_nan());
+        assert_eq!(x.max(Bf16::from_f32(-5.0)), x);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let lanes = [Bf16(0x1111), Bf16(0x2222), Bf16(0x3333), Bf16(0x4444)];
+        assert_eq!(unpack4(pack4(lanes)), lanes);
+    }
+
+    #[test]
+    fn simd2_lanewise() {
+        let a = pack4([ONE, ONE, ZERO, Bf16::from_f32(2.0)]);
+        let b = pack4([ONE, ZERO, ONE, Bf16::from_f32(3.0)]);
+        let s = unpack4(simd2(a, b, Bf16::add));
+        assert_eq!(s[0].to_f32(), 2.0);
+        assert_eq!(s[1].to_f32(), 1.0);
+        assert_eq!(s[2].to_f32(), 1.0);
+        assert_eq!(s[3].to_f32(), 5.0);
+    }
+
+    #[test]
+    fn exhaustive_f32_roundtrip_is_identity() {
+        // from_f32(to_f32(b)) == b for every non-NaN bf16 (incl. inf)
+        for bits in 0..=u16::MAX {
+            let b = Bf16(bits);
+            if b.is_nan() {
+                continue;
+            }
+            let rt = Bf16::from_f32(b.to_f32());
+            if b.is_zero_or_subnormal() {
+                // subnormals flush to signed zero
+                assert_eq!(rt.0 & 0x7FFF, 0);
+            } else {
+                assert_eq!(rt, b, "bits {bits:#06x}");
+            }
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Scheduling primitives: head→cluster assignment and SPM tile planning.
+
+use crate::model::TransformerConfig;
+use crate::sim::SPM_BYTES;
+
+/// Compute clusters in the evaluated Occamy-style system (paper §V-D).
+pub const CLUSTERS: usize = 16;
+
+/// Assignment of attention heads to clusters, in rounds: the paper maps
+/// one head per cluster; with H heads and C clusters the schedule takes
+/// ceil(H/C) rounds per layer.
+#[derive(Clone, Debug)]
+pub struct HeadMap {
+    pub heads: u32,
+    pub clusters: u32,
+}
+
+impl HeadMap {
+    pub fn new(heads: u32, clusters: u32) -> Self {
+        assert!(heads > 0 && clusters > 0);
+        HeadMap { heads, clusters }
+    }
+
+    /// Cluster index executing head `h`.
+    pub fn cluster_of(&self, h: u32) -> u32 {
+        assert!(h < self.heads);
+        h % self.clusters
+    }
+
+    /// Round (sequential wave) in which head `h` executes.
+    pub fn round_of(&self, h: u32) -> u32 {
+        h / self.clusters
+    }
+
+    pub fn rounds(&self) -> u32 {
+        self.heads.div_ceil(self.clusters)
+    }
+
+    /// Heads assigned to a given cluster.
+    pub fn heads_of(&self, cluster: u32) -> Vec<u32> {
+        (0..self.heads).filter(|h| h % self.clusters == cluster).collect()
+    }
+}
+
+/// K/V tile plan for FlashAttention-2 on one cluster: picks the largest
+/// power-of-two tile length that fits the double-buffered working set in
+/// the 128 KiB SPM (paper §III-C: "tile size optimized based on SPM
+/// capacity under double buffering constraints").
+#[derive(Clone, Copy, Debug)]
+pub struct TilePlan {
+    pub sq: u32,
+    pub sk: u32,
+    pub d: u32,
+    pub bq: u32,
+    pub bk: u32,
+}
+
+impl TilePlan {
+    pub fn plan(cfg: &TransformerConfig) -> Self {
+        let d = cfg.d_head();
+        let sq = cfg.seq;
+        let sk = cfg.seq;
+        // Q block of bq rows stays resident; K/V tiles double-buffered.
+        let mut bq = 64u32.min(sq);
+        let mut bk = 64u32;
+        while Self::working_set(bq, bk, d) > SPM_BYTES as u32 && bq > 16 {
+            bq /= 2;
+        }
+        while Self::working_set(bq, bk * 2, d) <= SPM_BYTES as u32 && bk * 2 <= sk {
+            bk *= 2;
+        }
+        TilePlan { sq, sk, d, bq, bk }
+    }
+
+    /// Bytes resident in SPM: Q block, 2×(K tile + V tile) for double
+    /// buffering, S/P tile, O accumulator, statistics.
+    pub fn working_set(bq: u32, bk: u32, d: u32) -> u32 {
+        let q = 2 * bq * d;
+        let kv = 2 * 2 * (2 * bk * d); // double-buffered K and V tiles
+        let s = 2 * bq * bk;
+        let o = 2 * bq * d + 2 * bq * d; // O + T
+        let stats = 3 * 2 * bq;
+        q + kv + s + o + stats + 0x1400 // + constant pool / scratch
+    }
+
+    pub fn tiles(&self) -> u32 {
+        self.sk.div_ceil(self.bk)
+    }
+
+    /// Bytes DMA'd per K/V tile (K tile + V tile, BF16).
+    pub fn tile_bytes(&self) -> u64 {
+        2 * (2 * self.bk as u64 * self.d as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GPT2_SMALL, GPT3_XL, VIT_BASE};
+    use crate::testkit::{forall, Rng};
+
+    #[test]
+    fn every_head_assigned_exactly_once() {
+        forall(50, |rng: &mut Rng| {
+            let heads = rng.range(1, 65) as u32;
+            let clusters = rng.range(1, 33) as u32;
+            let map = HeadMap::new(heads, clusters);
+            let mut seen = vec![0u32; heads as usize];
+            for c in 0..clusters {
+                for h in map.heads_of(c) {
+                    seen[h as usize] += 1;
+                    if map.cluster_of(h) != c {
+                        return Err(format!("head {h} maps to wrong cluster"));
+                    }
+                }
+            }
+            if seen.iter().any(|&n| n != 1) {
+                return Err(format!("assignment counts {seen:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn load_is_balanced_within_one() {
+        forall(50, |rng: &mut Rng| {
+            let heads = rng.range(1, 65) as u32;
+            let clusters = rng.range(1, 33) as u32;
+            let map = HeadMap::new(heads, clusters);
+            let loads: Vec<usize> = (0..clusters).map(|c| map.heads_of(c).len()).collect();
+            let (lo, hi) = (*loads.iter().min().unwrap(), *loads.iter().max().unwrap());
+            if hi - lo > 1 {
+                return Err(format!("imbalanced loads {loads:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rounds_bound_head_waves() {
+        forall(50, |rng: &mut Rng| {
+            let heads = rng.range(1, 65) as u32;
+            let clusters = rng.range(1, 33) as u32;
+            let map = HeadMap::new(heads, clusters);
+            for h in 0..heads {
+                if map.round_of(h) >= map.rounds() {
+                    return Err(format!("head {h} beyond round count"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tile_plans_fit_spm() {
+        for cfg in [GPT2_SMALL, GPT3_XL, VIT_BASE] {
+            let plan = TilePlan::plan(&cfg);
+            assert!(
+                TilePlan::working_set(plan.bq, plan.bk, plan.d) <= SPM_BYTES as u32,
+                "{}: working set exceeds SPM",
+                cfg.name
+            );
+            assert!(plan.bk >= 16 && plan.bk <= plan.sk);
+            assert_eq!(plan.tiles() * plan.bk >= plan.sk, true);
+        }
+    }
+
+    #[test]
+    fn bigger_head_dim_means_smaller_tiles() {
+        let p_small = TilePlan::plan(&GPT2_SMALL); // d_head 64
+        let p_big = TilePlan::plan(&GPT3_XL); // d_head 128
+        assert!(p_big.bk <= p_small.bk);
+    }
+}

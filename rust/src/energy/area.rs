@@ -1,0 +1,114 @@
+//! GF12 area model (paper §V-B, Fig. 5 and Table IV).
+//!
+//! One Gate Equivalent (GE) = 0.121 µm² in GF12 (paper footnote 1).
+
+/// GE → µm² in GF12.
+pub const UM2_PER_KGE: f64 = 0.121 * 1000.0;
+
+/// Area of one EXP block per core (paper: 8 kGE ≈ 968 µm²).
+pub const EXP_BLOCK_KGE: f64 = 8.0;
+
+/// Component areas in kGE, fitted to the paper's percentages:
+/// EXP is +2.3 % of the FPU subsystem, +1.9 % of the core complex and
+/// +1.0 % of the cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    /// FPU subsystem per core, without the EXP block.
+    pub fpu_ss_kge: f64,
+    /// Integer core + L0 I$ per core.
+    pub int_core_kge: f64,
+    /// Cluster-shared logic + SPM (TCDM, interconnect, DMA, I$).
+    pub shared_kge: f64,
+    pub cores: usize,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        // fitted: 8/348 = 2.3% of FPU SS; 8/(348+73) = 1.9% of core
+        // complex; 8*8/(8*421 + 3032) = 1.0% of the cluster
+        AreaModel { fpu_ss_kge: 348.0, int_core_kge: 73.0, shared_kge: 3032.0, cores: 8 }
+    }
+}
+
+/// Area report for baseline vs EXP-extended design.
+#[derive(Clone, Debug)]
+pub struct AreaReport {
+    pub fpu_ss_kge: f64,
+    pub core_complex_kge: f64,
+    pub cluster_kge: f64,
+    pub fpu_ss_overhead: f64,
+    pub core_complex_overhead: f64,
+    pub cluster_overhead: f64,
+}
+
+impl AreaModel {
+    pub fn core_complex_kge(&self, extended: bool) -> f64 {
+        self.int_core_kge + self.fpu_ss_kge + if extended { EXP_BLOCK_KGE } else { 0.0 }
+    }
+
+    pub fn cluster_kge(&self, extended: bool) -> f64 {
+        self.cores as f64 * self.core_complex_kge(extended) + self.shared_kge
+    }
+
+    /// The Fig. 5 comparison: overheads of the extended design.
+    pub fn report(&self) -> AreaReport {
+        let f0 = self.fpu_ss_kge;
+        let f1 = self.fpu_ss_kge + EXP_BLOCK_KGE;
+        let c0 = self.core_complex_kge(false);
+        let c1 = self.core_complex_kge(true);
+        let k0 = self.cluster_kge(false);
+        let k1 = self.cluster_kge(true);
+        AreaReport {
+            fpu_ss_kge: f1,
+            core_complex_kge: c1,
+            cluster_kge: k1,
+            fpu_ss_overhead: f1 / f0 - 1.0,
+            core_complex_overhead: c1 / c0 - 1.0,
+            cluster_overhead: k1 / k0 - 1.0,
+        }
+    }
+
+    /// Per-core EXP block area in µm² (Table IV "our" row: 968 µm²).
+    pub fn exp_block_um2(&self) -> f64 {
+        EXP_BLOCK_KGE * UM2_PER_KGE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_block_is_968_um2() {
+        let m = AreaModel::default();
+        assert!((m.exp_block_um2() - 968.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn overheads_match_fig5() {
+        let r = AreaModel::default().report();
+        assert!(
+            (r.fpu_ss_overhead - 0.023).abs() < 0.004,
+            "FPU SS overhead {:.3} (paper: 2.3%)",
+            r.fpu_ss_overhead
+        );
+        assert!(
+            (r.core_complex_overhead - 0.019).abs() < 0.004,
+            "core complex overhead {:.3} (paper: 1.9%)",
+            r.core_complex_overhead
+        );
+        assert!(
+            (r.cluster_overhead - 0.010).abs() < 0.003,
+            "cluster overhead {:.3} (paper: 1.0%)",
+            r.cluster_overhead
+        );
+    }
+
+    #[test]
+    fn cluster_is_mostly_shared_and_fpus() {
+        let m = AreaModel::default();
+        let cl = m.cluster_kge(true);
+        assert!(m.shared_kge / cl > 0.3, "SPM+interconnect dominate shared area");
+        assert!(m.cores as f64 * EXP_BLOCK_KGE / cl < 0.02);
+    }
+}

@@ -1,0 +1,14 @@
+//! Area, power and energy models of the (extended) Snitch cluster,
+//! calibrated to the paper's GF12 measurements (DESIGN.md §5).
+//!
+//! The energy model is *activity-based*: the simulator reports retired
+//! instructions per class, SSR beats and DMA bytes; this module turns
+//! them into picojoules. Constants are fitted so the paper's anchors
+//! emerge from simulation (Table III: GEMM 3.96→4.04 pJ/op, EXP
+//! 3433→6.39 pJ/op), rather than hard-coding the headline ratios.
+
+pub mod area;
+pub mod power;
+
+pub use area::{AreaModel, AreaReport};
+pub use power::{cluster_energy_pj, core_energy_pj, exp_datapath_pj_per_op, EnergyBreakdown};

@@ -1,0 +1,310 @@
+//! A tiny structured assembler for building simulator programs.
+//!
+//! Kernels (rust/src/kernels) construct their instruction streams through
+//! this builder, which handles forward-label resolution and FREP body
+//! validation, so the listings read close to the paper's Fig. 4 assembly.
+
+use super::instr::{Instr, SsrPattern};
+use super::regs::{FReg, IReg};
+
+/// An unresolved branch target.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Label(usize);
+
+/// Program builder.
+#[derive(Default)]
+pub struct Asm {
+    instrs: Vec<Instr>,
+    labels: Vec<Option<usize>>,
+    patches: Vec<(usize, Label)>,
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a label to be bound later (forward branches).
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind `label` to the current position.
+    pub fn bind(&mut self, label: Label) {
+        assert!(self.labels[label.0].is_none(), "label bound twice");
+        self.labels[label.0] = Some(self.instrs.len());
+    }
+
+    pub fn push(&mut self, i: Instr) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Resolve all labels and return the finished program.
+    ///
+    /// Panics on unbound labels or FREP bodies containing non-FP
+    /// instructions (both are programming errors in a kernel builder).
+    pub fn finish(mut self) -> Vec<Instr> {
+        for (pos, label) in std::mem::take(&mut self.patches) {
+            let target = self.labels[label.0].expect("unbound label");
+            match &mut self.instrs[pos] {
+                Instr::Bnez { target: t, .. }
+                | Instr::Bgeu { target: t, .. }
+                | Instr::Blt { target: t, .. }
+                | Instr::J { target: t } => *t = target,
+                other => panic!("patch on non-branch {other:?}"),
+            }
+        }
+        // validate FREP bodies
+        for (i, instr) in self.instrs.iter().enumerate() {
+            if let Instr::Frep { n_instr, .. } = instr {
+                for k in 0..*n_instr as usize {
+                    let body = self
+                        .instrs
+                        .get(i + 1 + k)
+                        .unwrap_or_else(|| panic!("FREP body runs past end at {i}"));
+                    assert!(body.is_fp(), "non-FP instr {body:?} in FREP body");
+                }
+            }
+        }
+        self.instrs
+    }
+
+    // --- integer ------------------------------------------------------------
+    pub fn li(&mut self, rd: IReg, imm: i64) -> &mut Self {
+        self.push(Instr::Li { rd, imm })
+    }
+    pub fn addi(&mut self, rd: IReg, rs1: IReg, imm: i32) -> &mut Self {
+        self.push(Instr::Addi { rd, rs1, imm })
+    }
+    pub fn add(&mut self, rd: IReg, rs1: IReg, rs2: IReg) -> &mut Self {
+        self.push(Instr::Add { rd, rs1, rs2 })
+    }
+    pub fn sub(&mut self, rd: IReg, rs1: IReg, rs2: IReg) -> &mut Self {
+        self.push(Instr::Sub { rd, rs1, rs2 })
+    }
+    pub fn slli(&mut self, rd: IReg, rs1: IReg, imm: u32) -> &mut Self {
+        self.push(Instr::Slli { rd, rs1, imm })
+    }
+    pub fn srli(&mut self, rd: IReg, rs1: IReg, imm: u32) -> &mut Self {
+        self.push(Instr::Srli { rd, rs1, imm })
+    }
+    pub fn srai(&mut self, rd: IReg, rs1: IReg, imm: u32) -> &mut Self {
+        self.push(Instr::Srai { rd, rs1, imm })
+    }
+    pub fn j(&mut self, label: Label) -> &mut Self {
+        self.patches.push((self.instrs.len(), label));
+        self.push(Instr::J { target: usize::MAX })
+    }
+    pub fn andi(&mut self, rd: IReg, rs1: IReg, imm: i32) -> &mut Self {
+        self.push(Instr::Andi { rd, rs1, imm })
+    }
+    pub fn bnez(&mut self, rs1: IReg, label: Label) -> &mut Self {
+        self.patches.push((self.instrs.len(), label));
+        self.push(Instr::Bnez { rs1, target: usize::MAX })
+    }
+    pub fn bgeu(&mut self, rs1: IReg, rs2: IReg, label: Label) -> &mut Self {
+        self.patches.push((self.instrs.len(), label));
+        self.push(Instr::Bgeu { rs1, rs2, target: usize::MAX })
+    }
+    pub fn blt(&mut self, rs1: IReg, rs2: IReg, label: Label) -> &mut Self {
+        self.patches.push((self.instrs.len(), label));
+        self.push(Instr::Blt { rs1, rs2, target: usize::MAX })
+    }
+
+    // --- memory ---------------------------------------------------------------
+    pub fn flh(&mut self, fd: FReg, base: IReg, offset: i32) -> &mut Self {
+        self.push(Instr::Flh { fd, base, offset })
+    }
+    pub fn fsh(&mut self, fs: FReg, base: IReg, offset: i32) -> &mut Self {
+        self.push(Instr::Fsh { fs, base, offset })
+    }
+    pub fn fld(&mut self, fd: FReg, base: IReg, offset: i32) -> &mut Self {
+        self.push(Instr::Fld { fd, base, offset })
+    }
+    pub fn fsd(&mut self, fs: FReg, base: IReg, offset: i32) -> &mut Self {
+        self.push(Instr::Fsd { fs, base, offset })
+    }
+
+    // --- scalar BF16 ------------------------------------------------------------
+    pub fn fadd_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::FaddH { fd, fs1: a, fs2: b })
+    }
+    pub fn fsub_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::FsubH { fd, fs1: a, fs2: b })
+    }
+    pub fn fmul_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::FmulH { fd, fs1: a, fs2: b })
+    }
+    pub fn fmax_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::FmaxH { fd, fs1: a, fs2: b })
+    }
+    pub fn fdiv_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::FdivH { fd, fs1: a, fs2: b })
+    }
+    pub fn fmadd_h(&mut self, fd: FReg, a: FReg, b: FReg, c: FReg) -> &mut Self {
+        self.push(Instr::FmaddH { fd, fs1: a, fs2: b, fs3: c })
+    }
+
+    // --- FP64 ------------------------------------------------------------------
+    pub fn fadd_d(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::FaddD { fd, fs1: a, fs2: b })
+    }
+    pub fn fsub_d(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::FsubD { fd, fs1: a, fs2: b })
+    }
+    pub fn fmv_x_d(&mut self, rd: IReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::FmvXD { rd, fs1 })
+    }
+    pub fn fmul_d(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::FmulD { fd, fs1: a, fs2: b })
+    }
+    pub fn fmadd_d(&mut self, fd: FReg, a: FReg, b: FReg, c: FReg) -> &mut Self {
+        self.push(Instr::FmaddD { fd, fs1: a, fs2: b, fs3: c })
+    }
+    pub fn fcvt_d_h(&mut self, fd: FReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::FcvtDH { fd, fs1 })
+    }
+    pub fn fcvt_h_d(&mut self, fd: FReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::FcvtHD { fd, fs1 })
+    }
+    pub fn fcvt_s_h(&mut self, fd: FReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::FcvtSH { fd, fs1 })
+    }
+    pub fn fcvt_d_s(&mut self, fd: FReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::FcvtDS { fd, fs1 })
+    }
+    pub fn fcvt_s_d(&mut self, fd: FReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::FcvtSD { fd, fs1 })
+    }
+    pub fn fcvt_h_s(&mut self, fd: FReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::FcvtHS { fd, fs1 })
+    }
+
+    // --- SIMD --------------------------------------------------------------------
+    pub fn vfadd_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::VfaddH { fd, fs1: a, fs2: b })
+    }
+    pub fn vfsub_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::VfsubH { fd, fs1: a, fs2: b })
+    }
+    pub fn vfmul_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::VfmulH { fd, fs1: a, fs2: b })
+    }
+    pub fn vfmax_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::VfmaxH { fd, fs1: a, fs2: b })
+    }
+    pub fn vfmac_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::VfmacH { fd, fs1: a, fs2: b })
+    }
+    pub fn vfsgnj_h(&mut self, fd: FReg, a: FReg, b: FReg) -> &mut Self {
+        self.push(Instr::VfsgnjH { fd, fs1: a, fs2: b })
+    }
+    pub fn vfsum_h(&mut self, fd: FReg, a: FReg) -> &mut Self {
+        self.push(Instr::VfsumH { fd, fs1: a })
+    }
+    pub fn vfmaxred_h(&mut self, fd: FReg, a: FReg) -> &mut Self {
+        self.push(Instr::VfmaxRedH { fd, fs1: a })
+    }
+    pub fn vfrep_h(&mut self, fd: FReg, a: FReg) -> &mut Self {
+        self.push(Instr::VfrepH { fd, fs1: a })
+    }
+    pub fn fmv_x_w(&mut self, rd: IReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::FmvXW { rd, fs1 })
+    }
+    pub fn fmv_w_x(&mut self, fd: FReg, rs1: IReg) -> &mut Self {
+        self.push(Instr::FmvWX { fd, rs1 })
+    }
+    pub fn fmv_d_x(&mut self, fd: FReg, rs1: IReg) -> &mut Self {
+        self.push(Instr::FmvDX { fd, rs1 })
+    }
+
+    // --- EXP extension --------------------------------------------------------------
+    pub fn fexp_h(&mut self, fd: FReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::FexpH { fd, fs1 })
+    }
+    pub fn vfexp_h(&mut self, fd: FReg, fs1: FReg) -> &mut Self {
+        self.push(Instr::VfexpH { fd, fs1 })
+    }
+
+    // --- FREP / SSR -----------------------------------------------------------------
+    pub fn frep(&mut self, n_iter: IReg, n_instr: u32) -> &mut Self {
+        self.push(Instr::Frep { n_iter, n_instr })
+    }
+    pub fn ssr_cfg(&mut self, ssr: u8, cfg: SsrPattern) -> &mut Self {
+        self.push(Instr::SsrCfg { ssr, cfg })
+    }
+    pub fn ssr_enable(&mut self) -> &mut Self {
+        self.push(Instr::SsrEnable)
+    }
+    pub fn ssr_disable(&mut self) -> &mut Self {
+        self.push(Instr::SsrDisable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::regs::*;
+
+    #[test]
+    fn forward_and_backward_labels_resolve() {
+        let mut a = Asm::new();
+        let top = a.label();
+        let out = a.label();
+        a.li(A0, 4);
+        a.bind(top);
+        a.addi(A0, A0, -1);
+        a.bgeu(ZERO, A0, out); // exit when a0 == 0
+        a.bnez(A0, top);
+        a.bind(out);
+        let prog = a.finish();
+        match prog[2] {
+            Instr::Bgeu { target, .. } => assert_eq!(target, 4),
+            ref other => panic!("{other:?}"),
+        }
+        match prog[3] {
+            Instr::Bnez { target, .. } => assert_eq!(target, 1),
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound label")]
+    fn unbound_label_panics() {
+        let mut a = Asm::new();
+        let l = a.label();
+        a.bnez(A0, l);
+        a.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "non-FP instr")]
+    fn frep_body_must_be_fp() {
+        let mut a = Asm::new();
+        a.li(A0, 2);
+        a.frep(A0, 2);
+        a.vfadd_h(FT3, FT3, FT0);
+        a.addi(A0, A0, 1); // illegal inside FREP
+        a.finish();
+    }
+
+    #[test]
+    fn frep_body_validates_ok() {
+        let mut a = Asm::new();
+        a.li(A0, 2);
+        a.frep(A0, 2);
+        a.vfadd_h(FT3, FT3, FT0);
+        a.vfexp_h(FT4, FT3);
+        assert_eq!(a.finish().len(), 4);
+    }
+}

@@ -1,0 +1,122 @@
+//! Binary encodings of the FEXP / VFEXP custom instructions (paper Table I).
+//!
+//! ```text
+//! FEXP  rd, rs1:  0011111 00000 {rs1} 000 {rd} 1010011
+//! VFEXP rd, rs1:  1011111 00000 {rs1} 000 {rd} 1010011
+//! ```
+//!
+//! Both live in the OP-FP major opcode (0x53); the MSB of the instruction
+//! word distinguishes scalar from packed-SIMD. rd/rs1 are 5-bit indices
+//! into the 32×64-bit FP register file.
+
+use super::regs::FReg;
+
+/// RISC-V OP-FP major opcode.
+pub const OPCODE_OP_FP: u32 = 0b101_0011;
+
+/// funct7 for the scalar FEXP (0011111).
+pub const FUNCT7_FEXP: u32 = 0b001_1111;
+
+/// funct7 for the packed-SIMD VFEXP (1011111 — MSB set).
+pub const FUNCT7_VFEXP: u32 = 0b101_1111;
+
+/// Encode `FEXP rd, rs1`.
+pub fn encode_fexp(rd: FReg, rs1: FReg) -> u32 {
+    encode_r(FUNCT7_FEXP, 0, rs1.0 as u32, 0b000, rd.0 as u32)
+}
+
+/// Encode `VFEXP rd, rs1`.
+pub fn encode_vfexp(rd: FReg, rs1: FReg) -> u32 {
+    encode_r(FUNCT7_VFEXP, 0, rs1.0 as u32, 0b000, rd.0 as u32)
+}
+
+fn encode_r(funct7: u32, rs2: u32, rs1: u32, funct3: u32, rd: u32) -> u32 {
+    (funct7 << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | OPCODE_OP_FP
+}
+
+/// A decoded EXP-extension instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpInstr {
+    Fexp { rd: FReg, rs1: FReg },
+    Vfexp { rd: FReg, rs1: FReg },
+}
+
+/// Decode a 32-bit word; `None` if it is not FEXP/VFEXP.
+pub fn decode(word: u32) -> Option<ExpInstr> {
+    if word & 0x7F != OPCODE_OP_FP {
+        return None;
+    }
+    let funct7 = word >> 25;
+    let funct3 = (word >> 12) & 0x7;
+    let rs2 = (word >> 20) & 0x1F;
+    if funct3 != 0 || rs2 != 0 {
+        return None;
+    }
+    let rd = FReg(((word >> 7) & 0x1F) as u8);
+    let rs1 = FReg(((word >> 15) & 0x1F) as u8);
+    match funct7 {
+        FUNCT7_FEXP => Some(ExpInstr::Fexp { rd, rs1 }),
+        FUNCT7_VFEXP => Some(ExpInstr::Vfexp { rd, rs1 }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I, written out bit-for-bit.
+    #[test]
+    fn table1_bit_patterns() {
+        // FEXP f1, f2: 0011111 00000 00010 000 00001 1010011
+        let w = encode_fexp(FReg(1), FReg(2));
+        assert_eq!(w, 0b0011111_00000_00010_000_00001_1010011);
+        // VFEXP f3, f4: 1011111 00000 00100 000 00011 1010011
+        let v = encode_vfexp(FReg(3), FReg(4));
+        assert_eq!(v, 0b1011111_00000_00100_000_00011_1010011);
+    }
+
+    #[test]
+    fn msb_distinguishes_simd() {
+        let s = encode_fexp(FReg(0), FReg(0));
+        let v = encode_vfexp(FReg(0), FReg(0));
+        assert_eq!(s >> 31, 0);
+        assert_eq!(v >> 31, 1);
+        assert_eq!(s & 0x7FFF_FFFF, v & 0x7FFF_FFFF);
+    }
+
+    #[test]
+    fn roundtrip_all_registers() {
+        for rd in 0..32u8 {
+            for rs1 in 0..32u8 {
+                let f = encode_fexp(FReg(rd), FReg(rs1));
+                assert_eq!(
+                    decode(f),
+                    Some(ExpInstr::Fexp { rd: FReg(rd), rs1: FReg(rs1) })
+                );
+                let v = encode_vfexp(FReg(rd), FReg(rs1));
+                assert_eq!(
+                    decode(v),
+                    Some(ExpInstr::Vfexp { rd: FReg(rd), rs1: FReg(rs1) })
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_foreign_words() {
+        assert_eq!(decode(0x0000_0013), None); // addi x0,x0,0
+        assert_eq!(decode(0x0000_0053), None); // fadd.s with funct7=0
+        // right funct7, wrong funct3
+        let w = (FUNCT7_FEXP << 25) | (1 << 12) | OPCODE_OP_FP;
+        assert_eq!(decode(w), None);
+        // right funct7, rs2 != 0
+        let w = (FUNCT7_FEXP << 25) | (3 << 20) | OPCODE_OP_FP;
+        assert_eq!(decode(w), None);
+    }
+
+    #[test]
+    fn base_opcode_is_op_fp() {
+        assert_eq!(encode_fexp(FReg(31), FReg(31)) & 0x7F, 0x53);
+    }
+}

@@ -1,0 +1,225 @@
+//! The simulator's instruction set: the subset of Snitch's RV32IMAFD +
+//! SIMD + FREP/SSR + EXP extensions that the paper's kernels use.
+//!
+//! `H` suffix = BF16 ("half" in the paper's listings is BF16 throughout);
+//! `D` suffix = FP64 (used by the baseline software exponential);
+//! `Vf*` = packed-SIMD over 4 BF16 lanes in a 64-bit FP register.
+
+use super::regs::{FReg, IReg};
+
+/// Instruction-class tag used by the timing and energy models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Class {
+    IntAlu,
+    Branch,
+    FpLoad,
+    FpStore,
+    FpScalarH,
+    FpScalarD,
+    FpDivH,
+    FpSimd,
+    FpExp,
+    Ssr,
+    Frep,
+    Misc,
+}
+
+/// One simulated instruction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Instr {
+    // --- integer core -----------------------------------------------------
+    /// rd = rs1 + imm
+    Addi { rd: IReg, rs1: IReg, imm: i32 },
+    /// rd = rs1 + rs2
+    Add { rd: IReg, rs1: IReg, rs2: IReg },
+    /// rd = rs1 - rs2
+    Sub { rd: IReg, rs1: IReg, rs2: IReg },
+    /// rd = rs1 << imm
+    Slli { rd: IReg, rs1: IReg, imm: u32 },
+    /// rd = rs1 & imm
+    Andi { rd: IReg, rs1: IReg, imm: i32 },
+    /// rd = rs1 >> imm (logical)
+    Srli { rd: IReg, rs1: IReg, imm: u32 },
+    /// rd = rs1 >> imm (arithmetic)
+    Srai { rd: IReg, rs1: IReg, imm: u32 },
+    /// unconditional jump
+    J { target: usize },
+    /// load immediate (li pseudo-instruction)
+    Li { rd: IReg, imm: i64 },
+    /// branch to `target` (program index) if rs1 != 0
+    Bnez { rs1: IReg, target: usize },
+    /// branch if rs1 >= rs2 (unsigned)
+    Bgeu { rs1: IReg, rs2: IReg, target: usize },
+    /// branch if rs1 < rs2 (signed)
+    Blt { rs1: IReg, rs2: IReg, target: usize },
+
+    // --- FP loads/stores (SPM) ---------------------------------------------
+    /// load BF16 into the low lane of fd
+    Flh { fd: FReg, base: IReg, offset: i32 },
+    /// store low-lane BF16
+    Fsh { fs: FReg, base: IReg, offset: i32 },
+    /// load 64-bit (packed 4×BF16 or FP64)
+    Fld { fd: FReg, base: IReg, offset: i32 },
+    /// store 64-bit
+    Fsd { fs: FReg, base: IReg, offset: i32 },
+
+    // --- scalar BF16 -------------------------------------------------------
+    FaddH { fd: FReg, fs1: FReg, fs2: FReg },
+    FsubH { fd: FReg, fs1: FReg, fs2: FReg },
+    FmulH { fd: FReg, fs1: FReg, fs2: FReg },
+    FmaxH { fd: FReg, fs1: FReg, fs2: FReg },
+    /// fd = fs1 / fs2 (the FPU's iterative DIVSQRT block)
+    FdivH { fd: FReg, fs1: FReg, fs2: FReg },
+    /// fd = fs1 * fs2 + fs3
+    FmaddH { fd: FReg, fs1: FReg, fs2: FReg, fs3: FReg },
+
+    // --- scalar FP64 (baseline software exp path) ---------------------------
+    FaddD { fd: FReg, fs1: FReg, fs2: FReg },
+    FsubD { fd: FReg, fs1: FReg, fs2: FReg },
+    FmulD { fd: FReg, fs1: FReg, fs2: FReg },
+    FmaddD { fd: FReg, fs1: FReg, fs2: FReg, fs3: FReg },
+    /// convert BF16 (low lane) -> FP64
+    FcvtDH { fd: FReg, fs1: FReg },
+    /// convert FP64 -> BF16 (low lane), RNE
+    FcvtHD { fd: FReg, fs1: FReg },
+    /// convert BF16 (low lane) -> FP32 (low 32 bits)
+    FcvtSH { fd: FReg, fs1: FReg },
+    /// convert FP32 (low 32 bits) -> FP64
+    FcvtDS { fd: FReg, fs1: FReg },
+    /// convert FP64 -> FP32 (low 32 bits), RNE
+    FcvtSD { fd: FReg, fs1: FReg },
+    /// convert FP32 (low 32 bits) -> BF16 (low lane), RNE
+    FcvtHS { fd: FReg, fs1: FReg },
+    /// move FP bits to integer register (low 32, sign-extended)
+    FmvXW { rd: IReg, fs1: FReg },
+    /// move full 64 FP bits to integer register
+    FmvXD { rd: IReg, fs1: FReg },
+    /// move integer bits into FP register (low 32, upper bits cleared)
+    FmvWX { fd: FReg, rs1: IReg },
+    /// move full 64 integer bits into FP register
+    FmvDX { fd: FReg, rs1: IReg },
+
+    // --- packed SIMD (4×BF16) ------------------------------------------------
+    VfaddH { fd: FReg, fs1: FReg, fs2: FReg },
+    VfsubH { fd: FReg, fs1: FReg, fs2: FReg },
+    VfmulH { fd: FReg, fs1: FReg, fs2: FReg },
+    VfmaxH { fd: FReg, fs1: FReg, fs2: FReg },
+    /// fd += fs1 * fs2 (SIMD MAC, the GEMM workhorse `vfmac.h`)
+    VfmacH { fd: FReg, fs1: FReg, fs2: FReg },
+    /// sign-inject copy (used as a lane move in Fig. 4 listings)
+    VfsgnjH { fd: FReg, fs1: FReg, fs2: FReg },
+    /// horizontal reduce: low lane of fd = sum of 4 lanes of fs1 (vfsum)
+    VfsumH { fd: FReg, fs1: FReg },
+    /// horizontal reduce: low lane of fd = max of 4 lanes of fs1
+    VfmaxRedH { fd: FReg, fs1: FReg },
+    /// broadcast the low lane of fs1 to all 4 lanes (vfcpka-style)
+    VfrepH { fd: FReg, fs1: FReg },
+
+    // --- EXP extension (this paper) -----------------------------------------
+    /// scalar BF16 exponential, 2-cycle latency
+    FexpH { fd: FReg, fs1: FReg },
+    /// packed-SIMD BF16 exponential, 4 lanes, 2-cycle latency
+    VfexpH { fd: FReg, fs1: FReg },
+
+    // --- FREP / SSR ----------------------------------------------------------
+    /// hardware loop: repeat the next `n_instr` FP instructions `n_iter`
+    /// times (n_iter read from an integer register)
+    Frep { n_iter: IReg, n_instr: u32 },
+    /// configure SSR `ssr` as a 2D affine read/write stream
+    SsrCfg { ssr: u8, cfg: SsrPattern },
+    /// enable/disable SSR register mapping on ft0..ft2
+    SsrEnable,
+    SsrDisable,
+
+    Nop,
+}
+
+/// A 3D affine address pattern for one stream semantic register
+/// (the SSR hardware supports up to 4 nested dimensions [24]).
+///
+/// The stream yields `reps2 × reps1 × reps0` 64-bit beats at
+/// `addr = base + i2*stride2 + i1*stride1 + i0*stride0` (byte strides).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SsrPattern {
+    pub base: u32,
+    pub stride0: i32,
+    pub reps0: u32,
+    pub stride1: i32,
+    pub reps1: u32,
+    pub stride2: i32,
+    pub reps2: u32,
+    pub write: bool,
+}
+
+impl SsrPattern {
+    /// Contiguous 1D read of `n` 64-bit beats starting at `base`.
+    pub fn read1d(base: u32, n: u32) -> Self {
+        SsrPattern {
+            base, stride0: 8, reps0: n,
+            stride1: 0, reps1: 1, stride2: 0, reps2: 1, write: false,
+        }
+    }
+
+    /// Contiguous 1D write of `n` 64-bit beats starting at `base`.
+    pub fn write1d(base: u32, n: u32) -> Self {
+        SsrPattern {
+            base, stride0: 8, reps0: n,
+            stride1: 0, reps1: 1, stride2: 0, reps2: 1, write: true,
+        }
+    }
+
+    /// 2D read: `reps1` blocks of `reps0` beats.
+    pub fn read2d(base: u32, stride0: i32, reps0: u32, stride1: i32, reps1: u32) -> Self {
+        SsrPattern { base, stride0, reps0, stride1, reps1, stride2: 0, reps2: 1, write: false }
+    }
+
+    /// 3D read: `reps2` planes of `reps1` blocks of `reps0` beats.
+    #[allow(clippy::too_many_arguments)]
+    pub fn read3d(
+        base: u32, stride0: i32, reps0: u32, stride1: i32, reps1: u32,
+        stride2: i32, reps2: u32,
+    ) -> Self {
+        SsrPattern { base, stride0, reps0, stride1, reps1, stride2, reps2, write: false }
+    }
+
+    /// Total number of 64-bit beats in the pattern.
+    pub fn beats(&self) -> u64 {
+        self.reps0 as u64 * self.reps1 as u64 * self.reps2 as u64
+    }
+}
+
+impl Instr {
+    /// Timing/energy class of this instruction.
+    pub fn class(&self) -> Class {
+        use Instr::*;
+        match self {
+            Addi { .. } | Add { .. } | Sub { .. } | Slli { .. } | Andi { .. }
+            | Srli { .. } | Srai { .. } | Li { .. } => Class::IntAlu,
+            Bnez { .. } | Bgeu { .. } | Blt { .. } | J { .. } => Class::Branch,
+            Flh { .. } | Fld { .. } => Class::FpLoad,
+            Fsh { .. } | Fsd { .. } => Class::FpStore,
+            FaddH { .. } | FsubH { .. } | FmulH { .. } | FmaxH { .. }
+            | FmaddH { .. } => Class::FpScalarH,
+            FdivH { .. } => Class::FpDivH,
+            FaddD { .. } | FsubD { .. } | FmulD { .. } | FmaddD { .. } | FcvtDH { .. }
+            | FcvtHD { .. } | FcvtSH { .. } | FcvtDS { .. } | FcvtSD { .. }
+            | FcvtHS { .. } | FmvXW { .. } | FmvXD { .. } | FmvWX { .. }
+            | FmvDX { .. } => Class::FpScalarD,
+            VfaddH { .. } | VfsubH { .. } | VfmulH { .. } | VfmaxH { .. }
+            | VfmacH { .. } | VfsgnjH { .. } | VfsumH { .. } | VfmaxRedH { .. }
+            | VfrepH { .. } => Class::FpSimd,
+            FexpH { .. } | VfexpH { .. } => Class::FpExp,
+            SsrCfg { .. } | SsrEnable | SsrDisable => Class::Ssr,
+            Frep { .. } => Class::Frep,
+            Nop => Class::Misc,
+        }
+    }
+
+    /// Is this an FPU-sequencer instruction (legal inside an FREP body)?
+    pub fn is_fp(&self) -> bool {
+        matches!(
+            self.class(),
+            Class::FpScalarH | Class::FpScalarD | Class::FpDivH | Class::FpSimd | Class::FpExp
+        )
+    }
+}

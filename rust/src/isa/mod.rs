@@ -1,0 +1,13 @@
+//! Instruction-set layer: Table-I encodings for FEXP/VFEXP, the simulator
+//! instruction enum, register names, and a structured assembler used by
+//! the kernel builders.
+
+pub mod assembler;
+pub mod encoding;
+pub mod instr;
+pub mod regs;
+
+pub use assembler::{Asm, Label};
+pub use encoding::{decode, encode_fexp, encode_vfexp, ExpInstr};
+pub use instr::{Class, Instr, SsrPattern};
+pub use regs::{FReg, IReg};

@@ -1,0 +1,68 @@
+//! Register names for the Snitch core model (RV32 integer + 64-bit FP).
+
+/// Integer register (x0..x31). `x0` is hardwired to zero.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct IReg(pub u8);
+
+/// Floating-point register (f0..f31), 64 bits wide; holds an FP64 value,
+/// a packed 4×BF16 SIMD vector, or a scalar BF16 in the low lane.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct FReg(pub u8);
+
+impl IReg {
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl FReg {
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+// Conventional ABI-ish names used by the kernel builders.
+pub const ZERO: IReg = IReg(0);
+pub const RA: IReg = IReg(1);
+pub const SP: IReg = IReg(2);
+pub const A0: IReg = IReg(10);
+pub const A1: IReg = IReg(11);
+pub const A2: IReg = IReg(12);
+pub const A3: IReg = IReg(13);
+pub const A4: IReg = IReg(14);
+pub const A5: IReg = IReg(15);
+pub const T0: IReg = IReg(5);
+pub const T1: IReg = IReg(6);
+pub const T2: IReg = IReg(7);
+pub const T3: IReg = IReg(28);
+pub const T4: IReg = IReg(29);
+pub const T5: IReg = IReg(30);
+pub const T6: IReg = IReg(31);
+
+/// SSR-mapped FP registers: reads/writes of ft0..ft2 stream memory when
+/// SSRs are enabled (paper §II / [24]).
+pub const FT0: FReg = FReg(0);
+pub const FT1: FReg = FReg(1);
+pub const FT2: FReg = FReg(2);
+pub const FT3: FReg = FReg(3);
+pub const FT4: FReg = FReg(4);
+pub const FT5: FReg = FReg(5);
+pub const FT6: FReg = FReg(6);
+pub const FT7: FReg = FReg(7);
+pub const FS0: FReg = FReg(8);
+pub const FS1: FReg = FReg(9);
+pub const FS2: FReg = FReg(18);
+pub const FS3: FReg = FReg(19);
+pub const FS4: FReg = FReg(20);
+pub const FS5: FReg = FReg(21);
+/// ft8..ft11 (f28..f31): clobbered by the modeled libm ABI spills.
+pub const FT8: FReg = FReg(28);
+pub const FT9: FReg = FReg(29);
+pub const FT10: FReg = FReg(30);
+pub const FT11: FReg = FReg(31);
+pub const FA0: FReg = FReg(10);
+pub const FA1: FReg = FReg(11);
+pub const FA2: FReg = FReg(12);
+pub const FA3: FReg = FReg(13);
+pub const FA4: FReg = FReg(14);
+pub const FA5: FReg = FReg(15);

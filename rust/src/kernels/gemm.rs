@@ -1,0 +1,237 @@
+//! BF16 GEMM on the Snitch cluster: dot-product formulation with SSR
+//! streams and FREP (the [5]-style instruction-level optimized kernel
+//! that all GEMM operations in this work build on).
+//!
+//! `C[M,N] = A[M,K] · B[K,N]` with **B stored transposed** (`BT[N,K]`),
+//! so every output is a K-deep dot product between two contiguous rows —
+//! QK^T and P·V in FlashAttention-2 both have this shape once V is kept
+//! transposed in SPM (the DMA performs the strided transpose at load).
+//!
+//! Inner loop: 8 SIMD MAC accumulators over 8 output columns, SSR0
+//! streaming the A row (each beat repeated 8×, 3D pattern), SSR1
+//! streaming 8 BT rows interleaved. Issue-limited at ~1 MAC/cycle; the
+//! paper's Table III measures this kernel at 85 % FPU utilization.
+
+use crate::isa::regs::*;
+use crate::isa::{Asm, Instr, SsrPattern};
+use crate::sim::{Cluster, ClusterStats, CORES_PER_CLUSTER};
+
+/// Column-group width (accumulators per FREP body).
+const JG: u32 = 8;
+
+/// SPM layout of one GEMM call.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmLayout {
+    pub a: u32,  // A[M,K] row-major BF16
+    pub bt: u32, // BT[N,K] row-major BF16
+    pub c: u32,  // C[M,N] row-major BF16
+}
+
+/// Emit one core's share of the GEMM: output rows [i_lo, i_hi).
+///
+/// Requires K % 4 == 0 and N % 8 == 0.
+pub fn emit_gemm_rows(
+    a: &mut Asm,
+    lay: GemmLayout,
+    i_lo: u32,
+    i_hi: u32,
+    k: u32,
+    n: u32,
+) {
+    emit_gemm_rows_strided(a, lay.a, lay.bt, 2 * k, lay.c, i_lo, i_hi, k, n);
+}
+
+/// Strided GEMM emitter: BT rows may live `bt_stride` bytes apart (e.g.
+/// a column slice of a wider transposed matrix — the P·V case in
+/// FlashAttention-2, where BT is a tile of V^T).
+#[allow(clippy::too_many_arguments)]
+pub fn emit_gemm_rows_strided(
+    a: &mut Asm,
+    a_base: u32,
+    bt_base: u32,
+    bt_stride: u32,
+    c_base: u32,
+    i_lo: u32,
+    i_hi: u32,
+    k: u32,
+    n: u32,
+) {
+    assert!(k % 4 == 0 && n % JG == 0, "K%4==0 and N%{JG}==0 required");
+    let kb = k / 4; // beats per row
+    for i in i_lo..i_hi {
+        // SSR0: A row i, each beat repeated JG times, re-walked per group:
+        //   i0: repeat beat (stride 0) x JG
+        //   i1: walk the row (stride 8) x kb
+        //   i2: next column group restarts the row (stride 0) x n/JG
+        a.ssr_cfg(
+            0,
+            SsrPattern::read3d(a_base + i * 2 * k, 0, JG, 8, kb, 0, n / JG),
+        );
+        // SSR1: BT rows j..j+7 interleaved per k-beat, then next group:
+        //   i0: row hop (bt_stride) x JG
+        //   i1: beat hop (stride 8) x kb
+        //   i2: group hop (JG*bt_stride) x n/JG
+        a.ssr_cfg(
+            1,
+            SsrPattern::read3d(bt_base, bt_stride as i32, JG, 8, kb, (JG * bt_stride) as i32, n / JG),
+        );
+        a.ssr_enable();
+        a.li(A0, (c_base + i * 2 * n) as i64);
+        a.li(A1, (n / JG) as i64);
+        a.li(A2, kb as i64);
+        let jloop = a.label();
+        a.bind(jloop);
+        // zero the 8 accumulators (x - x = 0 on finite values)
+        for acc in 0..JG as u8 {
+            let r = FReg(3 + acc);
+            a.push(Instr::VfsubH { fd: r, fs1: r, fs2: r });
+        }
+        a.frep(A2, JG);
+        for acc in 0..JG as u8 {
+            let r = FReg(3 + acc);
+            a.push(Instr::VfmacH { fd: r, fs1: FT0, fs2: FT1 });
+        }
+        // horizontal-reduce each accumulator and store C[i, j..j+8]
+        for acc in 0..JG as u8 {
+            let r = FReg(3 + acc);
+            a.push(Instr::VfsumH { fd: r, fs1: r });
+            a.fsh(r, A0, 2 * acc as i32);
+        }
+        a.addi(A0, A0, 2 * JG as i32);
+        a.addi(A1, A1, -1);
+        a.bnez(A1, jloop);
+        a.ssr_disable();
+    }
+}
+
+/// Result of a cluster GEMM run.
+pub struct GemmRun {
+    pub c: Vec<f32>, // row-major M x N
+    pub stats: ClusterStats,
+    pub flops: u64,
+}
+
+/// Run `C = A · BT^T` on one cluster (rows split over 8 cores).
+pub fn run_gemm(a_mat: &[f32], bt_mat: &[f32], m: u32, k: u32, n: u32) -> GemmRun {
+    assert_eq!(a_mat.len(), (m * k) as usize);
+    assert_eq!(bt_mat.len(), (n * k) as usize);
+    let lay = GemmLayout { a: 0x2000, bt: 0x2000 + 2 * m * k, c: 0x2000 + 2 * m * k + 2 * n * k };
+    assert!(lay.c + 2 * m * n <= 128 * 1024, "GEMM tile too large for SPM");
+
+    let mut cluster = Cluster::new();
+    cluster.spm.write_f32_as_bf16(lay.a, a_mat);
+    cluster.spm.write_f32_as_bf16(lay.bt, bt_mat);
+
+    let per_core = m.div_ceil(CORES_PER_CLUSTER as u32);
+    let programs: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER as u32)
+        .map(|c| {
+            let lo = (c * per_core).min(m);
+            let hi = ((c + 1) * per_core).min(m);
+            if lo == hi {
+                return vec![];
+            }
+            let mut asm = Asm::new();
+            emit_gemm_rows(&mut asm, lay, lo, hi, k, n);
+            asm.finish()
+        })
+        .collect();
+    let stats = cluster.run(&programs);
+    let c = cluster.spm.read_bf16_as_f32(lay.c, (m * n) as usize);
+    GemmRun { c, stats, flops: 2 * m as u64 * n as u64 * k as u64 }
+}
+
+/// Host-side f32 oracle (with bf16 input quantization).
+pub fn gemm_ref(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let q = |x: f32| crate::bf16::Bf16::from_f32(x).to_f32();
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += q(a[i * k + kk]) * q(bt[j * k + kk]);
+            }
+            c[i * n + j] = s;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut state = seed | 1;
+        (0..rows * cols)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((state >> 33) as f64 / 2f64.powi(31) * 2.0 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_gemm_matches_reference() {
+        let (m, k, n) = (8, 16, 8);
+        let a = mat(m, k, 1);
+        let bt = mat(n, k, 2);
+        let run = run_gemm(&a, &bt, m as u32, k as u32, n as u32);
+        let want = gemm_ref(&a, &bt, m, k, n);
+        for (i, (&got, &w)) in run.c.iter().zip(&want).enumerate() {
+            // bf16 accumulate in 4 lanes + pairwise reduce: ~1% on K=16
+            assert!(
+                (got - w).abs() < 0.05 + 0.02 * w.abs(),
+                "elem {i}: got {got}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn identity_gemm() {
+        // A · I^T = A (I is symmetric so BT = I works)
+        let (m, k) = (4usize, 8usize);
+        let a = mat(m, k, 3);
+        let mut id = vec![0.0f32; k * k];
+        for i in 0..k {
+            id[i * k + i] = 1.0;
+        }
+        let run = run_gemm(&a, &id, m as u32, k as u32, k as u32);
+        for i in 0..m * k {
+            let w = crate::bf16::Bf16::from_f32(a[i]).to_f32();
+            assert!((run.c[i] - w).abs() < 1e-3, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn fpu_utilization_near_paper_anchor() {
+        // Table III context: 48x48 GEMM at 85% FPU utilization
+        let (m, k, n) = (48u32, 48u32, 48u32);
+        let a = mat(m as usize, k as usize, 4);
+        let bt = mat(n as usize, k as usize, 5);
+        let run = run_gemm(&a, &bt, m, k, n);
+        let combined = run.stats.combined();
+        // combined sums all 8 cores' retired FP ops over the makespan
+        let util = combined.fpu_utilization() / 8.0;
+        assert!(
+            util > 0.35,
+            "FPU utilization {util:.2} too low (paper: 0.85; our dot-product
+             formulation pays a per-8-outputs reduce epilogue)"
+        );
+        // energy model consumes flops; make sure they're counted
+        assert!(combined.flops >= run.flops, "flops undercounted");
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let (m, k, n) = (16, 64, 24);
+        let a = mat(m, k, 6);
+        let bt = mat(n, k, 7);
+        let run = run_gemm(&a, &bt, m as u32, k as u32, n as u32);
+        let want = gemm_ref(&a, &bt, m, k, n);
+        let mut max_err = 0.0f32;
+        for (&got, &w) in run.c.iter().zip(&want) {
+            max_err = max_err.max((got - w).abs() / (1.0 + w.abs()));
+        }
+        assert!(max_err < 0.05, "max rel err {max_err}");
+    }
+}

@@ -1,0 +1,7 @@
+//! The paper's software kernels as simulator instruction streams:
+//! the four softmax configurations (Fig. 4/6), the [5]-style GEMM, the
+//! FlashAttention-2 forward, and the software exponentials they build on.
+pub mod flash_attention;
+pub mod gemm;
+pub mod softexp;
+pub mod softmax;

@@ -1,0 +1,462 @@
+//! The paper's four Softmax kernel configurations (§V-C, Fig. 4/Fig. 6):
+//!
+//! | variant      | MAX/NORM              | EXP                        |
+//! |--------------|----------------------|----------------------------|
+//! | `Baseline`   | scalar loops          | libm (`math.h`, ~319 cyc)  |
+//! | `SwOptim`    | FREP+SSR+SIMD         | libm                       |
+//! | `SwExpSw`    | FREP+SSR+SIMD         | Schraudolph in software    |
+//! | `SwExpHw`    | FREP+SSR+SIMD         | **VFEXP** (this paper)     |
+//!
+//! Rows are partitioned over the eight cluster cores; each kernel builder
+//! emits one program per core. Row length must be a multiple of 16 for
+//! the SIMD variants (the paper's sequence lengths all are).
+
+use super::softexp::{emit_libm_exp, emit_schraudolph_sw_hoisted, write_exp_pool};
+use crate::isa::regs::*;
+use crate::isa::{Asm, Instr, SsrPattern};
+use crate::sim::{Cluster, ClusterStats, CORES_PER_CLUSTER};
+
+/// The four evaluated configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SoftmaxVariant {
+    Baseline,
+    SwOptim,
+    SwExpSw,
+    SwExpHw,
+    /// Ablation: the EXP block reached through the *scalar* FEXP
+    /// instruction only (no packed SIMD) — isolates the contribution of
+    /// the 4-lane ExpOpGroup from the instruction itself.
+    SwExpHwScalar,
+}
+
+impl SoftmaxVariant {
+    pub const ALL: [SoftmaxVariant; 4] = [
+        SoftmaxVariant::Baseline,
+        SoftmaxVariant::SwOptim,
+        SoftmaxVariant::SwExpSw,
+        SoftmaxVariant::SwExpHw,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SoftmaxVariant::Baseline => "Baseline",
+            SoftmaxVariant::SwOptim => "SW Optim",
+            SoftmaxVariant::SwExpSw => "SW & EXP SW Optim",
+            SoftmaxVariant::SwExpHw => "SW & EXP HW Optim",
+            SoftmaxVariant::SwExpHwScalar => "SW & EXP HW (scalar FEXP)",
+        }
+    }
+}
+
+/// SPM layout for the softmax kernels.
+pub struct SoftmaxLayout {
+    pub pool: u32,
+    pub input: u32,
+    pub output: u32,
+}
+
+pub const DEFAULT_LAYOUT: SoftmaxLayout =
+    SoftmaxLayout { pool: 0x1000, input: 0x2000, output: 0x2000 + 48 * 1024 };
+
+/// Result of a cluster softmax run.
+pub struct SoftmaxRun {
+    pub out: Vec<Vec<f32>>,
+    pub stats: ClusterStats,
+    /// Cluster cycles per output element (the paper's headline metric).
+    pub cycles_per_output: f64,
+}
+
+/// Execute `rows` (each of equal length, multiple of 16) on one cluster.
+pub fn run_softmax(variant: SoftmaxVariant, rows: &[Vec<f32>]) -> SoftmaxRun {
+    let n = rows.first().map(|r| r.len()).unwrap_or(0);
+    assert!(n > 0 && rows.iter().all(|r| r.len() == n), "ragged rows");
+    assert!(n % 16 == 0, "row length {n} must be a multiple of 16");
+    let lay = DEFAULT_LAYOUT;
+    let bytes = 2 * n as u32;
+    assert!(
+        lay.output + rows.len() as u32 * bytes <= 128 * 1024,
+        "workload does not fit the 128 KiB SPM; tile it at the coordinator"
+    );
+
+    let mut cluster = Cluster::new();
+    write_exp_pool(&mut cluster.spm, lay.pool);
+    for (i, row) in rows.iter().enumerate() {
+        cluster.spm.write_f32_as_bf16(lay.input + i as u32 * bytes, row);
+    }
+
+    // static row partition over cores
+    let per_core = rows.len().div_ceil(CORES_PER_CLUSTER);
+    let programs: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER)
+        .map(|c| {
+            let lo = (c * per_core).min(rows.len());
+            let hi = ((c + 1) * per_core).min(rows.len());
+            if lo == hi {
+                return vec![];
+            }
+            build_rows_program(variant, &lay, lo as u32, hi as u32, n as u32)
+        })
+        .collect();
+    let stats = cluster.run(&programs);
+
+    let out = (0..rows.len())
+        .map(|i| cluster.spm.read_bf16_as_f32(lay.output + i as u32 * bytes, n))
+        .collect();
+    // per-core latency metric (the paper's cycles/output): the makespan
+    // divided by the elements the busiest core processed
+    let cores_used = rows.len().min(CORES_PER_CLUSTER);
+    let rows_on_busiest = rows.len().div_ceil(cores_used.max(1));
+    let per_core_outputs = (rows_on_busiest * n) as f64;
+    SoftmaxRun { cycles_per_output: stats.cycles as f64 / per_core_outputs, out, stats }
+}
+
+/// Build one core's program covering rows [lo, hi).
+fn build_rows_program(
+    variant: SoftmaxVariant,
+    lay: &SoftmaxLayout,
+    lo: u32,
+    hi: u32,
+    n: u32,
+) -> Vec<Instr> {
+    let mut a = Asm::new();
+    a.li(A4, lay.pool as i64);
+    for r in lo..hi {
+        let in_addr = lay.input + r * 2 * n;
+        let out_addr = lay.output + r * 2 * n;
+        match variant {
+            SoftmaxVariant::Baseline => emit_row_baseline(&mut a, in_addr, out_addr, n),
+            SoftmaxVariant::SwOptim => emit_row_optim(&mut a, in_addr, out_addr, n, Exp::Libm),
+            SoftmaxVariant::SwExpSw => emit_row_optim(&mut a, in_addr, out_addr, n, Exp::SchraudolphSw),
+            SoftmaxVariant::SwExpHw => emit_row_optim(&mut a, in_addr, out_addr, n, Exp::Vfexp),
+            SoftmaxVariant::SwExpHwScalar => {
+                emit_row_optim(&mut a, in_addr, out_addr, n, Exp::FexpScalar)
+            }
+        }
+    }
+    a.finish()
+}
+
+enum Exp {
+    Libm,
+    SchraudolphSw,
+    Vfexp,
+    FexpScalar,
+}
+
+/// Fig. 4 left column: the plain-C baseline (no FREP/SSR/SIMD).
+fn emit_row_baseline(a: &mut Asm, input: u32, output: u32, n: u32) {
+    // ---- MAX loop over N ------------------------------------------------
+    a.li(A0, input as i64);
+    a.li(A3, n as i64);
+    a.flh(FT3, A0, 0); // max := x[0]
+    let max_loop = a.label();
+    a.bind(max_loop);
+    a.flh(FT4, A0, 0);
+    a.fmax_h(FT3, FT3, FT4);
+    a.addi(A0, A0, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, max_loop);
+
+    // ---- EXP loop: y[i] = exp(x[i] - max); sum += y[i] ---------------------
+    a.li(A0, input as i64);
+    a.li(A1, output as i64);
+    a.li(A3, n as i64);
+    a.fmv_w_x(FT5, ZERO); // sum := 0 (bf16 +0)
+    let exp_loop = a.label();
+    a.bind(exp_loop);
+    a.flh(FT4, A0, 0);
+    a.fsub_h(FT6, FT4, FT3);
+    emit_libm_exp(a, FT7, FT6);
+    a.fsh(FT7, A1, 0);
+    a.fadd_h(FT5, FT5, FT7);
+    a.addi(A0, A0, 2);
+    a.addi(A1, A1, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, exp_loop);
+
+    // ---- NORM loop: y[i] /= sum (one division per element!) -----------------
+    a.li(A1, output as i64);
+    a.li(A3, n as i64);
+    let norm_loop = a.label();
+    a.bind(norm_loop);
+    a.flh(FT4, A1, 0);
+    a.fdiv_h(FT6, FT4, FT5);
+    a.fsh(FT6, A1, 0);
+    a.addi(A1, A1, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, norm_loop);
+}
+
+/// Fig. 4 right column: FREP + SSR + SIMD, with the EXP step in one of
+/// three technologies.
+fn emit_row_optim(a: &mut Asm, input: u32, output: u32, n: u32, exp: Exp) {
+    // ---- MAX: 4 SIMD accumulators, SSR-streamed, FREP N/16 ----------------
+    a.ssr_cfg(0, SsrPattern::read1d(input, n / 4));
+    a.fld(FT3, ZERO, input as i32); // seed accumulators with first beats
+    a.vfsgnj_h(FT4, FT3, FT3);
+    a.vfsgnj_h(FT5, FT3, FT3);
+    a.vfsgnj_h(FT6, FT3, FT3);
+    a.ssr_enable();
+    a.li(A3, (n / 16) as i64);
+    a.frep(A3, 4);
+    a.vfmax_h(FT3, FT3, FT0);
+    a.vfmax_h(FT4, FT4, FT0);
+    a.vfmax_h(FT5, FT5, FT0);
+    a.vfmax_h(FT6, FT6, FT0);
+    a.ssr_disable();
+    // tree-reduce the 16 lanes to a broadcast max in FT7
+    a.vfmax_h(FT3, FT3, FT4);
+    a.vfmax_h(FT5, FT5, FT6);
+    a.vfmax_h(FT3, FT3, FT5);
+    a.vfmaxred_h(FT3, FT3);
+    a.vfrep_h(FT7, FT3);
+
+    // ---- EXP + SUM --------------------------------------------------------
+    match exp {
+        Exp::Vfexp => {
+            // the Fig. 4 optimized loop: 8 instructions per 8 elements
+            a.ssr_cfg(1, SsrPattern::read1d(input, n / 4));
+            a.ssr_cfg(2, SsrPattern::write1d(output, n / 4));
+            a.vfsub_h(FS0, FS0, FS0); // sum accumulators := 0
+            a.vfsub_h(FS1, FS1, FS1);
+            a.ssr_enable();
+            a.li(A3, (n / 8) as i64);
+            a.frep(A3, 8);
+            a.vfsub_h(FT3, FT1, FT7);
+            a.vfsub_h(FT4, FT1, FT7);
+            a.vfexp_h(FT3, FT3);
+            a.vfexp_h(FT4, FT4);
+            a.vfsgnj_h(FT2, FT3, FT3); // store y via the write stream
+            a.vfsgnj_h(FT2, FT4, FT4);
+            a.vfadd_h(FS0, FS0, FT3);
+            a.vfadd_h(FS1, FS1, FT4);
+            a.ssr_disable();
+            a.vfadd_h(FS0, FS0, FS1);
+            a.vfsum_h(FS0, FS0); // scalar sum in FS0 low lane
+        }
+        Exp::FexpScalar => {
+            // scalar loop, but the exponential is the 2-cycle FEXP
+            a.li(A0, input as i64);
+            a.li(A1, output as i64);
+            a.li(A3, n as i64);
+            a.fmv_w_x(FS0, ZERO);
+            let exp_loop = a.label();
+            a.bind(exp_loop);
+            a.flh(FT4, A0, 0);
+            a.fsub_h(FT5, FT4, FT7);
+            a.fexp_h(FT6, FT5);
+            a.fsh(FT6, A1, 0);
+            a.fadd_h(FS0, FS0, FT6);
+            a.addi(A0, A0, 2);
+            a.addi(A1, A1, 2);
+            a.addi(A3, A3, -1);
+            a.bnez(A3, exp_loop);
+        }
+        Exp::Libm | Exp::SchraudolphSw => {
+            // exponential stays scalar software: SSR/FREP cannot wrap a
+            // branchy multi-instruction routine, so this is a plain loop.
+            if matches!(exp, Exp::SchraudolphSw) {
+                a.fld(FS2, A4, 576); // SCHRAU_SCALE (see softexp.rs pool)
+                a.fld(FS3, A4, 584); // SCHRAU_BIAS
+            }
+            a.li(A0, input as i64);
+            a.li(A1, output as i64);
+            a.li(A3, n as i64);
+            a.fmv_w_x(FS0, ZERO); // sum := 0
+            let exp_loop = a.label();
+            a.bind(exp_loop);
+            a.flh(FT4, A0, 0);
+            // NB: ft8..ft11 are clobbered by the libm ABI-spill model, so
+            // the loop state lives in ft4..ft6 (free after the MAX phase).
+            a.fsub_h(FT5, FT4, FT7);
+            match exp {
+                Exp::Libm => emit_libm_exp(a, FT6, FT5),
+                Exp::SchraudolphSw => emit_schraudolph_sw_hoisted(a, FT6, FT5, FS2, FS3),
+                Exp::Vfexp | Exp::FexpScalar => unreachable!(),
+            }
+            a.fsh(FT6, A1, 0);
+            a.fadd_h(FS0, FS0, FT6);
+            a.addi(A0, A0, 2);
+            a.addi(A1, A1, 2);
+            a.addi(A3, A3, -1);
+            a.bnez(A3, exp_loop);
+        }
+    }
+
+    // ---- NORM: one division, then a VFMUL stream ----------------------------
+    a.li(T0, 0x3F80); // 1.0 in BF16
+    a.fmv_w_x(FS1, T0);
+    a.fdiv_h(FS1, FS1, FS0); // 1/sum
+    a.vfrep_h(FS1, FS1);
+    a.ssr_cfg(0, SsrPattern::read1d(output, n / 4));
+    a.ssr_cfg(1, SsrPattern::write1d(output, n / 4));
+    a.ssr_enable();
+    a.li(A3, (n / 16) as i64);
+    a.frep(A3, 4);
+    a.vfmul_h(FT1, FS1, FT0);
+    a.vfmul_h(FT1, FS1, FT0);
+    a.vfmul_h(FT1, FS1, FT0);
+    a.vfmul_h(FT1, FS1, FT0);
+    a.ssr_disable();
+}
+
+/// Host-side f32 oracle for functional checks.
+pub fn softmax_ref(row: &[f32]) -> Vec<f32> {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let e: Vec<f32> = row.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = e.iter().sum();
+    e.iter().map(|&x| x / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(r: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut state = seed | 1;
+        (0..r)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                        ((state >> 33) as f64 / 2f64.powi(31) * 16.0 - 8.0) as f32
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn check_correct(variant: SoftmaxVariant, tol: f32) {
+        let data = rows(8, 64, 42);
+        let run = run_softmax(variant, &data);
+        for (i, row) in data.iter().enumerate() {
+            let want = softmax_ref(row);
+            for (j, (&got, &w)) in run.out[i].iter().zip(&want).enumerate() {
+                assert!(
+                    (got - w).abs() < tol,
+                    "{variant:?} row {i} col {j}: got {got}, want {w}"
+                );
+            }
+            let s: f32 = run.out[i].iter().sum();
+            assert!((s - 1.0).abs() < 0.05, "{variant:?} row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn baseline_correct() {
+        check_correct(SoftmaxVariant::Baseline, 0.01);
+    }
+
+    #[test]
+    fn sw_optim_correct() {
+        check_correct(SoftmaxVariant::SwOptim, 0.01);
+    }
+
+    #[test]
+    fn sw_exp_sw_correct() {
+        // plain Schraudolph: ~4% exp error shows up in softmax
+        check_correct(SoftmaxVariant::SwExpSw, 0.05);
+    }
+
+    #[test]
+    fn sw_exp_hw_correct() {
+        check_correct(SoftmaxVariant::SwExpHw, 0.01);
+    }
+
+    #[test]
+    fn hw_optim_hits_paper_cycles_per_output() {
+        // paper §IV-C: 1.5 instr/output, ~2.125 cycles/output
+        let data = rows(8, 1024, 7);
+        let run = run_softmax(SoftmaxVariant::SwExpHw, &data);
+        assert!(
+            run.cycles_per_output < 2.5,
+            "optimized kernel at {} cycles/output",
+            run.cycles_per_output
+        );
+        let combined = run.stats.combined();
+        let instr_per_out = (combined.retired_total() as f64) / (8.0 * 1024.0);
+        // combined counts all 8 cores; outputs likewise 8 rows x 1024
+        assert!(
+            instr_per_out < 2.0,
+            "instr/output {instr_per_out} (paper: 1.5)"
+        );
+    }
+
+    #[test]
+    fn baseline_matches_paper_anchor() {
+        // paper: 56 instr/output, ~360 cycles/output
+        let data = rows(8, 64, 9);
+        let run = run_softmax(SoftmaxVariant::Baseline, &data);
+        assert!(
+            (250.0..500.0).contains(&run.cycles_per_output),
+            "baseline at {} cycles/output, paper anchor 360",
+            run.cycles_per_output
+        );
+    }
+
+    #[test]
+    fn speedup_order_matches_fig6a() {
+        let data = rows(8, 256, 3);
+        let cpo: Vec<f64> = SoftmaxVariant::ALL
+            .iter()
+            .map(|v| run_softmax(*v, &data).cycles_per_output)
+            .collect();
+        // Baseline > SwOptim > SwExpSw > SwExpHw, strictly
+        assert!(cpo[0] > cpo[1] && cpo[1] > cpo[2] && cpo[2] > cpo[3], "{cpo:?}");
+        // headline: two-orders-of-magnitude speedup of the full stack
+        let speedup = cpo[0] / cpo[3];
+        assert!(
+            speedup > 80.0,
+            "HW-optimized speedup {speedup:.1}x (paper: 162.7x)"
+        );
+        // software-only optimization barely helps (paper: 1.1x)
+        assert!(cpo[0] / cpo[1] < 2.0, "SW-only speedup too large");
+    }
+
+    #[test]
+    fn uneven_rows_still_correct() {
+        // 5 rows on 8 cores: three cores idle
+        let data = rows(5, 32, 11);
+        let run = run_softmax(SoftmaxVariant::SwExpHw, &data);
+        for (i, row) in data.iter().enumerate() {
+            let want = softmax_ref(row);
+            for (got, w) in run.out[i].iter().zip(&want) {
+                assert!((got - w).abs() < 0.01);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 16")]
+    fn ragged_simd_length_panics() {
+        run_softmax(SoftmaxVariant::SwExpHw, &rows(2, 17, 1));
+    }
+
+    #[test]
+    fn scalar_fexp_correct_but_slower_than_simd() {
+        let data = rows(8, 256, 21);
+        let scalar = run_softmax(SoftmaxVariant::SwExpHwScalar, &data);
+        for (i, row) in data.iter().enumerate() {
+            let want = softmax_ref(row);
+            for (got, w) in scalar.out[i].iter().zip(&want) {
+                assert!((got - w).abs() < 0.01);
+            }
+        }
+        let simd = run_softmax(SoftmaxVariant::SwExpHw, &data);
+        let ratio = scalar.cycles_per_output / simd.cycles_per_output;
+        // the ExpOpGroup's SIMD path is the majority of the win over a
+        // scalar-FEXP design (ablation for DESIGN.md)
+        assert!(ratio > 4.0, "scalar/simd ratio {ratio:.1}");
+        // but scalar FEXP still crushes the software exponentials
+        let sw = run_softmax(SoftmaxVariant::SwExpSw, &data);
+        assert!(sw.cycles_per_output / scalar.cycles_per_output > 1.5);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let data = rows(4, 64, 33);
+        let a = run_softmax(SoftmaxVariant::SwExpHw, &data);
+        let b = run_softmax(SoftmaxVariant::SwExpHw, &data);
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.out, b.out);
+    }
+}

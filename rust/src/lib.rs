@@ -1,0 +1,29 @@
+//! # VEXP — accelerated Softmax for Transformers on RISC-V
+//!
+//! Full-system reproduction of *"VEXP: A Low-Cost RISC-V ISA Extension
+//! for Accelerated Softmax Computation in Transformers"* (Wang et al.,
+//! 2025), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1/2 (build time)**: the VEXP approximation and the paper's
+//!   kernels in Pallas/JAX, AOT-lowered to HLO text (`python/compile`);
+//! - **Layer 3 (this crate)**: the bit-exact EXP-block model ([`vexp`]),
+//!   the Snitch-cluster simulator ([`sim`]), the paper's software kernels
+//!   ([`kernels`]), the area/energy models ([`energy`]), transformer
+//!   workload models ([`model`]), the multi-cluster coordinator
+//!   ([`coordinator`]) and the PJRT runtime ([`runtime`]) that executes
+//!   the AOT artifacts with Python fully out of the request path.
+//!
+//! See DESIGN.md for the experiment index (every paper table/figure →
+//! bench target) and EXPERIMENTS.md for measured results.
+
+pub mod accuracy;
+pub mod bf16;
+pub mod coordinator;
+pub mod energy;
+pub mod isa;
+pub mod kernels;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod vexp;

@@ -1,0 +1,165 @@
+//! `vexp` CLI — the Layer-3 leader binary.
+//!
+//! Subcommands map onto the paper's experiments:
+//!   info                      system + artifact inventory
+//!   exp <x...>                exponentials via the PJRT vexp artifact,
+//!                             cross-checked against the bit-exact model
+//!   softmax [rows] [cols]     the four kernel configurations (Fig. 6a-c)
+//!   flashattention            FA-2 baseline vs optimized (Fig. 6d-f)
+//!   e2e [model]               16-cluster end-to-end estimate (Fig. 8)
+//!   area                      GF12 area report (Fig. 5)
+
+use anyhow::Result;
+use vexp::bf16::Bf16;
+use vexp::coordinator::{KernelRates, SystemEstimator};
+use vexp::energy::power::{cluster_energy_pj, power_mw};
+use vexp::energy::AreaModel;
+use vexp::kernels::flash_attention::{run_flash_attention, FaVariant};
+use vexp::kernels::softmax::{run_softmax, SoftmaxVariant};
+use vexp::model::config::ALL_MODELS;
+use vexp::runtime::pjrt::Input;
+use vexp::runtime::Runtime;
+use vexp::vexp::exp_unit;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("info") => info(),
+        Some("exp") => exp_cmd(&args[1..]),
+        Some("softmax") => softmax_cmd(&args[1..]),
+        Some("flashattention") => flash_cmd(),
+        Some("e2e") => e2e_cmd(&args[1..]),
+        Some("area") => area_cmd(),
+        _ => {
+            eprintln!(
+                "usage: vexp <info|exp|softmax|flashattention|e2e|area> [args]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    println!("VEXP reproduction — Snitch cluster + BF16 EXP ISA extension");
+    println!("cluster: 8 cores, 128 KiB SPM, FREP+SSR+SIMD, VFEXP @ 2 cycles");
+    match Runtime::open("artifacts") {
+        Ok(rt) => {
+            println!("artifacts ({}):", rt.artifact_dir().display());
+            for ep in rt.entry_points() {
+                let art = rt.artifact(ep).unwrap();
+                println!("  {ep:20} inputs {:?}", art.inputs.len());
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn exp_cmd(args: &[String]) -> Result<()> {
+    let xs: Vec<f32> = if args.is_empty() {
+        vec![-2.0, -1.0, 0.0, 1.0, 2.0]
+    } else {
+        args.iter().map(|a| a.parse().unwrap_or(0.0)).collect()
+    };
+    let mut buf = vec![0.0f32; 4096];
+    buf[..xs.len()].copy_from_slice(&xs);
+    let mut rt = Runtime::open("artifacts")?;
+    let out = rt.execute("vexp", &[Input::F32(&buf)])?;
+    println!("{:>10}  {:>12}  {:>12}  {:>12}", "x", "pjrt", "bit-exact", "libm");
+    for (i, &x) in xs.iter().enumerate() {
+        let bitexact = exp_unit(Bf16::from_f32(x)).to_f32();
+        println!("{x:>10.4}  {:>12.6}  {bitexact:>12.6}  {:>12.6}", out[i], x.exp());
+        assert_eq!(out[i], bitexact, "PJRT and Rust EXP models disagree!");
+    }
+    println!("PJRT artifact and bit-exact Rust model agree on all inputs.");
+    Ok(())
+}
+
+fn softmax_cmd(args: &[String]) -> Result<()> {
+    let rows: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(8);
+    let cols: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(1024);
+    let data: Vec<Vec<f32>> = (0..rows)
+        .map(|r| (0..cols).map(|i| ((i * 7 + r * 13) % 97) as f32 * 0.15 - 7.0).collect())
+        .collect();
+    println!("softmax {rows}x{cols} on one cluster:");
+    println!("{:24} {:>12} {:>10} {:>12} {:>10}", "variant", "cyc/output", "speedup", "energy pJ/o", "power mW");
+    let mut base_cyc = 0.0;
+    for v in SoftmaxVariant::ALL {
+        let run = run_softmax(v, &data);
+        if v == SoftmaxVariant::Baseline {
+            base_cyc = run.cycles_per_output;
+        }
+        let ext = v == SoftmaxVariant::SwExpHw;
+        let e = cluster_energy_pj(&run.stats, ext);
+        let pj = e.total() / (rows * cols) as f64;
+        println!(
+            "{:24} {:>12.2} {:>9.1}x {:>12.1} {:>10.1}",
+            v.label(),
+            run.cycles_per_output,
+            base_cyc / run.cycles_per_output,
+            pj,
+            power_mw(e.total(), run.stats.cycles) / 8.0
+        );
+    }
+    Ok(())
+}
+
+fn flash_cmd() -> Result<()> {
+    let (sq, sk, d, bk) = (32u32, 128u32, 64u32, 32u32);
+    let q: Vec<f32> = (0..sq * d).map(|i| ((i % 31) as f32 - 15.0) * 0.05).collect();
+    let k: Vec<f32> = (0..sk * d).map(|i| ((i % 29) as f32 - 14.0) * 0.05).collect();
+    let v: Vec<f32> = (0..sk * d).map(|i| ((i % 23) as f32 - 11.0) * 0.05).collect();
+    println!("FlashAttention-2, head dim {d} (GPT-2 config), Sq={sq} Sk={sk}:");
+    let base = run_flash_attention(FaVariant::Baseline, &q, &k, &v, sq, sk, d, bk);
+    let opt = run_flash_attention(FaVariant::Optimized, &q, &k, &v, sq, sk, d, bk);
+    let eb = cluster_energy_pj(&base.stats, false).total();
+    let eo = cluster_energy_pj(&opt.stats, true).total();
+    println!("  baseline : {:>10} cycles  {:>12.0} pJ", base.stats.cycles, eb);
+    println!("  optimized: {:>10} cycles  {:>12.0} pJ", opt.stats.cycles, eo);
+    println!(
+        "  speedup {:.1}x (paper: up to 8.2x), energy {:.1}x (paper: up to 4.1x)",
+        base.stats.cycles as f64 / opt.stats.cycles as f64,
+        eb / eo
+    );
+    Ok(())
+}
+
+fn e2e_cmd(args: &[String]) -> Result<()> {
+    let filter = args.first().map(|s| s.to_lowercase());
+    println!("calibrating kernel rates on the simulator...");
+    let est = SystemEstimator::new(KernelRates::calibrate());
+    println!(
+        "{:12} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
+        "model", "BL ms", "Optim ms", "speedup", "BL mJ", "Optim mJ", "energy"
+    );
+    for cfg in ALL_MODELS {
+        if let Some(f) = &filter {
+            if !cfg.name.to_lowercase().contains(f) {
+                continue;
+            }
+        }
+        let (b, o) = est.fig8_pair(&cfg);
+        println!(
+            "{:12} {:>12.2} {:>12.2} {:>7.1}x {:>12.2} {:>12.2} {:>7.1}x",
+            cfg.name,
+            b.latency_ms(),
+            o.latency_ms(),
+            b.cycles / o.cycles,
+            b.energy_mj(),
+            o.energy_mj(),
+            b.energy_pj / o.energy_pj
+        );
+    }
+    Ok(())
+}
+
+fn area_cmd() -> Result<()> {
+    let m = AreaModel::default();
+    let r = m.report();
+    println!("GF12 area (Fig. 5):");
+    println!("  EXP block / core : {:.0} um^2 ({} kGE)", m.exp_block_um2(), 8);
+    println!("  FPU subsystem    : {:>8.0} kGE (+{:.1}%)", r.fpu_ss_kge, r.fpu_ss_overhead * 100.0);
+    println!("  core complex     : {:>8.0} kGE (+{:.1}%)", r.core_complex_kge, r.core_complex_overhead * 100.0);
+    println!("  cluster          : {:>8.0} kGE (+{:.1}%)", r.cluster_kge, r.cluster_overhead * 100.0);
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! The paper's evaluated model configurations (§V-D).
+
+/// A decoder/encoder transformer configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerConfig {
+    pub name: &'static str,
+    pub layers: u32,
+    pub d_model: u32,
+    pub heads: u32,
+    pub d_ff: u32,
+    /// Evaluation sequence length (non-autoregressive, §V-D).
+    pub seq: u32,
+}
+
+impl TransformerConfig {
+    pub fn d_head(&self) -> u32 {
+        self.d_model / self.heads
+    }
+}
+
+pub const GPT2_SMALL: TransformerConfig = TransformerConfig {
+    name: "GPT-2 Small",
+    layers: 12,
+    d_model: 768,
+    heads: 12,
+    d_ff: 3072,
+    seq: 2048,
+};
+
+pub const GPT3_XL: TransformerConfig = TransformerConfig {
+    name: "GPT-3 XL",
+    layers: 24,
+    d_model: 2048,
+    heads: 16,
+    d_ff: 8192,
+    seq: 2048,
+};
+
+pub const VIT_BASE: TransformerConfig = TransformerConfig {
+    name: "ViT-Base",
+    layers: 12,
+    d_model: 768,
+    heads: 12,
+    d_ff: 3072,
+    seq: 197,
+};
+
+pub const VIT_HUGE: TransformerConfig = TransformerConfig {
+    name: "ViT-Huge",
+    layers: 32,
+    d_model: 1280,
+    heads: 16,
+    d_ff: 5120,
+    seq: 197,
+};
+
+pub const ALL_MODELS: [TransformerConfig; 4] = [GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dims_are_sane() {
+        assert_eq!(GPT2_SMALL.d_head(), 64); // paper: head dim 64
+        assert_eq!(GPT3_XL.d_head(), 128);
+        assert_eq!(VIT_BASE.d_head(), 64);
+        assert_eq!(VIT_HUGE.d_head(), 80);
+    }
+
+    #[test]
+    fn sequence_lengths_match_paper() {
+        assert_eq!(GPT2_SMALL.seq, 2048);
+        assert_eq!(VIT_BASE.seq, 197);
+    }
+}

@@ -1,0 +1,104 @@
+//! Per-layer operation counts for non-autoregressive transformer
+//! inference (the Fig. 1 / Fig. 8 workload model).
+
+use super::config::TransformerConfig;
+
+/// Operation counts of one transformer block at sequence length S.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerOps {
+    /// GEMM FLOPs in projections (QKV, output, both FFN matrices).
+    pub proj_flops: u64,
+    /// GEMM FLOPs in attention score/value products (QK^T and P·V).
+    pub attn_flops: u64,
+    /// Softmax elements (S² per head — each needs max/exp/norm).
+    pub softmax_elems: u64,
+    /// Bytes streamed from HBM for weights (BF16).
+    pub weight_bytes: u64,
+    /// Bytes streamed for activations and KV tiles (BF16).
+    pub act_bytes: u64,
+}
+
+impl LayerOps {
+    pub fn total_flops(&self) -> u64 {
+        self.proj_flops + self.attn_flops
+    }
+}
+
+/// Whole-model operation counts.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadOps {
+    pub per_layer: LayerOps,
+    pub layers: u32,
+}
+
+impl WorkloadOps {
+    /// Build from a model configuration (one full non-autoregressive
+    /// forward pass over `cfg.seq` tokens).
+    pub fn of(cfg: &TransformerConfig) -> Self {
+        let s = cfg.seq as u64;
+        let d = cfg.d_model as u64;
+        let h = cfg.heads as u64;
+        let dh = cfg.d_head() as u64;
+        let ff = cfg.d_ff as u64;
+
+        // projections: QKV (3·d·d), attn out (d·d), FFN (2·d·ff); ×2 MAC
+        let proj_flops = 2 * s * (3 * d * d + d * d + 2 * d * ff);
+        // attention: QK^T (S²·dh per head) + P·V (S²·dh per head); ×2 MAC
+        let attn_flops = 2 * h * (s * s * dh) * 2;
+        let softmax_elems = h * s * s;
+        let weight_bytes = 2 * (4 * d * d + 2 * d * ff);
+        let act_bytes = 2 * (s * d * 8 + h * s * dh * 4);
+
+        WorkloadOps {
+            per_layer: LayerOps { proj_flops, attn_flops, softmax_elems, weight_bytes, act_bytes },
+            layers: cfg.layers,
+        }
+    }
+
+    pub fn total(&self) -> LayerOps {
+        let l = self.layers as u64;
+        LayerOps {
+            proj_flops: self.per_layer.proj_flops * l,
+            attn_flops: self.per_layer.attn_flops * l,
+            softmax_elems: self.per_layer.softmax_elems * l,
+            weight_bytes: self.per_layer.weight_bytes * l,
+            act_bytes: self.per_layer.act_bytes * l,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::*;
+
+    #[test]
+    fn gpt2_small_magnitudes() {
+        let w = WorkloadOps::of(&GPT2_SMALL).total();
+        // ~ 2 * 124M params * 2048 tokens ≈ 3.5e11 proj FLOPs + attention
+        assert!(w.proj_flops > 2e11 as u64 && w.proj_flops < 2e12 as u64);
+        // softmax: 12 layers * 12 heads * 2048^2 = 6.04e8 elements
+        assert_eq!(w.softmax_elems, 12 * 12 * 2048 * 2048);
+    }
+
+    #[test]
+    fn softmax_share_grows_with_sequence() {
+        // Fig. 1's driving effect: softmax elements scale with S² while
+        // projection FLOPs scale with S — the share grows linearly in S.
+        let mut cfg = GPT3_XL;
+        cfg.seq = 128;
+        let short = WorkloadOps::of(&cfg).total();
+        cfg.seq = 2048;
+        let long = WorkloadOps::of(&cfg).total();
+        let share_short = short.softmax_elems as f64 / short.total_flops() as f64;
+        let share_long = long.softmax_elems as f64 / long.total_flops() as f64;
+        assert!(share_long > 4.0 * share_short);
+    }
+
+    #[test]
+    fn vit_much_smaller_than_gpt() {
+        let vit = WorkloadOps::of(&VIT_BASE).total();
+        let gpt = WorkloadOps::of(&GPT2_SMALL).total();
+        assert!(gpt.softmax_elems > 50 * vit.softmax_elems);
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the XLA CPU client. Python never runs here — this is
+//! the request path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO **text** in,
+//! `HloModuleProto::from_text_file` → `XlaComputation` → compile once →
+//! execute many. Artifacts are indexed by `manifest.json`, read with the
+//! dependency-free mini JSON reader in [`json`].
+
+pub mod json;
+pub mod pjrt;
+
+pub use pjrt::{Artifact, Runtime};

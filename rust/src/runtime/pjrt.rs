@@ -1,0 +1,148 @@
+//! XLA/PJRT execution of the AOT artifacts.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::json::Json;
+
+/// Input/output description of one artifact entry point.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    /// (shape, dtype) per input, from the manifest.
+    pub inputs: Vec<(Vec<usize>, String)>,
+}
+
+/// A compiled-on-load PJRT runtime over the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("missing manifest in {dir:?} — run `make artifacts`"))?;
+        let json = Json::parse(&manifest).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let eps = json
+            .get("entry_points")
+            .ok_or_else(|| anyhow!("manifest lacks entry_points"))?;
+        let mut artifacts = HashMap::new();
+        for name in eps.keys() {
+            let ep = eps.get(name).unwrap();
+            let file = dir.join(
+                ep.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry {name} lacks file"))?,
+            );
+            let mut inputs = vec![];
+            for inp in ep.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                let shape: Vec<usize> = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                let dtype = inp
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string();
+                inputs.push((shape, dtype));
+            }
+            artifacts.insert(name.to_string(), Artifact { name: name.to_string(), file, inputs });
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, artifacts, compiled: HashMap::new(), dir })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entry_points(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.get(name)
+    }
+
+    /// Compile an entry point (idempotent; compiled executables cached).
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown entry point {name}"))?;
+        let path = art
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {:?}", art.file))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("loading HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute with mixed f32/i32 inputs; returns the flattened f32
+    /// outputs of the (single-tuple) result.
+    pub fn execute(&mut self, name: &str, inputs: &[Input]) -> Result<Vec<f32>> {
+        self.compile(name)?;
+        let art = &self.artifacts[name];
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                art.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (inp, (shape, dtype)) in inputs.iter().zip(&art.inputs) {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = match (inp, dtype.as_str()) {
+                (Input::F32(data), "float32") => {
+                    let n: usize = shape.iter().product();
+                    if data.len() != n {
+                        bail!("{name}: input length {} != shape {:?}", data.len(), shape);
+                    }
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+                (Input::I32(data), "int32") => {
+                    let n: usize = shape.iter().product();
+                    if data.len() != n {
+                        bail!("{name}: input length {} != shape {:?}", data.len(), shape);
+                    }
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+                (got, want) => bail!("{name}: input kind {got:?} vs dtype {want}"),
+            };
+            literals.push(lit);
+        }
+        let exe = &self.compiled[name];
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // jax lowering uses return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// A runtime input buffer.
+#[derive(Debug)]
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}

@@ -1,0 +1,132 @@
+//! The 8-core Snitch compute cluster: shared SPM + parallel cores + DMA.
+//!
+//! Cores execute disjoint partitions of the data (the paper parallelizes
+//! softmax rows and GEMM tiles across the eight cores), so functional
+//! execution runs the cores sequentially against the shared SPM while the
+//! timing model takes the makespan.
+
+use super::core::Core;
+use super::dma::DmaModel;
+use super::mem::Mem;
+use super::stats::{ClusterStats, CoreStats};
+use crate::isa::Instr;
+
+/// Cores per cluster (paper §III-A).
+pub const CORES_PER_CLUSTER: usize = 8;
+
+/// One compute cluster.
+pub struct Cluster {
+    pub spm: Mem,
+    pub dma: DmaModel,
+}
+
+impl Default for Cluster {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Cluster {
+    pub fn new() -> Self {
+        Cluster { spm: Mem::spm(), dma: DmaModel::default() }
+    }
+
+    /// Run one program per core (up to eight); returns per-core stats and
+    /// the cluster makespan. Programs must touch disjoint SPM outputs.
+    pub fn run(&mut self, programs: &[Vec<Instr>]) -> ClusterStats {
+        assert!(
+            programs.len() <= CORES_PER_CLUSTER,
+            "{} programs > {CORES_PER_CLUSTER} cores",
+            programs.len()
+        );
+        let mut per_core = Vec::with_capacity(programs.len());
+        for prog in programs {
+            let mut core = Core::new();
+            per_core.push(core.run(&mut self.spm, prog));
+        }
+        let cycles = per_core.iter().map(|s: &CoreStats| s.cycles).max().unwrap_or(0);
+        ClusterStats { per_core, cycles, dma_bytes: 0, dma_cycles: 0 }
+    }
+
+    /// Run the same kernel-builder on all eight cores with the core index
+    /// passed in (the SPMD pattern every paper kernel uses).
+    pub fn run_spmd<F>(&mut self, build: F) -> ClusterStats
+    where
+        F: Fn(usize) -> Vec<Instr>,
+    {
+        let programs: Vec<_> = (0..CORES_PER_CLUSTER).map(build).collect();
+        self.run(&programs)
+    }
+
+    /// Account a DMA transfer that is *not* overlapped with compute
+    /// (e.g. the initial tile load).
+    pub fn dma_transfer(&mut self, stats: &mut ClusterStats, bytes: u64) {
+        stats.dma_bytes += bytes;
+        let c = self.dma.cycles(bytes);
+        stats.dma_cycles += c;
+        stats.cycles += c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bf16::Bf16;
+    use crate::isa::regs::*;
+    use crate::isa::{Asm, SsrPattern};
+
+    /// Each core scales its own 64-element row by 2.0 via FREP+SSR.
+    #[test]
+    fn spmd_rows_are_disjoint_and_parallel() {
+        let n = 64u32;
+        let mut cluster = Cluster::new();
+        let data: Vec<f32> = (0..8 * n).map(|i| i as f32 * 0.125).collect();
+        cluster.spm.write_f32_as_bf16(0, &data);
+        // constant 2.0 broadcast at 0x1F000
+        cluster.spm.write_f32_as_bf16(0x1F000, &[2.0, 2.0, 2.0, 2.0]);
+
+        let stats = cluster.run_spmd(|core| {
+            let row = 2 * n * core as u32; // byte offset of this core's row
+            let mut a = Asm::new();
+            a.li(A0, 0x1F000);
+            a.fld(FT3, A0, 0);
+            a.ssr_cfg(0, SsrPattern::read1d(row, n / 4));
+            a.ssr_cfg(1, SsrPattern::write1d(0x8000 + row, n / 4));
+            a.ssr_enable();
+            a.li(A1, (n / 4) as i64);
+            a.frep(A1, 1);
+            a.vfmul_h(FT1, FT3, FT0);
+            a.ssr_disable();
+            a.finish()
+        });
+
+        assert_eq!(stats.per_core.len(), 8);
+        for core in 0..8 {
+            let out = cluster.spm.read_bf16_as_f32(0x8000 + 2 * n * core as u32, n as usize);
+            for (i, &y) in out.iter().enumerate() {
+                let x = Bf16::from_f32((core as u32 * n + i as u32) as f32 * 0.125).to_f32();
+                assert_eq!(y, x * 2.0, "core {core} elem {i}");
+            }
+        }
+        // cores are balanced: makespan == every core's cycles
+        let c0 = stats.per_core[0].cycles;
+        assert!(stats.per_core.iter().all(|s| s.cycles.abs_diff(c0) < 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "programs > 8 cores")]
+    fn too_many_programs_panics() {
+        let mut cluster = Cluster::new();
+        let progs = vec![vec![Instr::Nop]; 9];
+        cluster.run(&progs);
+    }
+
+    #[test]
+    fn dma_adds_unoverlapped_cycles() {
+        let mut cluster = Cluster::new();
+        let mut stats = ClusterStats::default();
+        cluster.dma_transfer(&mut stats, 64 * 100);
+        assert_eq!(stats.dma_bytes, 6400);
+        assert_eq!(stats.cycles, 100 + 100);
+    }
+}

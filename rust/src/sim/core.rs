@@ -1,0 +1,674 @@
+//! Snitch core model: functional execution + cycle-approximate timing.
+//!
+//! Models the pseudo dual-issue structure of Snitch [1]: the integer core
+//! issues at most one instruction per cycle and hands FP instructions to
+//! the FPU sequencer (offload handshake); the FPU is an in-order,
+//! fully-pipelined unit with per-class result latencies and a register
+//! scoreboard. FREP bodies are issued by the sequencer at one FP
+//! instruction per cycle subject only to data dependencies — which is
+//! exactly why the paper's FREP+SSR kernels reach ~1 instr/cycle while
+//! the scalar baseline pays core-issue, load-use and branch overheads.
+
+use super::fpu::{latency, BRANCH_TAKEN_PENALTY, FDIV_OCCUPANCY, FP_OFFLOAD_OVERHEAD};
+use super::mem::Mem;
+use super::stats::CoreStats;
+use crate::bf16::{pack4, simd2, unpack4, Bf16};
+use crate::isa::instr::{Class, Instr, SsrPattern};
+use crate::isa::regs::{FReg, IReg};
+use crate::vexp::{exp_unit, vfexp};
+
+#[derive(Clone, Copy, Debug)]
+struct SsrState {
+    pat: SsrPattern,
+    i0: u32,
+    i1: u32,
+    i2: u32,
+}
+
+impl SsrState {
+    fn next_addr(&mut self) -> u32 {
+        assert!(
+            self.i2 < self.pat.reps2,
+            "SSR stream exhausted (pattern {:?})",
+            self.pat
+        );
+        let addr = (self.pat.base as i64
+            + self.i2 as i64 * self.pat.stride2 as i64
+            + self.i1 as i64 * self.pat.stride1 as i64
+            + self.i0 as i64 * self.pat.stride0 as i64) as u32;
+        self.i0 += 1;
+        if self.i0 == self.pat.reps0 {
+            self.i0 = 0;
+            self.i1 += 1;
+            if self.i1 == self.pat.reps1 {
+                self.i1 = 0;
+                self.i2 += 1;
+            }
+        }
+        addr
+    }
+}
+
+/// One Snitch core (integer registers + 64-bit FP register file).
+pub struct Core {
+    pub iregs: [i64; 32],
+    pub fregs: [u64; 32],
+    freg_ready: [u64; 32],
+    ssr: [Option<SsrState>; 3],
+    ssr_enabled: bool,
+    core_cycle: u64,
+    fpu_free: u64,
+    last_retire: u64,
+    stats: CoreStats,
+}
+
+impl Default for Core {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Core {
+    pub fn new() -> Self {
+        Core {
+            iregs: [0; 32],
+            fregs: [0; 32],
+            freg_ready: [0; 32],
+            ssr: [None, None, None],
+            ssr_enabled: false,
+            core_cycle: 0,
+            fpu_free: 0,
+            last_retire: 0,
+            stats: CoreStats::default(),
+        }
+    }
+
+    /// Run a program to completion against `spm`; returns the stats.
+    pub fn run(&mut self, spm: &mut Mem, prog: &[Instr]) -> CoreStats {
+        let mut pc = 0usize;
+        let mut guard = 0u64;
+        while pc < prog.len() {
+            guard += 1;
+            assert!(guard < 500_000_000, "runaway program");
+            pc = self.step(spm, prog, pc);
+        }
+        let mut s = self.stats.clone();
+        s.cycles = self.core_cycle.max(self.last_retire);
+        s
+    }
+
+    fn ireg(&self, r: IReg) -> i64 {
+        if r.0 == 0 {
+            0
+        } else {
+            self.iregs[r.idx()]
+        }
+    }
+
+    fn set_ireg(&mut self, r: IReg, v: i64) {
+        if r.0 != 0 {
+            self.iregs[r.idx()] = v;
+        }
+    }
+
+    /// Read an FP operand, popping from an SSR stream when mapped.
+    /// Returns (value, ready_cycle).
+    fn read_freg(&mut self, spm: &mut Mem, r: FReg) -> (u64, u64) {
+        if self.ssr_enabled && r.0 < 3 {
+            if let Some(st) = self.ssr[r.idx()].as_mut() {
+                if !st.pat.write {
+                    let addr = st.next_addr();
+                    self.stats.ssr_beats += 1;
+                    return (spm.read_u64(addr), 0);
+                }
+            }
+        }
+        (self.fregs[r.idx()], self.freg_ready[r.idx()])
+    }
+
+    /// Write an FP destination, pushing to an SSR write stream when mapped.
+    fn write_freg(&mut self, spm: &mut Mem, r: FReg, v: u64, ready: u64) {
+        if self.ssr_enabled && r.0 < 3 {
+            if let Some(st) = self.ssr[r.idx()].as_mut() {
+                if st.pat.write {
+                    let addr = st.next_addr();
+                    self.stats.ssr_beats += 1;
+                    spm.write_u64(addr, v);
+                    self.last_retire = self.last_retire.max(ready);
+                    return;
+                }
+            }
+        }
+        self.fregs[r.idx()] = v;
+        self.freg_ready[r.idx()] = ready;
+        self.last_retire = self.last_retire.max(ready);
+    }
+
+    /// Execute one FP instruction on the FPU timeline.
+    ///
+    /// `seq` = true when issued from the FREP sequencer (no core-issue
+    /// cost); false when offloaded from the integer pipeline.
+    fn exec_fp(&mut self, spm: &mut Mem, i: &Instr, seq: bool) {
+        let class = i.class();
+        if !seq {
+            self.core_cycle += 1 + FP_OFFLOAD_OVERHEAD as u64;
+        }
+        let (result, dest, ready_in) = self.compute_fp(spm, i);
+        let issue = self
+            .fpu_free
+            .max(ready_in)
+            .max(if seq { 0 } else { self.core_cycle });
+        self.fpu_free = issue
+            + if class == Class::FpDivH {
+                FDIV_OCCUPANCY as u64
+            } else {
+                1
+            };
+        let done = issue + latency(class) as u64;
+        if let Some(d) = dest {
+            self.write_freg(spm, d, result, done);
+        }
+        self.last_retire = self.last_retire.max(done);
+        self.stats.bump(class);
+        self.count_work(i);
+    }
+
+    /// Pure-function part of an FP instruction: operand reads (with SSR
+    /// pops), the arithmetic itself, and the max operand-ready cycle.
+    fn compute_fp(&mut self, spm: &mut Mem, i: &Instr) -> (u64, Option<FReg>, u64) {
+        use Instr::*;
+        let h = |v: u64| Bf16(v as u16);
+        let d = |v: u64| f64::from_bits(v);
+        macro_rules! bin_h {
+            ($fd:expr, $a:expr, $b:expr, $op:expr) => {{
+                let (va, ra) = self.read_freg(spm, *$a);
+                let (vb, rb) = self.read_freg(spm, *$b);
+                let r = $op(h(va), h(vb)).0 as u64 | (va & !0xFFFF);
+                (r, Some(*$fd), ra.max(rb))
+            }};
+        }
+        macro_rules! bin_d {
+            ($fd:expr, $a:expr, $b:expr, $op:expr) => {{
+                let (va, ra) = self.read_freg(spm, *$a);
+                let (vb, rb) = self.read_freg(spm, *$b);
+                let r: f64 = $op(d(va), d(vb));
+                (r.to_bits(), Some(*$fd), ra.max(rb))
+            }};
+        }
+        macro_rules! simd {
+            ($fd:expr, $a:expr, $b:expr, $op:expr) => {{
+                let (va, ra) = self.read_freg(spm, *$a);
+                let (vb, rb) = self.read_freg(spm, *$b);
+                (simd2(va, vb, $op), Some(*$fd), ra.max(rb))
+            }};
+        }
+        match i {
+            FaddH { fd, fs1, fs2 } => bin_h!(fd, fs1, fs2, Bf16::add),
+            FsubH { fd, fs1, fs2 } => bin_h!(fd, fs1, fs2, Bf16::sub),
+            FmulH { fd, fs1, fs2 } => bin_h!(fd, fs1, fs2, Bf16::mul),
+            FmaxH { fd, fs1, fs2 } => bin_h!(fd, fs1, fs2, Bf16::max),
+            FdivH { fd, fs1, fs2 } => bin_h!(fd, fs1, fs2, Bf16::div),
+            FmaddH { fd, fs1, fs2, fs3 } => {
+                let (va, ra) = self.read_freg(spm, *fs1);
+                let (vb, rb) = self.read_freg(spm, *fs2);
+                let (vc, rc) = self.read_freg(spm, *fs3);
+                let r = h(va).fma(h(vb), h(vc)).0 as u64;
+                (r, Some(*fd), ra.max(rb).max(rc))
+            }
+            FaddD { fd, fs1, fs2 } => bin_d!(fd, fs1, fs2, |a, b| a + b),
+            FsubD { fd, fs1, fs2 } => bin_d!(fd, fs1, fs2, |a, b| a - b),
+            FmulD { fd, fs1, fs2 } => bin_d!(fd, fs1, fs2, |a, b| a * b),
+            FmaddD { fd, fs1, fs2, fs3 } => {
+                let (va, ra) = self.read_freg(spm, *fs1);
+                let (vb, rb) = self.read_freg(spm, *fs2);
+                let (vc, rc) = self.read_freg(spm, *fs3);
+                let r = f64::mul_add(d(va), d(vb), d(vc));
+                (r.to_bits(), Some(*fd), ra.max(rb).max(rc))
+            }
+            FcvtDH { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                ((h(v).to_f32() as f64).to_bits(), Some(*fd), r)
+            }
+            FcvtHD { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                (Bf16::from_f32(d(v) as f32).0 as u64, Some(*fd), r)
+            }
+            FcvtSH { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                (h(v).to_f32().to_bits() as u64, Some(*fd), r)
+            }
+            FcvtDS { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                ((f32::from_bits(v as u32) as f64).to_bits(), Some(*fd), r)
+            }
+            FcvtSD { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                ((d(v) as f32).to_bits() as u64, Some(*fd), r)
+            }
+            FcvtHS { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                (Bf16::from_f32(f32::from_bits(v as u32)).0 as u64, Some(*fd), r)
+            }
+            VfaddH { fd, fs1, fs2 } => simd!(fd, fs1, fs2, Bf16::add),
+            VfsubH { fd, fs1, fs2 } => simd!(fd, fs1, fs2, Bf16::sub),
+            VfmulH { fd, fs1, fs2 } => simd!(fd, fs1, fs2, Bf16::mul),
+            VfmaxH { fd, fs1, fs2 } => simd!(fd, fs1, fs2, Bf16::max),
+            VfsgnjH { fd, fs1, fs2 } => {
+                let (va, ra) = self.read_freg(spm, *fs1);
+                let (vb, rb) = self.read_freg(spm, *fs2);
+                let sgn = 0x8000_8000_8000_8000u64;
+                ((va & !sgn) | (vb & sgn), Some(*fd), ra.max(rb))
+            }
+            VfmacH { fd, fs1, fs2 } => {
+                let (va, ra) = self.read_freg(spm, *fs1);
+                let (vb, rb) = self.read_freg(spm, *fs2);
+                let (vc, rc) = self.read_freg(spm, *fd); // accumulator
+                let la = unpack4(va);
+                let lb = unpack4(vb);
+                let lc = unpack4(vc);
+                let r = pack4([
+                    la[0].fma(lb[0], lc[0]),
+                    la[1].fma(lb[1], lc[1]),
+                    la[2].fma(lb[2], lc[2]),
+                    la[3].fma(lb[3], lc[3]),
+                ]);
+                (r, Some(*fd), ra.max(rb).max(rc))
+            }
+            VfsumH { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                let l = unpack4(v);
+                let s = l[0].add(l[1]).add(l[2].add(l[3]));
+                (s.0 as u64, Some(*fd), r)
+            }
+            VfmaxRedH { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                let l = unpack4(v);
+                let s = l[0].max(l[1]).max(l[2].max(l[3]));
+                (s.0 as u64, Some(*fd), r)
+            }
+            VfrepH { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                let lane = v & 0xFFFF;
+                (lane | (lane << 16) | (lane << 32) | (lane << 48), Some(*fd), r)
+            }
+            FmvWX { fd, rs1 } => (((self.ireg(*rs1)) as u64) & 0xFFFF_FFFF, Some(*fd), 0),
+            FmvDX { fd, rs1 } => (self.ireg(*rs1) as u64, Some(*fd), 0),
+            FexpH { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                self.stats.exp_ops += 1;
+                (exp_unit(h(v)).0 as u64, Some(*fd), r)
+            }
+            VfexpH { fd, fs1 } => {
+                let (v, r) = self.read_freg(spm, *fs1);
+                self.stats.exp_ops += 4;
+                (vfexp(v), Some(*fd), r)
+            }
+            other => unreachable!("not an FPU instruction: {other:?}"),
+        }
+    }
+
+    fn count_work(&mut self, i: &Instr) {
+        use Instr::*;
+        self.stats.flops += match i {
+            VfmacH { .. } => 8,
+            VfaddH { .. } | VfsubH { .. } | VfmulH { .. } | VfmaxH { .. } => 4,
+            VfsumH { .. } => 3,
+            FmaddH { .. } | FmaddD { .. } => 2,
+            FaddH { .. } | FsubH { .. } | FmulH { .. } | FmaxH { .. } | FdivH { .. }
+            | FaddD { .. } | FmulD { .. } => 1,
+            _ => 0,
+        };
+    }
+
+    /// Execute the instruction at `pc`; return the next pc.
+    fn step(&mut self, spm: &mut Mem, prog: &[Instr], pc: usize) -> usize {
+        use Instr::*;
+        let i = &prog[pc];
+        match i {
+            // ---- integer core ----------------------------------------
+            Addi { rd, rs1, imm } => {
+                let v = self.ireg(*rs1) + *imm as i64;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            Add { rd, rs1, rs2 } => {
+                let v = self.ireg(*rs1) + self.ireg(*rs2);
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            Sub { rd, rs1, rs2 } => {
+                let v = self.ireg(*rs1) - self.ireg(*rs2);
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            Slli { rd, rs1, imm } => {
+                let v = self.ireg(*rs1) << imm;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            Srli { rd, rs1, imm } => {
+                let v = ((self.ireg(*rs1) as u64) >> imm) as i64;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            Srai { rd, rs1, imm } => {
+                let v = self.ireg(*rs1) >> imm;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            J { target } => {
+                self.core_cycle += 1 + BRANCH_TAKEN_PENALTY as u64;
+                self.stats.bump(Class::Branch);
+                return *target;
+            }
+            Andi { rd, rs1, imm } => {
+                let v = self.ireg(*rs1) & *imm as i64;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            Li { rd, imm } => {
+                self.set_ireg(*rd, *imm);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            Bnez { rs1, target } => {
+                self.core_cycle += 1;
+                self.stats.bump(Class::Branch);
+                if self.ireg(*rs1) != 0 {
+                    self.core_cycle += BRANCH_TAKEN_PENALTY as u64;
+                    return *target;
+                }
+            }
+            Bgeu { rs1, rs2, target } => {
+                self.core_cycle += 1;
+                self.stats.bump(Class::Branch);
+                if (self.ireg(*rs1) as u64) >= (self.ireg(*rs2) as u64) {
+                    self.core_cycle += BRANCH_TAKEN_PENALTY as u64;
+                    return *target;
+                }
+            }
+            Blt { rs1, rs2, target } => {
+                self.core_cycle += 1;
+                self.stats.bump(Class::Branch);
+                if self.ireg(*rs1) < self.ireg(*rs2) {
+                    self.core_cycle += BRANCH_TAKEN_PENALTY as u64;
+                    return *target;
+                }
+            }
+            FmvXW { rd, fs1 } => {
+                // int pipeline consumes an FP value: wait for the scoreboard
+                self.core_cycle = self.core_cycle.max(self.freg_ready[fs1.idx()]) + 1;
+                self.set_ireg(*rd, self.fregs[fs1.idx()] as u32 as i32 as i64);
+                self.stats.bump(Class::FpScalarD);
+            }
+            FmvXD { rd, fs1 } => {
+                self.core_cycle = self.core_cycle.max(self.freg_ready[fs1.idx()]) + 1;
+                self.set_ireg(*rd, self.fregs[fs1.idx()] as i64);
+                self.stats.bump(Class::FpScalarD);
+            }
+
+            // ---- FP loads / stores ------------------------------------
+            Flh { fd, base, offset } => {
+                let addr = (self.ireg(*base) + *offset as i64) as u32;
+                let v = spm.read_u16(addr) as u64;
+                self.core_cycle += 1;
+                let ready = self.core_cycle + latency(Class::FpLoad) as u64;
+                self.write_freg(spm, *fd, v, ready);
+                self.stats.bump(Class::FpLoad);
+                self.stats.mem_bytes += 2;
+            }
+            Fld { fd, base, offset } => {
+                let addr = (self.ireg(*base) + *offset as i64) as u32;
+                let v = spm.read_u64(addr);
+                self.core_cycle += 1;
+                let ready = self.core_cycle + latency(Class::FpLoad) as u64;
+                self.write_freg(spm, *fd, v, ready);
+                self.stats.bump(Class::FpLoad);
+                self.stats.mem_bytes += 8;
+            }
+            Fsh { fs, base, offset } => {
+                let addr = (self.ireg(*base) + *offset as i64) as u32;
+                self.core_cycle = self.core_cycle.max(self.freg_ready[fs.idx()]) + 1;
+                spm.write_u16(addr, self.fregs[fs.idx()] as u16);
+                self.stats.bump(Class::FpStore);
+                self.stats.mem_bytes += 2;
+            }
+            Fsd { fs, base, offset } => {
+                let addr = (self.ireg(*base) + *offset as i64) as u32;
+                self.core_cycle = self.core_cycle.max(self.freg_ready[fs.idx()]) + 1;
+                spm.write_u64(addr, self.fregs[fs.idx()]);
+                self.stats.bump(Class::FpStore);
+                self.stats.mem_bytes += 8;
+            }
+
+            // ---- FREP hardware loop -------------------------------------
+            Frep { n_iter, n_instr } => {
+                let iters = self.ireg(*n_iter).max(0) as u64;
+                let body = &prog[pc + 1..pc + 1 + *n_instr as usize];
+                self.core_cycle += 1; // frep issue
+                self.stats.bump(Class::Frep);
+                // sequencer start: body instructions already offloaded
+                self.fpu_free = self.fpu_free.max(self.core_cycle);
+                for _ in 0..iters {
+                    for b in body {
+                        self.exec_fp(spm, b, true);
+                    }
+                }
+                // the core does not stall on the sequencer, but our kernels
+                // always need the results, so join the timelines here
+                self.core_cycle = self.core_cycle.max(self.last_retire);
+                return pc + 1 + *n_instr as usize;
+            }
+
+            // ---- SSR ------------------------------------------------------
+            SsrCfg { ssr, cfg } => {
+                self.ssr[*ssr as usize] = Some(SsrState { pat: *cfg, i0: 0, i1: 0, i2: 0 });
+                // a handful of CSR writes on real hardware
+                self.core_cycle += 3;
+                self.stats.bump(Class::Ssr);
+            }
+            SsrEnable => {
+                self.ssr_enabled = true;
+                self.core_cycle += 1;
+                self.stats.bump(Class::Ssr);
+            }
+            SsrDisable => {
+                self.ssr_enabled = false;
+                // wait for in-flight FP work before handing regs back
+                self.core_cycle = self.core_cycle.max(self.last_retire) + 1;
+                self.stats.bump(Class::Ssr);
+            }
+
+            Nop => {
+                self.core_cycle += 1;
+                self.stats.bump(Class::Misc);
+            }
+
+            // ---- FPU instructions outside FREP ---------------------------
+            fp => {
+                debug_assert!(fp.is_fp(), "unhandled instruction {fp:?}");
+                self.exec_fp(spm, fp, false);
+            }
+        }
+        pc + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::regs::*;
+    use crate::isa::Asm;
+
+    fn run(prog: Vec<Instr>, setup: impl FnOnce(&mut Mem)) -> (Core, Mem, CoreStats) {
+        let mut core = Core::new();
+        let mut spm = Mem::spm();
+        setup(&mut spm);
+        let stats = core.run(&mut spm, &prog);
+        (core, spm, stats)
+    }
+
+    #[test]
+    fn integer_loop_counts_down() {
+        let mut a = Asm::new();
+        a.li(A0, 10);
+        let top = a.label();
+        a.bind(top);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        let (core, _, stats) = run(a.finish(), |_| {});
+        assert_eq!(core.iregs[10], 0);
+        // 1 li + 10*(addi+bnez) retired
+        assert_eq!(stats.retired_total(), 21);
+        // 9 taken branches pay the refetch penalty
+        assert_eq!(stats.cycles, 1 + 20 + 9 * BRANCH_TAKEN_PENALTY as u64);
+    }
+
+    #[test]
+    fn scalar_bf16_add_through_memory() {
+        let mut a = Asm::new();
+        a.li(A0, 0x100);
+        a.flh(FT3, A0, 0);
+        a.flh(FT4, A0, 2);
+        a.fadd_h(FT5, FT3, FT4);
+        a.fsh(FT5, A0, 4);
+        let (_, spm, _) = run(a.finish(), |m| {
+            m.write_f32_as_bf16(0x100, &[1.5, 2.25]);
+        });
+        assert_eq!(Bf16(spm.read_u16(0x104)).to_f32(), 3.75);
+    }
+
+    #[test]
+    fn vfexp_functional_and_counted() {
+        let mut a = Asm::new();
+        a.li(A0, 0x200);
+        a.fld(FT3, A0, 0);
+        a.vfexp_h(FT4, FT3);
+        a.fsd(FT4, A0, 8);
+        let (_, spm, stats) = run(a.finish(), |m| {
+            m.write_f32_as_bf16(0x200, &[0.0, 1.0, -1.0, 2.0]);
+        });
+        let out = spm.read_bf16_as_f32(0x208, 4);
+        assert_eq!(out[0], 1.0);
+        assert!((out[1] - std::f32::consts::E).abs() < 0.05);
+        assert!((out[3] - 7.389).abs() < 0.1);
+        assert_eq!(stats.exp_ops, 4);
+    }
+
+    #[test]
+    fn frep_ssr_vector_sum() {
+        // sum 32 bf16 values via SSR read stream + FREP accumulate
+        let n = 32u32;
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x300, n / 4));
+        a.ssr_enable();
+        a.li(A1, (n / 4) as i64);
+        a.frep(A1, 1);
+        a.vfadd_h(FT3, FT3, FT0);
+        a.ssr_disable();
+        a.vfsum_h(FT4, FT3);
+        a.li(A0, 0x800);
+        a.fsh(FT4, A0, 0);
+        let (_, spm, stats) = run(a.finish(), |m| {
+            m.write_f32_as_bf16(0x300, &vec![0.25f32; 32]);
+        });
+        let s = Bf16(spm.read_u16(0x800)).to_f32();
+        assert_eq!(s, 8.0);
+        assert_eq!(stats.ssr_beats, (n / 4) as u64);
+    }
+
+    #[test]
+    fn frep_reaches_one_instr_per_cycle() {
+        // independent accumulators -> issue-limited: ~1 instr/cycle
+        let iters = 256i64;
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x0, 4 * iters as u32));
+        a.ssr_enable();
+        a.li(A1, iters);
+        a.frep(A1, 4);
+        a.vfmax_h(FT3, FT3, FT0);
+        a.vfmax_h(FT4, FT4, FT0);
+        a.vfmax_h(FT5, FT5, FT0);
+        a.vfmax_h(FT6, FT6, FT0);
+        a.ssr_disable();
+        let (_, _, stats) = run(a.finish(), |m| {
+            m.write_f32_as_bf16(0, &vec![1.0f32; 16 * iters as usize]);
+        });
+        let fp_instrs = 4 * iters as u64;
+        // within 2% of 1 instr/cycle (fill + setup amortized)
+        assert!(
+            stats.cycles < fp_instrs + fp_instrs / 50 + 16,
+            "cycles {} for {} fp instrs",
+            stats.cycles,
+            fp_instrs
+        );
+    }
+
+    #[test]
+    fn dependency_stall_shows_up() {
+        // serial dependent chain: each op waits for the previous result
+        let iters = 64i64;
+        let mut a = Asm::new();
+        a.li(A1, iters);
+        a.frep(A1, 1);
+        a.vfmul_h(FT3, FT3, FT3); // self-dependent
+        let (_, _, stats) = run(a.finish(), |_| {});
+        // latency-2 chain -> ~2 cycles per instr
+        assert!(stats.cycles >= 2 * iters as u64 - 2);
+    }
+
+    #[test]
+    fn ssr_write_stream_stores_results() {
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x400, 4));
+        a.ssr_cfg(1, SsrPattern::write1d(0x500, 4));
+        a.ssr_enable();
+        a.li(A1, 4);
+        a.frep(A1, 1);
+        a.vfexp_h(FT1, FT0);
+        a.ssr_disable();
+        let (_, spm, _) = run(a.finish(), |m| {
+            m.write_f32_as_bf16(0x400, &vec![0.0f32; 16]);
+        });
+        let out = spm.read_bf16_as_f32(0x500, 16);
+        assert!(out.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn fdiv_occupies_divider() {
+        let mut a = Asm::new();
+        a.li(A0, 0x100);
+        a.flh(FT3, A0, 0);
+        a.flh(FT4, A0, 2);
+        for _ in 0..4 {
+            a.fdiv_h(FT5, FT3, FT4);
+        }
+        let (_, _, stats) = run(a.finish(), |m| {
+            m.write_f32_as_bf16(0x100, &[1.0, 3.0]);
+        });
+        // 4 divisions serialized on the DIVSQRT block
+        assert!(stats.cycles >= 3 * FDIV_OCCUPANCY as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "SSR stream exhausted")]
+    fn ssr_overrun_panics() {
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x0, 1));
+        a.ssr_enable();
+        a.li(A1, 2);
+        a.frep(A1, 1);
+        a.vfadd_h(FT3, FT3, FT0);
+        let prog = a.finish();
+        let mut core = Core::new();
+        let mut spm = Mem::spm();
+        core.run(&mut spm, &prog);
+    }
+}

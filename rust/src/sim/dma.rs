@@ -1,0 +1,113 @@
+//! DMA engine timing model (paper §III-A: dedicated DMA core, up to
+//! 512 bit/cycle between SPM and HBM/other clusters).
+
+/// DMA transfer parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DmaModel {
+    /// Peak bandwidth in bytes per cycle (512 bit = 64 B).
+    pub bytes_per_cycle: u32,
+    /// Fixed startup latency per transfer (descriptor + HBM access).
+    pub startup: u32,
+}
+
+impl Default for DmaModel {
+    fn default() -> Self {
+        DmaModel { bytes_per_cycle: 64, startup: 100 }
+    }
+}
+
+impl DmaModel {
+    /// Cycles to move `bytes` in one contiguous transfer.
+    pub fn cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        self.startup as u64 + bytes.div_ceil(self.bytes_per_cycle as u64)
+    }
+
+    /// Makespan of a double-buffered pipeline: per-iteration compute
+    /// cycles overlapped with the next iteration's transfer cycles
+    /// (paper §III-C: double buffering masks data marshalling).
+    ///
+    /// `tiles` iterations, each needing `dma` cycles of transfer before
+    /// `compute` cycles of work.
+    pub fn double_buffered(&self, tiles: &[(u64, u64)]) -> u64 {
+        // fill: first transfer is exposed
+        let mut t = match tiles.first() {
+            Some(&(dma, _)) => dma,
+            None => return 0,
+        };
+        for i in 0..tiles.len() {
+            let compute = tiles[i].1;
+            let next_dma = if i + 1 < tiles.len() { tiles[i + 1].0 } else { 0 };
+            t += compute.max(next_dma);
+        }
+        t
+    }
+}
+
+/// Aggregate HBM bandwidth ceiling for a group of clusters (paper Fig. 7:
+/// eight HBM channels per group through a wide crossbar).
+#[derive(Clone, Copy, Debug)]
+pub struct HbmModel {
+    /// Total bytes per cycle across all channels of a group.
+    pub bytes_per_cycle: u64,
+}
+
+impl Default for HbmModel {
+    fn default() -> Self {
+        // 8 channels x 64 B/cycle
+        HbmModel { bytes_per_cycle: 512 }
+    }
+}
+
+impl HbmModel {
+    /// Scale per-cluster DMA time when `clusters` stream concurrently:
+    /// below the ceiling there is no slowdown, above it bandwidth shares
+    /// proportionally.
+    pub fn contention_factor(&self, clusters: usize, per_cluster_bpc: u32) -> f64 {
+        let demand = clusters as u64 * per_cluster_bpc as u64;
+        if demand <= self.bytes_per_cycle {
+            1.0
+        } else {
+            demand as f64 / self.bytes_per_cycle as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_math() {
+        let d = DmaModel::default();
+        assert_eq!(d.cycles(0), 0);
+        assert_eq!(d.cycles(64), 100 + 1);
+        assert_eq!(d.cycles(65), 100 + 2);
+        assert_eq!(d.cycles(64 * 1000), 100 + 1000);
+    }
+
+    #[test]
+    fn double_buffering_hides_transfers_when_compute_bound() {
+        let d = DmaModel::default();
+        // dma 100, compute 1000 per tile, 4 tiles: only first dma exposed
+        let tiles = vec![(100, 1000); 4];
+        assert_eq!(d.double_buffered(&tiles), 100 + 4 * 1000);
+    }
+
+    #[test]
+    fn double_buffering_exposes_dma_when_memory_bound() {
+        let d = DmaModel::default();
+        // dma 1000, compute 100: pipeline is transfer-limited
+        let tiles = vec![(1000, 100); 4];
+        assert_eq!(d.double_buffered(&tiles), 1000 + 3 * 1000 + 100);
+    }
+
+    #[test]
+    fn hbm_contention_kicks_in_past_ceiling() {
+        let h = HbmModel::default();
+        assert_eq!(h.contention_factor(8, 64), 1.0);
+        assert!((h.contention_factor(16, 64) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,132 @@
+//! Byte-addressable memories: the cluster SPM (TCDM) and a simple HBM
+//! model. Functional only — timing lives in the core/DMA models.
+
+/// A byte-addressable scratchpad/main memory.
+#[derive(Clone)]
+pub struct Mem {
+    bytes: Vec<u8>,
+}
+
+/// Snitch cluster TCDM capacity (paper §III-A: 128 KiB, 32 banks).
+pub const SPM_BYTES: usize = 128 * 1024;
+
+/// Number of TCDM banks (used by the interconnect conflict model).
+pub const SPM_BANKS: usize = 32;
+
+impl Mem {
+    pub fn new(size: usize) -> Self {
+        Mem { bytes: vec![0; size] }
+    }
+
+    /// A cluster scratchpad of the architectural size.
+    pub fn spm() -> Self {
+        Self::new(SPM_BYTES)
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    #[inline]
+    pub fn read_u16(&self, addr: u32) -> u16 {
+        let a = addr as usize;
+        u16::from_le_bytes([self.bytes[a], self.bytes[a + 1]])
+    }
+
+    #[inline]
+    pub fn write_u16(&mut self, addr: u32, v: u16) {
+        let a = addr as usize;
+        self.bytes[a..a + 2].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn read_u64(&self, addr: u32) -> u64 {
+        let a = addr as usize;
+        u64::from_le_bytes(self.bytes[a..a + 8].try_into().unwrap())
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, addr: u32, v: u64) {
+        let a = addr as usize;
+        self.bytes[a..a + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Bulk copy in (the functional half of a DMA transfer).
+    pub fn load_bytes(&mut self, addr: u32, data: &[u8]) {
+        let a = addr as usize;
+        self.bytes[a..a + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read_bytes(&self, addr: u32, len: usize) -> &[u8] {
+        &self.bytes[addr as usize..addr as usize + len]
+    }
+
+    // --- BF16 array helpers (the simulator's native element type) ---------
+
+    pub fn write_bf16_slice(&mut self, addr: u32, xs: &[crate::bf16::Bf16]) {
+        for (i, x) in xs.iter().enumerate() {
+            self.write_u16(addr + 2 * i as u32, x.0);
+        }
+    }
+
+    pub fn read_bf16_slice(&self, addr: u32, n: usize) -> Vec<crate::bf16::Bf16> {
+        (0..n).map(|i| crate::bf16::Bf16(self.read_u16(addr + 2 * i as u32))).collect()
+    }
+
+    pub fn write_f32_as_bf16(&mut self, addr: u32, xs: &[f32]) {
+        for (i, &x) in xs.iter().enumerate() {
+            self.write_u16(addr + 2 * i as u32, crate::bf16::Bf16::from_f32(x).0);
+        }
+    }
+
+    pub fn read_bf16_as_f32(&self, addr: u32, n: usize) -> Vec<f32> {
+        (0..n).map(|i| crate::bf16::Bf16(self.read_u16(addr + 2 * i as u32)).to_f32()).collect()
+    }
+
+    pub fn write_f64(&mut self, addr: u32, x: f64) {
+        self.write_u64(addr, x.to_bits());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bf16::Bf16;
+
+    #[test]
+    fn u16_u64_roundtrip() {
+        let mut m = Mem::new(64);
+        m.write_u16(0, 0xBEEF);
+        m.write_u64(8, 0x0123_4567_89AB_CDEF);
+        assert_eq!(m.read_u16(0), 0xBEEF);
+        assert_eq!(m.read_u64(8), 0x0123_4567_89AB_CDEF);
+    }
+
+    #[test]
+    fn u64_sees_packed_u16() {
+        let mut m = Mem::new(16);
+        for i in 0..4 {
+            m.write_u16(2 * i, 0x1000 + i as u16);
+        }
+        let v = m.read_u64(0);
+        assert_eq!(v & 0xFFFF, 0x1000);
+        assert_eq!((v >> 48) & 0xFFFF, 0x1003);
+    }
+
+    #[test]
+    fn bf16_slice_roundtrip() {
+        let mut m = Mem::spm();
+        let xs: Vec<Bf16> = (0..10).map(|i| Bf16::from_f32(i as f32 * 0.5)).collect();
+        m.write_bf16_slice(0x100, &xs);
+        assert_eq!(m.read_bf16_slice(0x100, 10), xs);
+    }
+
+    #[test]
+    fn spm_is_architectural_size() {
+        assert_eq!(Mem::spm().len(), 128 * 1024);
+    }
+}

@@ -1,0 +1,32 @@
+//! Cycle-approximate Snitch-cluster simulator (the paper's evaluation
+//! substrate, built per DESIGN.md §2's substitution rule).
+//!
+//! - [`mem`]: SPM/HBM functional memories;
+//! - [`core`]: pseudo dual-issue core + pipelined FPU + FREP/SSR timing;
+//! - [`fpu`]: latency table of the extended FPU;
+//! - [`dma`]: DMA/double-buffer/HBM-contention timing;
+//! - [`cluster`]: the 8-core cluster;
+//! - [`stats`]: retired-instruction statistics feeding the energy model.
+
+pub mod cluster;
+pub mod core;
+pub mod dma;
+pub mod fpu;
+pub mod mem;
+pub mod stats;
+pub mod system;
+
+pub use cluster::{Cluster, CORES_PER_CLUSTER};
+pub use core::Core;
+pub use dma::{DmaModel, HbmModel};
+pub use mem::{Mem, SPM_BANKS, SPM_BYTES};
+pub use stats::{ClusterStats, CoreStats};
+pub use system::{System, SystemStats};
+
+/// Cluster clock in Hz (paper: 1 GHz operating point).
+pub const CLOCK_HZ: f64 = 1.0e9;
+
+/// Convert cycles to seconds at the cluster clock.
+pub fn cycles_to_s(cycles: u64) -> f64 {
+    cycles as f64 / CLOCK_HZ
+}

@@ -1,0 +1,155 @@
+//! Execution statistics collected by the core model; input to the energy
+//! model and the benchmark reports.
+
+use crate::isa::Class;
+
+/// All instruction classes, in the order of the flat counter array.
+pub const CLASSES: [Class; 12] = [
+    Class::IntAlu, Class::Branch, Class::FpLoad, Class::FpStore,
+    Class::FpScalarH, Class::FpScalarD, Class::FpDivH, Class::FpSimd,
+    Class::FpExp, Class::Ssr, Class::Frep, Class::Misc,
+];
+
+#[inline]
+fn class_idx(c: Class) -> usize {
+    match c {
+        Class::IntAlu => 0, Class::Branch => 1, Class::FpLoad => 2,
+        Class::FpStore => 3, Class::FpScalarH => 4, Class::FpScalarD => 5,
+        Class::FpDivH => 6, Class::FpSimd => 7, Class::FpExp => 8,
+        Class::Ssr => 9, Class::Frep => 10, Class::Misc => 11,
+    }
+}
+
+/// Per-core run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CoreStats {
+    /// Total cycles from first issue to last retire.
+    pub cycles: u64,
+    /// Retired instruction count per class (FREP bodies counted per
+    /// dynamic iteration), indexed by [`CLASSES`] order.
+    retired_arr: [u64; 12],
+    /// 64-bit SSR beats streamed (reads + writes).
+    pub ssr_beats: u64,
+    /// Bytes moved by explicit FP loads/stores.
+    pub mem_bytes: u64,
+    /// BF16 exponentials computed (scalar = 1, SIMD = 4 per instr).
+    pub exp_ops: u64,
+    /// BF16 FLOPs (SIMD MAC = 8, SIMD = 4, scalar = 1 per instr).
+    pub flops: u64,
+}
+
+impl CoreStats {
+    pub fn retired_total(&self) -> u64 {
+        self.retired_arr.iter().sum()
+    }
+
+    pub fn count(&self, class: Class) -> u64 {
+        self.retired_arr[class_idx(class)]
+    }
+
+    #[inline]
+    pub fn bump(&mut self, class: Class) {
+        self.retired_arr[class_idx(class)] += 1;
+    }
+
+    /// Iterate (class, count) pairs with non-zero counts.
+    pub fn retired(&self) -> impl Iterator<Item = (Class, u64)> + '_ {
+        CLASSES.iter().zip(self.retired_arr.iter())
+            .filter(|(_, &n)| n > 0)
+            .map(|(c, &n)| (*c, n))
+    }
+
+    /// Fraction of cycles with an FPU instruction retiring (the paper's
+    /// "FPU utilization" metric).
+    pub fn fpu_utilization(&self) -> f64 {
+        let fp: u64 = [
+            Class::FpScalarH,
+            Class::FpScalarD,
+            Class::FpSimd,
+            Class::FpExp,
+            Class::FpDivH,
+        ]
+        .iter()
+        .map(|c| self.count(*c))
+        .sum();
+        if self.cycles == 0 {
+            0.0
+        } else {
+            fp as f64 / self.cycles as f64
+        }
+    }
+
+    /// Merge another core's stats (used for cluster aggregation).
+    pub fn merge(&mut self, other: &CoreStats) {
+        self.cycles = self.cycles.max(other.cycles);
+        for i in 0..12 {
+            self.retired_arr[i] += other.retired_arr[i];
+        }
+        self.ssr_beats += other.ssr_beats;
+        self.mem_bytes += other.mem_bytes;
+        self.exp_ops += other.exp_ops;
+        self.flops += other.flops;
+    }
+}
+
+/// A cluster-level run: per-core stats plus DMA traffic.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    pub per_core: Vec<CoreStats>,
+    /// Cluster makespan in cycles (max over cores, incl. DMA overlap).
+    pub cycles: u64,
+    /// Bytes moved by the DMA engine (HBM <-> SPM).
+    pub dma_bytes: u64,
+    /// Cycles the DMA engine was busy.
+    pub dma_cycles: u64,
+}
+
+impl ClusterStats {
+    /// Sum of per-core stats (cycles = max, counters summed).
+    pub fn combined(&self) -> CoreStats {
+        let mut acc = CoreStats::default();
+        for c in &self.per_core {
+            acc.merge(c);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_and_count() {
+        let mut s = CoreStats::default();
+        s.bump(Class::FpSimd);
+        s.bump(Class::FpSimd);
+        s.bump(Class::IntAlu);
+        assert_eq!(s.count(Class::FpSimd), 2);
+        assert_eq!(s.retired_total(), 3);
+    }
+
+    #[test]
+    fn utilization() {
+        let mut s = CoreStats::default();
+        s.cycles = 10;
+        for _ in 0..8 {
+            s.bump(Class::FpSimd);
+        }
+        assert!((s.fpu_utilization() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_takes_max_cycles_sums_counters() {
+        let mut a = CoreStats { cycles: 5, ..Default::default() };
+        a.bump(Class::FpExp);
+        a.exp_ops = 4;
+        let mut b = CoreStats { cycles: 9, ..Default::default() };
+        b.bump(Class::FpExp);
+        b.exp_ops = 4;
+        a.merge(&b);
+        assert_eq!(a.cycles, 9);
+        assert_eq!(a.count(Class::FpExp), 2);
+        assert_eq!(a.exp_ops, 8);
+    }
+}

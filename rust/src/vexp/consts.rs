@@ -1,0 +1,36 @@
+//! Fixed-point constants of the VEXP datapath (locked spec, DESIGN.md §6).
+//!
+//! These mirror `python/compile/kernels/vexp.py` exactly; any change must
+//! be made in both places and re-validated against the exhaustive golden
+//! table (`artifacts/vexp_golden.bin`).
+
+/// `round(log2(e) * 2^15)` — the Q1.15 scaling constant of the exps stage.
+pub const LOG2E_Q15: u32 = 47274;
+
+/// Polynomial coefficient α = 0.21875 in Q0.7 (first branch, Fig. 3e).
+pub const ALPHA_Q7: u32 = 28;
+
+/// Polynomial coefficient β = 0.4375 in Q0.7 (second branch).
+pub const BETA_Q7: u32 = 56;
+
+/// γ₁ = 3.296875 in Q2.7 (first branch offset).
+pub const GAMMA1_Q7: u32 = 422;
+
+/// γ₂ = 2.171875 in Q2.7 (second branch offset).
+pub const GAMMA2_Q7: u32 = 278;
+
+/// Q2.22 → Q8.7 alignment: right-shift amount is `SHIFT_BIAS - exponent`.
+/// Derived from the paper's "difference to the maximum exponent after
+/// which exp overflows" (133 for BF16) plus the product's 22 fraction bits
+/// minus the 7 kept: 133 + 16 − 7 = 142.
+pub const SHIFT_BIAS: i32 = 142;
+
+/// Shifts beyond this empty the product entirely (result = exp(0) = 1).
+pub const MAX_SHIFT: i32 = 40;
+
+/// Pipeline depth of one ExpUnit (paper §IV-B: one register level →
+/// 2-cycle latency, 1-per-cycle throughput).
+pub const EXP_UNIT_LATENCY: u32 = 2;
+
+/// SIMD lanes in the ExpOpGroup for Snitch's 64-bit FPU datapath.
+pub const EXP_LANES: usize = 4;

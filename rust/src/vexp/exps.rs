@@ -1,0 +1,147 @@
+//! `exps(x)` — the hardware Schraudolph stage (paper Fig. 3d).
+//!
+//! Decomposes a BF16 input into sign/exponent/mantissa, multiplies the
+//! significand by log2(e) in fixed point, aligns the product into a Q8.7
+//! integer/fraction split with a single shift + round, and produces the
+//! result exponent plus the uncorrected 7-bit fraction that feeds `P(x)`.
+
+use super::consts::{LOG2E_Q15, MAX_SHIFT, SHIFT_BIAS};
+use crate::bf16::Bf16;
+
+/// Output of the exps stage: either a resolved special value or a
+/// (result-exponent, fraction) pair for the `P(x)` stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpsOut {
+    /// NaN in → quiet NaN out.
+    Nan(u16),
+    /// Overflow (or exp(+inf)) → +inf.
+    Overflow,
+    /// Underflow (or exp(−inf)) → 0 (BF16 flush-to-zero).
+    Underflow,
+    /// `exp(x) = 2^(eo-127) * (1 + P(frac/128))`; `frac` is Q0.7.
+    Normal { eo: u16, frac: u8 },
+}
+
+/// Run the exps stage on a BF16 bit pattern.
+pub fn exps(x: Bf16) -> ExpsOut {
+    let s = x.sign();
+    let e = x.exponent() as i32;
+    let m = x.mantissa() as u32;
+
+    if x.is_nan() {
+        return ExpsOut::Nan(x.0 | 0x40);
+    }
+    if x.is_inf() {
+        return if s == 0 { ExpsOut::Overflow } else { ExpsOut::Underflow };
+    }
+    if e == 0 {
+        // zero / subnormal input flushes to zero → exp(0) = 1.0
+        return ExpsOut::Normal { eo: 127, frac: 0 };
+    }
+
+    // x' = x * log2(e) as a Q8.7 fixed-point magnitude
+    let sig = 0x80 | m; // Q1.7 significand with implicit one
+    let prod = (sig as u64) * (LOG2E_Q15 as u64); // Q2.22
+    let shift = SHIFT_BIAS - e;
+    let r: u32 = if shift <= 0 {
+        // guaranteed overflow magnitude (paper: e beyond 133 always
+        // saturates; SHIFT_BIAS folds in the fixed-point alignment)
+        1 << 20
+    } else if shift > MAX_SHIFT {
+        0
+    } else {
+        ((prod + (1u64 << (shift - 1))) >> shift) as u32 // round-half-up
+    };
+
+    let (ri, rf) = if s == 0 {
+        (r >> 7, r & 0x7F)
+    } else {
+        // negative argument: floor crosses down one, fraction complements
+        let ri = (r >> 7) + u32::from(r & 0x7F != 0);
+        let rf = if r & 0x7F != 0 { (128 - (r & 0x7F)) & 0x7F } else { 0 };
+        (ri, rf)
+    };
+
+    let eo: i32 = if s == 0 { 127 + ri as i32 } else { 127 - ri as i32 };
+    if eo >= 255 {
+        ExpsOut::Overflow
+    } else if eo <= 0 {
+        ExpsOut::Underflow
+    } else {
+        ExpsOut::Normal { eo: eo as u16, frac: rf as u8 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_maps_to_one() {
+        assert_eq!(exps(Bf16(0x0000)), ExpsOut::Normal { eo: 127, frac: 0 });
+        assert_eq!(exps(Bf16(0x8000)), ExpsOut::Normal { eo: 127, frac: 0 });
+    }
+
+    #[test]
+    fn subnormal_flushes_to_one() {
+        assert_eq!(exps(Bf16(0x0001)), ExpsOut::Normal { eo: 127, frac: 0 });
+    }
+
+    #[test]
+    fn infinities() {
+        assert_eq!(exps(Bf16(0x7F80)), ExpsOut::Overflow);
+        assert_eq!(exps(Bf16(0xFF80)), ExpsOut::Underflow);
+    }
+
+    #[test]
+    fn nan_quiets() {
+        match exps(Bf16(0x7F81)) {
+            ExpsOut::Nan(bits) => assert_eq!(bits & 0x40, 0x40),
+            other => panic!("want NaN, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ln2_lands_on_exact_power() {
+        // exp(ln 2) = 2: x' = 1.0 exactly-ish; int = 1, frac ≈ 0
+        let x = Bf16::from_f32(std::f32::consts::LN_2);
+        match exps(x) {
+            ExpsOut::Normal { eo, frac } => {
+                assert_eq!(eo, 128, "exponent of 2.0");
+                assert!(frac < 4 || frac > 124, "frac near 0, got {frac}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_int_frac_split() {
+        // exp(-ln 2) = 0.5 → eo = 126, frac ≈ 0
+        let x = Bf16::from_f32(-std::f32::consts::LN_2);
+        match exps(x) {
+            ExpsOut::Normal { eo, frac } => {
+                assert!((125..=127).contains(&eo));
+                assert!(frac < 6 || frac > 122);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn large_positive_overflows() {
+        assert_eq!(exps(Bf16::from_f32(128.0)), ExpsOut::Overflow);
+        assert_eq!(exps(Bf16::from_f32(1e30)), ExpsOut::Overflow);
+    }
+
+    #[test]
+    fn large_negative_underflows() {
+        assert_eq!(exps(Bf16::from_f32(-128.0)), ExpsOut::Underflow);
+        assert_eq!(exps(Bf16::from_f32(-1e30)), ExpsOut::Underflow);
+    }
+
+    #[test]
+    fn tiny_arguments_round_to_one() {
+        // |x| < 2^-9: x' rounds to 0 → exp ≈ 1.0
+        assert_eq!(exps(Bf16::from_f32(1e-4)), ExpsOut::Normal { eo: 127, frac: 0 });
+    }
+}

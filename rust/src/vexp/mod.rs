@@ -1,0 +1,25 @@
+//! The paper's core contribution: the VEXP custom arithmetic block for
+//! BF16 exponentiation (Fig. 3), as a bit-exact software model.
+//!
+//! Structure mirrors the hardware:
+//! - [`exps`]: the Schraudolph stage (scale by log2 e, int/frac split);
+//! - [`poly`]: the `P(x)` mantissa-correction stage;
+//! - [`unit`]: one `ExpUnit` lane (combinational fn + pipeline model);
+//! - [`opgroup`]: the SIMD `ExpOpGroup` implementing FEXP / VFEXP.
+//!
+//! The same fixed-point pipeline is implemented in the Pallas kernel
+//! (`python/compile/kernels/vexp.py`); `tests/vexp_golden.rs` asserts
+//! bit-equality over all 65536 BF16 inputs via the AOT-dumped golden
+//! table — the hardware-correctness invariant of this reproduction.
+
+pub mod consts;
+pub mod exps;
+pub mod poly;
+pub mod unit;
+pub mod opgroup;
+
+pub use consts::{EXP_LANES, EXP_UNIT_LATENCY};
+pub use exps::{exps, ExpsOut};
+pub use opgroup::{fexp, vfexp, vfexp_slice};
+pub use poly::poly_q7;
+pub use unit::{exp_unit, ExpUnitPipe};

@@ -1,0 +1,86 @@
+//! `ExpOpGroup` (paper Fig. 3b): the multi-format FPU's new operation
+//! group — k = N/16 ExpUnit lanes behind input segmentation logic.
+//!
+//! For Snitch's 64-bit datapath k = 4, giving the packed-SIMD `VFEXP`
+//! a peak throughput of four BF16 exponentials per cycle.
+
+use super::consts::EXP_LANES;
+use super::unit::exp_unit;
+use crate::bf16::{pack4, unpack4, Bf16};
+
+/// Scalar `FEXP rd, rs1`: one lane active, upper lanes pass through zero.
+#[inline]
+pub fn fexp(rs1: u64) -> u64 {
+    exp_unit(Bf16(rs1 as u16)).0 as u64
+}
+
+/// Packed-SIMD `VFEXP rd, rs1`: all four lanes in parallel.
+#[inline]
+pub fn vfexp(rs1: u64) -> u64 {
+    let lanes = unpack4(rs1);
+    pack4([
+        exp_unit(lanes[0]),
+        exp_unit(lanes[1]),
+        exp_unit(lanes[2]),
+        exp_unit(lanes[3]),
+    ])
+}
+
+/// Apply VFEXP over a BF16 slice (convenience for host-level kernels;
+/// the tail shorter than [`EXP_LANES`] falls back to scalar FEXP).
+pub fn vfexp_slice(xs: &[Bf16], out: &mut [Bf16]) {
+    assert_eq!(xs.len(), out.len());
+    let chunks = xs.len() / EXP_LANES;
+    for i in 0..chunks {
+        let v = pack4([
+            xs[4 * i],
+            xs[4 * i + 1],
+            xs[4 * i + 2],
+            xs[4 * i + 3],
+        ]);
+        let r = unpack4(vfexp(v));
+        out[4 * i..4 * i + 4].copy_from_slice(&r);
+    }
+    for i in chunks * EXP_LANES..xs.len() {
+        out[i] = Bf16(fexp(xs[i].0 as u64) as u16);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vfexp_matches_four_scalar_fexp() {
+        let xs = [0.5f32, -1.25, 3.0, -7.5];
+        let packed = pack4([
+            Bf16::from_f32(xs[0]),
+            Bf16::from_f32(xs[1]),
+            Bf16::from_f32(xs[2]),
+            Bf16::from_f32(xs[3]),
+        ]);
+        let v = unpack4(vfexp(packed));
+        for (i, &x) in xs.iter().enumerate() {
+            let scalar = fexp(Bf16::from_f32(x).0 as u64) as u16;
+            assert_eq!(v[i].0, scalar, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn scalar_fexp_only_low_lane() {
+        // upper 48 bits of rs1 must not affect the scalar result
+        let x = Bf16::from_f32(2.0);
+        let noisy = (0xDEAD_BEEF_0000_0000u64) | x.0 as u64;
+        assert_eq!(fexp(noisy), fexp(x.0 as u64));
+    }
+
+    #[test]
+    fn slice_with_ragged_tail() {
+        let xs: Vec<Bf16> = (0..7).map(|i| Bf16::from_f32(i as f32 * 0.5 - 2.0)).collect();
+        let mut out = vec![Bf16(0); 7];
+        vfexp_slice(&xs, &mut out);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(out[i], exp_unit(*x), "index {i}");
+        }
+    }
+}

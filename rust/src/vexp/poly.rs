@@ -1,0 +1,79 @@
+//! `P(x)` — the mantissa-correction stage (paper Fig. 3e).
+//!
+//! Approximates `2^x - 1` on x ∈ [0,1) with two fixed-point quadratics
+//! selected by the MSB of the 7-bit fraction; `1 - x` is realized as a
+//! bitwise complement (`not(x)`) for hardware efficiency.
+
+use super::consts::{ALPHA_Q7, BETA_Q7, GAMMA1_Q7, GAMMA2_Q7};
+
+/// Evaluate the correction polynomial on a Q0.7 fraction.
+///
+/// Input and output are 7-bit values (0..128). The result is the mantissa
+/// field of the final BF16: `exp(x) ≈ 2^int · (1 + P(frac)/128)`.
+#[inline]
+pub fn poly_q7(f: u32) -> u32 {
+    debug_assert!(f < 128);
+    let p = if f < 64 {
+        // α·x·(x + γ1), all Q-format: Q0.7 × Q2.7 × Q0.7 → Q2.21
+        let t = f * (f + GAMMA1_Q7) * ALPHA_Q7;
+        (t + (1 << 13)) >> 14 // round-half-up to Q0.7
+    } else {
+        // not(β·not(x)·(x + γ2))
+        let t = (127 - f) * (f + GAMMA2_Q7) * BETA_Q7;
+        127 - ((t + (1 << 13)) >> 14)
+    };
+    p.min(127)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        // P(0) = 0 (exp of an exact power of two has a clean mantissa)
+        assert_eq!(poly_q7(0), 0);
+        // P(127/128) ≈ 2^(127/128) - 1 ≈ 0.9829 → ≈ 126
+        let p = poly_q7(127);
+        assert!((124..=127).contains(&p), "P(127) = {p}");
+    }
+
+    #[test]
+    fn midpoint_continuity() {
+        // the two branches must agree closely at the 0.5 seam
+        let lo = poly_q7(63) as i32;
+        let hi = poly_q7(64) as i32;
+        assert!((hi - lo).abs() <= 2, "seam jump {lo} -> {hi}");
+    }
+
+    #[test]
+    fn approximates_pow2_minus_one() {
+        // |P(f)/128 - (2^(f/128) - 1)| small everywhere
+        let mut max_err = 0.0f64;
+        for f in 0..128u32 {
+            let x = f as f64 / 128.0;
+            let truth = x.exp2() - 1.0;
+            let err = (poly_q7(f) as f64 / 128.0 - truth).abs();
+            max_err = max_err.max(err);
+        }
+        // paper: max relative error 0.78% on exp ⇒ ~0.008 absolute here
+        assert!(max_err < 0.01, "max poly err {max_err}");
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut prev = 0;
+        for f in 0..128u32 {
+            let p = poly_q7(f);
+            assert!(p >= prev, "P not monotone at f={f}: {prev} -> {p}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn output_always_fits_mantissa() {
+        for f in 0..128u32 {
+            assert!(poly_q7(f) < 128);
+        }
+    }
+}

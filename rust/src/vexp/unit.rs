@@ -1,0 +1,124 @@
+//! One `ExpUnit` lane (paper Fig. 3c): exps(x) → P(x) → reassembly,
+//! plus a small pipeline model used by the FPU timing simulator.
+
+use super::consts::EXP_UNIT_LATENCY;
+use super::exps::{exps, ExpsOut};
+use super::poly::poly_q7;
+use crate::bf16::Bf16;
+
+/// Combinational function of one ExpUnit: BF16 in, BF16 `exp(x)` out.
+///
+/// This is the bit-exact ground truth cross-checked against the Pallas
+/// kernel over all 2^16 inputs (see `tests/vexp_golden.rs`).
+#[inline]
+pub fn exp_unit(x: Bf16) -> Bf16 {
+    match exps(x) {
+        ExpsOut::Nan(bits) => Bf16(bits),
+        ExpsOut::Overflow => crate::bf16::POS_INF,
+        ExpsOut::Underflow => crate::bf16::ZERO,
+        ExpsOut::Normal { eo, frac } => {
+            let mant = poly_q7(frac as u32) as u16;
+            Bf16((eo << 7) | mant)
+        }
+    }
+}
+
+/// Cycle-level pipeline model of one ExpUnit (1 register level → 2-cycle
+/// latency, full throughput). Used by `sim::fpu` to retire VFEXP results
+/// at the right cycle while accepting a new operand every cycle.
+#[derive(Debug, Default)]
+pub struct ExpUnitPipe {
+    stages: Vec<Option<Bf16>>,
+}
+
+impl ExpUnitPipe {
+    pub fn new() -> Self {
+        Self { stages: vec![None; EXP_UNIT_LATENCY as usize - 1] }
+    }
+
+    /// Advance one cycle: push `input` into the pipe, return the value
+    /// retiring this cycle (if any).
+    pub fn tick(&mut self, input: Option<Bf16>) -> Option<Bf16> {
+        let out = self.stages.pop().flatten().map(exp_unit);
+        self.stages.insert(0, input);
+        out
+    }
+
+    pub fn latency(&self) -> u32 {
+        EXP_UNIT_LATENCY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(x: f32) -> f32 {
+        exp_unit(Bf16::from_f32(x)).to_f32()
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f(0.0), 1.0);
+        assert!((f(1.0) - std::f32::consts::E).abs() / std::f32::consts::E < 0.01);
+        assert!((f(-1.0) - (-1.0f32).exp()).abs() / (-1.0f32).exp() < 0.01);
+        assert!((f(10.0) - 22026.46).abs() / 22026.46 < 0.01);
+        assert!((f(-10.0) - 4.54e-5) / 4.54e-5 < 0.01);
+    }
+
+    #[test]
+    fn error_bounds_exhaustive() {
+        // DESIGN.md §6: mean rel err < 0.2%, max < 1.1% over all finite
+        // inputs whose exact exp is a normal BF16.
+        let (mut sum, mut max, mut n) = (0.0f64, 0.0f64, 0u64);
+        for bits in 0..=u16::MAX {
+            let x = Bf16(bits);
+            if x.is_nan() || x.is_inf() {
+                continue;
+            }
+            let t = (x.to_f32() as f64).exp();
+            if !t.is_finite() || t < 1e-38 || t > 3.38e38 {
+                continue;
+            }
+            let y = exp_unit(x).to_f32() as f64;
+            let rel = (y - t).abs() / t;
+            sum += rel;
+            max = max.max(rel);
+            n += 1;
+        }
+        let mean = sum / n as f64;
+        assert!(mean < 0.002, "mean rel err {mean}");
+        assert!(max < 0.011, "max rel err {max}");
+    }
+
+    #[test]
+    fn monotone_over_positive_reals() {
+        // walking up the positive bf16 grid, exp must not decrease
+        let mut prev = 0.0f32;
+        for e in 1..0xFFu16 {
+            for m in 0..0x80u16 {
+                let x = Bf16((e << 7) | m);
+                if x.to_f32() > 88.0 {
+                    continue;
+                }
+                let y = exp_unit(x).to_f32();
+                assert!(y >= prev, "non-monotone at {}", x.to_f32());
+                prev = y;
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_latency_and_throughput() {
+        let mut pipe = ExpUnitPipe::new();
+        // issue back-to-back operands; first result after LATENCY ticks
+        let a = Bf16::from_f32(1.0);
+        let b = Bf16::from_f32(2.0);
+        assert_eq!(pipe.tick(Some(a)), None); // cycle 1: in flight
+        let r1 = pipe.tick(Some(b));          // cycle 2: a retires
+        assert_eq!(r1, Some(exp_unit(a)));
+        let r2 = pipe.tick(None);             // cycle 3: b retires
+        assert_eq!(r2, Some(exp_unit(b)));
+        assert_eq!(pipe.tick(None), None);
+    }
+}

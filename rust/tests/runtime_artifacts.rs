@@ -1,0 +1,125 @@
+//! Integration: the PJRT runtime executes the AOT artifacts and the
+//! numerics agree with the Layer-3 models (Python never runs here).
+
+use vexp::bf16::Bf16;
+use vexp::runtime::pjrt::Input;
+use vexp::runtime::Runtime;
+use vexp::vexp::exp_unit;
+
+fn runtime() -> Runtime {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::open(dir).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_all_entry_points() {
+    let rt = runtime();
+    let eps = rt.entry_points();
+    for want in [
+        "vexp", "softmax_vexp", "softmax_exact", "fa2_vexp", "fa2_exact",
+        "gpt_tiny_vexp", "gpt_tiny_fp32", "gpt_tiny_vexp_b8",
+    ] {
+        assert!(eps.contains(&want), "missing entry point {want}");
+    }
+}
+
+#[test]
+fn vexp_artifact_is_bit_identical_to_rust_model() {
+    let mut rt = runtime();
+    // 4096 inputs spanning the interesting range
+    let xs: Vec<f32> = (0..4096).map(|i| (i as f32 - 2048.0) * 0.04).collect();
+    let out = rt.execute("vexp", &[Input::F32(&xs)]).unwrap();
+    for (i, &x) in xs.iter().enumerate() {
+        let want = exp_unit(Bf16::from_f32(x)).to_f32();
+        assert_eq!(out[i], want, "x = {x}: pjrt {} vs rust {want}", out[i]);
+    }
+}
+
+#[test]
+fn softmax_artifact_rows_sum_to_one() {
+    let mut rt = runtime();
+    let x: Vec<f32> = (0..64 * 512).map(|i| ((i % 113) as f32) * 0.12 - 6.0).collect();
+    let out = rt.execute("softmax_vexp", &[Input::F32(&x)]).unwrap();
+    assert_eq!(out.len(), 64 * 512);
+    for r in 0..64 {
+        let s: f32 = out[r * 512..(r + 1) * 512].iter().sum();
+        assert!((s - 1.0).abs() < 0.02, "row {r} sums to {s}");
+    }
+}
+
+#[test]
+fn softmax_vexp_close_to_exact_artifact() {
+    let mut rt = runtime();
+    let x: Vec<f32> = (0..64 * 512).map(|i| ((i % 89) as f32) * 0.1 - 4.0).collect();
+    let a = rt.execute("softmax_vexp", &[Input::F32(&x)]).unwrap();
+    let b = rt.execute("softmax_exact", &[Input::F32(&x)]).unwrap();
+    let max_err = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 0.01, "vexp vs exact softmax max err {max_err}");
+}
+
+#[test]
+fn fa2_artifact_matches_exact_variant() {
+    let mut rt = runtime();
+    let q: Vec<f32> = (0..128 * 64).map(|i| ((i % 37) as f32 - 18.0) * 0.05).collect();
+    let k: Vec<f32> = (0..256 * 64).map(|i| ((i % 41) as f32 - 20.0) * 0.05).collect();
+    let v: Vec<f32> = (0..256 * 64).map(|i| ((i % 43) as f32 - 21.0) * 0.05).collect();
+    let ins = [Input::F32(&q), Input::F32(&k), Input::F32(&v)];
+    let a = rt.execute("fa2_vexp", &ins).unwrap();
+    let ins2 = [Input::F32(&q), Input::F32(&k), Input::F32(&v)];
+    let b = rt.execute("fa2_exact", &ins2).unwrap();
+    assert_eq!(a.len(), 128 * 64);
+    let max_err = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 0.05, "fa2 vexp vs exact max err {max_err}");
+}
+
+#[test]
+fn unknown_entry_point_errors_cleanly() {
+    let mut rt = runtime();
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn wrong_arity_errors_cleanly() {
+    let mut rt = runtime();
+    let x = vec![0.0f32; 4096];
+    assert!(rt
+        .execute("fa2_vexp", &[Input::F32(&x)])
+        .is_err());
+}
+
+#[test]
+fn gpt_tiny_artifact_serves_finite_logits() {
+    // the e2e model artifact: tokens (1,128) i32 + theta (10.7M) f32
+    let mut rt = runtime();
+    let art = rt.artifact("gpt_tiny_vexp").unwrap().clone();
+    let n_theta: usize = art.inputs[1].0.iter().product();
+    let dir = rt.artifact_dir().to_path_buf();
+    let theta_path = ["theta.bin", "theta_random.bin"]
+        .iter()
+        .map(|f| dir.join(f))
+        .find(|p| p.exists())
+        .expect("theta artifact missing");
+    let bytes = std::fs::read(theta_path).unwrap();
+    let theta: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    assert_eq!(theta.len(), n_theta);
+    let tokens: Vec<i32> = (0..128).map(|i| (i * 7) % 64).collect();
+    let logits = rt
+        .execute("gpt_tiny_vexp", &[Input::I32(&tokens), Input::F32(&theta)])
+        .unwrap();
+    assert_eq!(logits.len(), 128 * 64);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    // logits must discriminate (not constant)
+    let (lo, hi) = logits.iter().fold((f32::MAX, f32::MIN), |(l, h), &x| (l.min(x), h.max(x)));
+    assert!(hi - lo > 1.0, "degenerate logits [{lo}, {hi}]");
+}

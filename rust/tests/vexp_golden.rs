@@ -1,0 +1,69 @@
+//! The hardware-correctness invariant of this reproduction: the Rust
+//! ExpUnit model and the Pallas kernel (via the AOT-dumped golden table)
+//! are bit-identical over ALL 2^16 BF16 inputs.
+//!
+//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+
+use std::path::PathBuf;
+use vexp::bf16::Bf16;
+use vexp::vexp::{exp_unit, fexp, vfexp};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/vexp_golden.bin")
+}
+
+fn load_golden() -> Vec<u16> {
+    let bytes = std::fs::read(golden_path()).expect(
+        "artifacts/vexp_golden.bin missing — run `make artifacts` first",
+    );
+    assert_eq!(bytes.len(), 2 * 65536);
+    bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect()
+}
+
+#[test]
+fn rust_matches_pallas_exhaustively() {
+    let golden = load_golden();
+    let mut mismatches = 0usize;
+    for bits in 0..=u16::MAX {
+        let got = exp_unit(Bf16(bits)).0;
+        let want = golden[bits as usize];
+        if got != want {
+            mismatches += 1;
+            if mismatches <= 10 {
+                eprintln!(
+                    "bits {bits:#06x} (x={}): rust {got:#06x}, pallas {want:#06x}",
+                    Bf16(bits).to_f32()
+                );
+            }
+        }
+    }
+    assert_eq!(mismatches, 0, "{mismatches} / 65536 bit patterns differ");
+}
+
+#[test]
+fn simd_lanes_match_golden_lanewise() {
+    let golden = load_golden();
+    // pack pseudo-random lane combinations and check each lane
+    let mut state = 0x1234_5678_9ABC_DEF0u64;
+    for _ in 0..10_000 {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let packed = state;
+        let out = vfexp(packed);
+        for lane in 0..4 {
+            let in_bits = ((packed >> (16 * lane)) & 0xFFFF) as u16;
+            let out_bits = ((out >> (16 * lane)) & 0xFFFF) as u16;
+            assert_eq!(out_bits, golden[in_bits as usize], "lane {lane} of {packed:#018x}");
+        }
+    }
+}
+
+#[test]
+fn scalar_fexp_matches_golden() {
+    let golden = load_golden();
+    for bits in (0..=u16::MAX).step_by(17) {
+        assert_eq!(fexp(bits as u64) as u16, golden[bits as usize]);
+    }
+}
