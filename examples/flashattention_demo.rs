@@ -1,12 +1,12 @@
 //! Scenario: FlashAttention-2 on one cluster with the GPT-2 head
 //! configuration, checking numerics against exact attention and
 //! reporting the Fig. 6d-f metrics; also cross-checks against the
-//! PJRT-executed Pallas FA-2 artifact.
+//! PJRT-executed Pallas FA-2 artifact when built with `--features pjrt`.
 //!
 //! Run: `cargo run --release --example flashattention_demo`
 
-use anyhow::Result;
 use vexp::energy::power::cluster_energy_pj;
+use vexp::error::Result;
 use vexp::kernels::flash_attention::{attention_ref, run_flash_attention, FaVariant};
 use vexp::runtime::pjrt::Input;
 use vexp::runtime::Runtime;
@@ -40,13 +40,18 @@ fn main() -> Result<()> {
     );
 
     // cross-check against the Pallas artifact (128x64 Q, 256x64 K/V)
-    let mut rt = Runtime::open("artifacts")?;
     let q2 = mat(128 * 64, 4);
     let k2 = mat(256 * 64, 5);
     let v2 = mat(256 * 64, 6);
-    let pj = rt.execute("fa2_vexp", &[Input::F32(&q2), Input::F32(&k2), Input::F32(&v2)])?;
-    let want2 = attention_ref(&q2, &k2, &v2, 128, 256, 64);
-    let err2 = pj.iter().zip(&want2).map(|(g, w)| (g - w).abs()).fold(0.0f32, f32::max);
-    println!("PJRT Pallas FA-2 artifact vs exact attention: max|err| = {err2:.4}");
+    match Runtime::open("artifacts").and_then(|mut rt| {
+        rt.execute("fa2_vexp", &[Input::F32(&q2), Input::F32(&k2), Input::F32(&v2)])
+    }) {
+        Ok(pj) => {
+            let want2 = attention_ref(&q2, &k2, &v2, 128, 256, 64);
+            let err2 = pj.iter().zip(&want2).map(|(g, w)| (g - w).abs()).fold(0.0f32, f32::max);
+            println!("PJRT Pallas FA-2 artifact vs exact attention: max|err| = {err2:.4}");
+        }
+        Err(e) => println!("PJRT Pallas FA-2 cross-check skipped ({e})"),
+    }
     Ok(())
 }

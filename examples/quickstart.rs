@@ -1,15 +1,16 @@
 //! Quickstart: the full three-layer round trip in one page.
 //!
 //! 1. Load the AOT-compiled VEXP artifact (Pallas kernel, lowered by
-//!    `make artifacts`) through the PJRT runtime;
+//!    `make artifacts`) through the PJRT runtime (needs `--features
+//!    pjrt`; skipped gracefully otherwise);
 //! 2. compare it bit-for-bit with the Rust ExpUnit model;
 //! 3. run the optimized softmax kernel on the cluster simulator and show
 //!    the headline speedup.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use anyhow::Result;
 use vexp::bf16::Bf16;
+use vexp::error::Result;
 use vexp::kernels::softmax::{run_softmax, SoftmaxVariant};
 use vexp::runtime::pjrt::Input;
 use vexp::runtime::Runtime;
@@ -17,19 +18,23 @@ use vexp::vexp::exp_unit;
 
 fn main() -> Result<()> {
     // --- Layer 1/2: execute the Pallas-authored kernel via PJRT --------
-    let mut rt = Runtime::open("artifacts")?;
     let xs: Vec<f32> = (0..4096).map(|i| (i as f32 - 2048.0) * 0.01).collect();
-    let pjrt_out = rt.execute("vexp", &[Input::F32(&xs)])?;
-
-    // --- Layer 3: the bit-exact hardware model -------------------------
-    let mut mismatches = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if pjrt_out[i] != exp_unit(Bf16::from_f32(x)).to_f32() {
-            mismatches += 1;
+    match Runtime::open("artifacts").and_then(|mut rt| rt.execute("vexp", &[Input::F32(&xs)])) {
+        Ok(pjrt_out) => {
+            // --- Layer 3: the bit-exact hardware model -----------------
+            let mut mismatches = 0;
+            for (i, &x) in xs.iter().enumerate() {
+                if pjrt_out[i] != exp_unit(Bf16::from_f32(x)).to_f32() {
+                    mismatches += 1;
+                }
+            }
+            println!(
+                "VEXP: PJRT artifact vs Rust ExpUnit over 4096 inputs: {mismatches} mismatches"
+            );
+            assert_eq!(mismatches, 0);
         }
+        Err(e) => println!("VEXP PJRT cross-check skipped ({e})"),
     }
-    println!("VEXP: PJRT artifact vs Rust ExpUnit over 4096 inputs: {mismatches} mismatches");
-    assert_eq!(mismatches, 0);
 
     // --- the paper's headline on the cluster simulator ------------------
     let rows: Vec<Vec<f32>> = (0..8)

@@ -1,35 +1,69 @@
 //! Fig. 6d-f: FlashAttention-2 throughput, softmax latency share and
 //! energy, baseline vs optimized partial softmax (head dim 64, GPT-2).
+//!
+//! Runs through the execution engine: the FA-2 slice programs come from
+//! the shared `ProgramCache` (one compile per variant/shape), execute on
+//! the cycle-accurate backend's clusters, and the sweep finishes with a
+//! batched multi-request run on the full 16-cluster system.
+use vexp::coordinator::CLUSTERS;
 use vexp::energy::power::cluster_energy_pj;
-use vexp::isa::Class;
-use vexp::kernels::flash_attention::{run_flash_attention, FaVariant};
-
-fn mat(n: usize, seed: u64) -> Vec<f32> {
-    let mut s = seed | 1;
-    (0..n).map(|_| { s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
-        ((s >> 33) as f64 / 2f64.powi(31) * 2.0 - 1.0) as f32 }).collect()
-}
+use vexp::exec::{Backend, CycleSimBackend, Engine, KernelKind, ProgramKey};
+use vexp::kernels::flash_attention::{build_fa_program, seed_fa_inputs, FaVariant};
+use vexp::model::GPT2_SMALL;
+use vexp::sim::{Cluster, CORES_PER_CLUSTER};
 
 fn main() {
     println!("Fig. 6d-f — FlashAttention-2, head dim 64 (GPT-2), one cluster");
-    println!("{:>4} {:>10} {:>10} {:>8} {:>9} {:>8}", "Sk", "BL cyc", "Opt cyc", "speedup", "sm-share", "E-ratio");
+    println!("{:>4} {:>10} {:>10} {:>8} {:>8}", "Sk", "BL cyc", "Opt cyc", "speedup", "E-ratio");
+    let mut engine = Engine::new();
     let (sq, d, bk) = (32u32, 64u32, 32u32);
     for sk in [64u32, 128, 256] {
-        let q = mat((sq * d) as usize, 1);
-        let k = mat((sk * d) as usize, 2);
-        let v = mat((sk * d) as usize, 3);
-        let b = run_flash_attention(FaVariant::Baseline, &q, &k, &v, sq, sk, d, bk);
-        let o = run_flash_attention(FaVariant::Optimized, &q, &k, &v, sq, sk, d, bk);
-        // softmax share in the optimized kernel: exp/sub/reduce work
-        let oc = o.stats.combined();
-        let sm_instr = oc.count(Class::FpExp) * 4 + oc.count(Class::FpDivH);
-        let share = sm_instr as f64 / oc.retired_total() as f64;
-        let eb = cluster_energy_pj(&b.stats, false).total();
-        let eo = cluster_energy_pj(&o.stats, true).total();
-        println!("{sk:>4} {:>10} {:>10} {:>7.1}x {:>8.1}% {:>7.1}x",
-            b.stats.cycles, o.stats.cycles,
-            b.stats.cycles as f64 / o.stats.cycles as f64,
-            share * 100.0, eb / eo);
+        let mut run = |variant: FaVariant| {
+            let key = ProgramKey::for_kernel(
+                KernelKind::FlashAttention(variant),
+                [sq, sk, d, bk, 0, 0],
+                CORES_PER_CLUSTER as u32,
+            );
+            let program = engine
+                .cache
+                .get_or_build(key, || build_fa_program(variant, sq, sk, d, bk));
+            let mut cluster = Cluster::new();
+            seed_fa_inputs(&mut cluster.spm, sq, sk, d, bk, sk as u64);
+            let stats = cluster.run(program.per_core());
+            let e = cluster_energy_pj(&stats, variant == FaVariant::Optimized).total();
+            (stats.cycles, e)
+        };
+        let (bc, be) = run(FaVariant::Baseline);
+        let (oc, oe) = run(FaVariant::Optimized);
+        println!("{sk:>4} {bc:>10} {oc:>10} {:>7.1}x {:>7.1}x",
+            bc as f64 / oc as f64, be / oe);
     }
-    println!("(paper: up to 8.2x throughput, softmax share -> 6%, 4.1x energy)");
+    println!(
+        "(paper: up to 8.2x throughput, 4.1x energy; cache: {} programs, {} hits)",
+        engine.cache.len(),
+        engine.cache.hits
+    );
+
+    // --- batched serving slice on the full system -----------------------
+    for _ in 0..4 {
+        engine.submit(GPT2_SMALL);
+    }
+    let batch = engine.compile_batch();
+    let mut sim = CycleSimBackend::new(CLUSTERS);
+    let report = sim.execute(&batch);
+    println!(
+        "batched: 4x GPT-2 heads on {CLUSTERS} clusters -> makespan {} cycles, \
+         {} cache hits this batch",
+        report.makespan_cycles, report.cache_hits
+    );
+    for r in &report.per_request {
+        println!(
+            "  req {:>2} {:>12}: {:>9.0} cycles on {} clusters, softmax {:.1}%",
+            r.request_id,
+            r.model,
+            r.cycles,
+            r.clusters_used,
+            r.softmax_share() * 100.0
+        );
+    }
 }

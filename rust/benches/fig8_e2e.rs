@@ -1,15 +1,17 @@
 //! Fig. 8: end-to-end runtime and energy, baseline vs softmax-optimized,
-//! on the 16-cluster Occamy-style system.
-use vexp::coordinator::{KernelRates, SystemEstimator};
+//! on the 16-cluster Occamy-style system — served through the unified
+//! execution engine's `Backend` API (analytic backend).
+use vexp::exec::{AnalyticBackend, Backend, Request};
 use vexp::model::config::ALL_MODELS;
 
 fn main() {
-    let est = SystemEstimator::new(KernelRates::calibrate());
-    println!("Fig. 8 — 16-cluster end-to-end (non-autoregressive)");
+    let mut backend = AnalyticBackend::new();
+    println!("Fig. 8 — 16-cluster end-to-end (non-autoregressive), backend: {}", backend.name());
     println!("{:12} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8}",
         "model", "BL ms", "Optim ms", "speedup", "BL mJ", "Optim mJ", "E-ratio");
     for cfg in ALL_MODELS {
-        let (b, o) = est.fig8_pair(&cfg);
+        let b = backend.estimate(&Request::baseline(0, cfg));
+        let o = backend.estimate(&Request::new(1, cfg));
         println!("{:12} {:>10.2} {:>10.2} {:>7.1}x {:>10.1} {:>10.1} {:>7.1}x",
             cfg.name, b.latency_ms(), o.latency_ms(), b.cycles / o.cycles,
             b.energy_mj(), o.energy_mj(), b.energy_pj / o.energy_pj);

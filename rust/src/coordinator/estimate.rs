@@ -5,6 +5,10 @@
 //! cycles/softmax-element and pJ figures; the estimator then scales them
 //! over the per-layer operation counts of `model::WorkloadOps`, with
 //! head→cluster scheduling, double-buffered DMA and HBM contention.
+//!
+//! The estimator is the rate model behind
+//! [`crate::exec::AnalyticBackend`]; benches and the CLI reach it
+//! through the unified `Backend` API rather than directly.
 
 use super::schedule::{HeadMap, TilePlan, CLUSTERS};
 use crate::energy::power::{cluster_energy_pj, DMA_PJ_PER_BYTE};
@@ -73,6 +77,9 @@ pub struct E2eEstimate {
     pub energy_pj: f64,
     pub softmax_cycles: f64,
     pub gemm_cycles: f64,
+    /// Attention-kernel cycles (QK^T + partial softmax + P·V) — the
+    /// FlashAttention-2 scope the cycle-sim backend cross-checks.
+    pub attn_cycles: f64,
     pub dma_cycles: f64,
 }
 
@@ -164,6 +171,7 @@ impl SystemEstimator {
             energy_pj: energy,
             softmax_cycles: softmax_cycles * layers,
             gemm_cycles,
+            attn_cycles: attn_cycles * layers,
             dma_cycles: dma_cycles * layers,
         }
     }

@@ -66,6 +66,16 @@ impl TilePlan {
         while Self::working_set(bq, bk, d) > SPM_BYTES as u32 && bq > 16 {
             bq /= 2;
         }
+        // bq bottomed out at 16: shrink the K/V tile below 64 before
+        // giving up (large head dimensions need it)
+        while Self::working_set(bq, bk, d) > SPM_BYTES as u32 && bk > 16 {
+            bk /= 2;
+        }
+        assert!(
+            Self::working_set(bq, bk, d) <= SPM_BYTES as u32,
+            "TilePlan: FA-2 working set for d_head={d} exceeds the {SPM_BYTES}-byte SPM \
+             even at bq={bq}, bk={bk}; this head dimension cannot be tiled on one cluster",
+        );
         while Self::working_set(bq, bk * 2, d) <= SPM_BYTES as u32 && bk * 2 <= sk {
             bk *= 2;
         }
@@ -170,5 +180,41 @@ mod tests {
         let p_small = TilePlan::plan(&GPT2_SMALL); // d_head 64
         let p_big = TilePlan::plan(&GPT3_XL); // d_head 128
         assert!(p_big.bk <= p_small.bk);
+    }
+
+    #[test]
+    fn over_budget_plan_shrinks_bk_instead_of_lying() {
+        // d_head 256: at bq=16 a bk=64 double-buffered working set is
+        // ~158 KiB — the seed planner returned it anyway. The fix must
+        // shrink bk until the plan actually fits.
+        let cfg = TransformerConfig {
+            name: "wide-head",
+            layers: 1,
+            d_model: 2048,
+            heads: 8,
+            d_ff: 2048,
+            seq: 2048,
+        };
+        let plan = TilePlan::plan(&cfg);
+        assert!(
+            TilePlan::working_set(plan.bq, plan.bk, plan.d) <= SPM_BYTES as u32,
+            "plan must fit the SPM"
+        );
+        assert!(plan.bk < 64, "bk must shrink below 64, got {}", plan.bk);
+        assert!(plan.bk >= 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the")]
+    fn untileable_head_dim_panics_with_clear_message() {
+        let cfg = TransformerConfig {
+            name: "impossible",
+            layers: 1,
+            d_model: 8192,
+            heads: 4, // d_head 2048: K/V tiles cannot fit even at bk=16
+            d_ff: 8192,
+            seq: 2048,
+        };
+        TilePlan::plan(&cfg);
     }
 }

@@ -1,0 +1,116 @@
+//! Minimal in-tree error type (the offline crate cache has no `anyhow`):
+//! a string-backed error, a `Result` alias, and `err!`/`bail!` macros plus
+//! a `Context` extension trait covering the handful of patterns the
+//! runtime and CLI need.
+
+use std::fmt;
+
+/// A string-backed error with an optional cause chain (flattened).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// `anyhow::Context`-style adapters for results and options.
+pub trait Context<T> {
+    /// Attach a static message, keeping the underlying cause.
+    fn context(self, msg: &str) -> Result<T>;
+    /// Attach a lazily-built message, keeping the underlying cause.
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_wraps_causes() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("opening artifact").unwrap_err();
+        assert!(e.0.contains("opening artifact"));
+        assert!(e.0.contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_macro_formats() {
+        fn f(x: u32) -> Result<()> {
+            if x > 2 {
+                bail!("x too large: {x}");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(9).unwrap_err().0, "x too large: 9");
+    }
+}

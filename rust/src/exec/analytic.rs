@@ -1,0 +1,122 @@
+//! The analytic backend: `coordinator::estimate` behind the [`Backend`]
+//! trait.
+//!
+//! `estimate` is the existing calibrated-rate model (Fig. 1/Fig. 8).
+//! `execute` rates a [`CompiledBatch`]'s slice workload with the same
+//! kernel rates and DMA/HBM-contention model the estimator uses, so a
+//! serving layer can admission-control a batch in microseconds and then
+//! validate the decision against the cycle-accurate backend.
+
+use super::batch::CompiledBatch;
+use super::report::{BatchReport, RunReport};
+use super::{Backend, Request};
+use crate::coordinator::{KernelRates, SystemEstimator};
+use crate::energy::power::DMA_PJ_PER_BYTE;
+
+pub struct AnalyticBackend {
+    pub est: SystemEstimator,
+}
+
+impl AnalyticBackend {
+    /// Calibrate kernel rates on the simulator, then build the backend.
+    pub fn new() -> Self {
+        Self::with_rates(KernelRates::calibrate())
+    }
+
+    pub fn with_rates(rates: KernelRates) -> Self {
+        AnalyticBackend { est: SystemEstimator::new(rates) }
+    }
+}
+
+impl Default for AnalyticBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for AnalyticBackend {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn estimate(&mut self, req: &Request) -> RunReport {
+        let e = self.est.estimate(&req.cfg, req.softmax_optimized, req.gemm_optimized);
+        RunReport {
+            backend: self.name(),
+            request_id: req.id,
+            model: req.cfg.name,
+            cycles: e.cycles,
+            energy_pj: e.energy_pj,
+            softmax_cycles: e.softmax_cycles,
+            gemm_cycles: e.gemm_cycles,
+            attn_cycles: e.attn_cycles,
+            dma_cycles: e.dma_cycles,
+            clusters_used: self.est.clusters,
+            per_cluster: vec![],
+        }
+    }
+
+    fn execute(&mut self, batch: &CompiledBatch) -> BatchReport {
+        let active = batch.active_clusters();
+        let contention = self
+            .est
+            .hbm
+            .contention_factor(active.max(1), self.est.dma.bytes_per_cycle);
+        let r = self.est.rates;
+        let mut per_request = Vec::with_capacity(batch.requests.len());
+        let mut makespan = 0u64;
+        let mut hbm_bytes = 0u64;
+        for cr in &batch.requests {
+            let gemm_rate = if cr.req.gemm_optimized {
+                r.gemm_cyc_per_flop
+            } else {
+                r.gemm_unopt_cyc_per_flop
+            };
+            let (sm_cyc, sm_pj) = if cr.req.softmax_optimized {
+                (r.softmax_opt_cyc, r.softmax_opt_pj)
+            } else {
+                (r.softmax_base_cyc, r.softmax_base_pj)
+            };
+            let rounds = cr.rounds as f64;
+            let gemm_cycles = rounds * cr.cal.attn_flops() as f64 * gemm_rate;
+            let softmax_cycles = rounds * cr.cal.softmax_elems() as f64 * sm_cyc;
+            let compute = gemm_cycles + softmax_cycles;
+            let dma =
+                self.est.dma.cycles(cr.hbm_bytes_per_cluster) as f64 * contention;
+            let cycles = compute.max(dma) + self.est.dma.startup as f64;
+            let n_cl = cr.clusters.len() as f64;
+            let gemm_pj = if cr.req.gemm_optimized {
+                r.gemm_pj_per_flop
+            } else {
+                r.gemm_pj_per_flop * 4.0
+            };
+            let energy_pj = n_cl
+                * (rounds * cr.cal.attn_flops() as f64 * gemm_pj
+                    + rounds * cr.cal.softmax_elems() as f64 * sm_pj
+                    + cr.hbm_bytes_per_cluster as f64 * DMA_PJ_PER_BYTE);
+            makespan = makespan.max(cycles as u64);
+            hbm_bytes += cr.hbm_bytes_per_cluster * cr.clusters.len() as u64;
+            per_request.push(RunReport {
+                backend: self.name(),
+                request_id: cr.req.id,
+                model: cr.req.cfg.name,
+                cycles,
+                energy_pj,
+                softmax_cycles,
+                gemm_cycles,
+                attn_cycles: compute,
+                dma_cycles: dma,
+                clusters_used: cr.clusters.len(),
+                per_cluster: vec![],
+            });
+        }
+        BatchReport {
+            backend: self.name(),
+            per_request,
+            makespan_cycles: makespan,
+            hbm_bytes,
+            cache_hits: batch.cache_hits,
+            cache_misses: batch.cache_misses,
+        }
+    }
+}

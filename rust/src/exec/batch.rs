@@ -1,0 +1,294 @@
+//! Multi-request batching: pack concurrent inference requests onto the
+//! 16-cluster system.
+//!
+//! The scheduler partitions the clusters among requests proportionally
+//! to their attention work (each request gets a disjoint, contiguous
+//! cluster set, at least one cluster each), maps each request's heads
+//! onto its clusters with [`HeadMap`] rounds, and compiles — through the
+//! shared [`ProgramCache`] — one FlashAttention-2 *head-tile slice*
+//! program per request at its [`TilePlan`]'s tile sizes. Executing the
+//! resulting [`CompiledBatch`] on a backend overlaps one request's DMA
+//! with another's compute through the existing HBM-contention model:
+//! every active cluster streams its own K/V tiles while all of them
+//! share the group crossbar.
+//!
+//! The batch workload scope is deliberately a *slice* (one Q-block over
+//! two K/V tiles per head round): it is the unit both backends can honor
+//! — the cycle-accurate simulator by actually running it, the analytic
+//! backend by rating it — and the unit the cache can share across
+//! requests of the same model shape.
+
+use super::program::{KernelKind, Program, ProgramCache, ProgramKey};
+use super::Request;
+use crate::coordinator::{HeadMap, TilePlan, CLUSTERS};
+use crate::kernels::flash_attention::build_fa_program;
+use crate::model::WorkloadOps;
+use crate::sim::CORES_PER_CLUSTER;
+
+/// The calibration slice shape one batched head round executes: a
+/// `sq × sk` FlashAttention-2 forward with K/V tile length `bk`.
+#[derive(Clone, Copy, Debug)]
+pub struct CalShape {
+    pub sq: u32,
+    pub sk: u32,
+    pub d: u32,
+    pub bk: u32,
+}
+
+impl CalShape {
+    /// Derive the slice shape from a request's tile plan: a small Q
+    /// block (16 rows — two per core) over two double-buffered K/V
+    /// tiles, at the request's head dimension.
+    pub fn for_plan(plan: &TilePlan) -> Self {
+        let bk = plan.bk;
+        CalShape { sq: 16.min(plan.bq), sk: 2 * bk, d: plan.d, bk }
+    }
+
+    /// GEMM FLOPs in the slice (QK^T + P·V, 2 FLOPs per MAC).
+    pub fn attn_flops(&self) -> u64 {
+        2 * 2 * self.sq as u64 * self.sk as u64 * self.d as u64
+    }
+
+    /// Softmax elements in the slice.
+    pub fn softmax_elems(&self) -> u64 {
+        self.sq as u64 * self.sk as u64
+    }
+
+    /// HBM bytes streamed per slice (Q block + K and V tiles, BF16).
+    pub fn hbm_bytes(&self) -> u64 {
+        2 * (self.sq as u64 * self.d as u64) + 2 * 2 * (self.sk as u64 * self.d as u64)
+    }
+}
+
+/// One request, compiled and placed: its cluster set, head rounds, the
+/// cached slice program, and the DMA bytes each of its clusters streams.
+#[derive(Clone, Debug)]
+pub struct CompiledRequest {
+    pub req: Request,
+    pub plan: TilePlan,
+    pub cal: CalShape,
+    /// Cluster indices owned by this request (disjoint across requests).
+    pub clusters: Vec<usize>,
+    /// Sequential head rounds each owned cluster executes.
+    pub rounds: u32,
+    pub program: Program,
+    /// HBM bytes one owned cluster streams over all its rounds.
+    pub hbm_bytes_per_cluster: u64,
+}
+
+/// A scheduled, compiled batch ready for any [`super::Backend`].
+#[derive(Clone, Debug)]
+pub struct CompiledBatch {
+    pub requests: Vec<CompiledRequest>,
+    /// Total clusters in the target system.
+    pub n_clusters: usize,
+    /// Cache hits/misses incurred compiling this batch.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl CompiledBatch {
+    /// Clusters owned by any request.
+    pub fn active_clusters(&self) -> usize {
+        self.requests.iter().map(|r| r.clusters.len()).sum()
+    }
+}
+
+/// Packs concurrent requests onto the cluster grid.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchScheduler {
+    pub clusters: usize,
+}
+
+impl Default for BatchScheduler {
+    fn default() -> Self {
+        BatchScheduler { clusters: CLUSTERS }
+    }
+}
+
+impl BatchScheduler {
+    pub fn new(clusters: usize) -> Self {
+        assert!(clusters > 0);
+        BatchScheduler { clusters }
+    }
+
+    /// Partition the clusters among the requests proportionally to their
+    /// total attention FLOPs: every request gets at least one cluster
+    /// (and at most `heads` — more would idle), remaining clusters go
+    /// greedily to the request with the highest work-per-cluster.
+    pub fn assign(&self, reqs: &[Request]) -> Vec<Vec<usize>> {
+        assert!(!reqs.is_empty(), "empty batch");
+        assert!(
+            reqs.len() <= self.clusters,
+            "{} requests exceed {} clusters; split the batch",
+            reqs.len(),
+            self.clusters
+        );
+        let work: Vec<f64> = reqs
+            .iter()
+            .map(|r| WorkloadOps::of(&r.cfg).total().attn_flops as f64)
+            .collect();
+        let mut counts = vec![1usize; reqs.len()];
+        for _ in reqs.len()..self.clusters {
+            // highest remaining per-cluster work, capped at head count
+            let mut best: Option<usize> = None;
+            for (i, req) in reqs.iter().enumerate() {
+                if counts[i] >= req.cfg.heads as usize {
+                    continue;
+                }
+                let density = work[i] / counts[i] as f64;
+                if best.map_or(true, |b| density > work[b] / counts[b] as f64) {
+                    best = Some(i);
+                }
+            }
+            match best {
+                Some(i) => counts[i] += 1,
+                None => break, // every request saturated at its head count
+            }
+        }
+        let mut next = 0usize;
+        counts
+            .iter()
+            .map(|&n| {
+                let ids = (next..next + n).collect();
+                next += n;
+                ids
+            })
+            .collect()
+    }
+
+    /// Compile every request's slice program through `cache` and place
+    /// the batch. Hit/miss deltas are recorded on the returned batch.
+    pub fn compile(&self, reqs: &[Request], cache: &mut ProgramCache) -> CompiledBatch {
+        let assignment = self.assign(reqs);
+        let (h0, m0) = (cache.hits, cache.misses);
+        let requests = reqs
+            .iter()
+            .zip(assignment)
+            .map(|(req, clusters)| {
+                let plan = TilePlan::plan(&req.cfg);
+                let cal = CalShape::for_plan(&plan);
+                let variant = req.fa_variant();
+                let key = ProgramKey::for_request(
+                    KernelKind::FlashAttention(variant),
+                    &req.cfg,
+                    &plan,
+                    CORES_PER_CLUSTER as u32,
+                );
+                let program =
+                    cache.get_or_build(key, || build_fa_program(variant, cal.sq, cal.sk, cal.d, cal.bk));
+                let rounds = HeadMap::new(req.cfg.heads, clusters.len() as u32).rounds();
+                let hbm_bytes_per_cluster = rounds as u64 * cal.hbm_bytes();
+                CompiledRequest {
+                    req: *req,
+                    plan,
+                    cal,
+                    clusters,
+                    rounds,
+                    program,
+                    hbm_bytes_per_cluster,
+                }
+            })
+            .collect();
+        CompiledBatch {
+            requests,
+            n_clusters: self.clusters,
+            cache_hits: cache.hits - h0,
+            cache_misses: cache.misses - m0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE};
+
+    fn mixed() -> Vec<Request> {
+        vec![
+            Request::new(0, GPT2_SMALL),
+            Request::new(1, GPT3_XL),
+            Request::new(2, VIT_BASE),
+            Request::new(3, VIT_HUGE),
+        ]
+    }
+
+    #[test]
+    fn assignment_is_a_disjoint_cover() {
+        let sched = BatchScheduler::default();
+        let assignment = sched.assign(&mixed());
+        let mut seen = vec![false; CLUSTERS];
+        for ids in &assignment {
+            assert!(!ids.is_empty(), "every request needs a cluster");
+            for &c in ids {
+                assert!(c < CLUSTERS);
+                assert!(!seen[c], "cluster {c} assigned twice");
+                seen[c] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn heavier_requests_get_more_clusters() {
+        let sched = BatchScheduler::default();
+        let reqs = mixed();
+        let assignment = sched.assign(&reqs);
+        // GPT-3 XL (seq 2048, d_model 2048) dwarfs ViT-Base (seq 197)
+        assert!(
+            assignment[1].len() > assignment[2].len(),
+            "GPT-3 {} vs ViT-B {}",
+            assignment[1].len(),
+            assignment[2].len()
+        );
+    }
+
+    #[test]
+    fn cluster_counts_capped_at_heads() {
+        let sched = BatchScheduler::new(16);
+        let reqs = vec![Request::new(0, GPT2_SMALL)]; // 12 heads
+        let assignment = sched.assign(&reqs);
+        assert_eq!(assignment[0].len(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed")]
+    fn too_many_requests_panic() {
+        let sched = BatchScheduler::new(2);
+        sched.assign(&[
+            Request::new(0, VIT_BASE),
+            Request::new(1, VIT_BASE),
+            Request::new(2, VIT_BASE),
+        ]);
+    }
+
+    #[test]
+    fn compile_reuses_programs_across_same_shape_requests() {
+        let sched = BatchScheduler::default();
+        let mut cache = ProgramCache::new();
+        let reqs = vec![
+            Request::new(0, GPT2_SMALL),
+            Request::new(1, VIT_BASE),
+            Request::new(2, GPT2_SMALL), // same shape as request 0
+        ];
+        let batch = sched.compile(&reqs, &mut cache);
+        assert_eq!(batch.requests.len(), 3);
+        assert!(batch.cache_hits >= 1, "duplicate GPT-2 must hit the cache");
+        assert!(batch.requests[0]
+            .program
+            .shares_storage_with(&batch.requests[2].program));
+        assert!(!batch.requests[0]
+            .program
+            .shares_storage_with(&batch.requests[1].program));
+    }
+
+    #[test]
+    fn cal_shape_is_simulable() {
+        for cfg in [GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE] {
+            let plan = TilePlan::plan(&cfg);
+            let cal = CalShape::for_plan(&plan);
+            assert!(cal.sq >= 8 && cal.sq <= 64);
+            assert_eq!(cal.sk % cal.bk, 0);
+            assert!(cal.attn_flops() > 0 && cal.hbm_bytes() > 0);
+        }
+    }
+}

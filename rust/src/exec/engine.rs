@@ -1,0 +1,101 @@
+//! The serving-engine facade: request queue + shared program cache +
+//! batch scheduler, independent of which [`Backend`] executes.
+
+use super::batch::{BatchScheduler, CompiledBatch};
+use super::program::ProgramCache;
+use super::report::BatchReport;
+use super::{Backend, Request};
+use crate::coordinator::CLUSTERS;
+use crate::model::TransformerConfig;
+
+/// Collects concurrent requests, compiles them once through the shared
+/// [`ProgramCache`], and hands the packed batch to a backend.
+pub struct Engine {
+    pub cache: ProgramCache,
+    pub scheduler: BatchScheduler,
+    queue: Vec<Request>,
+    next_id: u64,
+}
+
+impl Engine {
+    /// Engine for the paper's 16-cluster Occamy-style system.
+    pub fn new() -> Self {
+        Self::with_clusters(CLUSTERS)
+    }
+
+    pub fn with_clusters(clusters: usize) -> Self {
+        Engine {
+            cache: ProgramCache::new(),
+            scheduler: BatchScheduler::new(clusters),
+            queue: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue a fully-optimized inference request; returns its id.
+    pub fn submit(&mut self, cfg: TransformerConfig) -> u64 {
+        let id = self.next_id;
+        self.submit_request(Request::new(id, cfg))
+    }
+
+    /// Enqueue an explicit request (the id field is overwritten with the
+    /// engine's monotonic counter).
+    pub fn submit_request(&mut self, mut req: Request) -> u64 {
+        req.id = self.next_id;
+        self.next_id += 1;
+        self.queue.push(req);
+        req.id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain the queue into a scheduled, compiled batch.
+    pub fn compile_batch(&mut self) -> CompiledBatch {
+        let reqs = std::mem::take(&mut self.queue);
+        self.scheduler.compile(&reqs, &mut self.cache)
+    }
+
+    /// Compile the pending requests and execute them on `backend`.
+    pub fn serve(&mut self, backend: &mut dyn Backend) -> BatchReport {
+        let batch = self.compile_batch();
+        backend.execute(&batch)
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GPT2_SMALL, VIT_BASE};
+
+    #[test]
+    fn submit_assigns_monotonic_ids() {
+        let mut e = Engine::new();
+        let a = e.submit(GPT2_SMALL);
+        let b = e.submit(VIT_BASE);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(e.pending(), 2);
+        let batch = e.compile_batch();
+        assert_eq!(e.pending(), 0);
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.requests[1].req.id, 1);
+    }
+
+    #[test]
+    fn repeated_batches_reuse_the_cache() {
+        let mut e = Engine::new();
+        e.submit(GPT2_SMALL);
+        let _ = e.compile_batch();
+        e.submit(GPT2_SMALL);
+        let batch = e.compile_batch();
+        assert_eq!(batch.cache_hits, 1, "second batch must reuse the program");
+        assert_eq!(batch.cache_misses, 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Unified execution engine (DESIGN.md §8): one API over the analytic
+//! estimator and the cycle-accurate multi-cluster simulator.
+//!
+//! Before this module, the paper-figure reproducers talked to two
+//! disconnected code paths — `coordinator::estimate` for the Fig. 1/8
+//! numbers and `sim::System` for real instruction streams — and every
+//! bench, example and the CLI hand-rolled its own plumbing. The engine
+//! replaces that with:
+//!
+//! - [`Backend`]: `estimate(&Request)` / `execute(&CompiledBatch)`
+//!   returning one unified [`RunReport`], implemented by
+//!   [`AnalyticBackend`] (calibrated rates, microsecond cost) and
+//!   [`CycleSimBackend`] (real instruction streams on the C-cluster
+//!   system);
+//! - [`Program`] / [`ProgramCache`]: kernel instruction streams compiled
+//!   once into shared handles instead of rebuilt per call;
+//! - [`BatchScheduler`] / [`Engine`]: multiple concurrent transformer
+//!   requests (mixed models, mixed sequence lengths) packed onto the 16
+//!   clusters, one request's DMA overlapping another's compute through
+//!   the HBM-contention model.
+
+pub mod analytic;
+pub mod batch;
+pub mod cyclesim;
+pub mod engine;
+pub mod program;
+pub mod report;
+
+pub use analytic::AnalyticBackend;
+pub use batch::{BatchScheduler, CalShape, CompiledBatch, CompiledRequest};
+pub use cyclesim::CycleSimBackend;
+pub use engine::Engine;
+pub use program::{KernelKind, Program, ProgramCache, ProgramKey};
+pub use report::{BatchReport, RunReport};
+
+use crate::kernels::flash_attention::FaVariant;
+use crate::kernels::softmax::SoftmaxVariant;
+use crate::model::TransformerConfig;
+
+/// One inference request: a model configuration plus which kernel
+/// optimizations its deployment enables (the paper's baseline/optimized
+/// axes).
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub cfg: TransformerConfig,
+    /// VFEXP-optimized softmax vs the scalar libm baseline.
+    pub softmax_optimized: bool,
+    /// [5]-style GEMM vs plain scalar code (Fig. 1 axis).
+    pub gemm_optimized: bool,
+}
+
+impl Request {
+    /// A fully-optimized request (the deployment configuration).
+    pub fn new(id: u64, cfg: TransformerConfig) -> Self {
+        Request { id, cfg, softmax_optimized: true, gemm_optimized: true }
+    }
+
+    /// The Fig. 8 baseline: optimized GEMM, baseline softmax.
+    pub fn baseline(id: u64, cfg: TransformerConfig) -> Self {
+        Request { id, cfg, softmax_optimized: false, gemm_optimized: true }
+    }
+
+    pub fn softmax_variant(&self) -> SoftmaxVariant {
+        if self.softmax_optimized {
+            SoftmaxVariant::SwExpHw
+        } else {
+            SoftmaxVariant::Baseline
+        }
+    }
+
+    pub fn fa_variant(&self) -> FaVariant {
+        if self.softmax_optimized {
+            FaVariant::Optimized
+        } else {
+            FaVariant::Baseline
+        }
+    }
+}
+
+/// A unified execution backend over the 16-cluster system.
+///
+/// `estimate` answers "what does this request cost end-to-end" for one
+/// full forward pass; `execute` runs a scheduled multi-request batch
+/// (its slice workload — see [`batch`]) and reports per request. Both
+/// return [`RunReport`]s so callers can swap backends freely.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Full forward-pass cost of a single request.
+    fn estimate(&mut self, req: &Request) -> RunReport;
+
+    /// Run a compiled batch; one report per request, in batch order.
+    fn execute(&mut self, batch: &CompiledBatch) -> BatchReport;
+}

@@ -1,0 +1,197 @@
+//! Compiled kernel programs and the program cache.
+//!
+//! Kernel builders (`kernels::{softmax, flash_attention, gemm}`) emit
+//! per-core instruction streams. Building them is pure but not free —
+//! a FlashAttention-2 head program is thousands of instructions — and
+//! before this module every call site rebuilt the raw `Vec<Instr>` from
+//! scratch. A [`Program`] wraps the streams in an `Arc` so a compiled
+//! kernel is cloned by reference, and a [`ProgramCache`] memoizes builds
+//! keyed by [`ProgramKey`] (kernel kind + model/tile identity + core
+//! count), so the batched serving path compiles each distinct kernel
+//! exactly once.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::TilePlan;
+use crate::isa::Instr;
+use crate::kernels::flash_attention::FaVariant;
+use crate::kernels::softmax::SoftmaxVariant;
+use crate::model::TransformerConfig;
+
+/// Which kernel a [`Program`] implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Softmax(SoftmaxVariant),
+    FlashAttention(FaVariant),
+    Gemm,
+    /// Ad-hoc instruction streams (e.g. hand-written micro-benchmarks)
+    /// routed through the same [`crate::sim::System`] entry points.
+    Raw,
+}
+
+/// A compiled, immutable, cheaply-cloneable kernel program: one
+/// instruction stream per cluster core (empty streams for idle cores).
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub kind: KernelKind,
+    per_core: Arc<Vec<Vec<Instr>>>,
+}
+
+impl Program {
+    pub fn new(kind: KernelKind, per_core: Vec<Vec<Instr>>) -> Self {
+        Program { kind, per_core: Arc::new(per_core) }
+    }
+
+    /// The per-core instruction streams.
+    pub fn per_core(&self) -> &[Vec<Instr>] {
+        &self.per_core
+    }
+
+    /// Total instructions across all cores (static count, not dynamic).
+    pub fn instr_count(&self) -> usize {
+        self.per_core.iter().map(Vec::len).sum()
+    }
+
+    /// Cores with a non-empty stream.
+    pub fn active_cores(&self) -> usize {
+        self.per_core.iter().filter(|p| !p.is_empty()).count()
+    }
+
+    /// True when `self` and `other` share the same underlying storage —
+    /// i.e. one is a cache-clone of the other, not a rebuild.
+    pub fn shares_storage_with(&self, other: &Program) -> bool {
+        Arc::ptr_eq(&self.per_core, &other.per_core)
+    }
+}
+
+/// Cache key: kernel kind, the identifying dimensions of the
+/// `TransformerConfig` + `TilePlan` pair (or raw kernel dims), and the
+/// core count the program was partitioned for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProgramKey {
+    pub kind: KernelKind,
+    /// Model name for request-derived programs, `"kernel"` for ad-hoc.
+    pub model: &'static str,
+    pub n_cores: u32,
+    /// Shape identity. For request-derived programs:
+    /// `[seq, heads, d_head, bq, bk, 0]`; for ad-hoc kernel calls the
+    /// caller packs its own dimensions.
+    pub dims: [u32; 6],
+}
+
+impl ProgramKey {
+    /// Key for a program derived from a request's model + tile plan.
+    pub fn for_request(
+        kind: KernelKind,
+        cfg: &TransformerConfig,
+        plan: &TilePlan,
+        n_cores: u32,
+    ) -> Self {
+        ProgramKey {
+            kind,
+            model: cfg.name,
+            n_cores,
+            dims: [cfg.seq, cfg.heads, cfg.d_head(), plan.bq, plan.bk, 0],
+        }
+    }
+
+    /// Key for an ad-hoc kernel invocation (benches, calibration runs).
+    pub fn for_kernel(kind: KernelKind, dims: [u32; 6], n_cores: u32) -> Self {
+        ProgramKey { kind, model: "kernel", n_cores, dims }
+    }
+}
+
+/// Memoizing store of compiled programs with hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct ProgramCache {
+    map: HashMap<ProgramKey, Program>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ProgramCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the program for `key`, invoking `build` only on a miss.
+    pub fn get_or_build(&mut self, key: ProgramKey, build: impl FnOnce() -> Program) -> Program {
+        if let Some(p) = self.map.get(&key) {
+            self.hits += 1;
+            return p.clone();
+        }
+        self.misses += 1;
+        let p = build();
+        self.map.insert(key, p.clone());
+        p
+    }
+
+    /// Number of distinct compiled programs held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    fn tiny_program() -> Program {
+        Program::new(KernelKind::Raw, vec![vec![Instr::Nop], vec![]])
+    }
+
+    #[test]
+    fn cache_hits_share_storage_and_skip_builder() {
+        let mut cache = ProgramCache::new();
+        let key = ProgramKey::for_kernel(KernelKind::Raw, [1, 2, 3, 4, 5, 6], 8);
+        let mut builds = 0u32;
+        let a = cache.get_or_build(key, || {
+            builds += 1;
+            tiny_program()
+        });
+        let b = cache.get_or_build(key, || {
+            builds += 1;
+            tiny_program()
+        });
+        assert_eq!(builds, 1, "second lookup must not re-run the builder");
+        assert!(a.shares_storage_with(&b));
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_miss() {
+        let mut cache = ProgramCache::new();
+        let k1 = ProgramKey::for_kernel(KernelKind::Raw, [1, 0, 0, 0, 0, 0], 8);
+        let k2 = ProgramKey::for_kernel(KernelKind::Raw, [2, 0, 0, 0, 0, 0], 8);
+        let a = cache.get_or_build(k1, tiny_program);
+        let b = cache.get_or_build(k2, tiny_program);
+        assert!(!a.shares_storage_with(&b));
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+    }
+
+    #[test]
+    fn request_keys_separate_models_and_plans() {
+        use crate::model::{GPT2_SMALL, GPT3_XL};
+        let p2 = TilePlan::plan(&GPT2_SMALL);
+        let p3 = TilePlan::plan(&GPT3_XL);
+        let k_a = ProgramKey::for_request(KernelKind::Gemm, &GPT2_SMALL, &p2, 8);
+        let k_b = ProgramKey::for_request(KernelKind::Gemm, &GPT2_SMALL, &p2, 8);
+        let k_c = ProgramKey::for_request(KernelKind::Gemm, &GPT3_XL, &p3, 8);
+        assert_eq!(k_a, k_b);
+        assert_ne!(k_a, k_c);
+    }
+
+    #[test]
+    fn program_counts() {
+        let p = tiny_program();
+        assert_eq!(p.instr_count(), 1);
+        assert_eq!(p.active_cores(), 1);
+    }
+}

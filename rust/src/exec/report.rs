@@ -1,0 +1,71 @@
+//! The unified result type every backend returns.
+
+use crate::sim::ClusterStats;
+
+/// One request's execution/estimation result, in a backend-independent
+/// shape: cycles + energy + the paper's breakdown axes, plus per-cluster
+/// stats when the backend actually ran cluster programs.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    /// Which backend produced this report (`"analytic"` / `"cycle-sim"`).
+    pub backend: &'static str,
+    pub request_id: u64,
+    pub model: &'static str,
+    /// Total cycles for the request's workload scope (full forward pass
+    /// for `estimate`, the packed batch slice for `execute`).
+    pub cycles: f64,
+    pub energy_pj: f64,
+    /// Cycles attributed to softmax work.
+    pub softmax_cycles: f64,
+    /// Cycles attributed to GEMM work (projections + attention products).
+    pub gemm_cycles: f64,
+    /// Cycles attributed to the attention kernel (QK^T + partial softmax
+    /// + P·V), the FlashAttention-2 scope of Fig. 6d-f.
+    pub attn_cycles: f64,
+    pub dma_cycles: f64,
+    /// Clusters this request occupied.
+    pub clusters_used: usize,
+    /// Per-cluster statistics (empty for the analytic backend).
+    pub per_cluster: Vec<ClusterStats>,
+}
+
+impl RunReport {
+    /// Milliseconds at the 1 GHz cluster clock.
+    pub fn latency_ms(&self) -> f64 {
+        self.cycles / 1e6
+    }
+
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_pj / 1e9
+    }
+
+    pub fn softmax_share(&self) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            self.softmax_cycles / self.cycles
+        }
+    }
+}
+
+/// Result of executing a [`super::CompiledBatch`]: one report per
+/// request (in submission order) plus batch-level accounting.
+#[derive(Clone, Debug, Default)]
+pub struct BatchReport {
+    pub backend: &'static str,
+    pub per_request: Vec<RunReport>,
+    /// System makespan across all clusters for the batch.
+    pub makespan_cycles: u64,
+    /// Total bytes streamed from HBM across the batch.
+    pub hbm_bytes: u64,
+    /// Program-cache hits/misses recorded while compiling this batch.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl BatchReport {
+    /// Aggregate energy over all requests.
+    pub fn total_energy_pj(&self) -> f64 {
+        self.per_request.iter().map(|r| r.energy_pj).sum()
+    }
+}

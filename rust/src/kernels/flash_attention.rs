@@ -17,19 +17,22 @@
 use super::gemm::emit_gemm_rows_strided;
 use super::softexp::{emit_libm_exp, write_exp_pool};
 use crate::bf16::Bf16;
+use crate::exec::program::{KernelKind, Program};
 use crate::isa::regs::*;
 use crate::isa::{Asm, Instr, SsrPattern};
-use crate::sim::{Cluster, ClusterStats, CORES_PER_CLUSTER};
+use crate::sim::{Cluster, ClusterStats, Mem, CORES_PER_CLUSTER};
 
 /// FlashAttention-2 kernel configuration.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FaVariant {
     Baseline,
     Optimized,
 }
 
-/// SPM layout for the single-head FA-2 kernel.
-struct FaLayout {
+/// SPM layout for the single-head FA-2 kernel. Derived deterministically
+/// from the problem shape by [`FaLayout::new`], so a cached [`Program`]
+/// and a separately-seeded SPM always agree on addresses.
+pub struct FaLayout {
     pool: u32,
     q: u32,   // Q[Sq,d], pre-scaled by 1/sqrt(d)
     k: u32,   // K[Sk,d]
@@ -40,6 +43,40 @@ struct FaLayout {
     m: u32,   // running max per row
     l: u32,   // running exp-sum per row
     corr: u32, // per-row rescale factor for the current tile
+}
+
+impl FaLayout {
+    /// Allocate the SPM layout for an `sq × sk` head at dimension `d`
+    /// with K/V tile length `bk`. Panics when the working set exceeds
+    /// the 128 KiB SPM.
+    pub fn new(sq: u32, sk: u32, d: u32, bk: u32) -> Self {
+        assert!(sk % bk == 0 && bk % 16 == 0 && d % 8 == 0);
+        let mut at = 0x1400u32;
+        let mut alloc = |bytes: u32| {
+            let r = at;
+            at += (bytes + 7) & !7;
+            r
+        };
+        let lay = FaLayout {
+            pool: 0x1000,
+            q: alloc(2 * sq * d),
+            k: alloc(2 * sk * d),
+            vt: alloc(2 * sk * d),
+            s: alloc(2 * sq * bk),
+            t: alloc(2 * sq * d),
+            o: alloc(2 * sq * d),
+            m: alloc(2 * sq),
+            l: alloc(2 * sq),
+            corr: alloc(2 * sq),
+        };
+        assert!(at <= 128 * 1024, "FA-2 working set {at} bytes exceeds SPM");
+        lay
+    }
+
+    /// Byte address of the O[Sq,d] output accumulator.
+    pub fn o_addr(&self) -> u32 {
+        self.o
+    }
 }
 
 /// Result of a cluster FlashAttention-2 run.
@@ -62,37 +99,55 @@ pub fn run_flash_attention(
     d: u32,
     bk: u32,
 ) -> FaRun {
+    let lay = FaLayout::new(sq, sk, d, bk);
+    let mut cluster = Cluster::new();
+    write_fa_data(&mut cluster.spm, &lay, q, k_mat, v, sq, sk, d);
+    let program = build_fa_program(variant, sq, sk, d, bk);
+    let stats = cluster.run(program.per_core());
+    let out = cluster.spm.read_bf16_as_f32(lay.o, (sq * d) as usize);
+    FaRun { out, stats }
+}
+
+/// Compile the single-head FA-2 kernel (query rows partitioned over the
+/// eight cores) into a cacheable [`Program`]. The stream addresses come
+/// from [`FaLayout::new`] for the same shape, so any SPM seeded through
+/// [`seed_fa_inputs`] or [`run_flash_attention`]'s data path matches.
+pub fn build_fa_program(variant: FaVariant, sq: u32, sk: u32, d: u32, bk: u32) -> Program {
+    let lay = FaLayout::new(sq, sk, d, bk);
+    let per_core = sq.div_ceil(CORES_PER_CLUSTER as u32);
+    let streams: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER as u32)
+        .map(|c| {
+            let lo = (c * per_core).min(sq);
+            let hi = ((c + 1) * per_core).min(sq);
+            if lo == hi {
+                return vec![];
+            }
+            build_fa_core_program(variant, &lay, lo, hi, sq, sk, d, bk)
+        })
+        .collect();
+    Program::new(KernelKind::FlashAttention(variant), streams)
+}
+
+/// Write Q/K/V and the running statistics into `spm` at the layout of
+/// the given shape.
+fn write_fa_data(
+    spm: &mut Mem,
+    lay: &FaLayout,
+    q: &[f32],
+    k_mat: &[f32],
+    v: &[f32],
+    sq: u32,
+    sk: u32,
+    d: u32,
+) {
     assert_eq!(q.len(), (sq * d) as usize);
     assert_eq!(k_mat.len(), (sk * d) as usize);
     assert_eq!(v.len(), (sk * d) as usize);
-    assert!(sk % bk == 0 && bk % 16 == 0 && d % 8 == 0);
-
-    let mut at = 0x1400u32;
-    let mut alloc = |bytes: u32| {
-        let r = at;
-        at += (bytes + 7) & !7;
-        r
-    };
-    let lay = FaLayout {
-        pool: 0x1000,
-        q: alloc(2 * sq * d),
-        k: alloc(2 * sk * d),
-        vt: alloc(2 * sk * d),
-        s: alloc(2 * sq * bk),
-        t: alloc(2 * sq * d),
-        o: alloc(2 * sq * d),
-        m: alloc(2 * sq),
-        l: alloc(2 * sq),
-        corr: alloc(2 * sq),
-    };
-    assert!(at <= 128 * 1024, "FA-2 working set {at} bytes exceeds SPM");
-
-    let mut cluster = Cluster::new();
-    write_exp_pool(&mut cluster.spm, lay.pool);
+    write_exp_pool(spm, lay.pool);
     let scale = 1.0 / (d as f32).sqrt();
     let qs: Vec<f32> = q.iter().map(|&x| x * scale).collect();
-    cluster.spm.write_f32_as_bf16(lay.q, &qs);
-    cluster.spm.write_f32_as_bf16(lay.k, k_mat);
+    spm.write_f32_as_bf16(lay.q, &qs);
+    spm.write_f32_as_bf16(lay.k, k_mat);
     // transpose V into VT[d, Sk]
     let mut vt = vec![0.0f32; (sk * d) as usize];
     for r in 0..sk as usize {
@@ -100,30 +155,29 @@ pub fn run_flash_attention(
             vt[c * sk as usize + r] = v[r * d as usize + c];
         }
     }
-    cluster.spm.write_f32_as_bf16(lay.vt, &vt);
+    spm.write_f32_as_bf16(lay.vt, &vt);
     // init stats: m = -inf, l = 0, O = 0
-    cluster.spm.write_bf16_slice(lay.m, &vec![crate::bf16::NEG_INF; sq as usize]);
-    cluster.spm.write_bf16_slice(lay.l, &vec![Bf16(0); sq as usize]);
-    cluster.spm.write_bf16_slice(lay.o, &vec![Bf16(0); (sq * d) as usize]);
+    spm.write_bf16_slice(lay.m, &vec![crate::bf16::NEG_INF; sq as usize]);
+    spm.write_bf16_slice(lay.l, &vec![Bf16(0); sq as usize]);
+    spm.write_bf16_slice(lay.o, &vec![Bf16(0); (sq * d) as usize]);
+}
 
-    let per_core = sq.div_ceil(CORES_PER_CLUSTER as u32);
-    let programs: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER as u32)
-        .map(|c| {
-            let lo = (c * per_core).min(sq);
-            let hi = ((c + 1) * per_core).min(sq);
-            if lo == hi {
-                return vec![];
-            }
-            build_fa_program(variant, &lay, lo, hi, sq, sk, d, bk)
-        })
-        .collect();
-    let stats = cluster.run(&programs);
-    let out = cluster.spm.read_bf16_as_f32(lay.o, (sq * d) as usize);
-    FaRun { out, stats }
+/// Seed `spm` with deterministic pseudo-random Q/K/V plus initialized
+/// statistics for an `sq × sk` head — the data side of a cached FA-2
+/// [`Program`] in calibration and batched-serving runs, where the
+/// attention inputs are synthetic.
+pub fn seed_fa_inputs(spm: &mut Mem, sq: u32, sk: u32, d: u32, bk: u32, seed: u64) {
+    let lay = FaLayout::new(sq, sk, d, bk);
+    let mut rng = crate::testkit::Rng::new(seed);
+    let mut mat = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.f32(-1.0, 1.0)).collect() };
+    let q = mat((sq * d) as usize);
+    let k = mat((sk * d) as usize);
+    let v = mat((sk * d) as usize);
+    write_fa_data(spm, &lay, &q, &k, &v, sq, sk, d);
 }
 
 #[allow(clippy::too_many_arguments)]
-fn build_fa_program(
+fn build_fa_core_program(
     variant: FaVariant,
     lay: &FaLayout,
     lo: u32,
@@ -431,6 +485,25 @@ mod tests {
     #[test]
     fn optimized_matches_attention() {
         check(FaVariant::Optimized, 16, 64, 16, 32, 0.06);
+    }
+
+    #[test]
+    fn cached_program_runs_on_seeded_spm() {
+        // the exec-engine path: build once, seed data separately, run
+        let (sq, sk, d, bk) = (16u32, 64, 64, 32);
+        let program = build_fa_program(FaVariant::Optimized, sq, sk, d, bk);
+        let clone = program.clone();
+        assert!(program.shares_storage_with(&clone));
+        let mut cluster = Cluster::new();
+        seed_fa_inputs(&mut cluster.spm, sq, sk, d, bk, 99);
+        let stats = cluster.run(clone.per_core());
+        assert!(stats.cycles > 0);
+        assert!(stats.combined().exp_ops > 0);
+        // deterministic: a second run of the same handle costs the same
+        let mut cluster2 = Cluster::new();
+        seed_fa_inputs(&mut cluster2.spm, sq, sk, d, bk, 99);
+        let stats2 = cluster2.run(program.per_core());
+        assert_eq!(stats.cycles, stats2.cycles);
     }
 
     #[test]

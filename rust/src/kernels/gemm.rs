@@ -12,6 +12,7 @@
 //! streaming 8 BT rows interleaved. Issue-limited at ~1 MAC/cycle; the
 //! paper's Table III measures this kernel at 85 % FPU utilization.
 
+use crate::exec::program::{KernelKind, Program};
 use crate::isa::regs::*;
 use crate::isa::{Asm, Instr, SsrPattern};
 use crate::sim::{Cluster, ClusterStats, CORES_PER_CLUSTER};
@@ -111,19 +112,13 @@ pub struct GemmRun {
     pub flops: u64,
 }
 
-/// Run `C = A · BT^T` on one cluster (rows split over 8 cores).
-pub fn run_gemm(a_mat: &[f32], bt_mat: &[f32], m: u32, k: u32, n: u32) -> GemmRun {
-    assert_eq!(a_mat.len(), (m * k) as usize);
-    assert_eq!(bt_mat.len(), (n * k) as usize);
+/// Compile the `M×K×N` cluster GEMM (rows split over 8 cores) into its
+/// deterministic [`GemmLayout`] plus a cacheable [`Program`].
+pub fn build_gemm_program(m: u32, k: u32, n: u32) -> (GemmLayout, Program) {
     let lay = GemmLayout { a: 0x2000, bt: 0x2000 + 2 * m * k, c: 0x2000 + 2 * m * k + 2 * n * k };
     assert!(lay.c + 2 * m * n <= 128 * 1024, "GEMM tile too large for SPM");
-
-    let mut cluster = Cluster::new();
-    cluster.spm.write_f32_as_bf16(lay.a, a_mat);
-    cluster.spm.write_f32_as_bf16(lay.bt, bt_mat);
-
     let per_core = m.div_ceil(CORES_PER_CLUSTER as u32);
-    let programs: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER as u32)
+    let streams: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER as u32)
         .map(|c| {
             let lo = (c * per_core).min(m);
             let hi = ((c + 1) * per_core).min(m);
@@ -135,7 +130,20 @@ pub fn run_gemm(a_mat: &[f32], bt_mat: &[f32], m: u32, k: u32, n: u32) -> GemmRu
             asm.finish()
         })
         .collect();
-    let stats = cluster.run(&programs);
+    (lay, Program::new(KernelKind::Gemm, streams))
+}
+
+/// Run `C = A · BT^T` on one cluster (rows split over 8 cores).
+pub fn run_gemm(a_mat: &[f32], bt_mat: &[f32], m: u32, k: u32, n: u32) -> GemmRun {
+    assert_eq!(a_mat.len(), (m * k) as usize);
+    assert_eq!(bt_mat.len(), (n * k) as usize);
+    let (lay, program) = build_gemm_program(m, k, n);
+
+    let mut cluster = Cluster::new();
+    cluster.spm.write_f32_as_bf16(lay.a, a_mat);
+    cluster.spm.write_f32_as_bf16(lay.bt, bt_mat);
+
+    let stats = cluster.run(program.per_core());
     let c = cluster.spm.read_bf16_as_f32(lay.c, (m * n) as usize);
     GemmRun { c, stats, flops: 2 * m as u64 * n as u64 * k as u64 }
 }

@@ -12,12 +12,13 @@
 //! the SIMD variants (the paper's sequence lengths all are).
 
 use super::softexp::{emit_libm_exp, emit_schraudolph_sw_hoisted, write_exp_pool};
+use crate::exec::program::{KernelKind, Program};
 use crate::isa::regs::*;
 use crate::isa::{Asm, Instr, SsrPattern};
-use crate::sim::{Cluster, ClusterStats, CORES_PER_CLUSTER};
+use crate::sim::{Cluster, ClusterStats, Mem, CORES_PER_CLUSTER};
 
 /// The four evaluated configurations.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SoftmaxVariant {
     Baseline,
     SwOptim,
@@ -66,6 +67,43 @@ pub struct SoftmaxRun {
     pub cycles_per_output: f64,
 }
 
+/// Compile the cluster softmax kernel for `rows` rows of length `n`
+/// (multiple of 16), statically partitioned over the eight cores, into a
+/// cacheable [`Program`]. Inputs are read from [`DEFAULT_LAYOUT`]
+/// addresses — see [`seed_softmax_inputs`] / [`run_softmax`] for the
+/// data side.
+pub fn build_softmax_program(variant: SoftmaxVariant, rows: u32, n: u32) -> Program {
+    assert!(rows > 0 && n > 0);
+    assert!(n % 16 == 0, "row length {n} must be a multiple of 16");
+    let lay = DEFAULT_LAYOUT;
+    let per_core = rows.div_ceil(CORES_PER_CLUSTER as u32);
+    let per_core_streams: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER as u32)
+        .map(|c| {
+            let lo = (c * per_core).min(rows);
+            let hi = ((c + 1) * per_core).min(rows);
+            if lo == hi {
+                return vec![];
+            }
+            build_rows_program(variant, &lay, lo, hi, n)
+        })
+        .collect();
+    Program::new(KernelKind::Softmax(variant), per_core_streams)
+}
+
+/// Write the constant pool plus `rows` deterministic pseudo-random input
+/// rows at the [`DEFAULT_LAYOUT`] addresses — the data side of a cached
+/// softmax [`Program`] when no caller-supplied rows exist (calibration
+/// and batched-serving runs).
+pub fn seed_softmax_inputs(spm: &mut Mem, rows: u32, n: u32, seed: u64) {
+    let lay = DEFAULT_LAYOUT;
+    write_exp_pool(spm, lay.pool);
+    let mut rng = crate::testkit::Rng::new(seed);
+    for r in 0..rows {
+        let row: Vec<f32> = (0..n).map(|_| rng.f32(-8.0, 8.0)).collect();
+        spm.write_f32_as_bf16(lay.input + r * 2 * n, &row);
+    }
+}
+
 /// Execute `rows` (each of equal length, multiple of 16) on one cluster.
 pub fn run_softmax(variant: SoftmaxVariant, rows: &[Vec<f32>]) -> SoftmaxRun {
     let n = rows.first().map(|r| r.len()).unwrap_or(0);
@@ -84,19 +122,8 @@ pub fn run_softmax(variant: SoftmaxVariant, rows: &[Vec<f32>]) -> SoftmaxRun {
         cluster.spm.write_f32_as_bf16(lay.input + i as u32 * bytes, row);
     }
 
-    // static row partition over cores
-    let per_core = rows.len().div_ceil(CORES_PER_CLUSTER);
-    let programs: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER)
-        .map(|c| {
-            let lo = (c * per_core).min(rows.len());
-            let hi = ((c + 1) * per_core).min(rows.len());
-            if lo == hi {
-                return vec![];
-            }
-            build_rows_program(variant, &lay, lo as u32, hi as u32, n as u32)
-        })
-        .collect();
-    let stats = cluster.run(&programs);
+    let program = build_softmax_program(variant, rows.len() as u32, n as u32);
+    let stats = cluster.run(program.per_core());
 
     let out = (0..rows.len())
         .map(|i| cluster.spm.read_bf16_as_f32(lay.output + i as u32 * bytes, n))

@@ -11,7 +11,10 @@
 //!   ([`kernels`]), the area/energy models ([`energy`]), transformer
 //!   workload models ([`model`]), the multi-cluster coordinator
 //!   ([`coordinator`]) and the PJRT runtime ([`runtime`]) that executes
-//!   the AOT artifacts with Python fully out of the request path.
+//!   the AOT artifacts with Python fully out of the request path, and
+//!   the unified execution engine ([`exec`]) that serves batched
+//!   multi-request inference through one `Backend` API over both the
+//!   analytic estimator and the cycle-accurate simulator.
 //!
 //! See DESIGN.md for the experiment index (every paper table/figure →
 //! bench target) and EXPERIMENTS.md for measured results.
@@ -20,6 +23,8 @@ pub mod accuracy;
 pub mod bf16;
 pub mod coordinator;
 pub mod energy;
+pub mod error;
+pub mod exec;
 pub mod isa;
 pub mod kernels;
 pub mod model;

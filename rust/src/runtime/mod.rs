@@ -6,6 +6,9 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation` → compile once →
 //! execute many. Artifacts are indexed by `manifest.json`, read with the
 //! dependency-free mini JSON reader in [`json`].
+//!
+//! The XLA execution path is gated behind the `pjrt` cargo feature (the
+//! bindings need a local XLA install); manifest indexing always works.
 
 pub mod json;
 pub mod pjrt;

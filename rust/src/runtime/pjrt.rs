@@ -1,8 +1,16 @@
 //! XLA/PJRT execution of the AOT artifacts.
+//!
+//! Manifest parsing and artifact indexing are always available and
+//! dependency-free. The actual XLA execution path needs the xla-rs
+//! bindings plus a local XLA install, so it sits behind the `pjrt`
+//! cargo feature; without it, `compile`/`execute` return a clear error
+//! and callers (CLI, examples) fall back to the bit-exact Rust models.
 
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+
+use crate::error::{Context, Result};
+use crate::{bail, err};
 
 use super::json::Json;
 
@@ -17,9 +25,11 @@ pub struct Artifact {
 
 /// A compiled-on-load PJRT runtime over the artifact directory.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
-    artifacts: HashMap<String, Artifact>,
+    #[cfg(feature = "pjrt")]
     compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifacts: HashMap<String, Artifact>,
     dir: PathBuf,
 }
 
@@ -29,17 +39,17 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("missing manifest in {dir:?} — run `make artifacts`"))?;
-        let json = Json::parse(&manifest).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let json = Json::parse(&manifest).map_err(|e| err!("manifest parse: {e}"))?;
         let eps = json
             .get("entry_points")
-            .ok_or_else(|| anyhow!("manifest lacks entry_points"))?;
+            .context("manifest lacks entry_points")?;
         let mut artifacts = HashMap::new();
         for name in eps.keys() {
             let ep = eps.get(name).unwrap();
             let file = dir.join(
                 ep.get("file")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("entry {name} lacks file"))?,
+                    .with_context(|| format!("entry {name} lacks file"))?,
             );
             let mut inputs = vec![];
             for inp in ep.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
@@ -59,8 +69,14 @@ impl Runtime {
             }
             artifacts.insert(name.to_string(), Artifact { name: name.to_string(), file, inputs });
         }
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, artifacts, compiled: HashMap::new(), dir })
+        Ok(Runtime {
+            #[cfg(feature = "pjrt")]
+            client: xla::PjRtClient::cpu().map_err(|e| err!("PJRT CPU client: {e:?}"))?,
+            #[cfg(feature = "pjrt")]
+            compiled: HashMap::new(),
+            artifacts,
+            dir,
+        })
     }
 
     pub fn artifact_dir(&self) -> &Path {
@@ -76,7 +92,10 @@ impl Runtime {
     pub fn artifact(&self, name: &str) -> Option<&Artifact> {
         self.artifacts.get(name)
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl Runtime {
     /// Compile an entry point (idempotent; compiled executables cached).
     pub fn compile(&mut self, name: &str) -> Result<()> {
         if self.compiled.contains_key(name) {
@@ -85,15 +104,18 @@ impl Runtime {
         let art = self
             .artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("unknown entry point {name}"))?;
+            .with_context(|| format!("unknown entry point {name}"))?;
         let path = art
             .file
             .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path {:?}", art.file))?;
+            .with_context(|| format!("non-utf8 path {:?}", art.file))?;
         let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("loading HLO text {path}"))?;
+            .map_err(|e| err!("loading HLO text {path}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| err!("compiling {name}: {e:?}"))?;
         self.compiled.insert(name.to_string(), exe);
         Ok(())
     }
@@ -119,24 +141,49 @@ impl Runtime {
                     if data.len() != n {
                         bail!("{name}: input length {} != shape {:?}", data.len(), shape);
                     }
-                    xla::Literal::vec1(data).reshape(&dims)?
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| err!("{name}: reshape: {e:?}"))?
                 }
                 (Input::I32(data), "int32") => {
                     let n: usize = shape.iter().product();
                     if data.len() != n {
                         bail!("{name}: input length {} != shape {:?}", data.len(), shape);
                     }
-                    xla::Literal::vec1(data).reshape(&dims)?
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| err!("{name}: reshape: {e:?}"))?
                 }
                 (got, want) => bail!("{name}: input kind {got:?} vs dtype {want}"),
             };
             literals.push(lit);
         }
         let exe = &self.compiled[name];
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| err!("{name}: execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("{name}: sync: {e:?}"))?;
         // jax lowering uses return_tuple=True → unwrap the 1-tuple
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        let out = result.to_tuple1().map_err(|e| err!("{name}: tuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| err!("{name}: to_vec: {e:?}"))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Without the `pjrt` feature there is no XLA client to compile on.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if !self.artifacts.contains_key(name) {
+            bail!("unknown entry point {name}");
+        }
+        bail!("PJRT execution requires the `pjrt` cargo feature (xla-rs bindings)")
+    }
+
+    /// Without the `pjrt` feature execution always errors; callers fall
+    /// back to the bit-exact Rust models.
+    pub fn execute(&mut self, name: &str, _inputs: &[Input]) -> Result<Vec<f32>> {
+        self.compile(name).map(|_| vec![])
     }
 }
 

@@ -21,7 +21,7 @@ pub use core::Core;
 pub use dma::{DmaModel, HbmModel};
 pub use mem::{Mem, SPM_BANKS, SPM_BYTES};
 pub use stats::{ClusterStats, CoreStats};
-pub use system::{System, SystemStats};
+pub use system::{ClusterJob, System, SystemStats};
 
 /// Cluster clock in Hz (paper: 1 GHz operating point).
 pub const CLOCK_HZ: f64 = 1.0e9;

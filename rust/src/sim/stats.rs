@@ -79,9 +79,9 @@ impl CoreStats {
         }
     }
 
-    /// Merge another core's stats (used for cluster aggregation).
-    pub fn merge(&mut self, other: &CoreStats) {
-        self.cycles = self.cycles.max(other.cycles);
+    /// Sum the event counters of `other` into `self` (cycles excluded —
+    /// the two composition modes below disagree on those).
+    fn add_counters(&mut self, other: &CoreStats) {
         for i in 0..12 {
             self.retired_arr[i] += other.retired_arr[i];
         }
@@ -89,6 +89,20 @@ impl CoreStats {
         self.mem_bytes += other.mem_bytes;
         self.exp_ops += other.exp_ops;
         self.flops += other.flops;
+    }
+
+    /// Merge another core's stats (used for cluster aggregation):
+    /// parallel in time, so cycles take the max.
+    pub fn merge(&mut self, other: &CoreStats) {
+        self.cycles = self.cycles.max(other.cycles);
+        self.add_counters(other);
+    }
+
+    /// Compose a run executed *after* this one on the same core:
+    /// cycles add (sequential in time), counters add.
+    pub fn append_sequential(&mut self, other: &CoreStats) {
+        self.cycles += other.cycles;
+        self.add_counters(other);
     }
 }
 
@@ -112,6 +126,21 @@ impl ClusterStats {
             acc.merge(c);
         }
         acc
+    }
+
+    /// Compose a cluster run executed *after* this one (e.g. the next
+    /// program of a multi-program [`crate::sim::system::ClusterJob`]):
+    /// makespans and DMA traffic add, per-core counters accumulate.
+    pub fn append_sequential(&mut self, other: &ClusterStats) {
+        if self.per_core.len() < other.per_core.len() {
+            self.per_core.resize(other.per_core.len(), CoreStats::default());
+        }
+        for (mine, theirs) in self.per_core.iter_mut().zip(&other.per_core) {
+            mine.append_sequential(theirs);
+        }
+        self.cycles += other.cycles;
+        self.dma_bytes += other.dma_bytes;
+        self.dma_cycles += other.dma_cycles;
     }
 }
 
@@ -137,6 +166,27 @@ mod tests {
             s.bump(Class::FpSimd);
         }
         assert!((s.fpu_utilization() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn append_sequential_sums_cycles_and_counters() {
+        let mut a = CoreStats { cycles: 5, ..Default::default() };
+        a.bump(Class::FpSimd);
+        let mut b = CoreStats { cycles: 9, ..Default::default() };
+        b.bump(Class::FpSimd);
+        a.append_sequential(&b);
+        assert_eq!(a.cycles, 14);
+        assert_eq!(a.count(Class::FpSimd), 2);
+
+        let mut ca = ClusterStats { per_core: vec![a.clone()], cycles: 14, dma_bytes: 10, dma_cycles: 3 };
+        let cb = ClusterStats { per_core: vec![b.clone(), b], cycles: 9, dma_bytes: 1, dma_cycles: 2 };
+        ca.append_sequential(&cb);
+        assert_eq!(ca.cycles, 23);
+        assert_eq!(ca.dma_bytes, 11);
+        assert_eq!(ca.dma_cycles, 5);
+        assert_eq!(ca.per_core.len(), 2);
+        assert_eq!(ca.per_core[0].cycles, 23);
+        assert_eq!(ca.per_core[1].cycles, 9);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 use super::cluster::Cluster;
 use super::dma::{DmaModel, HbmModel};
 use super::stats::ClusterStats;
+use crate::exec::program::{KernelKind, Program};
 use crate::isa::Instr;
 
 /// A multi-cluster run result.
@@ -19,6 +20,32 @@ pub struct SystemStats {
     pub cycles: u64,
     /// Total bytes streamed from HBM across all clusters.
     pub hbm_bytes: u64,
+}
+
+/// One cluster's workload in a system run: a list of cached
+/// [`Program`]s executed back-to-back (e.g. one per head round of a
+/// batched request) plus the HBM bytes the cluster streams in.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterJob {
+    pub programs: Vec<Program>,
+    pub hbm_bytes: u64,
+}
+
+impl ClusterJob {
+    pub fn new(programs: Vec<Program>, hbm_bytes: u64) -> Self {
+        ClusterJob { programs, hbm_bytes }
+    }
+
+    /// A cluster that neither computes nor streams this run.
+    pub fn idle() -> Self {
+        ClusterJob::default()
+    }
+
+    /// Idle clusters take no part in the run: no DMA fill is charged
+    /// and they do not contend for HBM bandwidth.
+    pub fn is_idle(&self) -> bool {
+        self.programs.is_empty() && self.hbm_bytes == 0
+    }
 }
 
 /// The C-cluster compute system.
@@ -49,19 +76,49 @@ impl System {
     /// programs execute on the cluster's cores, `hbm_bytes` is streamed
     /// in beforehand (double-buffered in steady state, so only the
     /// contended transfer time that exceeds compute is exposed).
+    ///
+    /// Thin wrapper over [`System::run_jobs`] for ad-hoc instruction
+    /// streams; cached kernels should build [`ClusterJob`]s directly.
     pub fn run(&mut self, workloads: Vec<(Vec<Vec<Instr>>, u64)>) -> SystemStats {
-        assert_eq!(workloads.len(), self.clusters.len(), "one workload per cluster");
-        let active = workloads.iter().filter(|(p, _)| !p.is_empty()).count();
+        let jobs = workloads
+            .into_iter()
+            .map(|(streams, bytes)| {
+                let programs = if streams.is_empty() {
+                    vec![]
+                } else {
+                    vec![Program::new(KernelKind::Raw, streams)]
+                };
+                ClusterJob::new(programs, bytes)
+            })
+            .collect();
+        self.run_jobs(jobs)
+    }
+
+    /// Run one [`ClusterJob`] per cluster. Each cluster executes its
+    /// programs back-to-back; DMA streams of *active* clusters contend
+    /// for the shared HBM bandwidth. Idle clusters (no programs, no
+    /// bytes) report zero cycles — in particular they are not charged
+    /// the DMA fill startup.
+    pub fn run_jobs(&mut self, jobs: Vec<ClusterJob>) -> SystemStats {
+        assert_eq!(jobs.len(), self.clusters.len(), "one job per cluster");
+        let active = jobs.iter().filter(|j| !j.is_idle()).count();
         let contention = self.hbm.contention_factor(active.max(1), self.dma.bytes_per_cycle);
 
-        let mut per_cluster = Vec::with_capacity(workloads.len());
+        let mut per_cluster = Vec::with_capacity(jobs.len());
         let mut makespan = 0u64;
         let mut hbm_bytes = 0u64;
-        for (cluster, (programs, bytes)) in self.clusters.iter_mut().zip(workloads) {
-            let mut stats = cluster.run(&programs);
-            hbm_bytes += bytes;
-            let dma = (self.dma.cycles(bytes) as f64 * contention) as u64;
-            stats.dma_bytes = bytes;
+        for (cluster, job) in self.clusters.iter_mut().zip(jobs) {
+            if job.is_idle() {
+                per_cluster.push(ClusterStats::default());
+                continue;
+            }
+            let mut stats = ClusterStats::default();
+            for program in &job.programs {
+                stats.append_sequential(&cluster.run(program.per_core()));
+            }
+            hbm_bytes += job.hbm_bytes;
+            let dma = (self.dma.cycles(job.hbm_bytes) as f64 * contention) as u64;
+            stats.dma_bytes = job.hbm_bytes;
             stats.dma_cycles = dma;
             // double buffering: only the slower of compute/DMA is the
             // steady-state bound; the fill transfer is exposed once
@@ -156,5 +213,41 @@ mod tests {
         // single active cluster: no contention factor applied
         let solo_dma = DmaModel::default().cycles(100_000);
         assert!(s.per_cluster[0].dma_cycles <= solo_dma + 1);
+    }
+
+    #[test]
+    fn idle_clusters_report_zero_cycles() {
+        // regression: idle clusters used to be charged the DMA fill
+        // startup, skewing per-cluster stats
+        let mut sys = System::new(4);
+        let mut workloads: Vec<(Vec<Vec<Instr>>, u64)> =
+            (0..4).map(|_| (vec![], 0u64)).collect();
+        workloads[0] = (cluster_programs(50), 4096);
+        let s = sys.run(workloads);
+        assert!(s.per_cluster[0].cycles > 0);
+        for c in 1..4 {
+            assert_eq!(s.per_cluster[c].cycles, 0, "idle cluster {c} charged cycles");
+            assert_eq!(s.per_cluster[c].dma_cycles, 0);
+            assert!(s.per_cluster[c].per_core.is_empty());
+        }
+    }
+
+    #[test]
+    fn multi_program_jobs_compose_sequentially() {
+        use crate::exec::program::{KernelKind, Program};
+        let one = Program::new(KernelKind::Raw, cluster_programs(200));
+        let mut sys1 = System::new(1);
+        let single = sys1.run_jobs(vec![super::ClusterJob::new(vec![one.clone()], 0)]);
+        let mut sys2 = System::new(1);
+        let double =
+            sys2.run_jobs(vec![super::ClusterJob::new(vec![one.clone(), one.clone()], 0)]);
+        let fill = DmaModel::default().startup as u64;
+        let compute1 = single.cycles - fill;
+        let compute2 = double.cycles - fill;
+        assert_eq!(compute2, 2 * compute1, "two rounds of the same cached program");
+        // counters accumulate across rounds
+        let r1 = single.per_cluster[0].combined().retired_total();
+        let r2 = double.per_cluster[0].combined().retired_total();
+        assert_eq!(r2, 2 * r1);
     }
 }

@@ -1,0 +1,250 @@
+//! Integration tests for the unified execution engine: cross-backend
+//! agreement, program-cache behavior, and batched multi-request serving
+//! on the 16-cluster system.
+
+use vexp::coordinator::{TilePlan, CLUSTERS};
+use vexp::exec::{
+    AnalyticBackend, Backend, CycleSimBackend, Engine, KernelKind, ProgramCache, ProgramKey,
+    Request,
+};
+use vexp::kernels::softmax::{build_softmax_program, SoftmaxVariant};
+use vexp::model::{GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE};
+
+const ALL: [vexp::model::TransformerConfig; 4] = [GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE];
+
+fn ratio(a: f64, b: f64) -> f64 {
+    assert!(a > 0.0 && b > 0.0, "non-positive cycle counts: {a} vs {b}");
+    a / b
+}
+
+/// The two backends obtain their kernel rates independently — the
+/// analytic backend from fixed-shape calibration, the cycle-sim backend
+/// by running the request's own kernels — so agreement is a real
+/// cross-check, not an identity. Tolerance bands: softmax rates differ
+/// only by row-length amortization; the FlashAttention scope also
+/// carries the real kernel's tiling overhead (stats updates, rescale,
+/// final norm), so its band is wider.
+#[test]
+fn backends_agree_on_softmax_and_flashattention_cycles() {
+    let mut analytic = AnalyticBackend::new();
+    let mut cyclesim = CycleSimBackend::new(CLUSTERS);
+    for (i, cfg) in ALL.iter().enumerate() {
+        let req = Request::new(i as u64, *cfg);
+        let a = analytic.estimate(&req);
+        let c = cyclesim.estimate(&req);
+        assert_eq!(a.backend, "analytic");
+        assert_eq!(c.backend, "cycle-sim");
+
+        let sm = ratio(a.softmax_cycles, c.softmax_cycles);
+        assert!(
+            (0.5..=2.0).contains(&sm),
+            "{}: softmax cycles disagree: analytic {:.3e} vs cycle-sim {:.3e} (ratio {sm:.2})",
+            cfg.name,
+            a.softmax_cycles,
+            c.softmax_cycles
+        );
+
+        let fa = ratio(a.attn_cycles, c.attn_cycles);
+        assert!(
+            (0.25..=4.0).contains(&fa),
+            "{}: FlashAttention cycles disagree: analytic {:.3e} vs cycle-sim {:.3e} (ratio {fa:.2})",
+            cfg.name,
+            a.attn_cycles,
+            c.attn_cycles
+        );
+
+        let total = ratio(a.cycles, c.cycles);
+        assert!(
+            (0.25..=4.0).contains(&total),
+            "{}: total cycles disagree: ratio {total:.2}",
+            cfg.name
+        );
+    }
+}
+
+/// Repeated estimates for the same model shape must hit the cycle-sim
+/// backend's calibration-program cache instead of re-running builders.
+#[test]
+fn cyclesim_estimates_reuse_calibration_programs() {
+    let mut cyclesim = CycleSimBackend::new(CLUSTERS);
+    let req = Request::new(0, GPT2_SMALL);
+    cyclesim.estimate(&req);
+    let misses_after_first = cyclesim.cache.misses;
+    assert!(misses_after_first >= 3, "softmax + gemm + FA programs compiled");
+    cyclesim.estimate(&req);
+    assert_eq!(
+        cyclesim.cache.misses, misses_after_first,
+        "second estimate must not compile anything new"
+    );
+    assert!(cyclesim.cache.hits >= 3);
+}
+
+/// A cache hit returns the identical instruction stream (shared
+/// storage) without re-running the kernel builder.
+#[test]
+fn program_cache_hit_returns_identical_stream() {
+    let mut cache = ProgramCache::new();
+    let key = ProgramKey::for_kernel(
+        KernelKind::Softmax(SoftmaxVariant::SwExpHw),
+        [8, 256, 0, 0, 0, 0],
+        8,
+    );
+    let mut builder_runs = 0u32;
+    let first = cache.get_or_build(key, || {
+        builder_runs += 1;
+        build_softmax_program(SoftmaxVariant::SwExpHw, 8, 256)
+    });
+    let second = cache.get_or_build(key, || {
+        builder_runs += 1;
+        build_softmax_program(SoftmaxVariant::SwExpHw, 8, 256)
+    });
+    assert_eq!(builder_runs, 1, "cache hit must not re-run the builder");
+    assert!(first.shares_storage_with(&second), "hit must return the same stream");
+    assert_eq!(first.instr_count(), second.instr_count());
+    assert_eq!((cache.hits, cache.misses), (1, 1));
+}
+
+/// Serve four mixed-model concurrent requests (different sequence
+/// lengths included) on the 16-cluster system: every request gets its
+/// own RunReport from real simulation, and the duplicated model shape
+/// produces a measured cache hit in the batched path.
+#[test]
+fn batched_serving_reports_per_request_with_cache_hits() {
+    let mut short_gpt3 = GPT3_XL;
+    short_gpt3.seq = 256; // mixed sequence lengths in one batch
+    let mix = [VIT_BASE, VIT_BASE, GPT2_SMALL, short_gpt3];
+
+    let mut engine = Engine::new();
+    for cfg in mix {
+        engine.submit(cfg);
+    }
+    let batch = engine.compile_batch();
+    assert_eq!(batch.requests.len(), 4);
+    assert!(
+        batch.cache_hits >= 1,
+        "duplicate ViT-Base must hit the program cache (hits {})",
+        batch.cache_hits
+    );
+
+    // disjoint cluster ownership across the 16 clusters
+    let mut owned = vec![false; CLUSTERS];
+    for cr in &batch.requests {
+        assert!(!cr.clusters.is_empty());
+        for &c in &cr.clusters {
+            assert!(!owned[c], "cluster {c} double-assigned");
+            owned[c] = true;
+        }
+    }
+
+    let mut sim = CycleSimBackend::new(CLUSTERS);
+    let report = sim.execute(&batch);
+    assert_eq!(report.per_request.len(), 4);
+    assert_eq!(report.cache_hits, batch.cache_hits);
+    for (cr, r) in batch.requests.iter().zip(&report.per_request) {
+        assert_eq!(r.request_id, cr.req.id);
+        assert_eq!(r.model, cr.req.cfg.name);
+        assert!(r.cycles > 0.0, "{}: no measured cycles", r.model);
+        assert!(r.energy_pj > 0.0);
+        assert_eq!(r.clusters_used, cr.clusters.len());
+        assert_eq!(r.per_cluster.len(), cr.clusters.len());
+        assert!(
+            r.cycles as u64 <= report.makespan_cycles,
+            "{}: request exceeds batch makespan",
+            r.model
+        );
+        // real simulation evidence: retired instructions on every
+        // cluster the request owns
+        for cs in &r.per_cluster {
+            assert!(cs.combined().retired_total() > 0);
+        }
+    }
+    assert!(report.hbm_bytes > 0);
+
+    // the analytic backend rates the same batch within a loose band
+    let mut analytic = AnalyticBackend::new();
+    let rated = analytic.execute(&batch);
+    assert_eq!(rated.per_request.len(), 4);
+    for (m, a) in report.per_request.iter().zip(&rated.per_request) {
+        let r = m.cycles / a.cycles;
+        assert!(
+            (0.2..=5.0).contains(&r),
+            "{}: cycle-sim {:.0} vs analytic {:.0} (ratio {r:.2})",
+            m.model,
+            m.cycles,
+            a.cycles
+        );
+    }
+}
+
+/// The engine facade: submit → serve drains the queue and reuses the
+/// cache across batches.
+#[test]
+fn engine_serves_consecutive_batches_through_one_cache() {
+    let mut engine = Engine::new();
+    let mut sim = CycleSimBackend::new(CLUSTERS);
+
+    engine.submit(VIT_BASE);
+    engine.submit(VIT_BASE);
+    let first = engine.serve(&mut sim);
+    assert_eq!(first.per_request.len(), 2);
+    assert_eq!(engine.pending(), 0);
+    assert_eq!(first.cache_misses, 1);
+    assert_eq!(first.cache_hits, 1);
+
+    // a second batch of the same shape compiles nothing new
+    engine.submit(VIT_BASE);
+    let second = engine.serve(&mut sim);
+    assert_eq!(second.per_request.len(), 1);
+    assert_eq!(second.cache_misses, 0);
+    assert_eq!(second.cache_hits, 1);
+}
+
+/// Baseline-softmax requests must cost more than optimized ones on both
+/// backends (the Fig. 8 direction), through the same unified API.
+#[test]
+fn backends_preserve_the_optimization_direction() {
+    let mut analytic = AnalyticBackend::new();
+    let mut cyclesim = CycleSimBackend::new(CLUSTERS);
+    let base = Request::baseline(0, GPT2_SMALL);
+    let opt = Request::new(1, GPT2_SMALL);
+    for backend in [&mut analytic as &mut dyn Backend, &mut cyclesim] {
+        let b = backend.estimate(&base);
+        let o = backend.estimate(&opt);
+        assert!(
+            b.cycles > o.cycles,
+            "{}: baseline {} !> optimized {}",
+            backend.name(),
+            b.cycles,
+            o.cycles
+        );
+        assert!(
+            b.softmax_share() > o.softmax_share(),
+            "{}: softmax share must shrink when optimized",
+            backend.name()
+        );
+    }
+}
+
+/// The over-budget tile-plan fix feeds the engine: wide-head configs
+/// still produce simulable batches.
+#[test]
+fn wide_head_requests_are_schedulable() {
+    let wide = vexp::model::TransformerConfig {
+        name: "wide-head",
+        layers: 2,
+        d_model: 2048,
+        heads: 8,
+        d_ff: 4096,
+        seq: 512,
+    };
+    let plan = TilePlan::plan(&wide);
+    assert!(plan.bk < 64, "d_head 256 must shrink bk (got {})", plan.bk);
+    let mut engine = Engine::new();
+    engine.submit(wide);
+    engine.submit(VIT_BASE);
+    let batch = engine.compile_batch();
+    let mut sim = CycleSimBackend::new(CLUSTERS);
+    let report = sim.execute(&batch);
+    assert_eq!(report.per_request.len(), 2);
+    assert!(report.per_request.iter().all(|r| r.cycles > 0.0));
+}

@@ -1,5 +1,9 @@
 //! Integration: the PJRT runtime executes the AOT artifacts and the
 //! numerics agree with the Layer-3 models (Python never runs here).
+//!
+//! Requires the `pjrt` cargo feature (XLA bindings) plus the artifacts
+//! from `make artifacts`; without the feature this test target is empty.
+#![cfg(feature = "pjrt")]
 
 use vexp::bf16::Bf16;
 use vexp::runtime::pjrt::Input;
