@@ -29,7 +29,7 @@ fn main() {
                 .get_or_build(key, || build_fa_program(variant, sq, sk, d, bk));
             let mut cluster = Cluster::new();
             seed_fa_inputs(&mut cluster.spm, sq, sk, d, bk, sk as u64);
-            let stats = cluster.run(program.per_core());
+            let stats = cluster.run_program(&program);
             let e = cluster_energy_pj(&stats, variant == FaVariant::Optimized).total();
             (stats.cycles, e)
         };

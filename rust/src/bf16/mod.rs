@@ -33,15 +33,12 @@ impl Bf16 {
             // quiet NaN, keep the sign/payload MSB
             return Bf16(((bits >> 16) as u16) | 0x0040);
         }
-        // RNE on the low 16 bits
-        let round_bit = 0x0000_8000u32;
+        // RNE on the low 16 bits: adding 0x7FFF + lsb rounds up exactly
+        // when the discarded half exceeds a tie, or ties with an odd
+        // keep-bit; a carry into the exponent falls out of the same add
         let lsb = (bits >> 16) & 1;
         let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
         let mut out = (rounded >> 16) as u16;
-        // carry into the exponent is handled naturally by the add above
-        if round_bit & bits != 0 && bits & 0x0000_7FFF == 0 && lsb == 0 {
-            // exact tie rounded to even: already handled by +lsb
-        }
         // flush subnormals to signed zero
         if out & 0x7F80 == 0 {
             out &= 0x8000;
@@ -257,6 +254,71 @@ mod tests {
         assert_eq!(s[1].to_f32(), 1.0);
         assert_eq!(s[2].to_f32(), 1.0);
         assert_eq!(s[3].to_f32(), 5.0);
+    }
+
+    /// Independent round-to-nearest-even reference: explicit three-way
+    /// comparison of the discarded half against the tie point, written
+    /// deliberately unlike the production magic-add formulation.
+    fn reference_rne(x: f32) -> u16 {
+        if x.is_nan() {
+            return ((x.to_bits() >> 16) as u16) | 0x0040;
+        }
+        let bits = x.to_bits();
+        let hi = (bits >> 16) as u16;
+        let rest = bits & 0xFFFF;
+        let mut out = match rest.cmp(&0x8000) {
+            std::cmp::Ordering::Less => hi,
+            std::cmp::Ordering::Greater => hi + 1,
+            std::cmp::Ordering::Equal => hi + (hi & 1), // tie: to even
+        };
+        if out & 0x7F80 == 0 {
+            out &= 0x8000; // flush subnormals to signed zero
+        }
+        out
+    }
+
+    #[test]
+    fn from_f32_matches_reference_rne_on_sampled_inputs() {
+        use crate::testkit::{forall, Rng};
+        let check = |x: f32| -> Result<(), String> {
+            let got = Bf16::from_f32(x).0;
+            let want = reference_rne(x);
+            if got != want {
+                return Err(format!(
+                    "from_f32({x} = {:#010x}): got {got:#06x}, want {want:#06x}",
+                    x.to_bits()
+                ));
+            }
+            Ok(())
+        };
+        forall(4000, |rng: &mut Rng| {
+            // arbitrary bit patterns cover specials, subnormals, NaNs…
+            check(f32::from_bits(rng.next_u64() as u32))?;
+            // …and explicitly constructed near-tie patterns (low half in
+            // {0x7FFF, 0x8000, 0x8001} for random high halves) exercise
+            // every rounding direction
+            let hi = (rng.next_u64() as u32) << 16;
+            check(f32::from_bits(hi | 0x7FFF))?;
+            check(f32::from_bits(hi | 0x8000))?;
+            check(f32::from_bits(hi | 0x8001))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exhaustive_widen_reround_matches_reference_rne() {
+        // every BF16 pattern, widened to f32 and re-rounded, must agree
+        // with the reference RNE (and be the identity off the flush/NaN
+        // cases — covered by exhaustive_f32_roundtrip_is_identity)
+        for bits in 0..=u16::MAX {
+            let x = Bf16(bits).to_f32();
+            if x.is_nan() {
+                assert!(Bf16(reference_rne(x)).is_nan());
+                assert!(Bf16::from_f32(x).is_nan());
+                continue;
+            }
+            assert_eq!(Bf16::from_f32(x).0, reference_rne(x), "bits {bits:#06x}");
+        }
     }
 
     #[test]

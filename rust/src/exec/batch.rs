@@ -137,7 +137,11 @@ impl BatchScheduler {
                     continue;
                 }
                 let density = work[i] / counts[i] as f64;
-                if best.map_or(true, |b| density > work[b] / counts[b] as f64) {
+                let better = match best {
+                    None => true,
+                    Some(b) => density > work[b] / counts[b] as f64,
+                };
+                if better {
                     best = Some(i);
                 }
             }

@@ -56,7 +56,7 @@ impl CycleSimBackend {
             .get_or_build(key, || build_softmax_program(variant, SM_ROWS, n));
         let mut cluster = Cluster::new();
         seed_softmax_inputs(&mut cluster.spm, SM_ROWS, n, 0x50F7);
-        let stats = cluster.run(prog.per_core());
+        let stats = cluster.run_program(&prog);
         let elems = (SM_ROWS * n) as f64;
         let cyc = stats.cycles as f64 / elems;
         let pj = cluster_energy_pj(&stats, req.softmax_optimized).total() / elems;
@@ -73,7 +73,7 @@ impl CycleSimBackend {
         );
         let prog = self.cache.get_or_build(key, || build_gemm_program(m, k, n).1);
         let mut cluster = Cluster::new();
-        let stats = cluster.run(prog.per_core());
+        let stats = cluster.run_program(&prog);
         let flops = (2 * m as u64 * n as u64 * k as u64) as f64;
         let opt_cyc = stats.cycles as f64 / flops;
         let opt_pj = cluster_energy_pj(&stats, true).total() / flops;
@@ -102,7 +102,7 @@ impl CycleSimBackend {
             .get_or_build(key, || build_fa_program(variant, cal.sq, cal.sk, cal.d, cal.bk));
         let mut cluster = Cluster::new();
         seed_fa_inputs(&mut cluster.spm, cal.sq, cal.sk, cal.d, cal.bk, 0xFA ^ req.id);
-        let stats = cluster.run(prog.per_core());
+        let stats = cluster.run_program(&prog);
         let e = cluster_energy_pj(&stats, req.softmax_optimized).total();
         (stats.cycles as f64, e, stats, cal)
     }

@@ -18,6 +18,7 @@ use crate::isa::Instr;
 use crate::kernels::flash_attention::FaVariant;
 use crate::kernels::softmax::SoftmaxVariant;
 use crate::model::TransformerConfig;
+use crate::sim::decode::{decode, DecodedProgram};
 
 /// Which kernel a [`Program`] implements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -32,20 +33,32 @@ pub enum KernelKind {
 
 /// A compiled, immutable, cheaply-cloneable kernel program: one
 /// instruction stream per cluster core (empty streams for idle cores).
+///
+/// Compilation also lowers every stream into its pre-decoded micro-op
+/// form ([`DecodedProgram`]) once, so the simulator fast path never
+/// re-derives per-instruction facts at execution time; cache-cloned
+/// handles share both representations.
 #[derive(Clone, Debug)]
 pub struct Program {
     pub kind: KernelKind,
     per_core: Arc<Vec<Vec<Instr>>>,
+    decoded: Arc<Vec<DecodedProgram>>,
 }
 
 impl Program {
     pub fn new(kind: KernelKind, per_core: Vec<Vec<Instr>>) -> Self {
-        Program { kind, per_core: Arc::new(per_core) }
+        let decoded = per_core.iter().map(|s| decode(s)).collect();
+        Program { kind, per_core: Arc::new(per_core), decoded: Arc::new(decoded) }
     }
 
-    /// The per-core instruction streams.
+    /// The per-core instruction streams (reference-interpreter form).
     pub fn per_core(&self) -> &[Vec<Instr>] {
         &self.per_core
+    }
+
+    /// The per-core pre-decoded micro-op streams (fast-path form).
+    pub fn decoded(&self) -> &[DecodedProgram] {
+        &self.decoded
     }
 
     /// Total instructions across all cores (static count, not dynamic).
@@ -193,5 +206,16 @@ mod tests {
         let p = tiny_program();
         assert_eq!(p.instr_count(), 1);
         assert_eq!(p.active_cores(), 1);
+    }
+
+    #[test]
+    fn programs_carry_decoded_streams() {
+        let p = tiny_program();
+        assert_eq!(p.decoded().len(), p.per_core().len());
+        assert_eq!(p.decoded()[0].len(), 1);
+        assert!(p.decoded()[1].is_empty());
+        // cache clones share the decoded lowering too
+        let q = p.clone();
+        assert!(std::ptr::eq(p.decoded().as_ptr(), q.decoded().as_ptr()));
     }
 }

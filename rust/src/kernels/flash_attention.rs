@@ -89,6 +89,7 @@ pub struct FaRun {
 ///
 /// `q`: Sq x d, `k`: Sk x d, `v`: Sk x d (row-major f32; quantized to
 /// BF16 on the way into SPM). `bk` is the K/V tile length.
+#[allow(clippy::too_many_arguments)]
 pub fn run_flash_attention(
     variant: FaVariant,
     q: &[f32],
@@ -103,7 +104,7 @@ pub fn run_flash_attention(
     let mut cluster = Cluster::new();
     write_fa_data(&mut cluster.spm, &lay, q, k_mat, v, sq, sk, d);
     let program = build_fa_program(variant, sq, sk, d, bk);
-    let stats = cluster.run(program.per_core());
+    let stats = cluster.run_program(&program);
     let out = cluster.spm.read_bf16_as_f32(lay.o, (sq * d) as usize);
     FaRun { out, stats }
 }
@@ -130,6 +131,7 @@ pub fn build_fa_program(variant: FaVariant, sq: u32, sk: u32, d: u32, bk: u32) -
 
 /// Write Q/K/V and the running statistics into `spm` at the layout of
 /// the given shape.
+#[allow(clippy::too_many_arguments)]
 fn write_fa_data(
     spm: &mut Mem,
     lay: &FaLayout,

@@ -143,7 +143,7 @@ pub fn run_gemm(a_mat: &[f32], bt_mat: &[f32], m: u32, k: u32, n: u32) -> GemmRu
     cluster.spm.write_f32_as_bf16(lay.a, a_mat);
     cluster.spm.write_f32_as_bf16(lay.bt, bt_mat);
 
-    let stats = cluster.run(program.per_core());
+    let stats = cluster.run_program(&program);
     let c = cluster.spm.read_bf16_as_f32(lay.c, (m * n) as usize);
     GemmRun { c, stats, flops: 2 * m as u64 * n as u64 * k as u64 }
 }

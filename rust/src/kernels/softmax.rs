@@ -123,7 +123,7 @@ pub fn run_softmax(variant: SoftmaxVariant, rows: &[Vec<f32>]) -> SoftmaxRun {
     }
 
     let program = build_softmax_program(variant, rows.len() as u32, n as u32);
-    let stats = cluster.run(program.per_core());
+    let stats = cluster.run_program(&program);
 
     let out = (0..rows.len())
         .map(|i| cluster.spm.read_bf16_as_f32(lay.output + i as u32 * bytes, n))

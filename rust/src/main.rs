@@ -11,6 +11,11 @@
 //!                             through the unified Backend API
 //!   serve                     batched multi-request serving demo on the
 //!                             cycle-accurate 16-cluster backend
+//!   bench [--json <path>] [--small]
+//!                             fig6 softmax + FlashAttention sweep with
+//!                             simulated cycles AND host wall-clock per
+//!                             configuration (fast path vs reference
+//!                             interpreter), written as BENCH_sim.json
 //!   area                      GF12 area report (Fig. 5)
 
 use vexp::bf16::Bf16;
@@ -35,10 +40,11 @@ fn main() -> Result<()> {
         Some("flashattention") => flash_cmd(),
         Some("e2e") => e2e_cmd(&args[1..]),
         Some("serve") => serve_cmd(),
+        Some("bench") => bench_cmd(&args[1..]),
         Some("area") => area_cmd(),
         _ => {
             eprintln!(
-                "usage: vexp <info|exp|softmax|flashattention|e2e|serve|area> [args]"
+                "usage: vexp <info|exp|softmax|flashattention|e2e|serve|bench|area> [args]"
             );
             Ok(())
         }
@@ -225,6 +231,223 @@ fn serve_cmd() -> Result<()> {
         "batch makespan {} cycles, {} HBM bytes; backends: {} vs {}",
         measured.makespan_cycles, measured.hbm_bytes, measured.backend, rated.backend
     );
+    Ok(())
+}
+
+/// One benchmark configuration's measured row.
+struct BenchRow {
+    kernel: &'static str,
+    variant: &'static str,
+    dims: Vec<(&'static str, u64)>,
+    cycles: u64,
+    wall_ms_fast: f64,
+    wall_ms_reference: f64,
+}
+
+impl BenchRow {
+    fn speedup(&self) -> f64 {
+        self.wall_ms_reference / self.wall_ms_fast.max(1e-9)
+    }
+
+    fn json(&self) -> String {
+        let dims: Vec<String> =
+            self.dims.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        format!(
+            "{{\"kernel\": \"{}\", \"variant\": \"{}\", {}, \"cycles\": {}, \
+             \"wall_ms_fast\": {:.4}, \"wall_ms_reference\": {:.4}, \
+             \"host_speedup\": {:.2}}}",
+            self.kernel,
+            self.variant,
+            dims.join(", "),
+            self.cycles,
+            self.wall_ms_fast,
+            self.wall_ms_reference,
+            self.speedup()
+        )
+    }
+}
+
+/// Best-of-`reps` wall-clock of `f` in milliseconds, plus the cluster
+/// stats of the first run (the sim is deterministic; reps only steady
+/// the host timing).
+fn time_best<F: FnMut() -> vexp::sim::ClusterStats>(
+    reps: u32,
+    mut f: F,
+) -> (vexp::sim::ClusterStats, f64) {
+    let mut best = f64::INFINITY;
+    let mut stats = None;
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        let s = f();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        stats.get_or_insert(s);
+    }
+    (stats.expect("reps >= 1"), best)
+}
+
+/// Assert two cluster runs are bit-identical: makespan, per-core count,
+/// and every aggregated counter (retired per class, FLOPs, EXPs, SSR
+/// beats, memory traffic).
+fn assert_stats_identical(
+    fast: &vexp::sim::ClusterStats,
+    reference: &vexp::sim::ClusterStats,
+    what: &str,
+) {
+    assert_eq!(fast.cycles, reference.cycles, "{what}: cycles diverge");
+    assert_eq!(fast.per_core.len(), reference.per_core.len(), "{what}: core count");
+    let f = fast.combined();
+    let r = reference.combined();
+    assert_eq!(f.flops, r.flops, "{what}: flops diverge");
+    assert_eq!(f.exp_ops, r.exp_ops, "{what}: exp_ops diverge");
+    assert_eq!(f.ssr_beats, r.ssr_beats, "{what}: ssr_beats diverge");
+    assert_eq!(f.mem_bytes, r.mem_bytes, "{what}: mem_bytes diverge");
+    for c in vexp::sim::stats::CLASSES {
+        assert_eq!(f.count(c), r.count(c), "{what}: retired {c:?} diverge");
+    }
+}
+
+/// `vexp bench [--json <path>] [--small]`: fig6 kernel configurations
+/// with simulated cycles and host wall-clock for both executors. The
+/// fast path's stats are asserted bit-identical to the reference before
+/// a row is reported, so the bench doubles as a differential check.
+fn bench_cmd(args: &[String]) -> Result<()> {
+    use vexp::kernels::flash_attention::{build_fa_program, seed_fa_inputs};
+    use vexp::kernels::softmax::{build_softmax_program, seed_softmax_inputs};
+    use vexp::sim::Cluster;
+
+    let mut json_path: Option<String> = None;
+    let mut small = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => match it.next() {
+                Some(p) if !p.starts_with("--") => json_path = Some(p.clone()),
+                _ => vexp::bail!("bench: --json requires a path argument"),
+            },
+            "--small" => small = true,
+            other => eprintln!("bench: ignoring unknown flag {other}"),
+        }
+    }
+    let reps: u32 = if small { 1 } else { 3 };
+    let mut rows: Vec<BenchRow> = Vec::new();
+
+    // --- fig6a-c softmax sweep -------------------------------------------
+    let seqs: &[u32] = if small { &[64] } else { &[256, 1024, 2048] };
+    const SM_ROWS: u32 = 8;
+    for &n in seqs {
+        for variant in SoftmaxVariant::ALL {
+            let program = build_softmax_program(variant, SM_ROWS, n);
+            let (fast_stats, fast_ms) = time_best(reps, || {
+                let mut cl = Cluster::new();
+                seed_softmax_inputs(&mut cl.spm, SM_ROWS, n, 0xBE7C ^ n as u64);
+                cl.run_decoded(program.decoded())
+            });
+            let (ref_stats, ref_ms) = time_best(reps, || {
+                let mut cl = Cluster::new();
+                seed_softmax_inputs(&mut cl.spm, SM_ROWS, n, 0xBE7C ^ n as u64);
+                cl.run(program.per_core())
+            });
+            assert_stats_identical(
+                &fast_stats,
+                &ref_stats,
+                &format!("softmax {variant:?} n={n}"),
+            );
+            rows.push(BenchRow {
+                kernel: "softmax",
+                variant: variant.label(),
+                dims: vec![("rows", SM_ROWS as u64), ("seq", n as u64)],
+                cycles: fast_stats.cycles,
+                wall_ms_fast: fast_ms,
+                wall_ms_reference: ref_ms,
+            });
+        }
+    }
+
+    // --- fig6d-f FlashAttention sweep ------------------------------------
+    let fa_shapes: &[(u32, u32, u32, u32)] = if small {
+        &[(16, 64, 64, 32)]
+    } else {
+        &[(32, 128, 64, 32), (32, 256, 64, 32)]
+    };
+    for &(sq, sk, d, bk) in fa_shapes {
+        for variant in [FaVariant::Baseline, FaVariant::Optimized] {
+            let program = build_fa_program(variant, sq, sk, d, bk);
+            let (fast_stats, fast_ms) = time_best(reps, || {
+                let mut cl = Cluster::new();
+                seed_fa_inputs(&mut cl.spm, sq, sk, d, bk, 0xFA ^ sk as u64);
+                cl.run_decoded(program.decoded())
+            });
+            let (ref_stats, ref_ms) = time_best(reps, || {
+                let mut cl = Cluster::new();
+                seed_fa_inputs(&mut cl.spm, sq, sk, d, bk, 0xFA ^ sk as u64);
+                cl.run(program.per_core())
+            });
+            assert_stats_identical(
+                &fast_stats,
+                &ref_stats,
+                &format!("fa {variant:?} sk={sk}"),
+            );
+            rows.push(BenchRow {
+                kernel: "flashattention",
+                variant: match variant {
+                    FaVariant::Baseline => "Baseline",
+                    FaVariant::Optimized => "Optimized",
+                },
+                dims: vec![
+                    ("sq", sq as u64),
+                    ("sk", sk as u64),
+                    ("d", d as u64),
+                    ("bk", bk as u64),
+                ],
+                cycles: fast_stats.cycles,
+                wall_ms_fast: fast_ms,
+                wall_ms_reference: ref_ms,
+            });
+        }
+    }
+
+    // --- report -----------------------------------------------------------
+    println!(
+        "{:16} {:26} {:>12} {:>12} {:>12} {:>9}",
+        "kernel", "variant/dims", "sim cycles", "fast ms", "ref ms", "speedup"
+    );
+    let (mut tot_fast, mut tot_ref) = (0.0f64, 0.0f64);
+    for r in &rows {
+        let dims: Vec<String> = r.dims.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let label = format!("{} {}", r.variant, dims.join(","));
+        println!(
+            "{:16} {:26} {:>12} {:>12.3} {:>12.3} {:>8.1}x",
+            r.kernel,
+            label,
+            r.cycles,
+            r.wall_ms_fast,
+            r.wall_ms_reference,
+            r.speedup()
+        );
+        tot_fast += r.wall_ms_fast;
+        tot_ref += r.wall_ms_reference;
+    }
+    let total_speedup = tot_ref / tot_fast.max(1e-9);
+    println!(
+        "total: fast {tot_fast:.2} ms vs reference {tot_ref:.2} ms -> {total_speedup:.1}x"
+    );
+
+    if let Some(path) = json_path {
+        let body: Vec<String> = rows.iter().map(|r| format!("    {}", r.json())).collect();
+        let json = format!(
+            "{{\n  \"bench\": \"vexp-sim\",\n  \"mode\": \"{}\",\n  \"host_reps\": {},\n  \
+             \"configs\": [\n{}\n  ],\n  \"total_wall_ms_fast\": {:.4},\n  \
+             \"total_wall_ms_reference\": {:.4},\n  \"total_host_speedup\": {:.2}\n}}\n",
+            if small { "small" } else { "full" },
+            reps,
+            body.join(",\n"),
+            tot_fast,
+            tot_ref,
+            total_speedup
+        );
+        std::fs::write(&path, json)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

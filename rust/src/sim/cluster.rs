@@ -6,9 +6,12 @@
 //! timing model takes the makespan.
 
 use super::core::Core;
+use super::decode::DecodedProgram;
 use super::dma::DmaModel;
+use super::fastcore::FastCore;
 use super::mem::Mem;
 use super::stats::{ClusterStats, CoreStats};
+use crate::exec::program::Program;
 use crate::isa::Instr;
 
 /// Cores per cluster (paper §III-A).
@@ -31,8 +34,11 @@ impl Cluster {
         Cluster { spm: Mem::spm(), dma: DmaModel::default() }
     }
 
-    /// Run one program per core (up to eight); returns per-core stats and
-    /// the cluster makespan. Programs must touch disjoint SPM outputs.
+    /// Run one program per core (up to eight) through the *reference
+    /// interpreter*; returns per-core stats and the cluster makespan.
+    /// Programs must touch disjoint SPM outputs. This is the oracle the
+    /// decoded fast path ([`Cluster::run_decoded`]) is differential-
+    /// tested against.
     pub fn run(&mut self, programs: &[Vec<Instr>]) -> ClusterStats {
         assert!(
             programs.len() <= CORES_PER_CLUSTER,
@@ -46,6 +52,35 @@ impl Cluster {
         }
         let cycles = per_core.iter().map(|s: &CoreStats| s.cycles).max().unwrap_or(0);
         ClusterStats { per_core, cycles, dma_bytes: 0, dma_cycles: 0 }
+    }
+
+    /// Run one pre-decoded program per core through the micro-op fast
+    /// path. Semantics (cores sequential against the shared SPM, timing
+    /// makespan) are identical to [`Cluster::run`].
+    pub fn run_decoded(&mut self, programs: &[DecodedProgram]) -> ClusterStats {
+        assert!(
+            programs.len() <= CORES_PER_CLUSTER,
+            "{} programs > {CORES_PER_CLUSTER} cores",
+            programs.len()
+        );
+        let mut per_core = Vec::with_capacity(programs.len());
+        for prog in programs {
+            let mut core = FastCore::new();
+            per_core.push(core.run(&mut self.spm, prog));
+        }
+        let cycles = per_core.iter().map(|s: &CoreStats| s.cycles).max().unwrap_or(0);
+        ClusterStats { per_core, cycles, dma_bytes: 0, dma_cycles: 0 }
+    }
+
+    /// Run a compiled [`Program`] on this cluster: the decoded fast path
+    /// by default, or the reference interpreter when the crate is built
+    /// with the `reference-interp` feature.
+    pub fn run_program(&mut self, program: &Program) -> ClusterStats {
+        if cfg!(feature = "reference-interp") {
+            self.run(program.per_core())
+        } else {
+            self.run_decoded(program.decoded())
+        }
     }
 
     /// Run the same kernel-builder on all eight cores with the core index

@@ -11,43 +11,12 @@
 
 use super::fpu::{latency, BRANCH_TAKEN_PENALTY, FDIV_OCCUPANCY, FP_OFFLOAD_OVERHEAD};
 use super::mem::Mem;
+use super::ssr::SsrState;
 use super::stats::CoreStats;
 use crate::bf16::{pack4, simd2, unpack4, Bf16};
-use crate::isa::instr::{Class, Instr, SsrPattern};
+use crate::isa::instr::{Class, Instr};
 use crate::isa::regs::{FReg, IReg};
 use crate::vexp::{exp_unit, vfexp};
-
-#[derive(Clone, Copy, Debug)]
-struct SsrState {
-    pat: SsrPattern,
-    i0: u32,
-    i1: u32,
-    i2: u32,
-}
-
-impl SsrState {
-    fn next_addr(&mut self) -> u32 {
-        assert!(
-            self.i2 < self.pat.reps2,
-            "SSR stream exhausted (pattern {:?})",
-            self.pat
-        );
-        let addr = (self.pat.base as i64
-            + self.i2 as i64 * self.pat.stride2 as i64
-            + self.i1 as i64 * self.pat.stride1 as i64
-            + self.i0 as i64 * self.pat.stride0 as i64) as u32;
-        self.i0 += 1;
-        if self.i0 == self.pat.reps0 {
-            self.i0 = 0;
-            self.i1 += 1;
-            if self.i1 == self.pat.reps1 {
-                self.i1 = 0;
-                self.i2 += 1;
-            }
-        }
-        addr
-    }
-}
 
 /// One Snitch core (integer registers + 64-bit FP register file).
 pub struct Core {
@@ -469,7 +438,7 @@ impl Core {
 
             // ---- SSR ------------------------------------------------------
             SsrCfg { ssr, cfg } => {
-                self.ssr[*ssr as usize] = Some(SsrState { pat: *cfg, i0: 0, i1: 0, i2: 0 });
+                self.ssr[*ssr as usize] = Some(SsrState::new(*cfg));
                 // a handful of CSR writes on real hardware
                 self.core_cycle += 3;
                 self.stats.bump(Class::Ssr);
@@ -505,7 +474,7 @@ impl Core {
 mod tests {
     use super::*;
     use crate::isa::regs::*;
-    use crate::isa::Asm;
+    use crate::isa::{Asm, SsrPattern};
 
     fn run(prog: Vec<Instr>, setup: impl FnOnce(&mut Mem)) -> (Core, Mem, CoreStats) {
         let mut core = Core::new();

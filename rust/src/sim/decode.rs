@@ -1,0 +1,423 @@
+//! Pre-decoded micro-op programs for the simulator fast path.
+//!
+//! The reference interpreter ([`super::core::Core`]) re-discovers the
+//! same facts about every dynamic instruction on every execution: which
+//! enum variant it is (one ~45-arm `match` in `step`, a second one in
+//! `compute_fp`), its timing class, its result latency, its FPU
+//! occupancy, and its FLOP/EXP work counts. [`decode`] resolves all of
+//! that once per *static* instruction, lowering `Vec<Instr>` into a flat
+//! [`MicroOp`] array where
+//!
+//! - every FP instruction becomes an [`FpOp`]: an operand *shape*
+//!   (unary/binary/ternary) plus a plain function pointer for the
+//!   arithmetic, raw `u8` register indices, and pre-computed latency /
+//!   occupancy / class-index / flops / exp-ops constants;
+//! - every FREP carries a [`FrepInfo`] with the decode-time facts the
+//!   steady-state timing fast-forward needs (divider-free body, mask of
+//!   FP registers the body touches);
+//! - branch targets stay positional (`Instr` and `MicroOp` streams are
+//!   index-for-index identical), so control flow needs no relocation.
+//!
+//! The arithmetic function pointers below are transcriptions of the
+//! corresponding `compute_fp` arms in `core.rs` — including its quirks
+//! (scalar BF16 ops preserve the upper 48 bits of operand *a*; `FmaddH`
+//! does not; `FsubD` counts zero FLOPs). `tests/sim_differential.rs`
+//! holds the two paths bit-identical.
+
+use super::fpu::{latency, FDIV_OCCUPANCY};
+use super::stats::class_idx;
+use crate::bf16::{pack4, simd2, unpack4, Bf16};
+use crate::isa::instr::{Class, Instr, SsrPattern};
+use crate::vexp::{exp_unit, vfexp};
+
+/// Operand shape + arithmetic of a decoded FP instruction. All operands
+/// and results are raw 64-bit FP register images.
+#[derive(Clone, Copy, Debug)]
+pub enum FpShape {
+    /// `dst = f(a)`
+    Un(fn(u64) -> u64),
+    /// `dst = f(a, b)`
+    Bin(fn(u64, u64) -> u64),
+    /// `dst = f(a, b, c)` (FMA family; `VfmacH` decodes with `c = dst`)
+    Tri(fn(u64, u64, u64) -> u64),
+    /// `dst = ireg[a]` bits (`FmvDX`), masked to 32 bits for `FmvWX`
+    FromInt { wide: bool },
+}
+
+/// A fully pre-decoded FP instruction.
+#[derive(Clone, Copy, Debug)]
+pub struct FpOp {
+    pub shape: FpShape,
+    pub dst: u8,
+    pub a: u8,
+    pub b: u8,
+    pub c: u8,
+    /// Index into the flat `CoreStats` class counters.
+    pub class_idx: u8,
+    /// Result latency in cycles.
+    pub latency: u8,
+    /// Cycles the FPU issue port is blocked (1, or the divider occupancy).
+    pub occupancy: u8,
+    /// BF16 FLOPs retired per execution.
+    pub flops: u8,
+    /// BF16 exponentials computed per execution.
+    pub exps: u8,
+}
+
+/// Decode-time facts about one FREP body.
+#[derive(Clone, Copy, Debug)]
+pub struct FrepInfo {
+    /// Body contains an `FdivH` (divider occupancy ≠ 1): the
+    /// steady-state detector is skipped and every iteration is timed.
+    pub has_div: bool,
+    /// Bitmask of FP registers the body reads or writes — the registers
+    /// whose scoreboard state the steady-state snapshot must watch.
+    pub fp_mask: u32,
+}
+
+/// One pre-decoded instruction. Index-for-index positional with the
+/// source `Instr` stream.
+#[derive(Clone, Copy, Debug)]
+pub enum MicroOp {
+    Addi { rd: u8, rs1: u8, imm: i64 },
+    Add { rd: u8, rs1: u8, rs2: u8 },
+    Sub { rd: u8, rs1: u8, rs2: u8 },
+    Slli { rd: u8, rs1: u8, sh: u32 },
+    Srli { rd: u8, rs1: u8, sh: u32 },
+    Srai { rd: u8, rs1: u8, sh: u32 },
+    Andi { rd: u8, rs1: u8, imm: i64 },
+    Li { rd: u8, imm: i64 },
+    J { target: u32 },
+    Bnez { rs1: u8, target: u32 },
+    Bgeu { rs1: u8, rs2: u8, target: u32 },
+    Blt { rs1: u8, rs2: u8, target: u32 },
+    FmvXW { rd: u8, fs1: u8 },
+    FmvXD { rd: u8, fs1: u8 },
+    Flh { fd: u8, base: u8, offset: i64 },
+    Fld { fd: u8, base: u8, offset: i64 },
+    Fsh { fs: u8, base: u8, offset: i64 },
+    Fsd { fs: u8, base: u8, offset: i64 },
+    Frep { n_iter: u8, n_instr: u32, info: FrepInfo },
+    SsrCfg { ssr: u8, pat: SsrPattern },
+    SsrEnable,
+    SsrDisable,
+    Nop,
+    Fp(FpOp),
+}
+
+/// A compiled-and-decoded per-core instruction stream.
+#[derive(Clone, Debug, Default)]
+pub struct DecodedProgram {
+    ops: Vec<MicroOp>,
+}
+
+impl DecodedProgram {
+    pub fn ops(&self) -> &[MicroOp] {
+        &self.ops
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arithmetic transcriptions of `core.rs::compute_fp` (bit-identical).
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn h(v: u64) -> Bf16 {
+    Bf16(v as u16)
+}
+
+// scalar BF16: low-lane result, upper 48 bits of operand `a` preserved
+fn f_fadd_h(a: u64, b: u64) -> u64 { (h(a).add(h(b)).0 as u64) | (a & !0xFFFF) }
+fn f_fsub_h(a: u64, b: u64) -> u64 { (h(a).sub(h(b)).0 as u64) | (a & !0xFFFF) }
+fn f_fmul_h(a: u64, b: u64) -> u64 { (h(a).mul(h(b)).0 as u64) | (a & !0xFFFF) }
+fn f_fmax_h(a: u64, b: u64) -> u64 { (h(a).max(h(b)).0 as u64) | (a & !0xFFFF) }
+fn f_fdiv_h(a: u64, b: u64) -> u64 { (h(a).div(h(b)).0 as u64) | (a & !0xFFFF) }
+// scalar FMA: low lane only (no upper-bit preservation in the reference)
+fn f_fmadd_h(a: u64, b: u64, c: u64) -> u64 { h(a).fma(h(b), h(c)).0 as u64 }
+
+// scalar FP64
+fn f_fadd_d(a: u64, b: u64) -> u64 { (f64::from_bits(a) + f64::from_bits(b)).to_bits() }
+fn f_fsub_d(a: u64, b: u64) -> u64 { (f64::from_bits(a) - f64::from_bits(b)).to_bits() }
+fn f_fmul_d(a: u64, b: u64) -> u64 { (f64::from_bits(a) * f64::from_bits(b)).to_bits() }
+fn f_fmadd_d(a: u64, b: u64, c: u64) -> u64 {
+    f64::mul_add(f64::from_bits(a), f64::from_bits(b), f64::from_bits(c)).to_bits()
+}
+
+// conversions
+fn f_cvt_d_h(v: u64) -> u64 { (h(v).to_f32() as f64).to_bits() }
+fn f_cvt_h_d(v: u64) -> u64 { Bf16::from_f32(f64::from_bits(v) as f32).0 as u64 }
+fn f_cvt_s_h(v: u64) -> u64 { h(v).to_f32().to_bits() as u64 }
+fn f_cvt_d_s(v: u64) -> u64 { (f32::from_bits(v as u32) as f64).to_bits() }
+fn f_cvt_s_d(v: u64) -> u64 { (f64::from_bits(v) as f32).to_bits() as u64 }
+fn f_cvt_h_s(v: u64) -> u64 { Bf16::from_f32(f32::from_bits(v as u32)).0 as u64 }
+
+// packed SIMD (4 × BF16)
+fn f_vfadd_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::add) }
+fn f_vfsub_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::sub) }
+fn f_vfmul_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::mul) }
+fn f_vfmax_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::max) }
+fn f_vfsgnj_h(a: u64, b: u64) -> u64 {
+    let sgn = 0x8000_8000_8000_8000u64;
+    (a & !sgn) | (b & sgn)
+}
+fn f_vfmac_h(a: u64, b: u64, c: u64) -> u64 {
+    let la = unpack4(a);
+    let lb = unpack4(b);
+    let lc = unpack4(c);
+    pack4([
+        la[0].fma(lb[0], lc[0]),
+        la[1].fma(lb[1], lc[1]),
+        la[2].fma(lb[2], lc[2]),
+        la[3].fma(lb[3], lc[3]),
+    ])
+}
+fn f_vfsum_h(v: u64) -> u64 {
+    let l = unpack4(v);
+    l[0].add(l[1]).add(l[2].add(l[3])).0 as u64
+}
+fn f_vfmaxred_h(v: u64) -> u64 {
+    let l = unpack4(v);
+    l[0].max(l[1]).max(l[2].max(l[3])).0 as u64
+}
+fn f_vfrep_h(v: u64) -> u64 {
+    let lane = v & 0xFFFF;
+    lane | (lane << 16) | (lane << 32) | (lane << 48)
+}
+
+// EXP extension
+fn f_fexp_h(v: u64) -> u64 { exp_unit(h(v)).0 as u64 }
+fn f_vfexp_h(v: u64) -> u64 { vfexp(v) }
+
+// ---------------------------------------------------------------------------
+// Decoder
+// ---------------------------------------------------------------------------
+
+/// BF16 FLOPs per execution — the `count_work` table from `core.rs`,
+/// quirks included (`FsubD` counts zero).
+fn flop_count(i: &Instr) -> u8 {
+    use Instr::*;
+    match i {
+        VfmacH { .. } => 8,
+        VfaddH { .. } | VfsubH { .. } | VfmulH { .. } | VfmaxH { .. } => 4,
+        VfsumH { .. } => 3,
+        FmaddH { .. } | FmaddD { .. } => 2,
+        FaddH { .. } | FsubH { .. } | FmulH { .. } | FmaxH { .. } | FdivH { .. }
+        | FaddD { .. } | FmulD { .. } => 1,
+        _ => 0,
+    }
+}
+
+/// Decode one FP instruction into its [`FpOp`].
+fn decode_fp(i: &Instr) -> FpOp {
+    use Instr::*;
+    let (shape, dst, a, b, c, exps) = match i {
+        FaddH { fd, fs1, fs2 } => (FpShape::Bin(f_fadd_h), fd.0, fs1.0, fs2.0, 0, 0),
+        FsubH { fd, fs1, fs2 } => (FpShape::Bin(f_fsub_h), fd.0, fs1.0, fs2.0, 0, 0),
+        FmulH { fd, fs1, fs2 } => (FpShape::Bin(f_fmul_h), fd.0, fs1.0, fs2.0, 0, 0),
+        FmaxH { fd, fs1, fs2 } => (FpShape::Bin(f_fmax_h), fd.0, fs1.0, fs2.0, 0, 0),
+        FdivH { fd, fs1, fs2 } => (FpShape::Bin(f_fdiv_h), fd.0, fs1.0, fs2.0, 0, 0),
+        FmaddH { fd, fs1, fs2, fs3 } => (FpShape::Tri(f_fmadd_h), fd.0, fs1.0, fs2.0, fs3.0, 0),
+        FaddD { fd, fs1, fs2 } => (FpShape::Bin(f_fadd_d), fd.0, fs1.0, fs2.0, 0, 0),
+        FsubD { fd, fs1, fs2 } => (FpShape::Bin(f_fsub_d), fd.0, fs1.0, fs2.0, 0, 0),
+        FmulD { fd, fs1, fs2 } => (FpShape::Bin(f_fmul_d), fd.0, fs1.0, fs2.0, 0, 0),
+        FmaddD { fd, fs1, fs2, fs3 } => (FpShape::Tri(f_fmadd_d), fd.0, fs1.0, fs2.0, fs3.0, 0),
+        FcvtDH { fd, fs1 } => (FpShape::Un(f_cvt_d_h), fd.0, fs1.0, 0, 0, 0),
+        FcvtHD { fd, fs1 } => (FpShape::Un(f_cvt_h_d), fd.0, fs1.0, 0, 0, 0),
+        FcvtSH { fd, fs1 } => (FpShape::Un(f_cvt_s_h), fd.0, fs1.0, 0, 0, 0),
+        FcvtDS { fd, fs1 } => (FpShape::Un(f_cvt_d_s), fd.0, fs1.0, 0, 0, 0),
+        FcvtSD { fd, fs1 } => (FpShape::Un(f_cvt_s_d), fd.0, fs1.0, 0, 0, 0),
+        FcvtHS { fd, fs1 } => (FpShape::Un(f_cvt_h_s), fd.0, fs1.0, 0, 0, 0),
+        VfaddH { fd, fs1, fs2 } => (FpShape::Bin(f_vfadd_h), fd.0, fs1.0, fs2.0, 0, 0),
+        VfsubH { fd, fs1, fs2 } => (FpShape::Bin(f_vfsub_h), fd.0, fs1.0, fs2.0, 0, 0),
+        VfmulH { fd, fs1, fs2 } => (FpShape::Bin(f_vfmul_h), fd.0, fs1.0, fs2.0, 0, 0),
+        VfmaxH { fd, fs1, fs2 } => (FpShape::Bin(f_vfmax_h), fd.0, fs1.0, fs2.0, 0, 0),
+        VfsgnjH { fd, fs1, fs2 } => (FpShape::Bin(f_vfsgnj_h), fd.0, fs1.0, fs2.0, 0, 0),
+        // the accumulator is the third operand *and* the destination;
+        // operand read order (fs1, fs2, fd) matches the reference's SSR
+        // pop order
+        VfmacH { fd, fs1, fs2 } => (FpShape::Tri(f_vfmac_h), fd.0, fs1.0, fs2.0, fd.0, 0),
+        VfsumH { fd, fs1 } => (FpShape::Un(f_vfsum_h), fd.0, fs1.0, 0, 0, 0),
+        VfmaxRedH { fd, fs1 } => (FpShape::Un(f_vfmaxred_h), fd.0, fs1.0, 0, 0, 0),
+        VfrepH { fd, fs1 } => (FpShape::Un(f_vfrep_h), fd.0, fs1.0, 0, 0, 0),
+        FmvWX { fd, rs1 } => (FpShape::FromInt { wide: false }, fd.0, rs1.0, 0, 0, 0),
+        FmvDX { fd, rs1 } => (FpShape::FromInt { wide: true }, fd.0, rs1.0, 0, 0, 0),
+        FexpH { fd, fs1 } => (FpShape::Un(f_fexp_h), fd.0, fs1.0, 0, 0, 1),
+        VfexpH { fd, fs1 } => (FpShape::Un(f_vfexp_h), fd.0, fs1.0, 0, 0, 4),
+        other => unreachable!("not an FPU instruction: {other:?}"),
+    };
+    let class = i.class();
+    FpOp {
+        shape,
+        dst,
+        a,
+        b,
+        c,
+        class_idx: class_idx(class) as u8,
+        latency: latency(class) as u8,
+        occupancy: if class == Class::FpDivH { FDIV_OCCUPANCY as u8 } else { 1 },
+        flops: flop_count(i),
+        exps,
+    }
+}
+
+/// FP registers an [`FpOp`] reads or writes, as a bitmask.
+fn fp_op_mask(op: &FpOp) -> u32 {
+    let bit = |r: u8| 1u32 << (r & 31);
+    let mut m = bit(op.dst);
+    match op.shape {
+        FpShape::Un(_) => m |= bit(op.a),
+        FpShape::Bin(_) => m |= bit(op.a) | bit(op.b),
+        FpShape::Tri(_) => m |= bit(op.a) | bit(op.b) | bit(op.c),
+        FpShape::FromInt { .. } => {} // `a` is an integer register
+    }
+    m
+}
+
+/// Lower an instruction stream into its positional micro-op array.
+///
+/// Panics on malformed programs (FREP bodies containing non-FP
+/// instructions or running past the end) — the same conditions
+/// [`crate::isa::Asm::finish`] validates at build time.
+pub fn decode(prog: &[Instr]) -> DecodedProgram {
+    use Instr::*;
+    let mut ops = Vec::with_capacity(prog.len());
+    for (pos, i) in prog.iter().enumerate() {
+        let op = match i {
+            Addi { rd, rs1, imm } => MicroOp::Addi { rd: rd.0, rs1: rs1.0, imm: *imm as i64 },
+            Add { rd, rs1, rs2 } => MicroOp::Add { rd: rd.0, rs1: rs1.0, rs2: rs2.0 },
+            Sub { rd, rs1, rs2 } => MicroOp::Sub { rd: rd.0, rs1: rs1.0, rs2: rs2.0 },
+            Slli { rd, rs1, imm } => MicroOp::Slli { rd: rd.0, rs1: rs1.0, sh: *imm },
+            Srli { rd, rs1, imm } => MicroOp::Srli { rd: rd.0, rs1: rs1.0, sh: *imm },
+            Srai { rd, rs1, imm } => MicroOp::Srai { rd: rd.0, rs1: rs1.0, sh: *imm },
+            Andi { rd, rs1, imm } => MicroOp::Andi { rd: rd.0, rs1: rs1.0, imm: *imm as i64 },
+            Li { rd, imm } => MicroOp::Li { rd: rd.0, imm: *imm },
+            J { target } => MicroOp::J { target: *target as u32 },
+            Bnez { rs1, target } => MicroOp::Bnez { rs1: rs1.0, target: *target as u32 },
+            Bgeu { rs1, rs2, target } => {
+                MicroOp::Bgeu { rs1: rs1.0, rs2: rs2.0, target: *target as u32 }
+            }
+            Blt { rs1, rs2, target } => {
+                MicroOp::Blt { rs1: rs1.0, rs2: rs2.0, target: *target as u32 }
+            }
+            FmvXW { rd, fs1 } => MicroOp::FmvXW { rd: rd.0, fs1: fs1.0 },
+            FmvXD { rd, fs1 } => MicroOp::FmvXD { rd: rd.0, fs1: fs1.0 },
+            Flh { fd, base, offset } => {
+                MicroOp::Flh { fd: fd.0, base: base.0, offset: *offset as i64 }
+            }
+            Fld { fd, base, offset } => {
+                MicroOp::Fld { fd: fd.0, base: base.0, offset: *offset as i64 }
+            }
+            Fsh { fs, base, offset } => {
+                MicroOp::Fsh { fs: fs.0, base: base.0, offset: *offset as i64 }
+            }
+            Fsd { fs, base, offset } => {
+                MicroOp::Fsd { fs: fs.0, base: base.0, offset: *offset as i64 }
+            }
+            Frep { n_iter, n_instr } => {
+                let mut has_div = false;
+                let mut fp_mask = 0u32;
+                for k in 0..*n_instr as usize {
+                    let body = prog
+                        .get(pos + 1 + k)
+                        .unwrap_or_else(|| panic!("FREP body runs past end at {pos}"));
+                    assert!(body.is_fp(), "non-FP instr {body:?} in FREP body");
+                    let fp = decode_fp(body);
+                    has_div = has_div || body.class() == Class::FpDivH;
+                    fp_mask |= fp_op_mask(&fp);
+                }
+                MicroOp::Frep {
+                    n_iter: n_iter.0,
+                    n_instr: *n_instr,
+                    info: FrepInfo { has_div, fp_mask },
+                }
+            }
+            SsrCfg { ssr, cfg } => MicroOp::SsrCfg { ssr: *ssr, pat: *cfg },
+            SsrEnable => MicroOp::SsrEnable,
+            SsrDisable => MicroOp::SsrDisable,
+            Nop => MicroOp::Nop,
+            fp => {
+                debug_assert!(fp.is_fp(), "unhandled instruction {fp:?}");
+                MicroOp::Fp(decode_fp(fp))
+            }
+        };
+        ops.push(op);
+    }
+    DecodedProgram { ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::regs::*;
+    use crate::isa::Asm;
+
+    #[test]
+    fn decode_is_positional() {
+        let mut a = Asm::new();
+        a.li(A0, 4);
+        let top = a.label();
+        a.bind(top);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        let prog = a.finish();
+        let dec = decode(&prog);
+        assert_eq!(dec.len(), prog.len());
+        match dec.ops()[2] {
+            MicroOp::Bnez { target, .. } => assert_eq!(target, 1),
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn frep_info_collects_body_facts() {
+        let mut a = Asm::new();
+        a.li(A1, 4);
+        a.frep(A1, 2);
+        a.vfmax_h(FT3, FT3, FT0);
+        a.vfexp_h(FT4, FT3);
+        let dec = decode(&a.finish());
+        match dec.ops()[1] {
+            MicroOp::Frep { info, .. } => {
+                assert!(!info.has_div);
+                assert_eq!(info.fp_mask, (1 << 0) | (1 << 3) | (1 << 4));
+            }
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn div_body_is_flagged() {
+        let mut a = Asm::new();
+        a.li(A1, 4);
+        a.frep(A1, 1);
+        a.fdiv_h(FT3, FT3, FT4);
+        let dec = decode(&a.finish());
+        match dec.ops()[1] {
+            MicroOp::Frep { info, .. } => assert!(info.has_div),
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn fp_constants_match_reference_tables() {
+        use crate::isa::instr::Instr;
+        let op = decode_fp(&Instr::FdivH { fd: FT3, fs1: FT4, fs2: FT5 });
+        assert_eq!(op.occupancy, FDIV_OCCUPANCY as u8);
+        assert_eq!(op.latency, latency(Class::FpDivH) as u8);
+        assert_eq!(op.flops, 1);
+        let op = decode_fp(&Instr::VfexpH { fd: FT3, fs1: FT4 });
+        assert_eq!(op.exps, 4);
+        assert_eq!(op.latency, 2);
+        let op = decode_fp(&Instr::VfmacH { fd: FT3, fs1: FT0, fs2: FT1 });
+        assert_eq!((op.a, op.b, op.c, op.dst), (0, 1, 3, 3));
+        assert_eq!(op.flops, 8);
+    }
+}

@@ -1,0 +1,664 @@
+//! Fast-path Snitch core executor over pre-decoded micro-ops.
+//!
+//! Timing-equivalent to the reference interpreter in [`super::core`] —
+//! same scoreboard, same FPU issue/occupancy/latency recurrence, same
+//! branch and offload penalties — but executing [`MicroOp`]s whose
+//! latencies, classes and work counts were resolved at decode time, and
+//! with two structural fast paths:
+//!
+//! 1. **FREP steady-state fast-forward.** Inside an FREP body the timing
+//!    recurrence (`issue = max(fpu_free, operand-ready)`, `fpu_free =
+//!    issue + occupancy`, `done = issue + latency`) is data-independent
+//!    and *translation-invariant*: shifting every timestamp by a
+//!    constant shifts the whole future evolution by that constant. The
+//!    executor therefore times iterations normally only until the
+//!    scoreboard state **relative to `fpu_free`** repeats across two
+//!    consecutive iteration boundaries (with equal `fpu_free` deltas);
+//!    from that point every remaining iteration advances the timeline by
+//!    exactly that delta, so timing is applied arithmetically while the
+//!    functional work (SSR pops, arithmetic, stores, statistics) runs
+//!    through a tight per-body loop with no per-op timing bookkeeping.
+//!    Bodies containing `FdivH` are excluded (conservatively, per the
+//!    divider's long occupancy) and fully timed, as are bodies that have
+//!    not converged within the warm-up cap. See DESIGN.md §9 for the
+//!    proof obligations (registers whose ready time has fallen behind
+//!    `fpu_free` are clamped in the snapshot: they can no longer
+//!    influence any future `max`, in or after the loop).
+//! 2. **Bulk SSR streams.** Contiguous affine patterns are serviced by a
+//!    flat `base + 8·k` descriptor ([`SsrStream`]) instead of the
+//!    per-beat nested-counter walk.
+//!
+//! `tests/sim_differential.rs` holds this executor bit-identical to the
+//! reference interpreter on every kernel the crate ships.
+
+use super::decode::{DecodedProgram, FpOp, FpShape, FrepInfo, MicroOp};
+use super::fpu::{latency, BRANCH_TAKEN_PENALTY, FP_OFFLOAD_OVERHEAD};
+use super::mem::Mem;
+use super::ssr::SsrStream;
+use super::stats::CoreStats;
+use crate::isa::instr::Class;
+
+/// Iterations timed in full while watching for steady state before
+/// giving up and timing the remainder op-by-op.
+const WARMUP_CAP: u64 = 8;
+
+/// One Snitch core executing decoded micro-ops.
+pub struct FastCore {
+    pub iregs: [i64; 32],
+    pub fregs: [u64; 32],
+    freg_ready: [u64; 32],
+    ssr: [Option<SsrStream>; 3],
+    ssr_enabled: bool,
+    core_cycle: u64,
+    fpu_free: u64,
+    last_retire: u64,
+    stats: CoreStats,
+}
+
+impl Default for FastCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FastCore {
+    pub fn new() -> Self {
+        FastCore {
+            iregs: [0; 32],
+            fregs: [0; 32],
+            freg_ready: [0; 32],
+            ssr: [None, None, None],
+            ssr_enabled: false,
+            core_cycle: 0,
+            fpu_free: 0,
+            last_retire: 0,
+            stats: CoreStats::default(),
+        }
+    }
+
+    /// Run a decoded program to completion against `spm`.
+    pub fn run(&mut self, spm: &mut Mem, prog: &DecodedProgram) -> CoreStats {
+        let ops = prog.ops();
+        let mut pc = 0usize;
+        let mut guard = 0u64;
+        while pc < ops.len() {
+            guard += 1;
+            assert!(guard < 500_000_000, "runaway program");
+            pc = self.step(spm, ops, pc);
+        }
+        let mut s = self.stats.clone();
+        s.cycles = self.core_cycle.max(self.last_retire);
+        s
+    }
+
+    #[inline]
+    fn ireg(&self, r: u8) -> i64 {
+        if r == 0 {
+            0
+        } else {
+            self.iregs[r as usize]
+        }
+    }
+
+    #[inline]
+    fn set_ireg(&mut self, r: u8, v: i64) {
+        if r != 0 {
+            self.iregs[r as usize] = v;
+        }
+    }
+
+    /// Read an FP operand, popping from an SSR stream when mapped.
+    /// Returns (value, ready_cycle).
+    #[inline]
+    fn read_freg(&mut self, spm: &mut Mem, r: u8) -> (u64, u64) {
+        if self.ssr_enabled && r < 3 {
+            if let Some(st) = self.ssr[r as usize].as_mut() {
+                if !st.is_write() {
+                    let addr = st.next_addr();
+                    self.stats.ssr_beats += 1;
+                    return (spm.read_u64(addr), 0);
+                }
+            }
+        }
+        (self.fregs[r as usize], self.freg_ready[r as usize])
+    }
+
+    /// Write an FP destination with its ready cycle, pushing to an SSR
+    /// write stream when mapped.
+    #[inline]
+    fn write_freg(&mut self, spm: &mut Mem, r: u8, v: u64, ready: u64) {
+        if self.ssr_enabled && r < 3 {
+            if let Some(st) = self.ssr[r as usize].as_mut() {
+                if st.is_write() {
+                    let addr = st.next_addr();
+                    self.stats.ssr_beats += 1;
+                    spm.write_u64(addr, v);
+                    self.last_retire = self.last_retire.max(ready);
+                    return;
+                }
+            }
+        }
+        self.fregs[r as usize] = v;
+        self.freg_ready[r as usize] = ready;
+        self.last_retire = self.last_retire.max(ready);
+    }
+
+    /// Value-only FP write for the steady-state functional loop: the
+    /// scoreboard is advanced arithmetically by the caller.
+    #[inline]
+    fn write_freg_value(&mut self, spm: &mut Mem, r: u8, v: u64) {
+        if self.ssr_enabled && r < 3 {
+            if let Some(st) = self.ssr[r as usize].as_mut() {
+                if st.is_write() {
+                    let addr = st.next_addr();
+                    self.stats.ssr_beats += 1;
+                    spm.write_u64(addr, v);
+                    return;
+                }
+            }
+        }
+        self.fregs[r as usize] = v;
+    }
+
+    /// Operand fetch + arithmetic of one FP op: (result, max operand
+    /// ready cycle). Pops SSR read streams exactly like the reference.
+    #[inline]
+    fn eval_fp(&mut self, spm: &mut Mem, op: &FpOp) -> (u64, u64) {
+        match op.shape {
+            FpShape::Un(f) => {
+                let (v, r) = self.read_freg(spm, op.a);
+                (f(v), r)
+            }
+            FpShape::Bin(f) => {
+                let (va, ra) = self.read_freg(spm, op.a);
+                let (vb, rb) = self.read_freg(spm, op.b);
+                (f(va, vb), ra.max(rb))
+            }
+            FpShape::Tri(f) => {
+                let (va, ra) = self.read_freg(spm, op.a);
+                let (vb, rb) = self.read_freg(spm, op.b);
+                let (vc, rc) = self.read_freg(spm, op.c);
+                (f(va, vb, vc), ra.max(rb).max(rc))
+            }
+            FpShape::FromInt { wide } => {
+                let v = self.ireg(op.a) as u64;
+                (if wide { v } else { v & 0xFFFF_FFFF }, 0)
+            }
+        }
+    }
+
+    /// Fully-timed FP execution (the reference recurrence, pre-decoded
+    /// constants). `seq` = issued from the FREP sequencer.
+    #[inline]
+    fn exec_fp(&mut self, spm: &mut Mem, op: &FpOp, seq: bool) {
+        if !seq {
+            self.core_cycle += 1 + FP_OFFLOAD_OVERHEAD as u64;
+        }
+        let (result, ready_in) = self.eval_fp(spm, op);
+        let issue = self
+            .fpu_free
+            .max(ready_in)
+            .max(if seq { 0 } else { self.core_cycle });
+        self.fpu_free = issue + op.occupancy as u64;
+        let done = issue + op.latency as u64;
+        self.write_freg(spm, op.dst, result, done);
+        self.last_retire = self.last_retire.max(done);
+        self.count_fp(op);
+    }
+
+    /// Functional-only FP execution for the steady-state loop: values,
+    /// SSR traffic and statistics advance; the timeline does not.
+    #[inline]
+    fn exec_fp_functional(&mut self, spm: &mut Mem, op: &FpOp) {
+        let (result, _) = self.eval_fp(spm, op);
+        self.write_freg_value(spm, op.dst, result);
+        self.count_fp(op);
+    }
+
+    #[inline]
+    fn count_fp(&mut self, op: &FpOp) {
+        self.stats.bump_idx(op.class_idx as usize);
+        self.stats.flops += op.flops as u64;
+        self.stats.exp_ops += op.exps as u64;
+    }
+
+    #[inline]
+    fn run_body_timed(&mut self, spm: &mut Mem, body: &[MicroOp]) {
+        for op in body {
+            match op {
+                MicroOp::Fp(fp) => self.exec_fp(spm, fp, true),
+                other => unreachable!("non-FP micro-op {other:?} in FREP body"),
+            }
+        }
+    }
+
+    #[inline]
+    fn run_body_functional(&mut self, spm: &mut Mem, body: &[MicroOp]) {
+        for op in body {
+            match op {
+                MicroOp::Fp(fp) => self.exec_fp_functional(spm, fp),
+                other => unreachable!("non-FP micro-op {other:?} in FREP body"),
+            }
+        }
+    }
+
+    /// Scoreboard state relative to `fpu_free` at an iteration boundary.
+    /// Ready times at or behind `fpu_free` are clamped to -1: they can
+    /// never bind a future `max` against the (monotone) `fpu_free`, nor
+    /// any post-loop use (every such use first maxes with a quantity
+    /// ≥ `last_retire` ≥ every clamped value), so distinct stale values
+    /// are equivalent states.
+    fn frep_snapshot(&self, fp_mask: u32) -> Vec<i64> {
+        let free = self.fpu_free;
+        let mut snap = Vec::with_capacity(fp_mask.count_ones() as usize + 1);
+        snap.push(self.last_retire.saturating_sub(free) as i64);
+        let mut m = fp_mask;
+        while m != 0 {
+            let r = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let ready = self.freg_ready[r];
+            snap.push(if ready >= free { (ready - free) as i64 } else { -1 });
+        }
+        snap
+    }
+
+    /// Execute `iters` repetitions of `body` under the FREP sequencer.
+    fn run_frep(&mut self, spm: &mut Mem, body: &[MicroOp], iters: u64, info: FrepInfo) {
+        if info.has_div || iters <= 2 {
+            for _ in 0..iters {
+                self.run_body_timed(spm, body);
+            }
+            return;
+        }
+        // warm-up: full timing until the relative scoreboard state and
+        // the per-iteration fpu_free delta both repeat
+        let mut prev_free = self.fpu_free;
+        let mut prev: Option<(u64, Vec<i64>)> = None;
+        let mut executed = 0u64;
+        let mut steady: Option<u64> = None;
+        while executed < iters {
+            self.run_body_timed(spm, body);
+            executed += 1;
+            let delta = self.fpu_free - prev_free;
+            prev_free = self.fpu_free;
+            let snap = self.frep_snapshot(info.fp_mask);
+            if let Some((pd, ps)) = &prev {
+                if *pd == delta && *ps == snap {
+                    steady = Some(delta);
+                    break;
+                }
+            }
+            prev = Some((delta, snap));
+            if executed >= WARMUP_CAP {
+                break;
+            }
+        }
+        let remaining = iters - executed;
+        if remaining == 0 {
+            return;
+        }
+        match steady {
+            Some(delta) => {
+                // capture exact relative offsets at the boundary; stale
+                // registers (ready < fpu_free) keep their values — they
+                // are dominated by every future comparison point
+                let free0 = self.fpu_free;
+                let lr_rel = self.last_retire.saturating_sub(free0);
+                let mut live: Vec<(usize, u64)> = Vec::new();
+                let mut m = info.fp_mask;
+                while m != 0 {
+                    let r = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if self.freg_ready[r] >= free0 {
+                        live.push((r, self.freg_ready[r] - free0));
+                    }
+                }
+                for _ in 0..remaining {
+                    self.run_body_functional(spm, body);
+                }
+                self.fpu_free = free0 + delta * remaining;
+                self.last_retire = self.last_retire.max(self.fpu_free + lr_rel);
+                for (r, off) in live {
+                    self.freg_ready[r] = self.fpu_free + off;
+                }
+            }
+            None => {
+                for _ in 0..remaining {
+                    self.run_body_timed(spm, body);
+                }
+            }
+        }
+    }
+
+    /// Execute the micro-op at `pc`; return the next pc.
+    fn step(&mut self, spm: &mut Mem, ops: &[MicroOp], pc: usize) -> usize {
+        match &ops[pc] {
+            MicroOp::Addi { rd, rs1, imm } => {
+                let v = self.ireg(*rs1) + imm;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            MicroOp::Add { rd, rs1, rs2 } => {
+                let v = self.ireg(*rs1) + self.ireg(*rs2);
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            MicroOp::Sub { rd, rs1, rs2 } => {
+                let v = self.ireg(*rs1) - self.ireg(*rs2);
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            MicroOp::Slli { rd, rs1, sh } => {
+                let v = self.ireg(*rs1) << sh;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            MicroOp::Srli { rd, rs1, sh } => {
+                let v = ((self.ireg(*rs1) as u64) >> sh) as i64;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            MicroOp::Srai { rd, rs1, sh } => {
+                let v = self.ireg(*rs1) >> sh;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            MicroOp::Andi { rd, rs1, imm } => {
+                let v = self.ireg(*rs1) & imm;
+                self.set_ireg(*rd, v);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            MicroOp::Li { rd, imm } => {
+                self.set_ireg(*rd, *imm);
+                self.core_cycle += 1;
+                self.stats.bump(Class::IntAlu);
+            }
+            MicroOp::J { target } => {
+                self.core_cycle += 1 + BRANCH_TAKEN_PENALTY as u64;
+                self.stats.bump(Class::Branch);
+                return *target as usize;
+            }
+            MicroOp::Bnez { rs1, target } => {
+                self.core_cycle += 1;
+                self.stats.bump(Class::Branch);
+                if self.ireg(*rs1) != 0 {
+                    self.core_cycle += BRANCH_TAKEN_PENALTY as u64;
+                    return *target as usize;
+                }
+            }
+            MicroOp::Bgeu { rs1, rs2, target } => {
+                self.core_cycle += 1;
+                self.stats.bump(Class::Branch);
+                if (self.ireg(*rs1) as u64) >= (self.ireg(*rs2) as u64) {
+                    self.core_cycle += BRANCH_TAKEN_PENALTY as u64;
+                    return *target as usize;
+                }
+            }
+            MicroOp::Blt { rs1, rs2, target } => {
+                self.core_cycle += 1;
+                self.stats.bump(Class::Branch);
+                if self.ireg(*rs1) < self.ireg(*rs2) {
+                    self.core_cycle += BRANCH_TAKEN_PENALTY as u64;
+                    return *target as usize;
+                }
+            }
+            MicroOp::FmvXW { rd, fs1 } => {
+                // int pipeline consumes an FP value: wait for the scoreboard
+                self.core_cycle = self.core_cycle.max(self.freg_ready[*fs1 as usize]) + 1;
+                self.set_ireg(*rd, self.fregs[*fs1 as usize] as u32 as i32 as i64);
+                self.stats.bump(Class::FpScalarD);
+            }
+            MicroOp::FmvXD { rd, fs1 } => {
+                self.core_cycle = self.core_cycle.max(self.freg_ready[*fs1 as usize]) + 1;
+                self.set_ireg(*rd, self.fregs[*fs1 as usize] as i64);
+                self.stats.bump(Class::FpScalarD);
+            }
+            MicroOp::Flh { fd, base, offset } => {
+                let addr = (self.ireg(*base) + offset) as u32;
+                let v = spm.read_u16(addr) as u64;
+                self.core_cycle += 1;
+                let ready = self.core_cycle + latency(Class::FpLoad) as u64;
+                self.write_freg(spm, *fd, v, ready);
+                self.stats.bump(Class::FpLoad);
+                self.stats.mem_bytes += 2;
+            }
+            MicroOp::Fld { fd, base, offset } => {
+                let addr = (self.ireg(*base) + offset) as u32;
+                let v = spm.read_u64(addr);
+                self.core_cycle += 1;
+                let ready = self.core_cycle + latency(Class::FpLoad) as u64;
+                self.write_freg(spm, *fd, v, ready);
+                self.stats.bump(Class::FpLoad);
+                self.stats.mem_bytes += 8;
+            }
+            MicroOp::Fsh { fs, base, offset } => {
+                let addr = (self.ireg(*base) + offset) as u32;
+                self.core_cycle = self.core_cycle.max(self.freg_ready[*fs as usize]) + 1;
+                spm.write_u16(addr, self.fregs[*fs as usize] as u16);
+                self.stats.bump(Class::FpStore);
+                self.stats.mem_bytes += 2;
+            }
+            MicroOp::Fsd { fs, base, offset } => {
+                let addr = (self.ireg(*base) + offset) as u32;
+                self.core_cycle = self.core_cycle.max(self.freg_ready[*fs as usize]) + 1;
+                spm.write_u64(addr, self.fregs[*fs as usize]);
+                self.stats.bump(Class::FpStore);
+                self.stats.mem_bytes += 8;
+            }
+            MicroOp::Frep { n_iter, n_instr, info } => {
+                let iters = self.ireg(*n_iter).max(0) as u64;
+                let body = &ops[pc + 1..pc + 1 + *n_instr as usize];
+                self.core_cycle += 1; // frep issue
+                self.stats.bump(Class::Frep);
+                // sequencer start: body instructions already offloaded
+                self.fpu_free = self.fpu_free.max(self.core_cycle);
+                self.run_frep(spm, body, iters, *info);
+                // the core does not stall on the sequencer, but our kernels
+                // always need the results, so join the timelines here
+                self.core_cycle = self.core_cycle.max(self.last_retire);
+                return pc + 1 + *n_instr as usize;
+            }
+            MicroOp::SsrCfg { ssr, pat } => {
+                self.ssr[*ssr as usize] = Some(SsrStream::new(*pat));
+                // a handful of CSR writes on real hardware
+                self.core_cycle += 3;
+                self.stats.bump(Class::Ssr);
+            }
+            MicroOp::SsrEnable => {
+                self.ssr_enabled = true;
+                self.core_cycle += 1;
+                self.stats.bump(Class::Ssr);
+            }
+            MicroOp::SsrDisable => {
+                self.ssr_enabled = false;
+                // wait for in-flight FP work before handing regs back
+                self.core_cycle = self.core_cycle.max(self.last_retire) + 1;
+                self.stats.bump(Class::Ssr);
+            }
+            MicroOp::Nop => {
+                self.core_cycle += 1;
+                self.stats.bump(Class::Misc);
+            }
+            MicroOp::Fp(op) => self.exec_fp(spm, op, false),
+        }
+        pc + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::core::Core;
+    use super::super::decode::decode;
+    use super::*;
+    use crate::isa::regs::*;
+    use crate::isa::{Asm, Instr, SsrPattern};
+
+    /// Run `prog` through both executors on identically-seeded SPMs and
+    /// assert bit-identical stats and memory.
+    fn differential(prog: Vec<Instr>, setup: impl Fn(&mut Mem)) -> CoreStats {
+        let mut spm_ref = Mem::spm();
+        setup(&mut spm_ref);
+        let mut spm_fast = spm_ref.clone();
+        let ref_stats = Core::new().run(&mut spm_ref, &prog);
+        let dec = decode(&prog);
+        let fast_stats = FastCore::new().run(&mut spm_fast, &dec);
+        assert_eq!(ref_stats.cycles, fast_stats.cycles, "cycles diverge");
+        assert_eq!(ref_stats.flops, fast_stats.flops);
+        assert_eq!(ref_stats.exp_ops, fast_stats.exp_ops);
+        assert_eq!(ref_stats.ssr_beats, fast_stats.ssr_beats);
+        assert_eq!(ref_stats.mem_bytes, fast_stats.mem_bytes);
+        assert_eq!(ref_stats.retired_total(), fast_stats.retired_total());
+        for (c, n) in ref_stats.retired() {
+            assert_eq!(n, fast_stats.count(c), "class {c:?} diverges");
+        }
+        assert_eq!(
+            spm_ref.read_bytes(0, spm_ref.len()),
+            spm_fast.read_bytes(0, spm_fast.len()),
+            "memory diverges"
+        );
+        fast_stats
+    }
+
+    #[test]
+    fn integer_loop_matches_reference() {
+        let mut a = Asm::new();
+        a.li(A0, 10);
+        let top = a.label();
+        a.bind(top);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, top);
+        differential(a.finish(), |_| {});
+    }
+
+    #[test]
+    fn frep_ssr_stream_matches_reference() {
+        let n = 64u32;
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x300, n / 4));
+        a.ssr_cfg(1, SsrPattern::write1d(0x900, n / 4));
+        a.ssr_enable();
+        a.li(A1, (n / 4) as i64);
+        a.frep(A1, 1);
+        a.vfexp_h(FT1, FT0);
+        a.ssr_disable();
+        let stats = differential(a.finish(), |m| {
+            m.write_f32_as_bf16(0x300, &(0..64).map(|i| i as f32 * 0.05 - 1.0).collect::<Vec<_>>());
+        });
+        assert_eq!(stats.exp_ops, 4 * (n / 4) as u64);
+    }
+
+    #[test]
+    fn dependent_chain_matches_reference() {
+        // self-dependent body: steady state with a latency-bound delta
+        let mut a = Asm::new();
+        a.li(A1, 200);
+        a.frep(A1, 1);
+        a.vfmul_h(FT3, FT3, FT3);
+        differential(a.finish(), |_| {});
+    }
+
+    #[test]
+    fn multi_accumulator_body_matches_reference() {
+        let iters = 300i64;
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x0, 4 * iters as u32));
+        a.ssr_enable();
+        a.li(A1, iters);
+        a.frep(A1, 4);
+        a.vfmax_h(FT3, FT3, FT0);
+        a.vfmax_h(FT4, FT4, FT0);
+        a.vfmax_h(FT5, FT5, FT0);
+        a.vfmax_h(FT6, FT6, FT0);
+        a.ssr_disable();
+        a.vfmax_h(FT3, FT3, FT4);
+        a.li(A0, 0x9000);
+        a.fsd(FT3, A0, 0);
+        differential(a.finish(), |m| {
+            m.write_f32_as_bf16(0, &(0..16 * iters as usize).map(|i| (i % 97) as f32).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn div_body_bypasses_steady_state_and_matches() {
+        let mut a = Asm::new();
+        a.li(A0, 0x100);
+        a.flh(FT3, A0, 0);
+        a.flh(FT4, A0, 2);
+        a.li(A1, 20);
+        a.frep(A1, 1);
+        a.fdiv_h(FT5, FT3, FT4);
+        a.fsh(FT5, A0, 4);
+        differential(a.finish(), |m| {
+            m.write_f32_as_bf16(0x100, &[1.0, 3.0]);
+        });
+    }
+
+    #[test]
+    fn mixed_latency_body_matches_reference() {
+        // exp (lat 2) + fp64 (lat 5) + simd in one body, non-trivial
+        // cross-iteration dependencies through FT5
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x400, 128));
+        a.ssr_enable();
+        a.li(A1, 128);
+        a.frep(A1, 3);
+        a.vfexp_h(FT3, FT0);
+        a.fmadd_d(FT4, FT4, FT4, FT4);
+        a.vfadd_h(FT5, FT5, FT3);
+        a.ssr_disable();
+        a.li(A0, 0x9000);
+        a.fsd(FT5, A0, 0);
+        differential(a.finish(), |m| {
+            m.write_f32_as_bf16(0x400, &(0..512).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn post_frep_scoreboard_uses_match_reference() {
+        // an Fsh right after the loop exercises the reconstructed
+        // freg_ready values
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x200, 64));
+        a.ssr_enable();
+        a.li(A1, 64);
+        a.frep(A1, 2);
+        a.vfadd_h(FT3, FT3, FT0);
+        a.vfmul_h(FT4, FT4, FT4);
+        a.ssr_disable();
+        a.li(A0, 0x8000);
+        a.fsh(FT3, A0, 0);
+        a.fsh(FT4, A0, 2);
+        // …and a second FREP reusing the same accumulators
+        a.ssr_cfg(0, SsrPattern::read1d(0x200, 32));
+        a.ssr_enable();
+        a.li(A1, 32);
+        a.frep(A1, 1);
+        a.vfadd_h(FT3, FT3, FT0);
+        a.ssr_disable();
+        a.fsh(FT3, A0, 4);
+        differential(a.finish(), |m| {
+            m.write_f32_as_bf16(0x200, &(0..256).map(|i| (i % 7) as f32 * 0.25).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "SSR stream exhausted")]
+    fn ssr_overrun_panics_like_reference() {
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x0, 1));
+        a.ssr_enable();
+        a.li(A1, 2);
+        a.frep(A1, 1);
+        a.vfadd_h(FT3, FT3, FT0);
+        let dec = decode(&a.finish());
+        let mut spm = Mem::spm();
+        FastCore::new().run(&mut spm, &dec);
+    }
+}

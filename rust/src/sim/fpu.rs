@@ -55,6 +55,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(clippy::assertions_on_constants)]
     fn scalar_code_is_handshake_bound() {
         // the paper's baseline anchor needs >= 5 cycles per scalar FP op
         assert!(1 + FP_OFFLOAD_OVERHEAD >= 5);

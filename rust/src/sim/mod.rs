@@ -2,7 +2,13 @@
 //! substrate, built per DESIGN.md §2's substitution rule).
 //!
 //! - [`mem`]: SPM/HBM functional memories;
-//! - [`core`]: pseudo dual-issue core + pipelined FPU + FREP/SSR timing;
+//! - [`core`]: reference interpreter — pseudo dual-issue core +
+//!   pipelined FPU + FREP/SSR timing, executed straight off `Instr`;
+//! - [`decode`]: `Instr` → flat micro-op lowering for the fast path;
+//! - [`fastcore`]: micro-op executor with FREP steady-state timing —
+//!   differential-tested bit-identical to [`core`];
+//! - [`ssr`]: SSR stream address generation (reference walk + bulk flat
+//!   descriptors);
 //! - [`fpu`]: latency table of the extended FPU;
 //! - [`dma`]: DMA/double-buffer/HBM-contention timing;
 //! - [`cluster`]: the 8-core cluster;
@@ -10,16 +16,22 @@
 
 pub mod cluster;
 pub mod core;
+pub mod decode;
 pub mod dma;
+pub mod fastcore;
 pub mod fpu;
 pub mod mem;
+pub mod ssr;
 pub mod stats;
 pub mod system;
 
 pub use cluster::{Cluster, CORES_PER_CLUSTER};
 pub use core::Core;
+pub use decode::{decode, DecodedProgram, MicroOp};
 pub use dma::{DmaModel, HbmModel};
+pub use fastcore::FastCore;
 pub use mem::{Mem, SPM_BANKS, SPM_BYTES};
+pub use ssr::{SsrState, SsrStream};
 pub use stats::{ClusterStats, CoreStats};
 pub use system::{ClusterJob, System, SystemStats};
 

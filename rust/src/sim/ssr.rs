@@ -1,0 +1,170 @@
+//! SSR stream address generation: the reference 3D affine walker and the
+//! decode-time bulk fast path.
+//!
+//! [`SsrState`] is the architectural model — one address per 64-bit beat,
+//! multi-dimension carry logic exactly as the hardware's nested counters
+//! work. [`SsrStream`] is what the fast executor uses: patterns that are
+//! provably equivalent to a contiguous `base + 8·k` walk are serviced as
+//! a flat descriptor (no per-beat multiply/carry chain), everything else
+//! falls back to the reference walker. The two are differential-tested
+//! against each other in `tests/sim_properties.rs`.
+//!
+//! Deliberately *not* done: prefetching a whole stream as one `Mem`
+//! slice. Kernels alias read and write streams over the same region
+//! (e.g. the softmax NORM phase reads and rewrites the output row in
+//! place), so beat-by-beat interleaving with FP execution is part of the
+//! functional semantics; only the *address generation* is bulk-resolved.
+
+use crate::isa::instr::SsrPattern;
+
+/// Reference 3D affine stream walker (one nested counter per dimension).
+#[derive(Clone, Copy, Debug)]
+pub struct SsrState {
+    pub pat: SsrPattern,
+    pub i0: u32,
+    pub i1: u32,
+    pub i2: u32,
+}
+
+impl SsrState {
+    pub fn new(pat: SsrPattern) -> Self {
+        SsrState { pat, i0: 0, i1: 0, i2: 0 }
+    }
+
+    /// Address of the next beat; panics when the pattern is exhausted.
+    pub fn next_addr(&mut self) -> u32 {
+        assert!(
+            self.i2 < self.pat.reps2,
+            "SSR stream exhausted (pattern {:?})",
+            self.pat
+        );
+        let addr = (self.pat.base as i64
+            + self.i2 as i64 * self.pat.stride2 as i64
+            + self.i1 as i64 * self.pat.stride1 as i64
+            + self.i0 as i64 * self.pat.stride0 as i64) as u32;
+        self.i0 += 1;
+        if self.i0 == self.pat.reps0 {
+            self.i0 = 0;
+            self.i1 += 1;
+            if self.i1 == self.pat.reps1 {
+                self.i1 = 0;
+                self.i2 += 1;
+            }
+        }
+        addr
+    }
+}
+
+/// True when every beat of `pat` lands at `base + 8·k` for beat index
+/// `k` — i.e. the nested dimensions fold into one contiguous stream.
+/// Dimensions with a single repetition never advance their stride, so
+/// their stride is unconstrained. Degenerate patterns (any reps == 0,
+/// where the reference walker's wrap counters never fold) stay on the
+/// reference walker so the two paths agree on them too.
+pub fn is_contiguous(pat: &SsrPattern) -> bool {
+    let r0 = pat.reps0 as i64;
+    let r1 = pat.reps1 as i64;
+    pat.reps0 >= 1
+        && pat.reps1 >= 1
+        && pat.reps2 >= 1
+        && (pat.reps0 == 1 || pat.stride0 as i64 == 8)
+        && (pat.reps1 == 1 || pat.stride1 as i64 == 8 * r0)
+        && (pat.reps2 == 1 || pat.stride2 as i64 == 8 * r0 * r1)
+        && pat.beats() <= (u32::MAX / 8) as u64
+}
+
+/// Decode-time stream descriptor: flat fast path or reference walker.
+#[derive(Clone, Copy, Debug)]
+pub enum SsrStream {
+    /// Contiguous: beat `k` reads/writes `base + 8·k`.
+    Flat { pat: SsrPattern, pos: u32, len: u32 },
+    /// General affine pattern through the reference walker.
+    Walk(SsrState),
+}
+
+impl SsrStream {
+    pub fn new(pat: SsrPattern) -> Self {
+        if is_contiguous(&pat) {
+            SsrStream::Flat { pat, pos: 0, len: pat.beats() as u32 }
+        } else {
+            SsrStream::Walk(SsrState::new(pat))
+        }
+    }
+
+    #[inline]
+    pub fn is_write(&self) -> bool {
+        match self {
+            SsrStream::Flat { pat, .. } => pat.write,
+            SsrStream::Walk(st) => st.pat.write,
+        }
+    }
+
+    /// Address of the next beat; panics when the pattern is exhausted
+    /// (same message as the reference walker).
+    #[inline]
+    pub fn next_addr(&mut self) -> u32 {
+        match self {
+            SsrStream::Flat { pat, pos, len } => {
+                assert!(*pos < *len, "SSR stream exhausted (pattern {:?})", pat);
+                let addr = pat.base.wrapping_add(*pos * 8);
+                *pos += 1;
+                addr
+            }
+            SsrStream::Walk(st) => st.next_addr(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read1d_is_contiguous() {
+        assert!(is_contiguous(&SsrPattern::read1d(0x100, 8)));
+        assert!(is_contiguous(&SsrPattern::write1d(0x100, 8)));
+    }
+
+    #[test]
+    fn repeat_beat_pattern_is_not_contiguous() {
+        // the GEMM A-row pattern repeats each beat (stride0 = 0)
+        let pat = SsrPattern::read3d(0x100, 0, 8, 8, 4, 0, 2);
+        assert!(!is_contiguous(&pat));
+    }
+
+    #[test]
+    fn folded_2d_pattern_is_contiguous() {
+        // 4 blocks of 8 beats, block stride = 8 beats -> flat 32 beats
+        let pat = SsrPattern::read2d(0x100, 8, 8, 64, 4);
+        assert!(is_contiguous(&pat));
+        let mut fast = SsrStream::new(pat);
+        let mut slow = SsrState::new(pat);
+        for _ in 0..32 {
+            assert_eq!(fast.next_addr(), slow.next_addr());
+        }
+    }
+
+    #[test]
+    fn single_rep_dims_ignore_strides() {
+        let pat = SsrPattern::read2d(0x100, 8, 16, -4096, 1);
+        assert!(is_contiguous(&pat));
+    }
+
+    #[test]
+    fn zero_rep_patterns_stay_on_the_walker() {
+        // reps == 0 never folds: the reference walker's counters don't
+        // wrap, so the flat path must not claim these
+        let pat = SsrPattern::read1d(0x100, 0);
+        assert!(!is_contiguous(&pat));
+        assert!(matches!(SsrStream::new(pat), SsrStream::Walk(_)));
+    }
+
+    #[test]
+    #[should_panic(expected = "SSR stream exhausted")]
+    fn flat_stream_panics_on_overrun() {
+        let mut s = SsrStream::new(SsrPattern::read1d(0x0, 2));
+        s.next_addr();
+        s.next_addr();
+        s.next_addr();
+    }
+}

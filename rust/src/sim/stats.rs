@@ -10,8 +10,9 @@ pub const CLASSES: [Class; 12] = [
     Class::FpExp, Class::Ssr, Class::Frep, Class::Misc,
 ];
 
+/// Flat counter index of a class (decode pre-resolves this for FP ops).
 #[inline]
-fn class_idx(c: Class) -> usize {
+pub(crate) fn class_idx(c: Class) -> usize {
     match c {
         Class::IntAlu => 0, Class::Branch => 1, Class::FpLoad => 2,
         Class::FpStore => 3, Class::FpScalarH => 4, Class::FpScalarD => 5,
@@ -52,6 +53,12 @@ impl CoreStats {
         self.retired_arr[class_idx(class)] += 1;
     }
 
+    /// Bump by pre-resolved counter index (the decoded fast path).
+    #[inline]
+    pub(crate) fn bump_idx(&mut self, idx: usize) {
+        self.retired_arr[idx] += 1;
+    }
+
     /// Iterate (class, count) pairs with non-zero counts.
     pub fn retired(&self) -> impl Iterator<Item = (Class, u64)> + '_ {
         CLASSES.iter().zip(self.retired_arr.iter())
@@ -82,8 +89,8 @@ impl CoreStats {
     /// Sum the event counters of `other` into `self` (cycles excluded —
     /// the two composition modes below disagree on those).
     fn add_counters(&mut self, other: &CoreStats) {
-        for i in 0..12 {
-            self.retired_arr[i] += other.retired_arr[i];
+        for (mine, theirs) in self.retired_arr.iter_mut().zip(&other.retired_arr) {
+            *mine += theirs;
         }
         self.ssr_beats += other.ssr_beats;
         self.mem_bytes += other.mem_bytes;

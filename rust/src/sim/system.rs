@@ -53,6 +53,12 @@ pub struct System {
     pub clusters: Vec<Cluster>,
     pub hbm: HbmModel,
     pub dma: DmaModel,
+    /// Route cluster execution through the reference interpreter
+    /// (serial, `Instr`-level) instead of the threaded micro-op fast
+    /// path. The differential tests run both and require bit-identical
+    /// [`SystemStats`]; the `reference-interp` cargo feature forces this
+    /// on for a whole build.
+    pub reference_interp: bool,
 }
 
 impl System {
@@ -61,6 +67,7 @@ impl System {
             clusters: (0..n_clusters).map(|_| Cluster::new()).collect(),
             hbm: HbmModel::default(),
             dma: DmaModel::default(),
+            reference_interp: cfg!(feature = "reference-interp"),
         }
     }
 
@@ -99,23 +106,63 @@ impl System {
     /// for the shared HBM bandwidth. Idle clusters (no programs, no
     /// bytes) report zero cycles — in particular they are not charged
     /// the DMA fill startup.
+    ///
+    /// Active clusters execute concurrently under `std::thread::scope`:
+    /// they share only the read-only compiled programs (`Arc`ed inside
+    /// [`Program`]), each owns its SPM, and the HBM-contention/DMA
+    /// post-processing below runs serially in cluster order, so the
+    /// result is deterministic and identical to the serial reference
+    /// (`reference_interp = true`).
     pub fn run_jobs(&mut self, jobs: Vec<ClusterJob>) -> SystemStats {
         assert_eq!(jobs.len(), self.clusters.len(), "one job per cluster");
         let active = jobs.iter().filter(|j| !j.is_idle()).count();
         let contention = self.hbm.contention_factor(active.max(1), self.dma.bytes_per_cycle);
 
+        let reference = self.reference_interp;
+        let raw: Vec<Option<ClusterStats>> = if reference || active <= 1 {
+            self.clusters
+                .iter_mut()
+                .zip(&jobs)
+                .map(|(cluster, job)| {
+                    if job.is_idle() {
+                        None
+                    } else {
+                        Some(run_cluster_job(cluster, job, reference))
+                    }
+                })
+                .collect()
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .clusters
+                    .iter_mut()
+                    .zip(&jobs)
+                    .map(|(cluster, job)| {
+                        if job.is_idle() {
+                            None
+                        } else {
+                            Some(s.spawn(move || run_cluster_job(cluster, job, false)))
+                        }
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.map(|h| h.join().expect("cluster thread panicked")))
+                    .collect()
+            })
+        };
+
         let mut per_cluster = Vec::with_capacity(jobs.len());
         let mut makespan = 0u64;
         let mut hbm_bytes = 0u64;
-        for (cluster, job) in self.clusters.iter_mut().zip(jobs) {
-            if job.is_idle() {
-                per_cluster.push(ClusterStats::default());
-                continue;
-            }
-            let mut stats = ClusterStats::default();
-            for program in &job.programs {
-                stats.append_sequential(&cluster.run(program.per_core()));
-            }
+        for (job, stats) in jobs.iter().zip(raw) {
+            let mut stats = match stats {
+                None => {
+                    per_cluster.push(ClusterStats::default());
+                    continue;
+                }
+                Some(s) => s,
+            };
             hbm_bytes += job.hbm_bytes;
             let dma = (self.dma.cycles(job.hbm_bytes) as f64 * contention) as u64;
             stats.dma_bytes = job.hbm_bytes;
@@ -130,6 +177,21 @@ impl System {
         }
         SystemStats { per_cluster, cycles: makespan, hbm_bytes }
     }
+}
+
+/// One cluster's compute leg of a system run: its programs back-to-back
+/// through the fast path (or the reference interpreter as oracle).
+fn run_cluster_job(cluster: &mut Cluster, job: &ClusterJob, reference: bool) -> ClusterStats {
+    let mut stats = ClusterStats::default();
+    for program in &job.programs {
+        let run = if reference {
+            cluster.run(program.per_core())
+        } else {
+            cluster.run_decoded(program.decoded())
+        };
+        stats.append_sequential(&run);
+    }
+    stats
 }
 
 #[cfg(test)]

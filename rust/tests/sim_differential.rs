@@ -1,0 +1,186 @@
+//! Differential tests: the decoded micro-op fast path must be
+//! bit-identical to the reference `Instr` interpreter — same cycles,
+//! same retired-instruction counters, same FLOPs/EXPs/SSR beats/memory
+//! traffic, and byte-identical SPM contents — for every kernel the crate
+//! ships, and at system level for multi-cluster jobs.
+
+use vexp::exec::program::Program;
+use vexp::kernels::flash_attention::{build_fa_program, seed_fa_inputs, FaVariant};
+use vexp::kernels::gemm::build_gemm_program;
+use vexp::kernels::softmax::{build_softmax_program, seed_softmax_inputs, SoftmaxVariant};
+use vexp::sim::stats::CLASSES;
+use vexp::sim::{Cluster, ClusterJob, ClusterStats, CoreStats, Mem, System};
+
+fn assert_core_stats_eq(reference: &CoreStats, fast: &CoreStats, what: &str) {
+    assert_eq!(reference.cycles, fast.cycles, "{what}: cycles");
+    assert_eq!(reference.flops, fast.flops, "{what}: flops");
+    assert_eq!(reference.mem_bytes, fast.mem_bytes, "{what}: mem_bytes");
+    assert_eq!(reference.exp_ops, fast.exp_ops, "{what}: exp_ops");
+    assert_eq!(reference.ssr_beats, fast.ssr_beats, "{what}: ssr_beats");
+    for c in CLASSES {
+        assert_eq!(reference.count(c), fast.count(c), "{what}: retired {c:?}");
+    }
+}
+
+fn assert_cluster_stats_eq(reference: &ClusterStats, fast: &ClusterStats, what: &str) {
+    assert_eq!(reference.cycles, fast.cycles, "{what}: cluster cycles");
+    assert_eq!(reference.dma_bytes, fast.dma_bytes, "{what}: dma_bytes");
+    assert_eq!(reference.dma_cycles, fast.dma_cycles, "{what}: dma_cycles");
+    assert_eq!(reference.per_core.len(), fast.per_core.len(), "{what}: core count");
+    for (i, (r, f)) in reference.per_core.iter().zip(&fast.per_core).enumerate() {
+        assert_core_stats_eq(r, f, &format!("{what} core {i}"));
+    }
+}
+
+fn assert_mem_eq(reference: &Mem, fast: &Mem, what: &str) {
+    assert_eq!(
+        reference.read_bytes(0, reference.len()),
+        fast.read_bytes(0, fast.len()),
+        "{what}: SPM contents diverge"
+    );
+}
+
+/// Run `program` on two identically-seeded clusters, once per executor,
+/// and require bit-identical stats and memory.
+fn differential_cluster(program: &Program, seed: impl Fn(&mut Mem), what: &str) {
+    let mut reference = Cluster::new();
+    seed(&mut reference.spm);
+    let mut fast = Cluster::new();
+    seed(&mut fast.spm);
+    let r = reference.run(program.per_core());
+    let f = fast.run_decoded(program.decoded());
+    assert_cluster_stats_eq(&r, &f, what);
+    assert_mem_eq(&reference.spm, &fast.spm, what);
+}
+
+#[test]
+fn softmax_all_variants_two_lengths_bit_identical() {
+    const ROWS: u32 = 8;
+    for variant in [
+        SoftmaxVariant::Baseline,
+        SoftmaxVariant::SwOptim,
+        SoftmaxVariant::SwExpSw,
+        SoftmaxVariant::SwExpHw,
+    ] {
+        for n in [64u32, 1024] {
+            let program = build_softmax_program(variant, ROWS, n);
+            differential_cluster(
+                &program,
+                |spm| seed_softmax_inputs(spm, ROWS, n, 0xD1FF ^ n as u64),
+                &format!("softmax {variant:?} n={n}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn softmax_scalar_fexp_ablation_bit_identical() {
+    let program = build_softmax_program(SoftmaxVariant::SwExpHwScalar, 8, 128);
+    differential_cluster(
+        &program,
+        |spm| seed_softmax_inputs(spm, 8, 128, 0xAB1A),
+        "softmax SwExpHwScalar n=128",
+    );
+}
+
+#[test]
+fn flash_attention_both_variants_two_lengths_bit_identical() {
+    for variant in [FaVariant::Baseline, FaVariant::Optimized] {
+        for (sq, sk, d, bk) in [(16u32, 64u32, 64u32, 32u32), (32, 128, 64, 32)] {
+            let program = build_fa_program(variant, sq, sk, d, bk);
+            differential_cluster(
+                &program,
+                |spm| seed_fa_inputs(spm, sq, sk, d, bk, 0xFA ^ sk as u64),
+                &format!("fa {variant:?} sq={sq} sk={sk}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_bit_identical() {
+    let (lay, program) = build_gemm_program(32, 64, 32);
+    differential_cluster(
+        &program,
+        |spm| {
+            let a: Vec<f32> = (0..32 * 64).map(|i| ((i * 7) % 83) as f32 * 0.02 - 0.8).collect();
+            let bt: Vec<f32> = (0..32 * 64).map(|i| ((i * 5) % 71) as f32 * 0.02 - 0.7).collect();
+            spm.write_f32_as_bf16(lay.a, &a);
+            spm.write_f32_as_bf16(lay.bt, &bt);
+        },
+        "gemm 32x64x32",
+    );
+}
+
+/// System level: threaded fast path vs serial reference interpreter must
+/// produce bit-identical `SystemStats` (cycles, per-cluster stats,
+/// flops, mem_bytes) and identical SPM contents on every cluster.
+#[test]
+fn system_run_jobs_bit_identical_across_paths() {
+    let jobs = || -> Vec<ClusterJob> {
+        let sm = build_softmax_program(SoftmaxVariant::SwExpHw, 8, 256);
+        let base = build_softmax_program(SoftmaxVariant::Baseline, 8, 64);
+        let fa = build_fa_program(FaVariant::Optimized, 16, 64, 64, 32);
+        vec![
+            ClusterJob::new(vec![sm.clone(), sm.clone()], 64 * 1024),
+            ClusterJob::new(vec![base], 16 * 1024),
+            ClusterJob::idle(),
+            ClusterJob::new(vec![fa], 128 * 1024),
+        ]
+    };
+    let seed_sys = |sys: &mut System| {
+        seed_softmax_inputs(&mut sys.clusters[0].spm, 8, 256, 1);
+        seed_softmax_inputs(&mut sys.clusters[1].spm, 8, 64, 2);
+        seed_fa_inputs(&mut sys.clusters[3].spm, 16, 64, 64, 32, 3);
+    };
+
+    let mut fast_sys = System::new(4);
+    fast_sys.reference_interp = false;
+    seed_sys(&mut fast_sys);
+    let fast = fast_sys.run_jobs(jobs());
+
+    let mut ref_sys = System::new(4);
+    ref_sys.reference_interp = true;
+    seed_sys(&mut ref_sys);
+    let reference = ref_sys.run_jobs(jobs());
+
+    assert_eq!(reference.cycles, fast.cycles, "system makespan");
+    assert_eq!(reference.hbm_bytes, fast.hbm_bytes);
+    assert_eq!(reference.per_cluster.len(), fast.per_cluster.len());
+    for (i, (r, f)) in reference.per_cluster.iter().zip(&fast.per_cluster).enumerate() {
+        assert_cluster_stats_eq(r, f, &format!("cluster {i}"));
+        let rc = r.combined();
+        let fc = f.combined();
+        assert_eq!(rc.flops, fc.flops, "cluster {i} flops");
+        assert_eq!(rc.mem_bytes, fc.mem_bytes, "cluster {i} mem_bytes");
+    }
+    for (i, (rc, fc)) in ref_sys.clusters.iter().zip(&fast_sys.clusters).enumerate() {
+        assert_mem_eq(&rc.spm, &fc.spm, &format!("cluster {i}"));
+    }
+}
+
+/// The fast path must stay deterministic run-to-run (threads only
+/// parallelize clusters; merge order is fixed).
+#[test]
+fn fast_path_is_deterministic() {
+    let run_once = || {
+        let mut sys = System::new(3);
+        for c in 0..3 {
+            seed_softmax_inputs(&mut sys.clusters[c].spm, 8, 128, c as u64);
+        }
+        let sm = build_softmax_program(SoftmaxVariant::SwExpHw, 8, 128);
+        sys.run_jobs(vec![
+            ClusterJob::new(vec![sm.clone()], 1000),
+            ClusterJob::new(vec![sm.clone()], 2000),
+            ClusterJob::new(vec![sm], 3000),
+        ])
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.hbm_bytes, b.hbm_bytes);
+    for (x, y) in a.per_cluster.iter().zip(&b.per_cluster) {
+        assert_eq!(x.cycles, y.cycles);
+        assert_eq!(x.combined().retired_total(), y.combined().retired_total());
+    }
+}

@@ -4,7 +4,7 @@
 use vexp::bf16::Bf16;
 use vexp::isa::regs::*;
 use vexp::isa::{Asm, Instr, SsrPattern};
-use vexp::sim::{Core, Mem};
+use vexp::sim::{Core, Mem, SsrState, SsrStream};
 use vexp::testkit::{forall, Rng};
 
 fn write_random_row(spm: &mut Mem, base: u32, n: usize, rng: &mut Rng) -> Vec<f32> {
@@ -202,6 +202,122 @@ fn simulated_fpu_matches_host_bf16() {
         for (got, want, op) in checks {
             if got != want {
                 return Err(format!("{op}({x}, {y}): {got:#06x} != {want:#06x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Draw a random 3D pattern with signed strides. `base` sits mid-range
+/// so negative strides stay in (wrapped-u32) bounds the same way the
+/// walker computes them.
+fn random_pattern(rng: &mut Rng) -> SsrPattern {
+    let stride = |rng: &mut Rng| -> i32 { 8 * (rng.range(0, 9) as i32 - 4) };
+    SsrPattern {
+        base: 0x10000 + 8 * rng.range(0, 64) as u32,
+        stride0: stride(rng),
+        reps0: rng.range(1, 6) as u32,
+        stride1: stride(rng),
+        reps1: rng.range(1, 6) as u32,
+        stride2: stride(rng),
+        reps2: rng.range(1, 6) as u32,
+        write: rng.bool(),
+    }
+}
+
+/// `SsrState::next_addr` must visit exactly the affine address sequence
+/// in dimension order i0 (innermost) → i1 → i2, including negative
+/// strides — the oracle the bulk flat-stream fast path is held to.
+#[test]
+fn ssr_next_addr_matches_affine_oracle() {
+    forall(200, |rng| {
+        let pat = random_pattern(rng);
+        let mut st = SsrState::new(pat);
+        for i2 in 0..pat.reps2 as i64 {
+            for i1 in 0..pat.reps1 as i64 {
+                for i0 in 0..pat.reps0 as i64 {
+                    let want = (pat.base as i64
+                        + i2 * pat.stride2 as i64
+                        + i1 * pat.stride1 as i64
+                        + i0 * pat.stride0 as i64) as u32;
+                    let got = st.next_addr();
+                    if got != want {
+                        return Err(format!(
+                            "pattern {pat:?} at ({i2},{i1},{i0}): got {got:#x}, want {want:#x}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Negative strides walk backwards through each dimension.
+#[test]
+fn ssr_negative_strides_walk_backwards() {
+    let pat = SsrPattern {
+        base: 0x1000,
+        stride0: -8,
+        reps0: 3,
+        stride1: -64,
+        reps1: 2,
+        stride2: 0,
+        reps2: 1,
+        write: false,
+    };
+    let mut st = SsrState::new(pat);
+    let addrs: Vec<u32> = (0..6).map(|_| st.next_addr()).collect();
+    assert_eq!(addrs, [0x1000, 0xFF8, 0xFF0, 0xFC0, 0xFB8, 0xFB0]);
+}
+
+/// Wrap order: i0 exhausts before i1 advances, i1 before i2.
+#[test]
+fn ssr_wrap_order_is_innermost_first() {
+    let pat = SsrPattern::read3d(0, 1, 2, 100, 3, 10000, 2);
+    let mut st = SsrState::new(pat);
+    let addrs: Vec<u32> = (0..12).map(|_| st.next_addr()).collect();
+    assert_eq!(
+        addrs,
+        [0, 1, 100, 101, 200, 201, 10000, 10001, 10100, 10101, 10200, 10201]
+    );
+}
+
+/// One beat past the pattern must panic — both walkers, same message.
+#[test]
+#[should_panic(expected = "SSR stream exhausted")]
+fn ssr_walker_panics_on_exhaustion() {
+    let mut st = SsrState::new(SsrPattern::read2d(0x100, 8, 2, 16, 2));
+    for _ in 0..4 {
+        st.next_addr();
+    }
+    st.next_addr();
+}
+
+/// The decode-time stream (flat fast path or fallback walk) must agree
+/// with the reference walker beat-for-beat on arbitrary patterns.
+#[test]
+fn ssr_stream_fast_path_matches_walker() {
+    forall(200, |rng| {
+        // mix arbitrary patterns with explicitly-contiguous ones so the
+        // Flat arm is guaranteed coverage
+        let pat = if rng.bool() {
+            random_pattern(rng)
+        } else {
+            let n = rng.range(1, 9) as u32;
+            let blocks = rng.range(1, 5) as u32;
+            SsrPattern::read2d(0x2000, 8, n, 8 * n as i32, blocks)
+        };
+        let mut fast = SsrStream::new(pat);
+        let mut slow = SsrState::new(pat);
+        if fast.is_write() != pat.write {
+            return Err("write flag diverges".into());
+        }
+        for k in 0..pat.beats() {
+            let f = fast.next_addr();
+            let s = slow.next_addr();
+            if f != s {
+                return Err(format!("pattern {pat:?} beat {k}: fast {f:#x} != walk {s:#x}"));
             }
         }
         Ok(())
