@@ -1,8 +1,12 @@
 //! Fig. 8: end-to-end runtime and energy, baseline vs softmax-optimized,
 //! on the 16-cluster Occamy-style system — served through the unified
-//! execution engine's `Backend` API (analytic backend).
-use vexp::exec::{AnalyticBackend, Backend, Request};
-use vexp::model::config::ALL_MODELS;
+//! execution engine's `Backend` API (analytic backend) — plus the
+//! beyond-paper serving extension: a prefill+decode sweep (per-token
+//! decode cost over KV length) and a continuously-batched serving
+//! summary (TTFT / per-token latency / tokens/s).
+use vexp::exec::{AnalyticBackend, Backend, Engine, Request};
+use vexp::model::config::{ALL_MODELS, GPT2_SMALL, GPT3_XL, VIT_BASE};
+use vexp::model::Phase;
 
 fn main() {
     let mut backend = AnalyticBackend::new();
@@ -17,4 +21,67 @@ fn main() {
             b.energy_mj(), o.energy_mj(), b.energy_pj / o.energy_pj);
     }
     println!("(paper: GPT-2 5.8x/3.6x, GPT-3 2.9x/1.7x, ViT-B 1.9x/1.4x, ViT-H 1.4x/1.2x)");
+
+    // --- beyond paper: decode-phase per-token cost over KV length --------
+    println!();
+    println!("Decode sweep (beyond paper) — one-token KV-cache step, optimized kernels:");
+    println!("{:12} {:>8} {:>12} {:>10} {:>10} {:>10}",
+        "model", "KV len", "cyc/token", "us/token", "tok/s", "uJ/token");
+    for cfg in [GPT2_SMALL, GPT3_XL] {
+        for kv in [256u32, 1024, 2048] {
+            let r = backend.estimate_phase(&Request::new(0, cfg), Phase::Decode { kv_len: kv });
+            println!(
+                "{:12} {:>8} {:>12.0} {:>10.1} {:>10.1} {:>10.2}",
+                cfg.name,
+                kv,
+                r.cycles,
+                r.cycles / 1e3,
+                1e9 / r.cycles,
+                r.energy_pj / 1e6
+            );
+        }
+    }
+
+    // --- beyond paper: prefill vs decode phase split ---------------------
+    println!();
+    println!("Phase split at a 512-token prompt (optimized kernels):");
+    println!("{:12} {:>12} {:>12} {:>10}", "model", "prefill ms", "decode us", "dma share");
+    for cfg in [GPT2_SMALL, GPT3_XL] {
+        let p = backend.estimate_phase(&Request::new(0, cfg), Phase::Prefill { prompt: 512 });
+        let d = backend.estimate_phase(&Request::new(0, cfg), Phase::Decode { kv_len: 512 });
+        println!(
+            "{:12} {:>12.2} {:>12.1} {:>9.0}%",
+            cfg.name,
+            p.latency_ms(),
+            d.cycles / 1e3,
+            100.0 * d.dma_cycles / d.cycles
+        );
+    }
+
+    // --- beyond paper: continuously-batched serving summary --------------
+    let mut engine = Engine::new();
+    let mut gpt2 = GPT2_SMALL;
+    gpt2.seq = 256;
+    engine.submit_request(Request::new(0, gpt2).with_tokens(16));
+    engine.submit_request(Request::new(0, VIT_BASE).arriving_at(1));
+    engine.submit_request(Request::new(0, gpt2).with_tokens(8).arriving_at(2));
+    let report = engine.serve_continuous(&mut backend);
+    println!();
+    println!(
+        "Continuous batching (3 tenants, analytic backend): {} iterations, {} tokens, {:.1} tok/s",
+        report.iterations,
+        report.total_tokens(),
+        report.tokens_per_s()
+    );
+    for r in &report.per_request {
+        println!(
+            "  req {:>2} {:12}: TTFT {:>8.3} ms, {:>4} tokens, {:>8.1} us/token, {:>7.3} mJ",
+            r.request_id,
+            r.model,
+            r.ttft_ms(),
+            r.tokens,
+            r.token_latency_us(),
+            r.energy_mj()
+        );
+    }
 }

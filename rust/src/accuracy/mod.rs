@@ -1,5 +1,10 @@
 //! Error statistics for the VEXP approximation (paper §V-A, Table IV).
 
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 use crate::bf16::Bf16;
 use crate::vexp::exp_unit;
 

@@ -7,6 +7,11 @@
 //! BF16; subnormal results flush to zero (the paper's §IV-A BF16
 //! simplification relative to IEEE-754).
 
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 /// A BF16 value stored as its raw bit pattern.
 ///
 /// `Bf16` is `Copy` + `repr(transparent)` over `u16` so SIMD registers can

@@ -24,13 +24,15 @@ pub struct KernelRates {
     pub gemm_cyc_per_flop: f64,
     /// Cluster cycles per GEMM FLOP, plain scalar code (Fig. 1 left bars).
     pub gemm_unopt_cyc_per_flop: f64,
-    /// Cluster cycles per softmax element, per variant.
+    /// Cluster cycles per softmax element, baseline variant.
     pub softmax_base_cyc: f64,
+    /// Cluster cycles per softmax element, VFEXP-optimized variant.
     pub softmax_opt_cyc: f64,
     /// Cluster energy per GEMM FLOP (pJ).
     pub gemm_pj_per_flop: f64,
-    /// Cluster energy per softmax element (pJ), per variant.
+    /// Cluster energy per softmax element (pJ), baseline variant.
     pub softmax_base_pj: f64,
+    /// Cluster energy per softmax element (pJ), optimized variant.
     pub softmax_opt_pj: f64,
 }
 
@@ -73,25 +75,33 @@ impl KernelRates {
 /// End-to-end estimate for one model configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct E2eEstimate {
+    /// Total cycles of the estimated pass.
     pub cycles: f64,
+    /// Total energy in pJ.
     pub energy_pj: f64,
+    /// Cycles attributed to softmax work.
     pub softmax_cycles: f64,
+    /// Cycles attributed to GEMM work.
     pub gemm_cycles: f64,
     /// Attention-kernel cycles (QK^T + partial softmax + P·V) — the
     /// FlashAttention-2 scope the cycle-sim backend cross-checks.
     pub attn_cycles: f64,
+    /// Cycles attributed to DMA streaming.
     pub dma_cycles: f64,
 }
 
 impl E2eEstimate {
+    /// Latency in milliseconds at the 1 GHz cluster clock.
     pub fn latency_ms(&self) -> f64 {
         self.cycles / 1e6
     }
 
+    /// Energy in millijoules.
     pub fn energy_mj(&self) -> f64 {
         self.energy_pj / 1e9
     }
 
+    /// Fraction of cycles spent in softmax.
     pub fn softmax_share(&self) -> f64 {
         self.softmax_cycles / self.cycles
     }
@@ -99,13 +109,18 @@ impl E2eEstimate {
 
 /// The 16-cluster Occamy-style estimator.
 pub struct SystemEstimator {
+    /// Calibrated kernel rates.
     pub rates: KernelRates,
+    /// Clusters in the target system.
     pub clusters: usize,
+    /// Per-cluster DMA timing model.
     pub dma: DmaModel,
+    /// Shared HBM bandwidth model.
     pub hbm: HbmModel,
 }
 
 impl SystemEstimator {
+    /// Estimator for the paper's 16-cluster system at the given rates.
     pub fn new(rates: KernelRates) -> Self {
         SystemEstimator {
             rates,
@@ -125,7 +140,21 @@ impl SystemEstimator {
         softmax_optimized: bool,
         gemm_optimized: bool,
     ) -> E2eEstimate {
-        let ops = WorkloadOps::of(cfg);
+        self.estimate_ops(cfg, &WorkloadOps::of(cfg), softmax_optimized, gemm_optimized)
+    }
+
+    /// Rate an explicit workload (any inference phase) with the same
+    /// head-mapping / double-buffered-DMA composition as
+    /// [`SystemEstimator::estimate`]. The decode phase flows through
+    /// here with its GEMV-shaped counts, where the `max(compute, dma)`
+    /// term exposes the bandwidth-bound regime.
+    pub fn estimate_ops(
+        &self,
+        cfg: &TransformerConfig,
+        ops: &WorkloadOps,
+        softmax_optimized: bool,
+        gemm_optimized: bool,
+    ) -> E2eEstimate {
         let l = ops.per_layer;
         let r = &self.rates;
         let gemm_rate = if gemm_optimized { r.gemm_cyc_per_flop } else { r.gemm_unopt_cyc_per_flop };
@@ -243,6 +272,33 @@ mod tests {
         );
         assert!(opt_gemm.softmax_share() > 0.2, "share {}", opt_gemm.softmax_share());
         assert!(all_opt.softmax_share() < 0.1, "share {}", all_opt.softmax_share());
+    }
+
+    #[test]
+    fn decode_dma_share_dwarfs_prefill_dma_share() {
+        // The decode phase streams the full weight set for one token of
+        // compute: its DMA share must sit far above prefill's.
+        let est = SystemEstimator::new(rates());
+        let pre = est.estimate_ops(
+            &GPT2_SMALL,
+            &WorkloadOps::prefill(&GPT2_SMALL, 2048),
+            true,
+            true,
+        );
+        let dec = est.estimate_ops(
+            &GPT2_SMALL,
+            &WorkloadOps::decode(&GPT2_SMALL, 2048),
+            true,
+            true,
+        );
+        let pre_share = pre.dma_cycles / pre.cycles;
+        let dec_share = dec.dma_cycles / dec.cycles;
+        assert!(
+            dec_share > 10.0 * pre_share,
+            "decode DMA share {dec_share:.4} vs prefill {pre_share:.4}"
+        );
+        // and a decode step is orders of magnitude cheaper than prefill
+        assert!(dec.cycles * 100.0 < pre.cycles);
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Multi-cluster coordinator (paper §V-D, Fig. 7): head→cluster mapping,
-//! K/V tile planning with double buffering, and the end-to-end
-//! runtime/energy estimator driving the Fig. 1 and Fig. 8 benches.
+//! K/V tile planning for prefill and decode, the KV-cache residency
+//! model, and the end-to-end runtime/energy estimator driving the
+//! Fig. 1 and Fig. 8 benches.
 
 pub mod estimate;
 pub mod schedule;
 
 pub use estimate::{E2eEstimate, KernelRates, SystemEstimator};
-pub use schedule::{HeadMap, TilePlan, CLUSTERS};
+pub use schedule::{DecodePlan, HeadMap, KvPlacement, KvResidency, TilePlan, CLUSTERS};

@@ -1,5 +1,7 @@
-//! Scheduling primitives: head→cluster assignment and SPM tile planning.
+//! Scheduling primitives: head→cluster assignment, SPM tile planning
+//! for both inference phases, and the KV-cache residency model.
 
+use crate::kernels::flash_attention::fa_decode_footprint;
 use crate::model::TransformerConfig;
 use crate::sim::SPM_BYTES;
 
@@ -11,11 +13,14 @@ pub const CLUSTERS: usize = 16;
 /// ceil(H/C) rounds per layer.
 #[derive(Clone, Debug)]
 pub struct HeadMap {
+    /// Attention heads per layer.
     pub heads: u32,
+    /// Clusters available to the request.
     pub clusters: u32,
 }
 
 impl HeadMap {
+    /// Map `heads` attention heads onto `clusters` clusters.
     pub fn new(heads: u32, clusters: u32) -> Self {
         assert!(heads > 0 && clusters > 0);
         HeadMap { heads, clusters }
@@ -32,6 +37,7 @@ impl HeadMap {
         h / self.clusters
     }
 
+    /// Sequential head waves per layer (`ceil(heads / clusters)`).
     pub fn rounds(&self) -> u32 {
         self.heads.div_ceil(self.clusters)
     }
@@ -48,14 +54,20 @@ impl HeadMap {
 /// capacity under double buffering constraints").
 #[derive(Clone, Copy, Debug)]
 pub struct TilePlan {
+    /// Query sequence length (rows of the head).
     pub sq: u32,
+    /// Key/value sequence length (columns of the head).
     pub sk: u32,
+    /// Head dimension.
     pub d: u32,
+    /// Resident query-block rows.
     pub bq: u32,
+    /// K/V tile length (double-buffered pairs stream through SPM).
     pub bk: u32,
 }
 
 impl TilePlan {
+    /// Plan the prefill head tiling for a model configuration.
     pub fn plan(cfg: &TransformerConfig) -> Self {
         let d = cfg.d_head();
         let sq = cfg.seq;
@@ -93,6 +105,7 @@ impl TilePlan {
         q + kv + s + o + stats + 0x1400 // + constant pool / scratch
     }
 
+    /// Number of K/V tiles per head pass.
     pub fn tiles(&self) -> u32 {
         self.sk.div_ceil(self.bk)
     }
@@ -100,6 +113,126 @@ impl TilePlan {
     /// Bytes DMA'd per K/V tile (K tile + V tile, BF16).
     pub fn tile_bytes(&self) -> u64 {
         2 * (2 * self.bk as u64 * self.d as u64)
+    }
+}
+
+/// Tile plan for the single-query decode slice (DESIGN.md §10): the KV
+/// window one cluster processes per cached-program run.
+///
+/// The slice shape is a function of the model's head dimension only —
+/// *not* of the current KV-cache length — so a request's decode program
+/// is compiled once and a growing cache merely scales how many times
+/// the slice repeats per token ([`DecodePlan::kv_tile_factor`]).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodePlan {
+    /// Head dimension.
+    pub d: u32,
+    /// K/V tile length inside the slice (one tile per core wave).
+    pub bk: u32,
+    /// KV positions covered by one slice run.
+    pub sk_slice: u32,
+    /// Tiles per slice (`sk_slice / bk`), split across the eight cores.
+    pub tiles: u32,
+}
+
+impl DecodePlan {
+    /// Plan the decode slice for a model: start from two tiles per core
+    /// (the double-buffered pair each core streams) and halve the window
+    /// until the split-KV working set fits the SPM.
+    pub fn plan(cfg: &TransformerConfig) -> Self {
+        let d = cfg.d_head();
+        let bk = 16u32;
+        let mut tiles = 16u32;
+        while tiles > 1 && fa_decode_footprint(tiles * bk, d, bk) > SPM_BYTES as u32 {
+            tiles /= 2;
+        }
+        assert!(
+            fa_decode_footprint(tiles * bk, d, bk) <= SPM_BYTES as u32,
+            "DecodePlan: decode slice for d_head={d} exceeds the {SPM_BYTES}-byte SPM \
+             even at a single {bk}-long tile",
+        );
+        DecodePlan { d, bk, sk_slice: tiles * bk, tiles }
+    }
+
+    /// Slice repetitions needed to cover a KV-cache of length `kv_len`.
+    pub fn kv_tile_factor(&self, kv_len: u32) -> u32 {
+        kv_len.max(1).div_ceil(self.sk_slice)
+    }
+
+    /// HBM bytes of K plus V covered by one slice run (BF16).
+    pub fn slice_kv_bytes(&self) -> u64 {
+        2 * 2 * self.sk_slice as u64 * self.d as u64
+    }
+}
+
+/// Where a request's KV-cache lives between decode steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvPlacement {
+    /// The cluster's share of the cache fits in SPM alongside the
+    /// decode working set: only the newly appended K/V row streams per
+    /// token.
+    SpmResident,
+    /// The cache spilled to HBM: the cluster restreams its whole share
+    /// every decode step (the bandwidth-bound regime).
+    HbmSpill,
+}
+
+/// KV-cache residency decision for one request on its cluster share
+/// (DESIGN.md §10). A cluster serves `ceil(heads/clusters)` heads and
+/// must hold K and V (BF16) of length `kv_len` for each of them **in
+/// every layer** to avoid restreaming between decode steps — each
+/// layer's cache is distinct, so the whole-model share is what
+/// competes for the SPM budget.
+#[derive(Clone, Copy, Debug)]
+pub struct KvResidency {
+    /// Heads whose cache one cluster holds (= head rounds).
+    pub heads_per_cluster: u32,
+    /// Bytes of K+V cache per cluster at the analyzed length, summed
+    /// over all layers.
+    pub kv_bytes_per_cluster: u64,
+    /// SPM bytes left after the decode slice working set.
+    pub spm_budget: u64,
+    /// The placement verdict.
+    pub placement: KvPlacement,
+}
+
+impl KvResidency {
+    /// Analyze residency for `cfg` at KV length `kv_len` on a share of
+    /// `clusters` clusters.
+    pub fn analyze(cfg: &TransformerConfig, kv_len: u32, clusters: u32) -> Self {
+        let d = cfg.d_head();
+        let heads_per_cluster = HeadMap::new(cfg.heads, clusters.max(1)).rounds();
+        let kv_bytes_per_cluster = cfg.layers as u64
+            * heads_per_cluster as u64
+            * kv_len as u64
+            * d as u64
+            * 2
+            * 2;
+        let plan = DecodePlan::plan(cfg);
+        let spm_budget = SPM_BYTES as u64
+            - fa_decode_footprint(plan.sk_slice, plan.d, plan.bk) as u64;
+        let placement = if kv_bytes_per_cluster <= spm_budget {
+            KvPlacement::SpmResident
+        } else {
+            KvPlacement::HbmSpill
+        };
+        KvResidency { heads_per_cluster, kv_bytes_per_cluster, spm_budget, placement }
+    }
+
+    /// HBM bytes this cluster streams per decode step for KV traffic,
+    /// over all layers: the appended K/V rows when resident, the whole
+    /// share when spilled.
+    pub fn hbm_bytes_per_step(&self, cfg: &TransformerConfig) -> u64 {
+        match self.placement {
+            KvPlacement::SpmResident => {
+                cfg.layers as u64
+                    * self.heads_per_cluster as u64
+                    * 2
+                    * 2
+                    * cfg.d_head() as u64
+            }
+            KvPlacement::HbmSpill => self.kv_bytes_per_cluster,
+        }
     }
 }
 
@@ -202,6 +335,65 @@ mod tests {
         );
         assert!(plan.bk < 64, "bk must shrink below 64, got {}", plan.bk);
         assert!(plan.bk >= 16);
+    }
+
+    #[test]
+    fn decode_plans_fit_spm_and_shrink_with_head_dim() {
+        use crate::kernels::flash_attention::fa_decode_footprint;
+        for cfg in [GPT2_SMALL, GPT3_XL, VIT_BASE] {
+            let plan = DecodePlan::plan(&cfg);
+            assert!(
+                fa_decode_footprint(plan.sk_slice, plan.d, plan.bk) <= SPM_BYTES as u32,
+                "{}: decode slice exceeds SPM",
+                cfg.name
+            );
+            assert_eq!(plan.sk_slice, plan.tiles * plan.bk);
+            assert!(plan.tiles >= 1);
+        }
+        // d_head 128 needs a smaller window than d_head 64
+        let small = DecodePlan::plan(&GPT2_SMALL);
+        let big = DecodePlan::plan(&GPT3_XL);
+        assert!(big.sk_slice <= small.sk_slice);
+    }
+
+    #[test]
+    fn kv_tile_factor_scales_with_cache_length() {
+        let plan = DecodePlan::plan(&GPT2_SMALL);
+        assert_eq!(plan.kv_tile_factor(1), 1);
+        assert_eq!(
+            plan.kv_tile_factor(4 * plan.sk_slice),
+            4,
+            "four windows for a 4x cache"
+        );
+    }
+
+    #[test]
+    fn kv_residency_spills_once_the_whole_model_share_outgrows_spm() {
+        // 16-way GPT-2, 16-token context: 12 layers x 1 head x 16 x 64
+        // x 4 B = 48 KiB fits the post-working-set budget — resident
+        let short = KvResidency::analyze(&GPT2_SMALL, 16, 16);
+        assert_eq!(short.placement, KvPlacement::SpmResident);
+        // at 128 tokens the whole-model share is 384 KiB > 128 KiB SPM:
+        // the wall hits early because every layer's cache is distinct
+        let medium = KvResidency::analyze(&GPT2_SMALL, 128, 16);
+        assert_eq!(medium.placement, KvPlacement::HbmSpill);
+        // one cluster holding all 12 heads at 4096 tokens: 144 MiB
+        let long = KvResidency::analyze(&GPT2_SMALL, 4096, 1);
+        assert_eq!(long.placement, KvPlacement::HbmSpill);
+        assert!(
+            long.hbm_bytes_per_step(&GPT2_SMALL) > short.hbm_bytes_per_step(&GPT2_SMALL),
+            "spilled caches restream, resident caches append"
+        );
+        assert_eq!(
+            long.hbm_bytes_per_step(&GPT2_SMALL),
+            long.kv_bytes_per_cluster
+        );
+        // resident append traffic covers every layer's K/V row
+        assert_eq!(
+            short.hbm_bytes_per_step(&GPT2_SMALL),
+            12 * 1 * 4 * 64,
+            "layers x heads x (K+V) x d bytes"
+        );
     }
 
     #[test]

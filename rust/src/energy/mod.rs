@@ -7,6 +7,11 @@
 //! emerge from simulation (Table III: GEMM 3.96→4.04 pJ/op, EXP
 //! 3433→6.39 pJ/op), rather than hard-coding the headline ratios.
 
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 pub mod area;
 pub mod power;
 

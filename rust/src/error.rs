@@ -3,6 +3,11 @@
 //! a `Context` extension trait covering the handful of patterns the
 //! runtime and CLI need.
 
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 use std::fmt;
 
 /// A string-backed error with an optional cause chain (flattened).

@@ -1,19 +1,23 @@
 //! The analytic backend: `coordinator::estimate` behind the [`Backend`]
 //! trait.
 //!
-//! `estimate` is the existing calibrated-rate model (Fig. 1/Fig. 8).
-//! `execute` rates a [`CompiledBatch`]'s slice workload with the same
-//! kernel rates and DMA/HBM-contention model the estimator uses, so a
-//! serving layer can admission-control a batch in microseconds and then
-//! validate the decision against the cycle-accurate backend.
+//! `estimate` / `estimate_phase` are the existing calibrated-rate model
+//! (Fig. 1/Fig. 8, extended to prefill/decode phases). `execute` rates
+//! a [`CompiledBatch`]'s slice workload with the same kernel rates and
+//! DMA/HBM-contention model the estimator uses, so a serving layer can
+//! admission-control a batch in microseconds and then validate the
+//! decision against the cycle-accurate backend.
 
 use super::batch::CompiledBatch;
 use super::report::{BatchReport, RunReport};
 use super::{Backend, Request};
 use crate::coordinator::{KernelRates, SystemEstimator};
 use crate::energy::power::DMA_PJ_PER_BYTE;
+use crate::model::{Phase, WorkloadOps};
 
+/// Rate-model backend: microsecond-cost estimates and batch ratings.
 pub struct AnalyticBackend {
+    /// The calibrated estimator this backend wraps.
     pub est: SystemEstimator,
 }
 
@@ -23,6 +27,7 @@ impl AnalyticBackend {
         Self::with_rates(KernelRates::calibrate())
     }
 
+    /// Build the backend from explicit (e.g. cached) kernel rates.
     pub fn with_rates(rates: KernelRates) -> Self {
         AnalyticBackend { est: SystemEstimator::new(rates) }
     }
@@ -52,7 +57,30 @@ impl Backend for AnalyticBackend {
             attn_cycles: e.attn_cycles,
             dma_cycles: e.dma_cycles,
             clusters_used: self.est.clusters,
-            per_cluster: vec![],
+            ..Default::default()
+        }
+    }
+
+    fn estimate_phase(&mut self, req: &Request, phase: Phase) -> RunReport {
+        let ops = WorkloadOps::for_phase(&req.cfg, phase);
+        let e = self
+            .est
+            .estimate_ops(&req.cfg, &ops, req.softmax_optimized, req.gemm_optimized);
+        let tokens = if phase.is_decode() { 1 } else { 0 };
+        RunReport {
+            backend: self.name(),
+            request_id: req.id,
+            model: req.cfg.name,
+            cycles: e.cycles,
+            energy_pj: e.energy_pj,
+            softmax_cycles: e.softmax_cycles,
+            gemm_cycles: e.gemm_cycles,
+            attn_cycles: e.attn_cycles,
+            dma_cycles: e.dma_cycles,
+            clusters_used: self.est.clusters,
+            tokens,
+            decode_token_cycles: if phase.is_decode() { e.cycles } else { 0.0 },
+            ..Default::default()
         }
     }
 
@@ -77,9 +105,14 @@ impl Backend for AnalyticBackend {
             } else {
                 (r.softmax_base_cyc, r.softmax_base_pj)
             };
-            let rounds = cr.rounds as f64;
-            let gemm_cycles = rounds * cr.cal.attn_flops() as f64 * gemm_rate;
-            let softmax_cycles = rounds * cr.cal.softmax_elems() as f64 * sm_cyc;
+            let reps = cr.reps as f64;
+            let proj = cr.proj_flops_per_cluster as f64;
+            let gemm_cycles = (reps * cr.cal.attn_flops() as f64 + proj) * gemm_rate;
+            let softmax_cycles = reps * cr.cal.softmax_elems() as f64 * sm_cyc;
+            // attention scope excludes the projection leg (RunReport
+            // contract: attn_cycles is the FlashAttention slice work)
+            let attn_cycles =
+                reps * cr.cal.attn_flops() as f64 * gemm_rate + softmax_cycles;
             let compute = gemm_cycles + softmax_cycles;
             let dma =
                 self.est.dma.cycles(cr.hbm_bytes_per_cluster) as f64 * contention;
@@ -91,8 +124,8 @@ impl Backend for AnalyticBackend {
                 r.gemm_pj_per_flop * 4.0
             };
             let energy_pj = n_cl
-                * (rounds * cr.cal.attn_flops() as f64 * gemm_pj
-                    + rounds * cr.cal.softmax_elems() as f64 * sm_pj
+                * ((reps * cr.cal.attn_flops() as f64 + proj) * gemm_pj
+                    + reps * cr.cal.softmax_elems() as f64 * sm_pj
                     + cr.hbm_bytes_per_cluster as f64 * DMA_PJ_PER_BYTE);
             makespan = makespan.max(cycles as u64);
             hbm_bytes += cr.hbm_bytes_per_cluster * cr.clusters.len() as u64;
@@ -104,10 +137,10 @@ impl Backend for AnalyticBackend {
                 energy_pj,
                 softmax_cycles,
                 gemm_cycles,
-                attn_cycles: compute,
+                attn_cycles,
                 dma_cycles: dma,
                 clusters_used: cr.clusters.len(),
-                per_cluster: vec![],
+                ..Default::default()
             });
         }
         BatchReport {

@@ -2,46 +2,64 @@
 //! 16-cluster system.
 //!
 //! The scheduler partitions the clusters among requests proportionally
-//! to their attention work (each request gets a disjoint, contiguous
-//! cluster set, at least one cluster each), maps each request's heads
-//! onto its clusters with [`HeadMap`] rounds, and compiles — through the
-//! shared [`ProgramCache`] — one FlashAttention-2 *head-tile slice*
-//! program per request at its [`TilePlan`]'s tile sizes. Executing the
-//! resulting [`CompiledBatch`] on a backend overlaps one request's DMA
-//! with another's compute through the existing HBM-contention model:
-//! every active cluster streams its own K/V tiles while all of them
-//! share the group crossbar.
+//! to their work (each request gets a disjoint, contiguous cluster set,
+//! at least one cluster each), maps each request's heads onto its
+//! clusters with [`HeadMap`] rounds, and compiles — through the shared
+//! [`ProgramCache`] — one slice program per request: a FlashAttention-2
+//! *head-tile slice* for prefill, the single-query *decode slice* for
+//! KV-cache decode. Executing the resulting [`CompiledBatch`] on a
+//! backend overlaps one request's DMA with another's compute through
+//! the existing HBM-contention model: every active cluster streams its
+//! own K/V tiles while all of them share the group crossbar.
 //!
-//! The batch workload scope is deliberately a *slice* (one Q-block over
-//! two K/V tiles per head round): it is the unit both backends can honor
-//! — the cycle-accurate simulator by actually running it, the analytic
-//! backend by rating it — and the unit the cache can share across
-//! requests of the same model shape.
+//! Two compilation scopes share this machinery:
+//!
+//! - [`BatchScheduler::compile`] — the *calibration slice* scope (one
+//!   Q-block over two K/V tiles per head round), the unit both backends
+//!   can honor directly and the unit the cache shares across requests
+//!   of the same model shape;
+//! - [`BatchScheduler::compile_phased`] — the *serving iteration* scope
+//!   used by the continuous-batching loop: `reps` scales the cached
+//!   slice to the full per-iteration work of the request's phase (all
+//!   layers, all head rounds, the whole prompt or KV-cache), and the
+//!   per-cluster HBM bytes follow the phase's weight/activation/KV
+//!   traffic with the [`KvResidency`] placement rule.
 
 use super::program::{KernelKind, Program, ProgramCache, ProgramKey};
 use super::Request;
-use crate::coordinator::{HeadMap, TilePlan, CLUSTERS};
-use crate::kernels::flash_attention::build_fa_program;
-use crate::model::WorkloadOps;
+use crate::coordinator::{DecodePlan, HeadMap, KvResidency, TilePlan, CLUSTERS};
+use crate::kernels::flash_attention::{build_fa_decode_program, build_fa_program};
+use crate::model::{Phase, WorkloadOps};
 use crate::sim::CORES_PER_CLUSTER;
 
 /// The calibration slice shape one batched head round executes: a
-/// `sq × sk` FlashAttention-2 forward with K/V tile length `bk`.
+/// `sq × sk` FlashAttention forward with K/V tile length `bk`. The
+/// decode slice is the single-query case (`sq == 1`).
 #[derive(Clone, Copy, Debug)]
 pub struct CalShape {
+    /// Query rows in the slice (1 for decode).
     pub sq: u32,
+    /// KV positions the slice covers.
     pub sk: u32,
+    /// Head dimension.
     pub d: u32,
+    /// K/V tile length.
     pub bk: u32,
 }
 
 impl CalShape {
-    /// Derive the slice shape from a request's tile plan: a small Q
-    /// block (16 rows — two per core) over two double-buffered K/V
-    /// tiles, at the request's head dimension.
+    /// Derive the prefill slice shape from a request's tile plan: a
+    /// small Q block (16 rows — two per core) over two double-buffered
+    /// K/V tiles, at the request's head dimension.
     pub fn for_plan(plan: &TilePlan) -> Self {
         let bk = plan.bk;
         CalShape { sq: 16.min(plan.bq), sk: 2 * bk, d: plan.d, bk }
+    }
+
+    /// The decode slice shape of a decode plan: one query row over the
+    /// plan's KV window.
+    pub fn for_decode(plan: &DecodePlan) -> Self {
+        CalShape { sq: 1, sk: plan.sk_slice, d: plan.d, bk: plan.bk }
     }
 
     /// GEMM FLOPs in the slice (QK^T + P·V, 2 FLOPs per MAC).
@@ -60,30 +78,49 @@ impl CalShape {
     }
 }
 
-/// One request, compiled and placed: its cluster set, head rounds, the
-/// cached slice program, and the DMA bytes each of its clusters streams.
+/// One request, compiled and placed: its phase, cluster set, head
+/// rounds, slice repetitions, the cached slice program, and the DMA
+/// bytes each of its clusters streams.
 #[derive(Clone, Debug)]
 pub struct CompiledRequest {
+    /// The scheduled request.
     pub req: Request,
+    /// Which inference phase this compilation covers.
+    pub phase: Phase,
+    /// The prefill head tiling the slice was derived from (at the
+    /// phase's prompt length for prefill compilations; the model-shape
+    /// plan for decode, where it is informational only).
     pub plan: TilePlan,
+    /// The slice shape the cached program implements.
     pub cal: CalShape,
     /// Cluster indices owned by this request (disjoint across requests).
     pub clusters: Vec<usize>,
     /// Sequential head rounds each owned cluster executes.
     pub rounds: u32,
+    /// Total slice repetitions per owned cluster for this batch scope
+    /// (`rounds` in the calibration scope; `layers × rounds × tiles`
+    /// in the serving scope).
+    pub reps: u32,
+    /// The cached slice program.
     pub program: Program,
-    /// HBM bytes one owned cluster streams over all its rounds.
+    /// HBM bytes one owned cluster streams over the batch scope.
     pub hbm_bytes_per_cluster: u64,
+    /// Projection-GEMM FLOPs per owned cluster, priced by the backends
+    /// at their measured/calibrated GEMM rate (serving scope only;
+    /// zero in the calibration scope).
+    pub proj_flops_per_cluster: u64,
 }
 
 /// A scheduled, compiled batch ready for any [`super::Backend`].
 #[derive(Clone, Debug)]
 pub struct CompiledBatch {
+    /// Compiled requests in submission order.
     pub requests: Vec<CompiledRequest>,
     /// Total clusters in the target system.
     pub n_clusters: usize,
-    /// Cache hits/misses incurred compiling this batch.
+    /// Cache hits incurred compiling this batch.
     pub cache_hits: u64,
+    /// Cache misses incurred compiling this batch.
     pub cache_misses: u64,
 }
 
@@ -92,11 +129,17 @@ impl CompiledBatch {
     pub fn active_clusters(&self) -> usize {
         self.requests.iter().map(|r| r.clusters.len()).sum()
     }
+
+    /// The empty batch for a system of `n_clusters`.
+    pub fn empty(n_clusters: usize) -> Self {
+        CompiledBatch { requests: vec![], n_clusters, cache_hits: 0, cache_misses: 0 }
+    }
 }
 
 /// Packs concurrent requests onto the cluster grid.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchScheduler {
+    /// Clusters in the target system.
     pub clusters: usize,
 }
 
@@ -107,6 +150,7 @@ impl Default for BatchScheduler {
 }
 
 impl BatchScheduler {
+    /// Scheduler for a system of `clusters` clusters.
     pub fn new(clusters: usize) -> Self {
         assert!(clusters > 0);
         BatchScheduler { clusters }
@@ -117,23 +161,33 @@ impl BatchScheduler {
     /// (and at most `heads` — more would idle), remaining clusters go
     /// greedily to the request with the highest work-per-cluster.
     pub fn assign(&self, reqs: &[Request]) -> Vec<Vec<usize>> {
-        assert!(!reqs.is_empty(), "empty batch");
-        assert!(
-            reqs.len() <= self.clusters,
-            "{} requests exceed {} clusters; split the batch",
-            reqs.len(),
-            self.clusters
-        );
         let work: Vec<f64> = reqs
             .iter()
             .map(|r| WorkloadOps::of(&r.cfg).total().attn_flops as f64)
             .collect();
-        let mut counts = vec![1usize; reqs.len()];
-        for _ in reqs.len()..self.clusters {
-            // highest remaining per-cluster work, capped at head count
+        let caps: Vec<usize> = reqs.iter().map(|r| r.cfg.heads as usize).collect();
+        self.assign_by_work(&work, &caps)
+    }
+
+    /// Proportional cluster assignment over explicit work weights with
+    /// per-request cluster caps — the shared core of [`Self::assign`]
+    /// and the phase-aware serving scheduler. Requests receive disjoint
+    /// contiguous cluster index ranges, each at least one cluster.
+    pub fn assign_by_work(&self, work: &[f64], caps: &[usize]) -> Vec<Vec<usize>> {
+        assert!(!work.is_empty(), "empty batch");
+        assert_eq!(work.len(), caps.len());
+        assert!(
+            work.len() <= self.clusters,
+            "{} requests exceed {} clusters; split the batch",
+            work.len(),
+            self.clusters
+        );
+        let mut counts = vec![1usize; work.len()];
+        for _ in work.len()..self.clusters {
+            // highest remaining per-cluster work, capped per request
             let mut best: Option<usize> = None;
-            for (i, req) in reqs.iter().enumerate() {
-                if counts[i] >= req.cfg.heads as usize {
+            for i in 0..work.len() {
+                if counts[i] >= caps[i].max(1) {
                     continue;
                 }
                 let density = work[i] / counts[i] as f64;
@@ -147,7 +201,7 @@ impl BatchScheduler {
             }
             match best {
                 Some(i) => counts[i] += 1,
-                None => break, // every request saturated at its head count
+                None => break, // every request saturated at its cap
             }
         }
         let mut next = 0usize;
@@ -161,9 +215,14 @@ impl BatchScheduler {
             .collect()
     }
 
-    /// Compile every request's slice program through `cache` and place
-    /// the batch. Hit/miss deltas are recorded on the returned batch.
+    /// Compile every request's calibration slice through `cache` and
+    /// place the batch (the DESIGN.md §8 slice scope). Hit/miss deltas
+    /// are recorded on the returned batch. An empty request list
+    /// compiles to the empty batch.
     pub fn compile(&self, reqs: &[Request], cache: &mut ProgramCache) -> CompiledBatch {
+        if reqs.is_empty() {
+            return CompiledBatch::empty(self.clusters);
+        }
         let assignment = self.assign(reqs);
         let (h0, m0) = (cache.hits, cache.misses);
         let requests = reqs
@@ -185,12 +244,119 @@ impl BatchScheduler {
                 let hbm_bytes_per_cluster = rounds as u64 * cal.hbm_bytes();
                 CompiledRequest {
                     req: *req,
+                    phase: Phase::Prefill { prompt: req.cfg.seq },
                     plan,
                     cal,
                     clusters,
                     rounds,
+                    reps: rounds,
                     program,
                     hbm_bytes_per_cluster,
+                    proj_flops_per_cluster: 0,
+                }
+            })
+            .collect();
+        CompiledBatch {
+            requests,
+            n_clusters: self.clusters,
+            cache_hits: cache.hits - h0,
+            cache_misses: cache.misses - m0,
+        }
+    }
+
+    /// Compile one continuous-batching *iteration*: each live request at
+    /// its current phase, clusters rebalanced by per-iteration work,
+    /// slice repetitions scaled to the full phase work, HBM bytes per
+    /// the phase's traffic and the KV residency rule (DESIGN.md §10).
+    pub fn compile_phased(
+        &self,
+        entries: &[(Request, Phase)],
+        cache: &mut ProgramCache,
+    ) -> CompiledBatch {
+        if entries.is_empty() {
+            return CompiledBatch::empty(self.clusters);
+        }
+        let work: Vec<f64> = entries
+            .iter()
+            .map(|(r, p)| WorkloadOps::for_phase(&r.cfg, *p).total().total_flops() as f64)
+            .collect();
+        let caps: Vec<usize> = entries.iter().map(|(r, _)| r.cfg.heads as usize).collect();
+        let assignment = self.assign_by_work(&work, &caps);
+        let (h0, m0) = (cache.hits, cache.misses);
+        let requests = entries
+            .iter()
+            .zip(assignment)
+            .map(|((req, phase), clusters)| {
+                let n_cl = clusters.len() as u32;
+                let rounds = HeadMap::new(req.cfg.heads, n_cl).rounds();
+                let ops = WorkloadOps::for_phase(&req.cfg, *phase).total();
+                let variant = req.fa_variant();
+                let layers = req.cfg.layers as u64;
+                let proj_flops_per_cluster = ops.proj_flops / n_cl as u64;
+                let (plan, cal, program, slice_factor, hbm_bytes_per_cluster) = match *phase {
+                    Phase::Prefill { prompt } => {
+                        let prompt = prompt.max(1);
+                        let mut pcfg = req.cfg;
+                        pcfg.seq = prompt;
+                        let plan = TilePlan::plan(&pcfg);
+                        let cal = CalShape::for_plan(&plan);
+                        let key = ProgramKey::for_request(
+                            KernelKind::FlashAttention(variant),
+                            &pcfg,
+                            &plan,
+                            CORES_PER_CLUSTER as u32,
+                        );
+                        let program = cache.get_or_build(key, || {
+                            build_fa_program(variant, cal.sq, cal.sk, cal.d, cal.bk)
+                        });
+                        // slices tiling one full S×S head
+                        let slices =
+                            prompt.div_ceil(cal.sq) as u64 * prompt.div_ceil(cal.sk) as u64;
+                        let bytes = (ops.weight_bytes + ops.act_bytes) / n_cl as u64;
+                        (plan, cal, program, slices, bytes)
+                    }
+                    Phase::Decode { kv_len } => {
+                        let dplan = DecodePlan::plan(&req.cfg);
+                        let cal = CalShape::for_decode(&dplan);
+                        let key = ProgramKey::for_decode(
+                            KernelKind::FlashDecode(variant),
+                            &req.cfg,
+                            dplan.sk_slice,
+                            dplan.bk,
+                            CORES_PER_CLUSTER as u32,
+                        );
+                        let program = cache.get_or_build(key, || {
+                            build_fa_decode_program(variant, dplan.sk_slice, dplan.d, dplan.bk)
+                        });
+                        let residency = KvResidency::analyze(&req.cfg, kv_len, n_cl);
+                        // the whole weight set streams once per token;
+                        // whole-model KV traffic follows the residency
+                        // placement (append when resident, restream
+                        // when spilled)
+                        let bytes = ops.weight_bytes / n_cl as u64
+                            + residency.hbm_bytes_per_step(&req.cfg);
+                        (
+                            TilePlan::plan(&req.cfg),
+                            cal,
+                            program,
+                            dplan.kv_tile_factor(kv_len) as u64,
+                            bytes,
+                        )
+                    }
+                };
+                let reps_total = layers * rounds as u64 * slice_factor;
+                let reps = reps_total.min(u32::MAX as u64) as u32;
+                CompiledRequest {
+                    req: *req,
+                    phase: *phase,
+                    plan,
+                    cal,
+                    clusters,
+                    rounds,
+                    reps,
+                    program,
+                    hbm_bytes_per_cluster,
+                    proj_flops_per_cluster,
                 }
             })
             .collect();
@@ -266,6 +432,19 @@ mod tests {
     }
 
     #[test]
+    fn empty_batch_compiles_to_empty() {
+        let sched = BatchScheduler::default();
+        let mut cache = ProgramCache::new();
+        let batch = sched.compile(&[], &mut cache);
+        assert!(batch.requests.is_empty());
+        assert_eq!(batch.n_clusters, CLUSTERS);
+        assert_eq!((batch.cache_hits, batch.cache_misses), (0, 0));
+        let phased = sched.compile_phased(&[], &mut cache);
+        assert!(phased.requests.is_empty());
+        assert_eq!(phased.active_clusters(), 0);
+    }
+
+    #[test]
     fn compile_reuses_programs_across_same_shape_requests() {
         let sched = BatchScheduler::default();
         let mut cache = ProgramCache::new();
@@ -293,6 +472,53 @@ mod tests {
             assert!(cal.sq >= 8 && cal.sq <= 64);
             assert_eq!(cal.sk % cal.bk, 0);
             assert!(cal.attn_flops() > 0 && cal.hbm_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn phased_compile_decode_reps_scale_with_kv_but_reuse_the_program() {
+        let sched = BatchScheduler::default();
+        let mut cache = ProgramCache::new();
+        let req = Request::new(0, GPT2_SMALL);
+        let short = sched.compile_phased(&[(req, Phase::Decode { kv_len: 256 })], &mut cache);
+        let long = sched.compile_phased(&[(req, Phase::Decode { kv_len: 2048 })], &mut cache);
+        assert_eq!(short.requests.len(), 1);
+        let (s, l) = (&short.requests[0], &long.requests[0]);
+        assert!(s.phase.is_decode() && l.phase.is_decode());
+        // the cached program is shared: KV growth scales reps, not code
+        assert!(s.program.shares_storage_with(&l.program));
+        assert_eq!(long.cache_misses, 0, "longer cache must not recompile");
+        assert!(l.reps > s.reps, "reps {} !> {}", l.reps, s.reps);
+        assert_eq!(s.cal.sq, 1, "decode slice is single-query");
+        assert!(s.proj_flops_per_cluster > 0);
+    }
+
+    #[test]
+    fn phased_compile_prefill_dominates_decode_in_cluster_share() {
+        let sched = BatchScheduler::default();
+        let mut cache = ProgramCache::new();
+        let a = Request::new(0, GPT2_SMALL);
+        let b = Request::new(1, GPT2_SMALL);
+        let batch = sched.compile_phased(
+            &[
+                (a, Phase::Prefill { prompt: 2048 }),
+                (b, Phase::Decode { kv_len: 2048 }),
+            ],
+            &mut cache,
+        );
+        assert!(
+            batch.requests[0].clusters.len() > batch.requests[1].clusters.len(),
+            "prefill {} clusters !> decode {}",
+            batch.requests[0].clusters.len(),
+            batch.requests[1].clusters.len()
+        );
+        // disjoint ownership still holds in the phased scope
+        let mut owned = vec![false; CLUSTERS];
+        for cr in &batch.requests {
+            for &c in &cr.clusters {
+                assert!(!owned[c], "cluster {c} double-assigned");
+                owned[c] = true;
+            }
         }
     }
 }

@@ -7,39 +7,67 @@
 //! instruction streams* on a cluster (compiled once through the program
 //! cache), then scales the measured rates over the model's operation
 //! counts with the same head-mapping / double-buffered-DMA composition
-//! the analytic estimator uses. The two backends therefore cross-check
-//! each other: same composition, independently obtained rates.
+//! the analytic estimator uses. `estimate_phase` does the same for an
+//! explicit prefill or decode phase, the decode side measured on the
+//! real single-query decode slice. The two backends therefore
+//! cross-check each other: same composition, independently obtained
+//! rates.
 //!
 //! `execute` runs a [`CompiledBatch`] for real on the multi-cluster
-//! system: every request's clusters execute its cached slice program
-//! for its head rounds while all active clusters share HBM bandwidth.
+//! system: every request's clusters execute its cached slice program —
+//! repeated up to [`MAX_SIM_REPS`] times and extrapolated *exactly* to
+//! the batch's `reps` count (repetitions of a cached kernel are
+//! cycle-identical; see `sim/system.rs` and DESIGN.md §10) — while all
+//! active clusters share HBM bandwidth. Projection GEMMs of the serving
+//! scope are priced at the backend's own measured GEMM rate and folded
+//! into the compute leg before the compute/DMA overlap.
 
 use super::batch::CompiledBatch;
 use super::program::{KernelKind, ProgramCache, ProgramKey};
 use super::report::{BatchReport, RunReport};
 use super::{Backend, Request};
-use crate::coordinator::{HeadMap, TilePlan};
+use crate::coordinator::{DecodePlan, HeadMap, TilePlan};
 use crate::energy::power::{cluster_energy_pj, DMA_PJ_PER_BYTE};
 use crate::isa::Class;
-use crate::kernels::flash_attention::{build_fa_program, seed_fa_inputs};
+use crate::kernels::flash_attention::{
+    build_fa_decode_program, build_fa_program, seed_fa_decode_inputs, seed_fa_inputs,
+};
 use crate::kernels::gemm::build_gemm_program;
 use crate::kernels::softmax::{build_softmax_program, seed_softmax_inputs};
-use crate::model::WorkloadOps;
+use crate::model::{Phase, WorkloadOps};
 use crate::sim::{Cluster, ClusterJob, ClusterStats, System, CORES_PER_CLUSTER};
 
 /// Rows used for the softmax rate measurement (one per core).
 const SM_ROWS: u32 = 8;
 
+/// Slice repetitions actually simulated per cluster in `execute`; the
+/// remainder is extrapolated by linear scaling. Exact for the optimized
+/// kernels (no data-dependent timing); for `Baseline` kernels the libm
+/// exponential takes its special path once per row on the first
+/// repetition only (the running max starts at −inf), so the scaling
+/// error is bounded by one libm-call delta per row — see DESIGN.md §10.
+pub const MAX_SIM_REPS: u32 = 2;
+
+/// Measured-rate backend running real instruction streams.
 pub struct CycleSimBackend {
+    /// The multi-cluster system programs execute on.
     pub system: System,
     /// Calibration programs compiled by `estimate` are cached here, so
     /// repeated estimates for the same model shape skip the builders.
     pub cache: ProgramCache,
+    /// Memoized optimized-GEMM rate (cycles/FLOP, pJ/FLOP) for pricing
+    /// the serving scope's projection legs.
+    gemm_cal: Option<(f64, f64)>,
 }
 
 impl CycleSimBackend {
+    /// Backend over a fresh system of `n_clusters` clusters.
     pub fn new(n_clusters: usize) -> Self {
-        CycleSimBackend { system: System::new(n_clusters), cache: ProgramCache::new() }
+        CycleSimBackend {
+            system: System::new(n_clusters),
+            cache: ProgramCache::new(),
+            gemm_cal: None,
+        }
     }
 
     /// Measured cluster-scope softmax cycles and energy per element at
@@ -63,8 +91,9 @@ impl CycleSimBackend {
         (cyc, pj, stats)
     }
 
-    /// Measured cluster-scope GEMM cycles and energy per FLOP.
-    fn gemm_rate(&mut self, req: &Request) -> (f64, f64, ClusterStats) {
+    /// Run the 64³ GEMM calibration on a fresh cluster; memoizes the
+    /// optimized rate pair and returns it with the run's stats.
+    fn gemm_measure(&mut self) -> (f64, f64, ClusterStats) {
         let (m, k, n) = (64u32, 64u32, 64u32);
         let key = ProgramKey::for_kernel(
             KernelKind::Gemm,
@@ -75,20 +104,38 @@ impl CycleSimBackend {
         let mut cluster = Cluster::new();
         let stats = cluster.run_program(&prog);
         let flops = (2 * m as u64 * n as u64 * k as u64) as f64;
-        let opt_cyc = stats.cycles as f64 / flops;
-        let opt_pj = cluster_energy_pj(&stats, true).total() / flops;
-        // plain scalar GEMM: same 3x (cycles) / 4x (energy) derating the
-        // analytic calibration uses (Fig. 1 anchor)
-        if req.gemm_optimized {
-            (opt_cyc, opt_pj, stats)
-        } else {
-            (opt_cyc * 3.0, opt_pj * 4.0, stats)
+        let cal = (
+            stats.cycles as f64 / flops,
+            cluster_energy_pj(&stats, true).total() / flops,
+        );
+        self.gemm_cal = Some(cal);
+        (cal.0, cal.1, stats)
+    }
+
+    /// Measured optimized-GEMM rate (cycles/FLOP, pJ/FLOP), memoized.
+    fn gemm_cal(&mut self) -> (f64, f64) {
+        if let Some(cal) = self.gemm_cal {
+            return cal;
         }
+        let (cyc, pj, _) = self.gemm_measure();
+        (cyc, pj)
+    }
+
+    /// Measured cluster-scope GEMM cycles and energy per FLOP, derated
+    /// for scalar-GEMM requests (the Fig. 1 anchor).
+    fn gemm_rate(&mut self, req: &Request) -> (f64, f64, ClusterStats) {
+        let (opt_cyc, opt_pj, stats) = self.gemm_measure();
+        let (cyc, pj) = derate_gemm(opt_cyc, opt_pj, req.gemm_optimized);
+        (cyc, pj, stats)
     }
 
     /// Run one real FlashAttention-2 head slice at the request's tile
     /// plan; returns (cycles, energy_pj) for the slice and the stats.
-    fn fa_slice(&mut self, req: &Request, plan: &TilePlan) -> (f64, f64, ClusterStats, super::batch::CalShape) {
+    fn fa_slice(
+        &mut self,
+        req: &Request,
+        plan: &TilePlan,
+    ) -> (f64, f64, ClusterStats, super::batch::CalShape) {
         let cal = super::batch::CalShape::for_plan(plan);
         let variant = req.fa_variant();
         let key = ProgramKey::for_request(
@@ -105,6 +152,42 @@ impl CycleSimBackend {
         let stats = cluster.run_program(&prog);
         let e = cluster_energy_pj(&stats, req.softmax_optimized).total();
         (stats.cycles as f64, e, stats, cal)
+    }
+
+    /// Run one real single-query decode slice at the request's decode
+    /// plan; returns (cycles, energy_pj, stats).
+    fn decode_slice(&mut self, req: &Request, plan: &DecodePlan) -> (f64, f64, ClusterStats) {
+        let variant = req.fa_variant();
+        let key = ProgramKey::for_decode(
+            KernelKind::FlashDecode(variant),
+            &req.cfg,
+            plan.sk_slice,
+            plan.bk,
+            CORES_PER_CLUSTER as u32,
+        );
+        let prog = self.cache.get_or_build(key, || {
+            build_fa_decode_program(variant, plan.sk_slice, plan.d, plan.bk)
+        });
+        let mut cluster = Cluster::new();
+        seed_fa_decode_inputs(&mut cluster.spm, plan.sk_slice, plan.d, plan.bk, 0xDEC0 ^ req.id);
+        let stats = cluster.run_program(&prog);
+        let e = cluster_energy_pj(&stats, req.softmax_optimized).total();
+        (stats.cycles as f64, e, stats)
+    }
+
+    /// Softmax-phase share of a run's retired instructions: hardware
+    /// exponentials, the per-row divisions, and the FP64 libm code of
+    /// the baseline variant are softmax-phase work.
+    fn softmax_fraction(stats: &[ClusterStats]) -> f64 {
+        let mut sm_instr = 0u64;
+        let mut retired = 0u64;
+        for s in stats {
+            let c = s.combined();
+            sm_instr +=
+                c.count(Class::FpExp) + c.count(Class::FpDivH) + c.count(Class::FpScalarD);
+            retired += c.retired_total();
+        }
+        sm_instr as f64 / retired.max(1) as f64
     }
 }
 
@@ -168,6 +251,71 @@ impl Backend for CycleSimBackend {
             dma_cycles: dma_cycles * layers,
             clusters_used: self.system.len(),
             per_cluster: vec![sm_stats, gemm_stats, fa_stats],
+            ..Default::default()
+        }
+    }
+
+    fn estimate_phase(&mut self, req: &Request, phase: Phase) -> RunReport {
+        match phase {
+            Phase::Prefill { prompt } => {
+                let mut r2 = *req;
+                r2.cfg.seq = prompt.max(1);
+                let mut report = self.estimate(&r2);
+                report.request_id = req.id;
+                report.model = req.cfg.name;
+                report
+            }
+            Phase::Decode { kv_len } => {
+                let cfg = &req.cfg;
+                let dplan = DecodePlan::plan(cfg);
+                let (slice_cycles, slice_pj, slice_stats) = self.decode_slice(req, &dplan);
+                let (gemm_rate, gemm_pj, gemm_stats) = self.gemm_rate(req);
+
+                // compose one decode step with measured rates
+                let ops = WorkloadOps::decode(cfg, kv_len);
+                let l = ops.per_layer;
+                let clusters = self.system.len().max(1) as f64;
+                let map = HeadMap::new(cfg.heads, self.system.len().max(1) as u32);
+                let rounds = map.rounds() as f64;
+                let factor = dplan.kv_tile_factor(kv_len) as f64;
+                let attn_cycles = rounds * factor * slice_cycles;
+                let proj_cycles = l.proj_flops as f64 * gemm_rate / clusters;
+
+                let contention = self.system.hbm.contention_factor(
+                    self.system.len().max(1),
+                    self.system.dma.bytes_per_cycle,
+                );
+                let bytes = (l.weight_bytes + l.act_bytes) as f64;
+                let dma_cycles =
+                    self.system.dma.cycles((bytes / clusters) as u64) as f64 * contention;
+                let compute = proj_cycles + attn_cycles;
+                let layer_cycles = compute.max(dma_cycles) + dma_cycles.min(compute) * 0.05;
+                let layers = ops.layers as f64;
+
+                let sm_frac = Self::softmax_fraction(std::slice::from_ref(&slice_stats));
+                let cycles = layer_cycles * layers;
+                let energy = layers
+                    * (l.proj_flops as f64 * gemm_pj
+                        + cfg.heads as f64 * factor * slice_pj
+                        + bytes * DMA_PJ_PER_BYTE);
+
+                RunReport {
+                    backend: self.name(),
+                    request_id: req.id,
+                    model: cfg.name,
+                    cycles,
+                    energy_pj: energy,
+                    softmax_cycles: attn_cycles * layers * sm_frac,
+                    gemm_cycles: (proj_cycles + attn_cycles * (1.0 - sm_frac)) * layers,
+                    attn_cycles: attn_cycles * layers,
+                    dma_cycles: dma_cycles * layers,
+                    clusters_used: self.system.len(),
+                    tokens: 1,
+                    decode_token_cycles: cycles,
+                    per_cluster: vec![slice_stats, gemm_stats],
+                    ..Default::default()
+                }
+            }
         }
     }
 
@@ -178,28 +326,51 @@ impl Backend for CycleSimBackend {
             batch.n_clusters,
             self.system.len()
         );
+        // price the serving scope's projection legs at the measured rate
+        let needs_proj = batch.requests.iter().any(|r| r.proj_flops_per_cluster > 0);
+        let (proj_cyc_rate, proj_pj_rate) =
+            if needs_proj { self.gemm_cal() } else { (0.0, 0.0) };
+
         let mut jobs: Vec<ClusterJob> =
             (0..self.system.len()).map(|_| ClusterJob::idle()).collect();
+        let mut scales = Vec::with_capacity(batch.requests.len());
+        let mut extras = Vec::with_capacity(batch.requests.len());
         for cr in &batch.requests {
+            let sim_reps = cr.reps.clamp(1, MAX_SIM_REPS);
+            let scale = cr.reps.max(1) as f64 / sim_reps as f64;
+            scales.push(scale);
+            let (proj_rate, _) = derate_gemm(proj_cyc_rate, proj_pj_rate, cr.req.gemm_optimized);
+            let extra = (cr.proj_flops_per_cluster as f64 * proj_rate) as u64;
+            extras.push(extra);
             for &c in &cr.clusters {
-                seed_fa_inputs(
-                    &mut self.system.clusters[c].spm,
-                    cr.cal.sq,
-                    cr.cal.sk,
-                    cr.cal.d,
-                    cr.cal.bk,
-                    cr.req.id ^ c as u64,
-                );
+                match cr.phase {
+                    Phase::Decode { .. } => seed_fa_decode_inputs(
+                        &mut self.system.clusters[c].spm,
+                        cr.cal.sk,
+                        cr.cal.d,
+                        cr.cal.bk,
+                        cr.req.id ^ c as u64,
+                    ),
+                    Phase::Prefill { .. } => seed_fa_inputs(
+                        &mut self.system.clusters[c].spm,
+                        cr.cal.sq,
+                        cr.cal.sk,
+                        cr.cal.d,
+                        cr.cal.bk,
+                        cr.req.id ^ c as u64,
+                    ),
+                }
                 jobs[c] = ClusterJob::new(
-                    vec![cr.program.clone(); cr.rounds as usize],
+                    vec![cr.program.clone(); sim_reps as usize],
                     cr.hbm_bytes_per_cluster,
-                );
+                )
+                .with_scaling(scale, extra);
             }
         }
         let stats = self.system.run_jobs(jobs);
 
         let mut per_request = Vec::with_capacity(batch.requests.len());
-        for cr in &batch.requests {
+        for ((cr, &scale), &extra) in batch.requests.iter().zip(&scales).zip(&extras) {
             let mine: Vec<ClusterStats> = cr
                 .clusters
                 .iter()
@@ -207,23 +378,24 @@ impl Backend for CycleSimBackend {
                 .collect();
             let cycles = mine.iter().map(|s| s.cycles).max().unwrap_or(0) as f64;
             let dma_cycles = mine.iter().map(|s| s.dma_cycles).max().unwrap_or(0) as f64;
-            let energy_pj: f64 = mine
-                .iter()
-                .map(|s| cluster_energy_pj(s, cr.req.softmax_optimized).total())
-                .sum();
-            // attribute the softmax share from retired-instruction classes:
-            // hardware exponentials, the per-row divisions, and the FP64
-            // libm code of the baseline variant are softmax-phase work
-            let mut sm_instr = 0u64;
-            let mut retired = 0u64;
+            let (_, proj_pj) = derate_gemm(proj_cyc_rate, proj_pj_rate, cr.req.gemm_optimized);
+            // Energy composition: per-core instr/SSR energy covers only
+            // the simulated repetitions, so it extrapolates by `scale`;
+            // static/shared burn is proportional to the cluster cycles
+            // run_jobs already extrapolated, and the DMA term is
+            // already full-scope (dma_bytes) — neither scales again.
+            let mut instr_ssr = 0.0f64;
+            let mut rest = 0.0f64;
             for s in &mine {
-                let c = s.combined();
-                sm_instr += c.count(Class::FpExp)
-                    + c.count(Class::FpDivH)
-                    + c.count(Class::FpScalarD);
-                retired += c.retired_total();
+                let e = cluster_energy_pj(s, cr.req.softmax_optimized);
+                instr_ssr += e.instr + e.ssr;
+                rest += e.static_core + e.shared + e.dma;
             }
-            let sm_frac = sm_instr as f64 / retired.max(1) as f64;
+            let n_cl = cr.clusters.len() as f64;
+            let energy_pj =
+                instr_ssr * scale + rest + n_cl * cr.proj_flops_per_cluster as f64 * proj_pj;
+            // attribute the softmax share from retired-instruction classes
+            let sm_frac = Self::softmax_fraction(&mine);
             per_request.push(RunReport {
                 backend: self.name(),
                 request_id: cr.req.id,
@@ -232,10 +404,14 @@ impl Backend for CycleSimBackend {
                 energy_pj,
                 softmax_cycles: cycles * sm_frac,
                 gemm_cycles: cycles * (1.0 - sm_frac),
-                attn_cycles: cycles,
+                // attention scope excludes the rated projection leg
+                // (exact in the compute-bound case; when DMA bounds the
+                // makespan this is the residual attributable window)
+                attn_cycles: (cycles - extra as f64).max(0.0),
                 dma_cycles,
                 clusters_used: cr.clusters.len(),
                 per_cluster: mine,
+                ..Default::default()
             });
         }
         BatchReport {
@@ -246,5 +422,14 @@ impl Backend for CycleSimBackend {
             cache_hits: batch.cache_hits,
             cache_misses: batch.cache_misses,
         }
+    }
+}
+
+/// Apply the Fig. 1 scalar-GEMM derating to a measured optimized rate.
+fn derate_gemm(cyc: f64, pj: f64, optimized: bool) -> (f64, f64) {
+    if optimized {
+        (cyc, pj)
+    } else {
+        (cyc * 3.0, pj * 4.0)
     }
 }

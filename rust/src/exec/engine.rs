@@ -4,14 +4,37 @@
 use super::batch::{BatchScheduler, CompiledBatch};
 use super::program::ProgramCache;
 use super::report::BatchReport;
+use super::serve::{run_continuous, ServeReport};
 use super::{Backend, Request};
 use crate::coordinator::CLUSTERS;
 use crate::model::TransformerConfig;
 
+/// Default iteration safety bound for [`Engine::serve_continuous`].
+pub const DEFAULT_MAX_ITERS: u32 = 4096;
+
 /// Collects concurrent requests, compiles them once through the shared
-/// [`ProgramCache`], and hands the packed batch to a backend.
+/// [`ProgramCache`], and hands the packed batch to a backend — either
+/// as one drained batch ([`Engine::serve`]) or as a continuously
+/// batched autoregressive run ([`Engine::serve_continuous`]).
+///
+/// ```
+/// use vexp::exec::Engine;
+/// use vexp::model::{GPT2_SMALL, VIT_BASE};
+///
+/// let mut engine = Engine::new();
+/// let a = engine.submit(GPT2_SMALL);
+/// let b = engine.submit(VIT_BASE);
+/// assert_eq!((a, b), (0, 1)); // ids are engine-monotonic
+///
+/// let batch = engine.compile_batch(); // drains the queue
+/// assert_eq!(batch.requests.len(), 2);
+/// assert_eq!(engine.pending(), 0);
+/// // `batch` is ready for any Backend::execute — analytic or cycle-sim.
+/// ```
 pub struct Engine {
+    /// Shared compiled-program cache (persists across batches).
     pub cache: ProgramCache,
+    /// The cluster-partitioning scheduler.
     pub scheduler: BatchScheduler,
     queue: Vec<Request>,
     next_id: u64,
@@ -23,6 +46,7 @@ impl Engine {
         Self::with_clusters(CLUSTERS)
     }
 
+    /// Engine for a system of `clusters` clusters.
     pub fn with_clusters(clusters: usize) -> Self {
         Engine {
             cache: ProgramCache::new(),
@@ -47,20 +71,43 @@ impl Engine {
         req.id
     }
 
+    /// Requests waiting in the queue.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
-    /// Drain the queue into a scheduled, compiled batch.
+    /// Drain the queue into a scheduled, compiled batch (empty queue →
+    /// empty batch).
     pub fn compile_batch(&mut self) -> CompiledBatch {
         let reqs = std::mem::take(&mut self.queue);
         self.scheduler.compile(&reqs, &mut self.cache)
     }
 
-    /// Compile the pending requests and execute them on `backend`.
+    /// Compile the pending requests and execute them on `backend` as
+    /// one batch (the calibration-slice scope).
     pub fn serve(&mut self, backend: &mut dyn Backend) -> BatchReport {
         let batch = self.compile_batch();
         backend.execute(&batch)
+    }
+
+    /// Drain the queue into a **continuously batched** autoregressive
+    /// run (DESIGN.md §10): requests join at their arrival iteration,
+    /// prefill once, decode one token per iteration against their
+    /// growing KV-cache, and retire at their token target while the
+    /// cluster shares rebalance every iteration. Returns per-request
+    /// time-to-first-token, per-token latency, tokens/s and energy.
+    pub fn serve_continuous(&mut self, backend: &mut dyn Backend) -> ServeReport {
+        self.serve_continuous_bounded(backend, DEFAULT_MAX_ITERS)
+    }
+
+    /// [`Engine::serve_continuous`] with an explicit iteration bound.
+    pub fn serve_continuous_bounded(
+        &mut self,
+        backend: &mut dyn Backend,
+        max_iters: u32,
+    ) -> ServeReport {
+        let reqs = std::mem::take(&mut self.queue);
+        run_continuous(self.scheduler, &mut self.cache, reqs, backend, max_iters)
     }
 }
 
@@ -86,6 +133,24 @@ mod tests {
         assert_eq!(e.pending(), 0);
         assert_eq!(batch.requests.len(), 2);
         assert_eq!(batch.requests[1].req.id, 1);
+    }
+
+    #[test]
+    fn ids_stay_monotonic_across_submit_styles_and_batches() {
+        let mut e = Engine::new();
+        let a = e.submit(GPT2_SMALL);
+        let b = e.submit_request(Request::new(999, VIT_BASE).with_tokens(4));
+        let _ = e.compile_batch();
+        let c = e.submit_request(Request::baseline(7, VIT_BASE));
+        assert_eq!((a, b, c), (0, 1, 2), "explicit ids are overwritten");
+    }
+
+    #[test]
+    fn empty_queue_compiles_to_empty_batch() {
+        let mut e = Engine::new();
+        let batch = e.compile_batch();
+        assert!(batch.requests.is_empty());
+        assert_eq!(batch.active_clusters(), 0);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Unified execution engine (DESIGN.md §8): one API over the analytic
-//! estimator and the cycle-accurate multi-cluster simulator.
+//! Unified execution engine (DESIGN.md §8/§10): one API over the
+//! analytic estimator and the cycle-accurate multi-cluster simulator.
 //!
 //! Before this module, the paper-figure reproducers talked to two
 //! disconnected code paths — `coordinator::estimate` for the Fig. 1/8
@@ -7,17 +7,21 @@
 //! bench, example and the CLI hand-rolled its own plumbing. The engine
 //! replaces that with:
 //!
-//! - [`Backend`]: `estimate(&Request)` / `execute(&CompiledBatch)`
-//!   returning one unified [`RunReport`], implemented by
-//!   [`AnalyticBackend`] (calibrated rates, microsecond cost) and
-//!   [`CycleSimBackend`] (real instruction streams on the C-cluster
-//!   system);
+//! - [`Backend`]: `estimate(&Request)` / `estimate_phase` /
+//!   `execute(&CompiledBatch)` returning one unified [`RunReport`],
+//!   implemented by [`AnalyticBackend`] (calibrated rates, microsecond
+//!   cost) and [`CycleSimBackend`] (real instruction streams on the
+//!   C-cluster system);
 //! - [`Program`] / [`ProgramCache`]: kernel instruction streams compiled
 //!   once into shared handles instead of rebuilt per call;
 //! - [`BatchScheduler`] / [`Engine`]: multiple concurrent transformer
-//!   requests (mixed models, mixed sequence lengths) packed onto the 16
-//!   clusters, one request's DMA overlapping another's compute through
-//!   the HBM-contention model.
+//!   requests (mixed models, mixed sequence lengths, mixed phases)
+//!   packed onto the 16 clusters, one request's DMA overlapping
+//!   another's compute through the HBM-contention model;
+//! - [`serve`]: the continuous-batching loop — requests with prompt and
+//!   token targets join mid-flight, decode one token per iteration
+//!   against their KV-cache, retire when done, and report
+//!   time-to-first-token / per-token latency / tokens-per-second.
 
 pub mod analytic;
 pub mod batch;
@@ -25,6 +29,7 @@ pub mod cyclesim;
 pub mod engine;
 pub mod program;
 pub mod report;
+pub mod serve;
 
 pub use analytic::AnalyticBackend;
 pub use batch::{BatchScheduler, CalShape, CompiledBatch, CompiledRequest};
@@ -32,35 +37,70 @@ pub use cyclesim::CycleSimBackend;
 pub use engine::Engine;
 pub use program::{KernelKind, Program, ProgramCache, ProgramKey};
 pub use report::{BatchReport, RunReport};
+pub use serve::{IterationEntry, IterationRecord, ServeReport};
 
 use crate::kernels::flash_attention::FaVariant;
 use crate::kernels::softmax::SoftmaxVariant;
-use crate::model::TransformerConfig;
+use crate::model::{Phase, TransformerConfig};
 
-/// One inference request: a model configuration plus which kernel
+/// One inference request: a model configuration, which kernel
 /// optimizations its deployment enables (the paper's baseline/optimized
-/// axes).
+/// axes), and — for the serving path — how many tokens to generate and
+/// when the request arrives.
 #[derive(Clone, Copy, Debug)]
 pub struct Request {
+    /// Engine-assigned id (monotonic per engine).
     pub id: u64,
+    /// Model configuration; `cfg.seq` is the prompt length.
     pub cfg: TransformerConfig,
     /// VFEXP-optimized softmax vs the scalar libm baseline.
     pub softmax_optimized: bool,
     /// [5]-style GEMM vs plain scalar code (Fig. 1 axis).
     pub gemm_optimized: bool,
+    /// Tokens to generate autoregressively after prefill. `0` means a
+    /// prefill-only request (e.g. a ViT classification pass).
+    pub decode_tokens: u32,
+    /// Continuous-batching iteration at which the request arrives; the
+    /// engine admits it no earlier (staggered-arrival traffic).
+    pub arrival_iter: u32,
 }
 
 impl Request {
     /// A fully-optimized request (the deployment configuration).
     pub fn new(id: u64, cfg: TransformerConfig) -> Self {
-        Request { id, cfg, softmax_optimized: true, gemm_optimized: true }
+        Request {
+            id,
+            cfg,
+            softmax_optimized: true,
+            gemm_optimized: true,
+            decode_tokens: 0,
+            arrival_iter: 0,
+        }
     }
 
     /// The Fig. 8 baseline: optimized GEMM, baseline softmax.
     pub fn baseline(id: u64, cfg: TransformerConfig) -> Self {
-        Request { id, cfg, softmax_optimized: false, gemm_optimized: true }
+        Request { softmax_optimized: false, ..Self::new(id, cfg) }
     }
 
+    /// Set the autoregressive generation target.
+    pub fn with_tokens(mut self, tokens: u32) -> Self {
+        self.decode_tokens = tokens;
+        self
+    }
+
+    /// Set the arrival iteration for staggered serving traffic.
+    pub fn arriving_at(mut self, iter: u32) -> Self {
+        self.arrival_iter = iter;
+        self
+    }
+
+    /// Prompt length in tokens (the model's configured sequence).
+    pub fn prompt_len(&self) -> u32 {
+        self.cfg.seq
+    }
+
+    /// Softmax kernel configuration this request runs.
     pub fn softmax_variant(&self) -> SoftmaxVariant {
         if self.softmax_optimized {
             SoftmaxVariant::SwExpHw
@@ -69,6 +109,7 @@ impl Request {
         }
     }
 
+    /// FlashAttention kernel configuration this request runs.
     pub fn fa_variant(&self) -> FaVariant {
         if self.softmax_optimized {
             FaVariant::Optimized
@@ -81,14 +122,21 @@ impl Request {
 /// A unified execution backend over the 16-cluster system.
 ///
 /// `estimate` answers "what does this request cost end-to-end" for one
-/// full forward pass; `execute` runs a scheduled multi-request batch
-/// (its slice workload — see [`batch`]) and reports per request. Both
-/// return [`RunReport`]s so callers can swap backends freely.
+/// full forward pass; `estimate_phase` answers the same for an explicit
+/// inference [`Phase`] (prompt prefill or one-token KV-cache decode);
+/// `execute` runs a scheduled multi-request batch (its slice workload —
+/// see [`batch`]) and reports per request. All return [`RunReport`]s so
+/// callers can swap backends freely.
 pub trait Backend {
+    /// Stable backend name for reports.
     fn name(&self) -> &'static str;
 
     /// Full forward-pass cost of a single request.
     fn estimate(&mut self, req: &Request) -> RunReport;
+
+    /// Cost of one phase of a request: a prefill pass over the prompt,
+    /// or one decode step against a KV-cache of the phase's length.
+    fn estimate_phase(&mut self, req: &Request, phase: Phase) -> RunReport;
 
     /// Run a compiled batch; one report per request, in batch order.
     fn execute(&mut self, batch: &CompiledBatch) -> BatchReport;

@@ -23,8 +23,14 @@ use crate::sim::decode::{decode, DecodedProgram};
 /// Which kernel a [`Program`] implements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum KernelKind {
+    /// Row-parallel softmax in one of the paper's four configurations.
     Softmax(SoftmaxVariant),
+    /// FlashAttention-2 prefill head (query rows over the cores).
     FlashAttention(FaVariant),
+    /// Single-query FlashAttention decode slice (KV tiles over the
+    /// cores, flash-decoding style — DESIGN.md §10).
+    FlashDecode(FaVariant),
+    /// The dot-product GEMM kernel.
     Gemm,
     /// Ad-hoc instruction streams (e.g. hand-written micro-benchmarks)
     /// routed through the same [`crate::sim::System`] entry points.
@@ -40,12 +46,15 @@ pub enum KernelKind {
 /// handles share both representations.
 #[derive(Clone, Debug)]
 pub struct Program {
+    /// Which kernel this program implements.
     pub kind: KernelKind,
     per_core: Arc<Vec<Vec<Instr>>>,
     decoded: Arc<Vec<DecodedProgram>>,
 }
 
 impl Program {
+    /// Compile per-core instruction streams into a shared handle,
+    /// lowering each stream to its decoded micro-op form once.
     pub fn new(kind: KernelKind, per_core: Vec<Vec<Instr>>) -> Self {
         let decoded = per_core.iter().map(|s| decode(s)).collect();
         Program { kind, per_core: Arc::new(per_core), decoded: Arc::new(decoded) }
@@ -83,9 +92,11 @@ impl Program {
 /// core count the program was partitioned for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ProgramKey {
+    /// Kernel kind the cached program implements.
     pub kind: KernelKind,
     /// Model name for request-derived programs, `"kernel"` for ad-hoc.
     pub model: &'static str,
+    /// Core count the program was partitioned for.
     pub n_cores: u32,
     /// Shape identity. For request-derived programs:
     /// `[seq, heads, d_head, bq, bk, 0]`; for ad-hoc kernel calls the
@@ -113,17 +124,40 @@ impl ProgramKey {
     pub fn for_kernel(kind: KernelKind, dims: [u32; 6], n_cores: u32) -> Self {
         ProgramKey { kind, model: "kernel", n_cores, dims }
     }
+
+    /// Key for a decode-slice program. Deliberately independent of the
+    /// KV-cache length: the slice window (`sk_slice`, `bk`) is fixed per
+    /// model shape, and a growing cache only scales the *repetitions* of
+    /// the cached program — so every decode step of a request hits the
+    /// same entry.
+    pub fn for_decode(
+        kind: KernelKind,
+        cfg: &TransformerConfig,
+        sk_slice: u32,
+        bk: u32,
+        n_cores: u32,
+    ) -> Self {
+        ProgramKey {
+            kind,
+            model: cfg.name,
+            n_cores,
+            dims: [sk_slice, cfg.heads, cfg.d_head(), 1, bk, 1],
+        }
+    }
 }
 
 /// Memoizing store of compiled programs with hit/miss accounting.
 #[derive(Debug, Default)]
 pub struct ProgramCache {
     map: HashMap<ProgramKey, Program>,
+    /// Lookups served from the cache since construction.
     pub hits: u64,
+    /// Lookups that had to run the kernel builder.
     pub misses: u64,
 }
 
 impl ProgramCache {
+    /// An empty cache.
     pub fn new() -> Self {
         Self::default()
     }
@@ -145,6 +179,7 @@ impl ProgramCache {
         self.map.len()
     }
 
+    /// True when no program has been compiled yet.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

@@ -1,19 +1,24 @@
-//! The unified result type every backend returns.
+//! The unified result types every backend returns.
 
-use crate::sim::ClusterStats;
+use crate::sim::{ClusterStats, CLOCK_HZ};
 
 /// One request's execution/estimation result, in a backend-independent
 /// shape: cycles + energy + the paper's breakdown axes, plus per-cluster
-/// stats when the backend actually ran cluster programs.
+/// stats when the backend actually ran cluster programs, plus the
+/// serving metrics of the continuous-batching path (zero elsewhere).
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
     /// Which backend produced this report (`"analytic"` / `"cycle-sim"`).
     pub backend: &'static str,
+    /// The request this report belongs to.
     pub request_id: u64,
+    /// Model name of the request.
     pub model: &'static str,
     /// Total cycles for the request's workload scope (full forward pass
-    /// for `estimate`, the packed batch slice for `execute`).
+    /// for `estimate`, the packed batch slice for `execute`, admission
+    /// to retirement for the continuous-batching path).
     pub cycles: f64,
+    /// Total energy in pJ.
     pub energy_pj: f64,
     /// Cycles attributed to softmax work.
     pub softmax_cycles: f64,
@@ -22,9 +27,21 @@ pub struct RunReport {
     /// Cycles attributed to the attention kernel (QK^T + partial softmax
     /// + P·V), the FlashAttention-2 scope of Fig. 6d-f.
     pub attn_cycles: f64,
+    /// Cycles attributed to DMA streaming.
     pub dma_cycles: f64,
-    /// Clusters this request occupied.
+    /// Clusters this request occupied (last assignment for the
+    /// continuous-batching path, which rebalances every iteration).
     pub clusters_used: usize,
+    /// Time-to-first-token in cycles: admission to the end of the
+    /// prefill iteration (continuous-batching scope only).
+    pub ttft_cycles: f64,
+    /// Tokens the request produced (continuous-batching scope only;
+    /// prefill-only requests report 0 generated tokens).
+    pub tokens: u32,
+    /// Mean *observed* cycles per decode-phase token — iteration-barrier
+    /// time under co-scheduling, on the same clock as `ttft_cycles` and
+    /// [`RunReport::tokens_per_s`] (continuous-batching scope only).
+    pub decode_token_cycles: f64,
     /// Per-cluster statistics (empty for the analytic backend).
     pub per_cluster: Vec<ClusterStats>,
 }
@@ -35,15 +52,36 @@ impl RunReport {
         self.cycles / 1e6
     }
 
+    /// Energy in millijoules.
     pub fn energy_mj(&self) -> f64 {
         self.energy_pj / 1e9
     }
 
+    /// Fraction of cycles attributed to softmax.
     pub fn softmax_share(&self) -> f64 {
         if self.cycles == 0.0 {
             0.0
         } else {
             self.softmax_cycles / self.cycles
+        }
+    }
+
+    /// Time-to-first-token in milliseconds.
+    pub fn ttft_ms(&self) -> f64 {
+        self.ttft_cycles / 1e6
+    }
+
+    /// Mean per-token decode latency in microseconds.
+    pub fn token_latency_us(&self) -> f64 {
+        self.decode_token_cycles / 1e3
+    }
+
+    /// Generation throughput over the request's residence time.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.cycles <= 0.0 || self.tokens == 0 {
+            0.0
+        } else {
+            self.tokens as f64 / (self.cycles / CLOCK_HZ)
         }
     }
 }
@@ -52,14 +90,17 @@ impl RunReport {
 /// request (in submission order) plus batch-level accounting.
 #[derive(Clone, Debug, Default)]
 pub struct BatchReport {
+    /// Which backend executed the batch.
     pub backend: &'static str,
+    /// One report per request, in batch order.
     pub per_request: Vec<RunReport>,
     /// System makespan across all clusters for the batch.
     pub makespan_cycles: u64,
     /// Total bytes streamed from HBM across the batch.
     pub hbm_bytes: u64,
-    /// Program-cache hits/misses recorded while compiling this batch.
+    /// Program-cache hits recorded while compiling this batch.
     pub cache_hits: u64,
+    /// Program-cache misses recorded while compiling this batch.
     pub cache_misses: u64,
 }
 

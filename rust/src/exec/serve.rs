@@ -1,0 +1,305 @@
+//! Continuous batching (DESIGN.md §10): the autoregressive serving loop
+//! over the unified [`Backend`] API.
+//!
+//! The engine steps in **iterations**. Each iteration:
+//!
+//! 1. **Admit** — waiting requests whose `arrival_iter` has come join
+//!    the live set, as long as a cluster is free for them (at most one
+//!    live request per cluster).
+//! 2. **Rebalance** — the cluster grid is repartitioned among the live
+//!    requests proportionally to their *current-phase* work (a prefill
+//!    outweighs a decode by orders of magnitude), every live request
+//!    keeping at least one cluster and cluster sets staying disjoint.
+//! 3. **Execute** — each request runs one phase step: its whole prompt
+//!    prefill (first scheduled iteration), or one decode token against
+//!    its KV-cache (subsequent iterations). The backend executes the
+//!    compiled iteration; the global clock advances by the iteration
+//!    makespan (a synchronous iteration barrier — requests that finish
+//!    their step early idle until the barrier).
+//! 4. **Retire** — requests that produced their token target leave the
+//!    live set; their clusters are rebalanced next iteration.
+//!
+//! The prefill iteration produces the request's first token (the last
+//! prompt position predicts it), so time-to-first-token is admission →
+//! end of the prefill iteration. Each decode iteration produces one
+//! more token at KV length `prompt + generated`.
+
+use super::batch::BatchScheduler;
+use super::program::ProgramCache;
+use super::report::RunReport;
+use super::{Backend, Request};
+use crate::model::Phase;
+
+/// One live request's share of an iteration, for the record log.
+#[derive(Clone, Debug)]
+pub struct IterationEntry {
+    /// Request id.
+    pub id: u64,
+    /// Phase the request ran this iteration.
+    pub phase: Phase,
+    /// Clusters the request owned this iteration.
+    pub clusters: Vec<usize>,
+    /// The request's own cycles for its iteration step.
+    pub cycles: f64,
+}
+
+/// One continuous-batching iteration, for introspection and tests.
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    /// Iteration index.
+    pub iter: u32,
+    /// Global clock (cycles) after this iteration's barrier.
+    pub clock_cycles: u64,
+    /// Per-live-request shares.
+    pub entries: Vec<IterationEntry>,
+}
+
+/// Result of a continuous-batching run: per-request serving reports
+/// (TTFT, tokens, per-token latency, energy) plus the iteration log.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    /// Which backend executed the run.
+    pub backend: &'static str,
+    /// Iterations actually executed (gaps in the arrival schedule are
+    /// fast-forwarded and do not count).
+    pub iterations: u32,
+    /// Global clock at the end of the run (cycles).
+    pub total_cycles: u64,
+    /// One report per request, in retirement order. `cycles` is
+    /// admission→retirement residence time; the serving metrics
+    /// (`ttft_cycles`, `tokens`, `decode_token_cycles`) are filled in.
+    /// Requests the iteration bound cut off are included with their
+    /// partial — possibly zero — progress; nothing submitted vanishes.
+    pub per_request: Vec<RunReport>,
+    /// The per-iteration schedule, for introspection and invariants.
+    pub log: Vec<IterationRecord>,
+}
+
+impl ServeReport {
+    /// Total tokens generated across all requests.
+    pub fn total_tokens(&self) -> u64 {
+        self.per_request.iter().map(|r| r.tokens as u64).sum()
+    }
+
+    /// Aggregate generation throughput over the whole run.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.total_tokens() as f64 / (self.total_cycles as f64 / crate::sim::CLOCK_HZ)
+        }
+    }
+
+    /// Aggregate energy across all requests (pJ).
+    pub fn total_energy_pj(&self) -> f64 {
+        self.per_request.iter().map(|r| r.energy_pj).sum()
+    }
+}
+
+/// A request in flight through the continuous batch.
+struct LiveReq {
+    req: Request,
+    /// Set once the prefill iteration has run.
+    prefilled: bool,
+    /// Tokens produced so far (the prefill's first token included).
+    generated: u32,
+    admit_clock: u64,
+    ttft_cycles: f64,
+    /// Sum of the iteration-barrier cycles over this request's decode
+    /// iterations — the *observed* inter-token time under
+    /// co-scheduling, on the same clock as TTFT and tokens/s.
+    decode_cycles: f64,
+    decode_iters: u32,
+    energy_pj: f64,
+    softmax_cycles: f64,
+    gemm_cycles: f64,
+    attn_cycles: f64,
+    dma_cycles: f64,
+    last_clusters: usize,
+}
+
+impl LiveReq {
+    fn new(req: Request, admit_clock: u64) -> Self {
+        LiveReq {
+            req,
+            prefilled: false,
+            generated: 0,
+            admit_clock,
+            ttft_cycles: 0.0,
+            decode_cycles: 0.0,
+            decode_iters: 0,
+            energy_pj: 0.0,
+            softmax_cycles: 0.0,
+            gemm_cycles: 0.0,
+            attn_cycles: 0.0,
+            dma_cycles: 0.0,
+            last_clusters: 0,
+        }
+    }
+
+    /// Phase this request runs next.
+    fn phase(&self) -> Phase {
+        if !self.prefilled {
+            Phase::Prefill { prompt: self.req.cfg.seq }
+        } else {
+            Phase::Decode { kv_len: self.req.cfg.seq + self.generated }
+        }
+    }
+
+    /// Done once prefill ran and the token target is met. A target of
+    /// zero (prefill-only request, e.g. ViT) retires after prefill.
+    fn done(&self) -> bool {
+        self.prefilled && self.generated >= self.req.decode_tokens
+    }
+
+    fn retire(self, finish_clock: u64, backend: &'static str) -> RunReport {
+        let decode_token_cycles = if self.decode_iters > 0 {
+            self.decode_cycles / self.decode_iters as f64
+        } else {
+            0.0
+        };
+        RunReport {
+            backend,
+            request_id: self.req.id,
+            model: self.req.cfg.name,
+            cycles: (finish_clock - self.admit_clock) as f64,
+            energy_pj: self.energy_pj,
+            softmax_cycles: self.softmax_cycles,
+            gemm_cycles: self.gemm_cycles,
+            attn_cycles: self.attn_cycles,
+            dma_cycles: self.dma_cycles,
+            clusters_used: self.last_clusters,
+            ttft_cycles: self.ttft_cycles,
+            tokens: self.generated,
+            decode_token_cycles,
+            ..Default::default()
+        }
+    }
+}
+
+/// Drive the continuous-batching loop until every request retires (or
+/// `max_iters` is hit — a safety bound for misconfigured traffic).
+/// `requests` is the admission queue, ordered by engine submission;
+/// arrival iterations stagger admission within it.
+pub(crate) fn run_continuous(
+    scheduler: BatchScheduler,
+    cache: &mut ProgramCache,
+    mut waiting: Vec<Request>,
+    backend: &mut dyn Backend,
+    max_iters: u32,
+) -> ServeReport {
+    // admit in arrival order, stable by submission id
+    waiting.sort_by_key(|r| (r.arrival_iter, r.id));
+    let mut waiting = std::collections::VecDeque::from(waiting);
+    let mut live: Vec<LiveReq> = Vec::new();
+    let mut report = ServeReport { backend: backend.name(), ..Default::default() };
+    let mut clock: u64 = 0;
+    let mut iter: u32 = 0;
+    let mut executed: u32 = 0;
+
+    while iter < max_iters {
+        // ---- admit --------------------------------------------------------
+        while live.len() < scheduler.clusters {
+            match waiting.front() {
+                Some(r) if r.arrival_iter <= iter => {
+                    let r = waiting.pop_front().expect("front checked");
+                    live.push(LiveReq::new(r, clock));
+                }
+                _ => break,
+            }
+        }
+        if live.is_empty() {
+            match waiting.front() {
+                // idle gap in the arrival schedule: fast-forward
+                Some(r) => {
+                    iter = r.arrival_iter;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // ---- rebalance + compile this iteration ---------------------------
+        let entries: Vec<(Request, Phase)> =
+            live.iter().map(|lr| (lr.req, lr.phase())).collect();
+        let batch = scheduler.compile_phased(&entries, cache);
+        let exec = backend.execute(&batch);
+
+        // ---- advance the synchronous iteration barrier --------------------
+        let makespan = exec
+            .per_request
+            .iter()
+            .map(|r| r.cycles)
+            .fold(0.0f64, f64::max);
+        clock += makespan as u64;
+
+        // ---- account per request ------------------------------------------
+        let mut entries_log = Vec::with_capacity(live.len());
+        for ((lr, cr), r) in live
+            .iter_mut()
+            .zip(&batch.requests)
+            .zip(&exec.per_request)
+        {
+            lr.energy_pj += r.energy_pj;
+            lr.softmax_cycles += r.softmax_cycles;
+            lr.gemm_cycles += r.gemm_cycles;
+            lr.attn_cycles += r.attn_cycles;
+            lr.dma_cycles += r.dma_cycles;
+            lr.last_clusters = cr.clusters.len();
+            entries_log.push(IterationEntry {
+                id: lr.req.id,
+                phase: cr.phase,
+                clusters: cr.clusters.clone(),
+                cycles: r.cycles,
+            });
+            if !lr.prefilled {
+                lr.prefilled = true;
+                lr.ttft_cycles = (clock - lr.admit_clock) as f64;
+                if lr.req.decode_tokens > 0 {
+                    lr.generated = 1; // the prefill's first token
+                }
+            } else {
+                lr.generated += 1;
+                // observed inter-token time is the iteration barrier,
+                // not the request's own compute — consistent with the
+                // clock that tokens_per_s and TTFT are measured on
+                lr.decode_cycles += makespan;
+                lr.decode_iters += 1;
+            }
+        }
+        report.log.push(IterationRecord {
+            iter,
+            clock_cycles: clock,
+            entries: entries_log,
+        });
+
+        // ---- retire -------------------------------------------------------
+        let backend_name = report.backend;
+        let mut still_live = Vec::with_capacity(live.len());
+        for lr in live {
+            if lr.done() {
+                report.per_request.push(lr.retire(clock, backend_name));
+            } else {
+                still_live.push(lr);
+            }
+        }
+        live = still_live;
+
+        iter += 1;
+        executed += 1;
+    }
+
+    // safety bound hit: report unfinished requests as-is, and requests
+    // the bound prevented from ever being admitted with zero progress —
+    // nothing submitted may vanish from the report
+    let backend_name = report.backend;
+    for lr in live {
+        report.per_request.push(lr.retire(clock, backend_name));
+    }
+    for r in waiting {
+        report.per_request.push(LiveReq::new(r, clock).retire(clock, backend_name));
+    }
+    report.iterations = executed;
+    report.total_cycles = clock;
+    report
+}

@@ -2,6 +2,11 @@
 //! instruction enum, register names, and a structured assembler used by
 //! the kernel builders.
 
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 pub mod assembler;
 pub mod encoding;
 pub mod instr;

@@ -9,10 +9,22 @@
 //! - `Optimized`: partial softmax with FREP + SSR + SIMD + **VFEXP** —
 //!   softmax drops to a few percent of the kernel.
 //!
-//! Query rows are partitioned over the eight cores; every phase of every
-//! tile is row-independent, so each core runs its rows start-to-finish
-//! without synchronization (the paper's "multiple row statistics
-//! simultaneously" parallelization).
+//! Two phases (DESIGN.md §10):
+//! - **Prefill** ([`build_fa_program`]): query rows are partitioned over
+//!   the eight cores; every phase of every tile is row-independent, so
+//!   each core runs its rows start-to-finish without synchronization
+//!   (the paper's "multiple row statistics simultaneously").
+//! - **Decode** ([`build_fa_decode_program`]): a *single* query row
+//!   against a KV window — the autoregressive serving slice. One row
+//!   cannot be row-partitioned, so the kernel splits the *KV tiles*
+//!   across the cores (flash-decoding style): each core keeps its own
+//!   running statistics (mᶜ, lᶜ) and partial output Oᶜ over its tile
+//!   range, and the last active core merges the partials
+//!   (`out = Σ exp(mᶜ − m*)·Oᶜ / Σ exp(mᶜ − m*)·lᶜ`). Functional core
+//!   execution is sequential against the shared SPM (see
+//!   `sim/cluster.rs`), which stands in for the cluster barrier the
+//!   real hardware would run before the merge — logged as a §2
+//!   substitution in DESIGN.md.
 
 use super::gemm::emit_gemm_rows_strided;
 use super::softexp::{emit_libm_exp, write_exp_pool};
@@ -25,7 +37,9 @@ use crate::sim::{Cluster, ClusterStats, Mem, CORES_PER_CLUSTER};
 /// FlashAttention-2 kernel configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FaVariant {
+    /// Optimized GEMMs, scalar libm partial softmax.
     Baseline,
+    /// FREP + SSR + SIMD partial softmax with the VFEXP extension.
     Optimized,
 }
 
@@ -79,9 +93,88 @@ impl FaLayout {
     }
 }
 
+/// SPM layout of the single-query decode slice (DESIGN.md §10): one
+/// query row, a KV window of `sk` positions tiled at `bk`, per-core
+/// partial statistics/output, and the merged output row.
+pub struct FaDecodeLayout {
+    pool: u32,
+    q: u32,     // q[1,d], pre-scaled by 1/sqrt(d)
+    k: u32,     // K[sk,d] window
+    vt: u32,    // V^T[d,sk]
+    s: u32,     // per-core S/P rows [CORES][bk]
+    t: u32,     // per-core p·V rows [CORES][d]
+    opart: u32, // per-core partial outputs [CORES][d]
+    m: u32,     // per-core running max
+    l: u32,     // per-core running exp-sum
+    corr: u32,  // per-core rescale scratch (re-used as merge weights)
+    mg: u32,    // global max (merge scratch)
+    lg: u32,    // global exp-sum (merge scratch)
+    out: u32,   // merged output row [d]
+    end: u32,   // first byte past the working set
+}
+
+impl FaDecodeLayout {
+    /// Allocate the decode-slice layout. Panics when the working set
+    /// exceeds the 128 KiB SPM; use [`fa_decode_footprint`] to size a
+    /// window without panicking.
+    pub fn new(sk: u32, d: u32, bk: u32) -> Self {
+        let lay = Self::build(sk, d, bk);
+        assert!(
+            lay.end <= 128 * 1024,
+            "FA-decode working set {} bytes exceeds SPM",
+            lay.end
+        );
+        lay
+    }
+
+    fn build(sk: u32, d: u32, bk: u32) -> Self {
+        assert!(sk % bk == 0 && bk % 16 == 0 && d % 16 == 0);
+        let cores = CORES_PER_CLUSTER as u32;
+        // data starts at 0x2000: [0x1400, 0x2000) stays free scratch so
+        // the baseline variant's modeled libm ABI spills (softexp.rs
+        // STACK_BASE) can never alias layout data
+        let mut at = 0x2000u32;
+        let mut alloc = |bytes: u32| {
+            let r = at;
+            at += (bytes + 7) & !7;
+            r
+        };
+        FaDecodeLayout {
+            pool: 0x1000,
+            q: alloc(2 * d),
+            k: alloc(2 * sk * d),
+            vt: alloc(2 * sk * d),
+            s: alloc(cores * 2 * bk),
+            t: alloc(cores * 2 * d),
+            opart: alloc(cores * 2 * d),
+            m: alloc(2 * cores),
+            l: alloc(2 * cores),
+            corr: alloc(2 * cores),
+            mg: alloc(2),
+            lg: alloc(2),
+            out: alloc(2 * d),
+            end: at,
+        }
+    }
+
+    /// Byte address of the merged output row.
+    pub fn out_addr(&self) -> u32 {
+        self.out
+    }
+}
+
+/// SPM bytes the decode slice occupies for a `sk × d` KV window at tile
+/// length `bk` (layout end address, constant pool included). The
+/// coordinator's decode planner sizes the slice window against this.
+pub fn fa_decode_footprint(sk: u32, d: u32, bk: u32) -> u32 {
+    FaDecodeLayout::build(sk, d, bk).end
+}
+
 /// Result of a cluster FlashAttention-2 run.
 pub struct FaRun {
-    pub out: Vec<f32>, // row-major Sq x d
+    /// Output rows (row-major `Sq × d`; `1 × d` for decode).
+    pub out: Vec<f32>,
+    /// Cluster statistics of the run.
     pub stats: ClusterStats,
 }
 
@@ -109,6 +202,26 @@ pub fn run_flash_attention(
     FaRun { out, stats }
 }
 
+/// Run the single-query decode slice on one cluster: one query row
+/// against `sk` cached KV positions (`k`/`v`: Sk x d row-major f32).
+pub fn run_flash_decode(
+    variant: FaVariant,
+    q: &[f32],
+    k_mat: &[f32],
+    v: &[f32],
+    sk: u32,
+    d: u32,
+    bk: u32,
+) -> FaRun {
+    let lay = FaDecodeLayout::new(sk, d, bk);
+    let mut cluster = Cluster::new();
+    write_fa_decode_data(&mut cluster.spm, &lay, q, k_mat, v, sk, d);
+    let program = build_fa_decode_program(variant, sk, d, bk);
+    let stats = cluster.run_program(&program);
+    let out = cluster.spm.read_bf16_as_f32(lay.out, d as usize);
+    FaRun { out, stats }
+}
+
 /// Compile the single-head FA-2 kernel (query rows partitioned over the
 /// eight cores) into a cacheable [`Program`]. The stream addresses come
 /// from [`FaLayout::new`] for the same shape, so any SPM seeded through
@@ -127,6 +240,30 @@ pub fn build_fa_program(variant: FaVariant, sq: u32, sk: u32, d: u32, bk: u32) -
         })
         .collect();
     Program::new(KernelKind::FlashAttention(variant), streams)
+}
+
+/// Compile the single-query decode slice into a cacheable [`Program`]:
+/// the `sk/bk` KV tiles are split across the eight cores, each core
+/// accumulates its own partial statistics and output, and the last
+/// active core merges them into the final output row. Seed the SPM with
+/// [`seed_fa_decode_inputs`] (or [`run_flash_decode`]'s data path).
+pub fn build_fa_decode_program(variant: FaVariant, sk: u32, d: u32, bk: u32) -> Program {
+    let lay = FaDecodeLayout::new(sk, d, bk);
+    let cores = CORES_PER_CLUSTER as u32;
+    let tiles = sk / bk;
+    let per_core = tiles.div_ceil(cores);
+    let active = tiles.div_ceil(per_core);
+    let streams: Vec<Vec<Instr>> = (0..cores)
+        .map(|c| {
+            let lo = (c * per_core).min(tiles);
+            let hi = ((c + 1) * per_core).min(tiles);
+            if lo == hi {
+                return vec![];
+            }
+            build_fa_decode_core_program(variant, &lay, c, lo, hi, active, sk, d, bk)
+        })
+        .collect();
+    Program::new(KernelKind::FlashDecode(variant), streams)
 }
 
 /// Write Q/K/V and the running statistics into `spm` at the layout of
@@ -164,6 +301,43 @@ fn write_fa_data(
     spm.write_bf16_slice(lay.o, &vec![Bf16(0); (sq * d) as usize]);
 }
 
+/// Write q/K/V plus zeroed per-core statistics and output for the
+/// decode slice at the layout of the given shape.
+fn write_fa_decode_data(
+    spm: &mut Mem,
+    lay: &FaDecodeLayout,
+    q: &[f32],
+    k_mat: &[f32],
+    v: &[f32],
+    sk: u32,
+    d: u32,
+) {
+    assert_eq!(q.len(), d as usize);
+    assert_eq!(k_mat.len(), (sk * d) as usize);
+    assert_eq!(v.len(), (sk * d) as usize);
+    let cores = CORES_PER_CLUSTER;
+    write_exp_pool(spm, lay.pool);
+    let scale = 1.0 / (d as f32).sqrt();
+    let qs: Vec<f32> = q.iter().map(|&x| x * scale).collect();
+    spm.write_f32_as_bf16(lay.q, &qs);
+    spm.write_f32_as_bf16(lay.k, k_mat);
+    let mut vt = vec![0.0f32; (sk * d) as usize];
+    for r in 0..sk as usize {
+        for c in 0..d as usize {
+            vt[c * sk as usize + r] = v[r * d as usize + c];
+        }
+    }
+    spm.write_f32_as_bf16(lay.vt, &vt);
+    // per-core stats: m = -inf, l = 0, corr = 0; partial and merged
+    // outputs zeroed (the merge accumulates into `out`)
+    spm.write_bf16_slice(lay.m, &vec![crate::bf16::NEG_INF; cores]);
+    spm.write_bf16_slice(lay.l, &vec![Bf16(0); cores]);
+    spm.write_bf16_slice(lay.corr, &vec![Bf16(0); cores]);
+    spm.write_bf16_slice(lay.opart, &vec![Bf16(0); cores * d as usize]);
+    spm.write_bf16_slice(lay.mg, &[Bf16(0), Bf16(0)]);
+    spm.write_bf16_slice(lay.out, &vec![Bf16(0); d as usize]);
+}
+
 /// Seed `spm` with deterministic pseudo-random Q/K/V plus initialized
 /// statistics for an `sq × sk` head — the data side of a cached FA-2
 /// [`Program`] in calibration and batched-serving runs, where the
@@ -176,6 +350,19 @@ pub fn seed_fa_inputs(spm: &mut Mem, sq: u32, sk: u32, d: u32, bk: u32, seed: u6
     let k = mat((sk * d) as usize);
     let v = mat((sk * d) as usize);
     write_fa_data(spm, &lay, &q, &k, &v, sq, sk, d);
+}
+
+/// Seed `spm` with deterministic pseudo-random q/K/V plus initialized
+/// per-core statistics for a decode slice — the data side of a cached
+/// decode [`Program`] in the continuous-batching path.
+pub fn seed_fa_decode_inputs(spm: &mut Mem, sk: u32, d: u32, bk: u32, seed: u64) {
+    let lay = FaDecodeLayout::new(sk, d, bk);
+    let mut rng = crate::testkit::Rng::new(seed);
+    let mut mat = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.f32(-1.0, 1.0)).collect() };
+    let q = mat(d as usize);
+    let k = mat((sk * d) as usize);
+    let v = mat((sk * d) as usize);
+    write_fa_decode_data(spm, &lay, &q, &k, &v, sk, d);
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -206,9 +393,15 @@ fn build_fa_core_program(
         );
         // ---- partial softmax on S rows + stats update ------------------
         for i in lo..hi {
+            let s_row = lay.s + i * 2 * bk;
+            let (m_addr, l_addr, corr_addr) = (lay.m + 2 * i, lay.l + 2 * i, lay.corr + 2 * i);
             match variant {
-                FaVariant::Optimized => emit_partial_softmax_opt(&mut a, lay, i, bk),
-                FaVariant::Baseline => emit_partial_softmax_base(&mut a, lay, i, bk),
+                FaVariant::Optimized => {
+                    emit_partial_softmax_opt(&mut a, s_row, m_addr, l_addr, corr_addr, bk)
+                }
+                FaVariant::Baseline => {
+                    emit_partial_softmax_base(&mut a, s_row, m_addr, l_addr, corr_addr, bk)
+                }
             }
         }
         // ---- T = P · V_tile  (BT rows are VT rows, sliced at tile*bk) ---
@@ -225,27 +418,143 @@ fn build_fa_core_program(
         );
         // ---- O = O * corr + T -------------------------------------------
         for i in lo..hi {
+            let (o_row, t_row) = (lay.o + i * 2 * d, lay.t + i * 2 * d);
             match variant {
-                FaVariant::Optimized => emit_rescale_opt(&mut a, lay, i, d),
-                FaVariant::Baseline => emit_rescale_base(&mut a, lay, i, d),
+                FaVariant::Optimized => {
+                    emit_scale_add_opt(&mut a, o_row, t_row, o_row, lay.corr + 2 * i, d)
+                }
+                FaVariant::Baseline => emit_rescale_base(&mut a, o_row, t_row, lay.corr + 2 * i, d),
             }
         }
     }
     // ---- final NORM: O[i,:] /= l[i] -------------------------------------
     for i in lo..hi {
+        let o_row = lay.o + i * 2 * d;
         match variant {
-            FaVariant::Optimized => emit_norm_opt(&mut a, lay, i, d),
-            FaVariant::Baseline => emit_norm_base(&mut a, lay, i, d),
+            FaVariant::Optimized => emit_norm_opt(&mut a, o_row, lay.l + 2 * i, d),
+            FaVariant::Baseline => emit_norm_base(&mut a, o_row, lay.l + 2 * i, d),
         }
     }
     a.finish()
 }
 
+/// One core's share of the decode slice: tiles `[tile_lo, tile_hi)` of
+/// the KV window, accumulated into the core's private partials; the
+/// last active core appends the merge.
+#[allow(clippy::too_many_arguments)]
+fn build_fa_decode_core_program(
+    variant: FaVariant,
+    lay: &FaDecodeLayout,
+    core: u32,
+    tile_lo: u32,
+    tile_hi: u32,
+    active: u32,
+    sk: u32,
+    d: u32,
+    bk: u32,
+) -> Vec<Instr> {
+    let mut a = Asm::new();
+    a.li(A4, lay.pool as i64);
+    let s_row = lay.s + core * 2 * bk;
+    let t_row = lay.t + core * 2 * d;
+    let o_row = lay.opart + core * 2 * d;
+    let (m_addr, l_addr, corr_addr) = (lay.m + 2 * core, lay.l + 2 * core, lay.corr + 2 * core);
+    for tile in tile_lo..tile_hi {
+        // ---- s = q · K_tile^T (a 1×bk GEMV on the dot-product kernel) ---
+        emit_gemm_rows_strided(&mut a, lay.q, lay.k + tile * bk * 2 * d, 2 * d, s_row, 0, 1, d, bk);
+        // ---- partial softmax on the 1×bk score row, private stats ------
+        match variant {
+            FaVariant::Optimized => emit_partial_softmax_opt(&mut a, s_row, m_addr, l_addr, corr_addr, bk),
+            FaVariant::Baseline => emit_partial_softmax_base(&mut a, s_row, m_addr, l_addr, corr_addr, bk),
+        }
+        // ---- t = p · V_tile (1×d GEMV) ----------------------------------
+        emit_gemm_rows_strided(&mut a, s_row, lay.vt + tile * bk * 2, 2 * sk, t_row, 0, 1, bk, d);
+        // ---- Oᶜ = Oᶜ · corr + t ------------------------------------------
+        match variant {
+            FaVariant::Optimized => emit_scale_add_opt(&mut a, o_row, t_row, o_row, corr_addr, d),
+            FaVariant::Baseline => emit_rescale_base(&mut a, o_row, t_row, corr_addr, d),
+        }
+    }
+    if core + 1 == active {
+        emit_decode_merge(&mut a, variant, lay, active, d);
+    }
+    a.finish()
+}
+
+/// Merge the per-core decode partials into `lay.out`:
+/// `m* = max mᶜ`, `wᶜ = exp(mᶜ − m*)`, `out = Σ wᶜ·Oᶜ / Σ wᶜ·lᶜ`.
+///
+/// Runs on the last active core after its own tile loop. Functional
+/// core execution is sequential against the shared SPM, so every
+/// partial is already written when the merge reads it; the timing
+/// makespan does not serialize the merge behind the other cores — the
+/// unmodeled cluster barrier is logged in DESIGN.md §2/§10.
+fn emit_decode_merge(a: &mut Asm, variant: FaVariant, lay: &FaDecodeLayout, active: u32, d: u32) {
+    // ---- m* = max over active cores, parked at lay.mg -------------------
+    a.li(A5, lay.m as i64);
+    a.flh(FT3, A5, 0);
+    for c in 1..active {
+        a.flh(FT4, A5, (2 * c) as i32);
+        a.fmax_h(FT3, FT3, FT4);
+    }
+    a.li(A0, lay.mg as i64);
+    a.fsh(FT3, A0, 0);
+
+    // ---- l* accumulator in FS2 ------------------------------------------
+    a.fmv_w_x(FS2, ZERO);
+    for c in 0..active {
+        // wᶜ = exp(mᶜ − m*)
+        a.li(A0, lay.mg as i64);
+        a.flh(FT4, A0, 0);
+        a.li(A0, (lay.m + 2 * c) as i64);
+        a.flh(FT5, A0, 0);
+        a.fsub_h(FT5, FT5, FT4);
+        match variant {
+            FaVariant::Optimized => {
+                a.fexp_h(FT5, FT5);
+            }
+            FaVariant::Baseline => emit_libm_exp(a, FT5, FT5),
+        }
+        // park wᶜ in the (now free) corr slot for the SSR broadcast
+        a.li(A0, (lay.corr + 2 * c) as i64);
+        a.fsh(FT5, A0, 0);
+        // l* += wᶜ · lᶜ
+        a.li(A0, (lay.l + 2 * c) as i64);
+        a.flh(FT6, A0, 0);
+        a.fmul_h(FT6, FT6, FT5);
+        a.fadd_h(FS2, FS2, FT6);
+        // out += wᶜ · Oᶜ
+        let o_row = lay.opart + c * 2 * d;
+        match variant {
+            FaVariant::Optimized => {
+                emit_scale_add_opt(a, o_row, lay.out, lay.out, lay.corr + 2 * c, d)
+            }
+            FaVariant::Baseline => {
+                emit_scale_add_base(a, o_row, lay.out, lay.out, lay.corr + 2 * c, d)
+            }
+        }
+    }
+    a.li(A0, lay.lg as i64);
+    a.fsh(FS2, A0, 0);
+
+    // ---- out /= l* --------------------------------------------------------
+    match variant {
+        FaVariant::Optimized => emit_norm_opt(a, lay.out, lay.lg, d),
+        FaVariant::Baseline => emit_norm_base(a, lay.out, lay.lg, d),
+    }
+}
+
 // --------------------------------------------------------------------------
 // Optimized (FREP + SSR + SIMD + VFEXP) phases
 // --------------------------------------------------------------------------
-fn emit_partial_softmax_opt(a: &mut Asm, lay: &FaLayout, i: u32, bk: u32) {
-    let s_row = lay.s + i * 2 * bk;
+fn emit_partial_softmax_opt(
+    a: &mut Asm,
+    s_row: u32,
+    m_addr: u32,
+    l_addr: u32,
+    corr_addr: u32,
+    bk: u32,
+) {
     // row max of the S tile
     a.ssr_cfg(0, SsrPattern::read1d(s_row, bk / 4));
     a.fld(FT3, ZERO, s_row as i32);
@@ -266,13 +575,13 @@ fn emit_partial_softmax_opt(a: &mut Asm, lay: &FaLayout, i: u32, bk: u32) {
     a.vfmaxred_h(FT3, FT3); // m_tile
 
     // m_new = max(m_old, m_tile); corr = exp(m_old - m_new)
-    a.li(A0, (lay.m + 2 * i) as i64);
+    a.li(A0, m_addr as i64);
     a.flh(FT4, A0, 0); // m_old
     a.fmax_h(FT5, FT4, FT3); // m_new
     a.fsh(FT5, A0, 0);
     a.fsub_h(FT6, FT4, FT5);
     a.fexp_h(FT6, FT6); // corr via the scalar FEXP instruction
-    a.li(A0, (lay.corr + 2 * i) as i64);
+    a.li(A0, corr_addr as i64);
     a.fsh(FT6, A0, 0);
 
     // P = exp(S - m_new) streamed; partial sum in FS0/FS1
@@ -297,22 +606,23 @@ fn emit_partial_softmax_opt(a: &mut Asm, lay: &FaLayout, i: u32, bk: u32) {
     a.vfsum_h(FS0, FS0); // row partial sum
 
     // l = l * corr + ps
-    a.li(A0, (lay.l + 2 * i) as i64);
+    a.li(A0, l_addr as i64);
     a.flh(FT4, A0, 0);
     a.fmul_h(FT4, FT4, FT6);
     a.fadd_h(FT4, FT4, FS0);
     a.fsh(FT4, A0, 0);
 }
 
-fn emit_rescale_opt(a: &mut Asm, lay: &FaLayout, i: u32, d: u32) {
-    let o_row = lay.o + i * 2 * d;
-    let t_row = lay.t + i * 2 * d;
-    a.li(A0, (lay.corr + 2 * i) as i64);
+/// `dst[0..d] = src[0..d] · w + add[0..d]` streamed (SSR + FREP). The
+/// prefill rescale is the aliased case `dst == src` (O = O·corr + T);
+/// the decode merge accumulates with `dst == add` (out += w·Oᶜ).
+fn emit_scale_add_opt(a: &mut Asm, src: u32, add: u32, dst: u32, w_addr: u32, d: u32) {
+    a.li(A0, w_addr as i64);
     a.flh(FT7, A0, 0);
     a.vfrep_h(FT7, FT7);
-    a.ssr_cfg(0, SsrPattern::read1d(o_row, d / 4));
-    a.ssr_cfg(1, SsrPattern::read1d(t_row, d / 4));
-    a.ssr_cfg(2, SsrPattern::write1d(o_row, d / 4));
+    a.ssr_cfg(0, SsrPattern::read1d(src, d / 4));
+    a.ssr_cfg(1, SsrPattern::read1d(add, d / 4));
+    a.ssr_cfg(2, SsrPattern::write1d(dst, d / 4));
     a.ssr_enable();
     a.li(A3, (d / 8) as i64);
     a.frep(A3, 6);
@@ -325,9 +635,8 @@ fn emit_rescale_opt(a: &mut Asm, lay: &FaLayout, i: u32, d: u32) {
     a.ssr_disable();
 }
 
-fn emit_norm_opt(a: &mut Asm, lay: &FaLayout, i: u32, d: u32) {
-    let o_row = lay.o + i * 2 * d;
-    a.li(A0, (lay.l + 2 * i) as i64);
+fn emit_norm_opt(a: &mut Asm, o_row: u32, l_addr: u32, d: u32) {
+    a.li(A0, l_addr as i64);
     a.li(T0, 0x3F80);
     a.fmv_w_x(FS1, T0);
     a.flh(FT4, A0, 0);
@@ -348,8 +657,14 @@ fn emit_norm_opt(a: &mut Asm, lay: &FaLayout, i: u32, d: u32) {
 // --------------------------------------------------------------------------
 // Baseline (scalar C, libm exponential) phases
 // --------------------------------------------------------------------------
-fn emit_partial_softmax_base(a: &mut Asm, lay: &FaLayout, i: u32, bk: u32) {
-    let s_row = lay.s + i * 2 * bk;
+fn emit_partial_softmax_base(
+    a: &mut Asm,
+    s_row: u32,
+    m_addr: u32,
+    l_addr: u32,
+    corr_addr: u32,
+    bk: u32,
+) {
     // scalar row max
     a.li(A0, s_row as i64);
     a.li(A3, bk as i64);
@@ -363,13 +678,13 @@ fn emit_partial_softmax_base(a: &mut Asm, lay: &FaLayout, i: u32, bk: u32) {
     a.bnez(A3, lp);
 
     // stats + corr (libm exp)
-    a.li(A0, (lay.m + 2 * i) as i64);
+    a.li(A0, m_addr as i64);
     a.flh(FT4, A0, 0);
     a.fmax_h(FT5, FT4, FT3);
     a.fsh(FT5, A0, 0);
     a.fsub_h(FT6, FT4, FT5);
     emit_libm_exp(a, FT6, FT6);
-    a.li(A0, (lay.corr + 2 * i) as i64);
+    a.li(A0, corr_addr as i64);
     a.fsh(FT6, A0, 0);
 
     // P = exp(S - m_new), scalar loop, sum in FS0
@@ -388,18 +703,18 @@ fn emit_partial_softmax_base(a: &mut Asm, lay: &FaLayout, i: u32, bk: u32) {
     a.bnez(A3, lp2);
 
     // l = l * corr + ps
-    a.li(A0, (lay.l + 2 * i) as i64);
+    a.li(A0, l_addr as i64);
     a.flh(FT4, A0, 0);
     a.fmul_h(FT4, FT4, FT6);
     a.fadd_h(FT4, FT4, FS0);
     a.fsh(FT4, A0, 0);
 }
 
-fn emit_rescale_base(a: &mut Asm, lay: &FaLayout, i: u32, d: u32) {
-    a.li(A0, (lay.corr + 2 * i) as i64);
+fn emit_rescale_base(a: &mut Asm, o_row: u32, t_row: u32, corr_addr: u32, d: u32) {
+    a.li(A0, corr_addr as i64);
     a.flh(FT7, A0, 0);
-    a.li(A0, (lay.o + i * 2 * d) as i64);
-    a.li(A1, (lay.t + i * 2 * d) as i64);
+    a.li(A0, o_row as i64);
+    a.li(A1, t_row as i64);
     a.li(A3, d as i64);
     let lp = a.label();
     a.bind(lp);
@@ -414,10 +729,33 @@ fn emit_rescale_base(a: &mut Asm, lay: &FaLayout, i: u32, d: u32) {
     a.bnez(A3, lp);
 }
 
-fn emit_norm_base(a: &mut Asm, lay: &FaLayout, i: u32, d: u32) {
-    a.li(A0, (lay.l + 2 * i) as i64);
+/// Scalar `dst = src · w + add` walk (decode-merge accumulate, baseline
+/// variant; `dst` may differ from `src`, unlike [`emit_rescale_base`]).
+fn emit_scale_add_base(a: &mut Asm, src: u32, add: u32, dst: u32, w_addr: u32, d: u32) {
+    a.li(A0, w_addr as i64);
+    a.flh(FT7, A0, 0);
+    a.li(A0, src as i64);
+    a.li(A1, add as i64);
+    a.li(A2, dst as i64);
+    a.li(A3, d as i64);
+    let lp = a.label();
+    a.bind(lp);
+    a.flh(FT3, A0, 0);
+    a.fmul_h(FT3, FT3, FT7);
+    a.flh(FT4, A1, 0);
+    a.fadd_h(FT3, FT3, FT4);
+    a.fsh(FT3, A2, 0);
+    a.addi(A0, A0, 2);
+    a.addi(A1, A1, 2);
+    a.addi(A2, A2, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, lp);
+}
+
+fn emit_norm_base(a: &mut Asm, o_row: u32, l_addr: u32, d: u32) {
+    a.li(A0, l_addr as i64);
     a.flh(FT5, A0, 0);
-    a.li(A0, (lay.o + i * 2 * d) as i64);
+    a.li(A0, o_row as i64);
     a.li(A3, d as i64);
     let lp = a.label();
     a.bind(lp);
@@ -484,6 +822,19 @@ mod tests {
         assert!(max_err < tol, "{variant:?} max abs err {max_err}");
     }
 
+    fn check_decode(variant: FaVariant, sk: u32, d: u32, bk: u32, tol: f32) {
+        let q = mat(1, d as usize, 11);
+        let k = mat(sk as usize, d as usize, 12);
+        let v = mat(sk as usize, d as usize, 13);
+        let run = run_flash_decode(variant, &q, &k, &v, sk, d, bk);
+        let want = attention_ref(&q, &k, &v, 1, sk as usize, d as usize);
+        let mut max_err = 0.0f32;
+        for (&got, &w) in run.out.iter().zip(&want) {
+            max_err = max_err.max((got - w).abs());
+        }
+        assert!(max_err < tol, "decode {variant:?} sk={sk} max abs err {max_err}");
+    }
+
     #[test]
     fn optimized_matches_attention() {
         check(FaVariant::Optimized, 16, 64, 16, 32, 0.06);
@@ -516,6 +867,69 @@ mod tests {
     #[test]
     fn single_tile_equals_plain_softmax_attention() {
         check(FaVariant::Optimized, 8, 32, 16, 32, 0.06);
+    }
+
+    #[test]
+    fn decode_matches_attention_single_query() {
+        // 4 tiles over 4 active cores (split-KV), one merge
+        check_decode(FaVariant::Optimized, 64, 16, 16, 0.08);
+        check_decode(FaVariant::Baseline, 64, 16, 16, 0.08);
+    }
+
+    #[test]
+    fn decode_handles_more_tiles_than_cores() {
+        // 16 tiles over 8 cores: two tiles per core, running stats per core
+        check_decode(FaVariant::Optimized, 256, 16, 16, 0.08);
+    }
+
+    #[test]
+    fn decode_single_tile_degenerates_to_softmax_row() {
+        // one tile → one active core, merge over a single partial
+        check_decode(FaVariant::Optimized, 16, 16, 16, 0.08);
+        check_decode(FaVariant::Baseline, 16, 16, 16, 0.08);
+    }
+
+    #[test]
+    fn decode_gpt2_head_dim() {
+        check_decode(FaVariant::Optimized, 128, 64, 16, 0.08);
+    }
+
+    #[test]
+    fn decode_cached_program_runs_on_seeded_spm() {
+        let (sk, d, bk) = (128u32, 64u32, 16u32);
+        let program = build_fa_decode_program(FaVariant::Optimized, sk, d, bk);
+        assert!(program.active_cores() == 8, "8 tiles over 8 cores");
+        let mut cluster = Cluster::new();
+        seed_fa_decode_inputs(&mut cluster.spm, sk, d, bk, 7);
+        let stats = cluster.run_program(&program);
+        assert!(stats.cycles > 0);
+        assert!(stats.combined().exp_ops > 0, "VFEXP partial softmax ran");
+        // deterministic repetition — the steady-state scaling contract
+        let mut cluster2 = Cluster::new();
+        seed_fa_decode_inputs(&mut cluster2.spm, sk, d, bk, 7);
+        let stats2 = cluster2.run_program(&program);
+        assert_eq!(stats.cycles, stats2.cycles);
+    }
+
+    #[test]
+    fn decode_optimized_beats_baseline() {
+        let (sk, d, bk) = (128u32, 64u32, 16u32);
+        let q = mat(1, d as usize, 21);
+        let k = mat(sk as usize, d as usize, 22);
+        let v = mat(sk as usize, d as usize, 23);
+        let base = run_flash_decode(FaVariant::Baseline, &q, &k, &v, sk, d, bk);
+        let opt = run_flash_decode(FaVariant::Optimized, &q, &k, &v, sk, d, bk);
+        let speedup = base.stats.cycles as f64 / opt.stats.cycles as f64;
+        assert!(speedup > 2.0, "decode speedup {speedup:.2}x");
+    }
+
+    #[test]
+    fn decode_footprint_matches_layout() {
+        for (sk, d, bk) in [(64u32, 16u32, 16u32), (256, 64, 16), (128, 128, 16)] {
+            let lay = FaDecodeLayout::new(sk, d, bk);
+            assert_eq!(fa_decode_footprint(sk, d, bk), lay.end);
+            assert!(lay.out_addr() < lay.end);
+        }
     }
 
     #[test]

@@ -1,6 +1,12 @@
 //! The paper's software kernels as simulator instruction streams:
 //! the four softmax configurations (Fig. 4/6), the [5]-style GEMM, the
 //! FlashAttention-2 forward, and the software exponentials they build on.
+
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 pub mod flash_attention;
 pub mod gemm;
 pub mod softexp;

@@ -8,16 +8,33 @@
 //!   kernels in Pallas/JAX, AOT-lowered to HLO text (`python/compile`);
 //! - **Layer 3 (this crate)**: the bit-exact EXP-block model ([`vexp`]),
 //!   the Snitch-cluster simulator ([`sim`]), the paper's software kernels
-//!   ([`kernels`]), the area/energy models ([`energy`]), transformer
-//!   workload models ([`model`]), the multi-cluster coordinator
-//!   ([`coordinator`]) and the PJRT runtime ([`runtime`]) that executes
-//!   the AOT artifacts with Python fully out of the request path, and
-//!   the unified execution engine ([`exec`]) that serves batched
-//!   multi-request inference through one `Backend` API over both the
-//!   analytic estimator and the cycle-accurate simulator.
+//!   ([`kernels`]), the area/energy models ([`energy`]), phase-aware
+//!   transformer workload models ([`model`]), the multi-cluster
+//!   coordinator with prefill/decode tile planning and the KV-cache
+//!   residency rule ([`coordinator`]), the PJRT runtime ([`runtime`])
+//!   that executes the AOT artifacts with Python fully out of the
+//!   request path, and the unified execution engine ([`exec`]) that
+//!   serves batched multi-request inference — including the
+//!   continuously batched autoregressive decode path ([`exec::serve`])
+//!   — through one `Backend` API over both the analytic estimator and
+//!   the cycle-accurate simulator.
 //!
-//! See DESIGN.md for the experiment index (every paper table/figure →
-//! bench target) and EXPERIMENTS.md for measured results.
+//! ## Module layers
+//!
+//! Dependency direction is bottom-up:
+//!
+//! 1. numerics — [`bf16`], [`vexp`], [`accuracy`];
+//! 2. machine — [`isa`], [`sim`] (reference interpreter + decoded fast
+//!    path, differential-tested bit-identical);
+//! 3. workloads — [`kernels`], [`model`], [`energy`];
+//! 4. orchestration — [`coordinator`], [`exec`], [`runtime`].
+//!
+//! See DESIGN.md for the locked contracts (§2 substitution rule, §6
+//! VEXP datapath, §8 execution engine, §9 simulator performance, §10
+//! serving & decode architecture), README.md for the quickstart and the
+//! paper-figure → bench index, and EXPERIMENTS.md for measured results.
+
+#![warn(missing_docs)]
 
 pub mod accuracy;
 pub mod bf16;

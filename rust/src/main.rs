@@ -9,8 +9,12 @@
 //!   flashattention            FA-2 baseline vs optimized (Fig. 6d-f)
 //!   e2e [model]               16-cluster end-to-end estimate (Fig. 8),
 //!                             through the unified Backend API
-//!   serve                     batched multi-request serving demo on the
-//!                             cycle-accurate 16-cluster backend
+//!   serve [--tokens N] [--prompt N] [--stagger N] [--iters N] [--analytic]
+//!                             multi-tenant continuously-batched decode
+//!                             demo: mixed GPT-2 + ViT traffic with
+//!                             staggered arrivals on the 16-cluster
+//!                             backend; reports TTFT, per-token latency,
+//!                             tokens/s and energy per request
 //!   bench [--json <path>] [--small]
 //!                             fig6 softmax + FlashAttention sweep with
 //!                             simulated cycles AND host wall-clock per
@@ -26,7 +30,7 @@ use vexp::error::Result;
 use vexp::exec::{AnalyticBackend, Backend, CycleSimBackend, Engine, Request};
 use vexp::kernels::flash_attention::{run_flash_attention, FaVariant};
 use vexp::kernels::softmax::{run_softmax, SoftmaxVariant};
-use vexp::model::config::{ALL_MODELS, GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE};
+use vexp::model::config::{ALL_MODELS, GPT2_SMALL, VIT_BASE};
 use vexp::runtime::pjrt::Input;
 use vexp::runtime::Runtime;
 use vexp::vexp::exp_unit;
@@ -39,12 +43,23 @@ fn main() -> Result<()> {
         Some("softmax") => softmax_cmd(&args[1..]),
         Some("flashattention") => flash_cmd(),
         Some("e2e") => e2e_cmd(&args[1..]),
-        Some("serve") => serve_cmd(),
+        Some("serve") => serve_cmd(&args[1..]),
         Some("bench") => bench_cmd(&args[1..]),
         Some("area") => area_cmd(),
         _ => {
             eprintln!(
-                "usage: vexp <info|exp|softmax|flashattention|e2e|serve|bench|area> [args]"
+                "usage: vexp <info|exp|softmax|flashattention|e2e|serve|bench|area> [args]\n\
+                 \n\
+                 serve options:\n\
+                   --tokens N     decode-token target per GPT request (default 12)\n\
+                   --prompt N     GPT-2 prompt length (default 256)\n\
+                   --stagger N    arrival spacing in iterations (default 2)\n\
+                   --iters N      iteration safety bound (default 256)\n\
+                   --analytic     rate the run on the analytic backend\n\
+                                  instead of the cycle-accurate simulator\n\
+                 bench options:\n\
+                   --json PATH    write the measured sweep as JSON\n\
+                   --small        single tiny configuration (CI smoke)"
             );
             Ok(())
         }
@@ -178,58 +193,105 @@ fn e2e_cmd(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Batched serving demo: six concurrent requests (mixed models, mixed
-/// sequence lengths) packed onto the 16 clusters and executed for real
-/// on the cycle-accurate backend, with the analytic backend rating the
-/// same batch for comparison.
-fn serve_cmd() -> Result<()> {
-    let mut gpt2_short = GPT2_SMALL;
-    gpt2_short.seq = 512;
-    let mix = [GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE, GPT2_SMALL, gpt2_short];
-
-    let mut engine = Engine::new();
-    for cfg in mix {
-        engine.submit(cfg);
+/// Multi-tenant continuously-batched decode demo: mixed GPT-2 + ViT
+/// traffic with staggered arrivals, served through the continuous
+/// batching loop (DESIGN.md §10). GPT requests prefill their prompt and
+/// then decode against their growing KV-cache one token per iteration;
+/// ViT requests are prefill-only tenants that join and retire
+/// mid-flight while the cluster shares rebalance.
+fn serve_cmd(args: &[String]) -> Result<()> {
+    let mut tokens: u32 = 12;
+    let mut prompt: u32 = 256;
+    let mut stagger: u32 = 2;
+    let mut iters: u32 = 256;
+    let mut analytic = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut num = |name: &str| -> Result<u32> {
+            match it.next().and_then(|v| v.parse::<u32>().ok()) {
+                Some(v) if v > 0 => Ok(v),
+                _ => vexp::bail!("serve: {name} requires a positive integer"),
+            }
+        };
+        match a.as_str() {
+            "--tokens" => tokens = num("--tokens")?,
+            "--prompt" => prompt = num("--prompt")?.clamp(32, 2048),
+            "--stagger" => stagger = num("--stagger")?,
+            "--iters" => iters = num("--iters")?,
+            "--analytic" => analytic = true,
+            other => eprintln!("serve: ignoring unknown flag {other}"),
+        }
     }
-    println!("serving {} concurrent requests on the {CLUSTERS}-cluster system", mix.len());
-    let batch = engine.compile_batch();
+
+    let mut gpt2 = GPT2_SMALL;
+    gpt2.seq = prompt;
+    let mut gpt2_long = GPT2_SMALL;
+    gpt2_long.seq = (2 * prompt).min(2048);
+
+    let traffic = [
+        Request::new(0, gpt2).with_tokens(tokens),
+        Request::new(0, VIT_BASE).arriving_at(1),
+        Request::new(0, gpt2_long).with_tokens(tokens / 2 + 1).arriving_at(stagger),
+        Request::new(0, gpt2).with_tokens(2 * tokens).arriving_at(2 * stagger),
+        Request::new(0, VIT_BASE).arriving_at(2 * stagger),
+        Request::baseline(0, gpt2).with_tokens(tokens).arriving_at(3 * stagger),
+    ];
+    let mut engine = Engine::new();
+    let ids: Vec<u64> = traffic.iter().map(|r| engine.submit_request(*r)).collect();
+
     println!(
-        "compiled batch: {} programs cached, {} hits / {} misses this batch",
-        engine.cache.len(),
-        batch.cache_hits,
-        batch.cache_misses
+        "continuous batching on the {CLUSTERS}-cluster system: {} requests, \
+         mixed GPT-2 ({}–{} prompt, {}+ tokens) + ViT-Base traffic, arrivals staggered {stagger} iterations",
+        engine.pending(),
+        prompt,
+        gpt2_long.seq,
+        tokens
     );
 
-    let mut sim = CycleSimBackend::new(CLUSTERS);
-    let measured = sim.execute(&batch);
-    let mut ana = AnalyticBackend::new();
-    let rated = ana.execute(&batch);
+    let report = if analytic {
+        let mut backend = AnalyticBackend::new();
+        engine.serve_continuous_bounded(&mut backend, iters)
+    } else {
+        let mut backend = CycleSimBackend::new(CLUSTERS);
+        engine.serve_continuous_bounded(&mut backend, iters)
+    };
 
     println!(
-        "{:>3} {:12} {:>5} {:>7} {:>7} {:>12} {:>12} {:>12} {:>7}",
-        "id", "model", "seq", "clstrs", "rounds", "sim cyc", "rated cyc", "energy pJ", "sm%"
+        "{:>3} {:12} {:>7} {:>7} {:>7} {:>10} {:>12} {:>10} {:>10}",
+        "id", "model", "prompt", "arrive", "tokens", "TTFT ms", "tok lat us", "tok/s", "energy mJ"
     );
-    for (cr, (m, a)) in batch
-        .requests
-        .iter()
-        .zip(measured.per_request.iter().zip(&rated.per_request))
-    {
+    for r in &report.per_request {
+        let sub = ids
+            .iter()
+            .position(|&id| id == r.request_id)
+            .map(|i| traffic[i])
+            .expect("report id matches a submitted request");
         println!(
-            "{:>3} {:12} {:>5} {:>7} {:>7} {:>12.0} {:>12.0} {:>12.0} {:>6.1}%",
-            cr.req.id,
-            cr.req.cfg.name,
-            cr.req.cfg.seq,
-            cr.clusters.len(),
-            cr.rounds,
-            m.cycles,
-            a.cycles,
-            m.energy_pj,
-            m.softmax_share() * 100.0
+            "{:>3} {:12} {:>7} {:>7} {:>7} {:>10.3} {:>12.1} {:>10.1} {:>10.3}",
+            r.request_id,
+            r.model,
+            sub.prompt_len(),
+            sub.arrival_iter,
+            r.tokens,
+            r.ttft_ms(),
+            r.token_latency_us(),
+            r.tokens_per_s(),
+            r.energy_mj()
         );
     }
     println!(
-        "batch makespan {} cycles, {} HBM bytes; backends: {} vs {}",
-        measured.makespan_cycles, measured.hbm_bytes, measured.backend, rated.backend
+        "{} iterations, {} cycles ({:.3} ms) end-to-end; {} tokens total -> {:.1} tok/s aggregate; \
+         {:.3} mJ; backend: {}; program cache: {} entries, {} hits / {} misses",
+        report.iterations,
+        report.total_cycles,
+        report.total_cycles as f64 / 1e6,
+        report.total_tokens(),
+        report.tokens_per_s(),
+        report.total_energy_pj() / 1e9,
+        report.backend,
+        engine.cache.len(),
+        engine.cache.hits,
+        engine.cache.misses
     );
     Ok(())
 }

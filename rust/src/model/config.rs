@@ -3,21 +3,29 @@
 /// A decoder/encoder transformer configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TransformerConfig {
+    /// Human-readable model name (also the program-cache identity).
     pub name: &'static str,
+    /// Number of transformer blocks.
     pub layers: u32,
+    /// Model (embedding) dimension.
     pub d_model: u32,
+    /// Attention heads per layer.
     pub heads: u32,
+    /// Feed-forward hidden dimension.
     pub d_ff: u32,
-    /// Evaluation sequence length (non-autoregressive, §V-D).
+    /// Evaluation sequence length (non-autoregressive, §V-D); doubles
+    /// as the prompt length of a serving request.
     pub seq: u32,
 }
 
 impl TransformerConfig {
+    /// Per-head dimension (`d_model / heads`).
     pub fn d_head(&self) -> u32 {
         self.d_model / self.heads
     }
 }
 
+/// GPT-2 Small (124M parameters), evaluated at S = 2048.
 pub const GPT2_SMALL: TransformerConfig = TransformerConfig {
     name: "GPT-2 Small",
     layers: 12,
@@ -27,6 +35,7 @@ pub const GPT2_SMALL: TransformerConfig = TransformerConfig {
     seq: 2048,
 };
 
+/// GPT-3 XL (1.3B parameters), evaluated at S = 2048.
 pub const GPT3_XL: TransformerConfig = TransformerConfig {
     name: "GPT-3 XL",
     layers: 24,
@@ -36,6 +45,7 @@ pub const GPT3_XL: TransformerConfig = TransformerConfig {
     seq: 2048,
 };
 
+/// ViT-Base (86M parameters), 197 patch tokens.
 pub const VIT_BASE: TransformerConfig = TransformerConfig {
     name: "ViT-Base",
     layers: 12,
@@ -45,6 +55,7 @@ pub const VIT_BASE: TransformerConfig = TransformerConfig {
     seq: 197,
 };
 
+/// ViT-Huge (632M parameters), 197 patch tokens.
 pub const VIT_HUGE: TransformerConfig = TransformerConfig {
     name: "ViT-Huge",
     layers: 32,
@@ -54,6 +65,7 @@ pub const VIT_HUGE: TransformerConfig = TransformerConfig {
     seq: 197,
 };
 
+/// The four model configurations the paper evaluates (§V-D).
 pub const ALL_MODELS: [TransformerConfig; 4] = [GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE];
 
 #[cfg(test)]

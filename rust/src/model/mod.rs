@@ -1,10 +1,10 @@
 //! Transformer workload models: the paper's evaluated configurations
-//! (GPT-2 Small, GPT-3 XL, ViT-Base, ViT-Huge) and their per-layer
-//! operation counts, used by the coordinator to schedule and by the
-//! Fig. 1 / Fig. 8 benches to estimate end-to-end runtime and energy.
+//! (GPT-2 Small, GPT-3 XL, ViT-Base, ViT-Huge), their per-layer
+//! operation counts, and the inference [`Phase`] model (prompt prefill
+//! vs KV-cache decode) the serving engine schedules around.
 
 pub mod config;
 pub mod workload;
 
 pub use config::{TransformerConfig, GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE};
-pub use workload::{LayerOps, WorkloadOps};
+pub use workload::{LayerOps, Phase, WorkloadOps};

@@ -1,7 +1,44 @@
-//! Per-layer operation counts for non-autoregressive transformer
-//! inference (the Fig. 1 / Fig. 8 workload model).
+//! Per-layer operation counts for transformer inference, phase-aware:
+//! non-autoregressive forward passes (the Fig. 1 / Fig. 8 workload
+//! model), prompt prefill, and single-token KV-cache decode.
 
 use super::config::TransformerConfig;
+
+/// Inference phase of an autoregressive request.
+///
+/// Prefill processes the whole prompt in one pass (compute-bound,
+/// softmax S² per head); decode extends the sequence by one token
+/// against a KV-cache of length `kv_len` (GEMV-shaped attention,
+/// softmax `kv_len` elements per head, bandwidth-bound — the regime
+/// Potocnik et al. identify on the same class of hardware).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// One forward pass over a prompt of `prompt` tokens.
+    Prefill {
+        /// Prompt length in tokens.
+        prompt: u32,
+    },
+    /// One new token attending over a KV-cache of `kv_len` entries.
+    Decode {
+        /// KV-cache length (prompt + previously generated tokens).
+        kv_len: u32,
+    },
+}
+
+impl Phase {
+    /// True for the decode (single-token) phase.
+    pub fn is_decode(&self) -> bool {
+        matches!(self, Phase::Decode { .. })
+    }
+
+    /// Short display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Prefill { .. } => "prefill",
+            Phase::Decode { .. } => "decode",
+        }
+    }
+}
 
 /// Operation counts of one transformer block at sequence length S.
 #[derive(Clone, Copy, Debug, Default)]
@@ -19,6 +56,7 @@ pub struct LayerOps {
 }
 
 impl LayerOps {
+    /// All GEMM FLOPs of the layer (projections + attention products).
     pub fn total_flops(&self) -> u64 {
         self.proj_flops + self.attn_flops
     }
@@ -27,13 +65,25 @@ impl LayerOps {
 /// Whole-model operation counts.
 #[derive(Clone, Copy, Debug)]
 pub struct WorkloadOps {
+    /// Operation counts of a single transformer block.
     pub per_layer: LayerOps,
+    /// Number of identical blocks in the model.
     pub layers: u32,
 }
 
 impl WorkloadOps {
     /// Build from a model configuration (one full non-autoregressive
     /// forward pass over `cfg.seq` tokens).
+    ///
+    /// ```
+    /// use vexp::model::{Phase, WorkloadOps, GPT2_SMALL};
+    ///
+    /// let prefill = WorkloadOps::of(&GPT2_SMALL).total();
+    /// // decoding ONE token against the same context is GEMV-shaped:
+    /// let decode = WorkloadOps::for_phase(&GPT2_SMALL, Phase::Decode { kv_len: 2048 }).total();
+    /// assert!(decode.attn_flops < prefill.attn_flops / 1000);
+    /// assert_eq!(decode.softmax_elems * 2048, prefill.softmax_elems);
+    /// ```
     pub fn of(cfg: &TransformerConfig) -> Self {
         let s = cfg.seq as u64;
         let d = cfg.d_model as u64;
@@ -55,6 +105,52 @@ impl WorkloadOps {
         }
     }
 
+    /// Prefill over a prompt of `prompt` tokens: the non-autoregressive
+    /// pass of [`WorkloadOps::of`] at sequence length `prompt`.
+    pub fn prefill(cfg: &TransformerConfig, prompt: u32) -> Self {
+        let mut c = *cfg;
+        c.seq = prompt.max(1);
+        Self::of(&c)
+    }
+
+    /// Decode of one token against a KV-cache of length `kv_len`.
+    ///
+    /// Attention degenerates to two GEMVs per head (q·K^T over `kv_len`
+    /// keys, then p·V), softmax is `kv_len` elements per head, and the
+    /// byte counts reflect the decode regime: the full weight set plus
+    /// both KV-cache matrices stream per token, so the phase is
+    /// bandwidth-bound long before it is compute-bound.
+    pub fn decode(cfg: &TransformerConfig, kv_len: u32) -> Self {
+        let t = kv_len.max(1) as u64;
+        let d = cfg.d_model as u64;
+        let h = cfg.heads as u64;
+        let dh = cfg.d_head() as u64;
+        let ff = cfg.d_ff as u64;
+
+        // one token through the projections: GEMV, ×2 MAC
+        let proj_flops = 2 * (3 * d * d + d * d + 2 * d * ff);
+        // q·K^T (t·dh per head) + p·V (t·dh per head); ×2 MAC
+        let attn_flops = 2 * h * (t * dh) * 2;
+        let softmax_elems = h * t;
+        let weight_bytes = 2 * (4 * d * d + 2 * d * ff);
+        // K and V caches (t·dh per head each) + the token's activations
+        let act_bytes = 2 * (2 * h * t * dh + 8 * d);
+
+        WorkloadOps {
+            per_layer: LayerOps { proj_flops, attn_flops, softmax_elems, weight_bytes, act_bytes },
+            layers: cfg.layers,
+        }
+    }
+
+    /// Operation counts for an explicit inference [`Phase`].
+    pub fn for_phase(cfg: &TransformerConfig, phase: Phase) -> Self {
+        match phase {
+            Phase::Prefill { prompt } => Self::prefill(cfg, prompt),
+            Phase::Decode { kv_len } => Self::decode(cfg, kv_len),
+        }
+    }
+
+    /// Whole-model totals (per-layer counts × layer count).
     pub fn total(&self) -> LayerOps {
         let l = self.layers as u64;
         LayerOps {
@@ -100,5 +196,61 @@ mod tests {
         let vit = WorkloadOps::of(&VIT_BASE).total();
         let gpt = WorkloadOps::of(&GPT2_SMALL).total();
         assert!(gpt.softmax_elems > 50 * vit.softmax_elems);
+    }
+
+    #[test]
+    fn prefill_matches_of_at_prompt_length() {
+        let mut cfg = GPT2_SMALL;
+        cfg.seq = 512;
+        let via_of = WorkloadOps::of(&cfg).total();
+        let via_prefill = WorkloadOps::prefill(&GPT2_SMALL, 512).total();
+        assert_eq!(via_of.attn_flops, via_prefill.attn_flops);
+        assert_eq!(via_of.softmax_elems, via_prefill.softmax_elems);
+        assert_eq!(via_of.proj_flops, via_prefill.proj_flops);
+    }
+
+    #[test]
+    fn decode_is_gemv_shaped() {
+        let cfg = GPT2_SMALL;
+        let t = 1024u32;
+        let dec = WorkloadOps::decode(&cfg, t).per_layer;
+        let h = cfg.heads as u64;
+        let dh = cfg.d_head() as u64;
+        assert_eq!(dec.attn_flops, 4 * h * t as u64 * dh);
+        assert_eq!(dec.softmax_elems, h * t as u64);
+        // one token through the projections, not `seq` tokens
+        let pre = WorkloadOps::prefill(&cfg, cfg.seq).per_layer;
+        assert_eq!(dec.proj_flops * cfg.seq as u64, pre.proj_flops);
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound_relative_to_prefill() {
+        // bytes-per-FLOP must be far higher in decode than prefill: the
+        // whole weight set streams for a single token of compute.
+        let cfg = GPT3_XL;
+        let pre = WorkloadOps::prefill(&cfg, 2048).total();
+        let dec = WorkloadOps::decode(&cfg, 2048).total();
+        let pre_intensity = pre.total_flops() as f64 / (pre.weight_bytes + pre.act_bytes) as f64;
+        let dec_intensity = dec.total_flops() as f64 / (dec.weight_bytes + dec.act_bytes) as f64;
+        assert!(
+            pre_intensity > 100.0 * dec_intensity,
+            "prefill {pre_intensity:.1} flop/B vs decode {dec_intensity:.3} flop/B"
+        );
+    }
+
+    #[test]
+    fn decode_softmax_grows_linearly_with_kv() {
+        let a = WorkloadOps::decode(&GPT2_SMALL, 256).total();
+        let b = WorkloadOps::decode(&GPT2_SMALL, 1024).total();
+        assert_eq!(b.softmax_elems, 4 * a.softmax_elems);
+        assert_eq!(b.attn_flops, 4 * a.attn_flops);
+    }
+
+    #[test]
+    fn phase_labels() {
+        assert!(Phase::Decode { kv_len: 1 }.is_decode());
+        assert!(!Phase::Prefill { prompt: 1 }.is_decode());
+        assert_eq!(Phase::Prefill { prompt: 8 }.label(), "prefill");
+        assert_eq!(Phase::Decode { kv_len: 8 }.label(), "decode");
     }
 }

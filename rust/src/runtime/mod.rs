@@ -10,6 +10,11 @@
 //! The XLA execution path is gated behind the `pjrt` cargo feature (the
 //! bindings need a local XLA install); manifest indexing always works.
 
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 pub mod json;
 pub mod pjrt;
 

@@ -14,6 +14,11 @@
 //! - [`cluster`]: the 8-core cluster;
 //! - [`stats`]: retired-instruction statistics feeding the energy model.
 
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 pub mod cluster;
 pub mod core;
 pub mod decode;

@@ -25,15 +25,45 @@ pub struct SystemStats {
 /// One cluster's workload in a system run: a list of cached
 /// [`Program`]s executed back-to-back (e.g. one per head round of a
 /// batched request) plus the HBM bytes the cluster streams in.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct ClusterJob {
+    /// Cached programs the cluster executes back-to-back.
     pub programs: Vec<Program>,
+    /// HBM bytes the cluster streams (double-buffered against compute).
     pub hbm_bytes: u64,
+    /// Steady-state repetition scaling applied to the simulated compute
+    /// leg. The serving path simulates a capped number of identical
+    /// slice repetitions and scales to the full count; repeated runs of
+    /// a cached *optimized* kernel are cycle-identical (no
+    /// data-dependent timing), so the scaling is exact for them. The
+    /// `Baseline` kernels' libm exponential diverges once per row on
+    /// the first repetition only (running max starts at −inf), bounding
+    /// the scaling error to one libm-call delta per row — DESIGN.md §10.
+    pub compute_scale: f64,
+    /// Rated (not simulated) compute cycles appended to the compute
+    /// leg, e.g. the projection GEMMs of a serving iteration priced at
+    /// the measured GEMM rate.
+    pub compute_extra: u64,
+}
+
+impl Default for ClusterJob {
+    fn default() -> Self {
+        ClusterJob { programs: vec![], hbm_bytes: 0, compute_scale: 1.0, compute_extra: 0 }
+    }
 }
 
 impl ClusterJob {
+    /// A job executing `programs` once, streaming `hbm_bytes`.
     pub fn new(programs: Vec<Program>, hbm_bytes: u64) -> Self {
-        ClusterJob { programs, hbm_bytes }
+        ClusterJob { programs, hbm_bytes, ..Default::default() }
+    }
+
+    /// Attach steady-state scaling and rated extra compute cycles.
+    pub fn with_scaling(mut self, compute_scale: f64, compute_extra: u64) -> Self {
+        assert!(compute_scale >= 1.0, "scale must extrapolate, not discount");
+        self.compute_scale = compute_scale;
+        self.compute_extra = compute_extra;
+        self
     }
 
     /// A cluster that neither computes nor streams this run.
@@ -44,7 +74,7 @@ impl ClusterJob {
     /// Idle clusters take no part in the run: no DMA fill is charged
     /// and they do not contend for HBM bandwidth.
     pub fn is_idle(&self) -> bool {
-        self.programs.is_empty() && self.hbm_bytes == 0
+        self.programs.is_empty() && self.hbm_bytes == 0 && self.compute_extra == 0
     }
 }
 
@@ -116,7 +146,11 @@ impl System {
     pub fn run_jobs(&mut self, jobs: Vec<ClusterJob>) -> SystemStats {
         assert_eq!(jobs.len(), self.clusters.len(), "one job per cluster");
         let active = jobs.iter().filter(|j| !j.is_idle()).count();
-        let contention = self.hbm.contention_factor(active.max(1), self.dma.bytes_per_cycle);
+        // only clusters that actually stream contend for HBM: a
+        // compute-only job (no bytes) must not slow other clusters' DMA
+        let streaming = jobs.iter().filter(|j| j.hbm_bytes > 0).count();
+        let contention =
+            self.hbm.contention_factor(streaming.max(1), self.dma.bytes_per_cycle);
 
         let reference = self.reference_interp;
         let raw: Vec<Option<ClusterStats>> = if reference || active <= 1 {
@@ -168,9 +202,15 @@ impl System {
             stats.dma_bytes = job.hbm_bytes;
             stats.dma_cycles = dma;
             // double buffering: only the slower of compute/DMA is the
-            // steady-state bound; the fill transfer is exposed once
+            // steady-state bound; the fill transfer is exposed once.
+            // The compute leg is extrapolated by the job's exact
+            // repetition scale plus any rated extra cycles before the
+            // max — so DMA that a longer compute leg would hide stays
+            // hidden, and DMA that exceeds it stays exposed.
+            let compute =
+                (stats.cycles as f64 * job.compute_scale).round() as u64 + job.compute_extra;
             let fill = self.dma.startup as u64;
-            let total = stats.cycles.max(dma) + fill;
+            let total = compute.max(dma) + fill;
             makespan = makespan.max(total);
             stats.cycles = total;
             per_cluster.push(stats);
@@ -292,6 +332,26 @@ mod tests {
             assert_eq!(s.per_cluster[c].dma_cycles, 0);
             assert!(s.per_cluster[c].per_core.is_empty());
         }
+    }
+
+    #[test]
+    fn compute_scaling_extrapolates_exactly() {
+        use crate::exec::program::{KernelKind, Program};
+        let one = Program::new(KernelKind::Raw, cluster_programs(200));
+        // simulating one repetition scaled 3x must equal simulating three
+        let mut sys_scaled = System::new(1);
+        let scaled = sys_scaled
+            .run_jobs(vec![ClusterJob::new(vec![one.clone()], 0).with_scaling(3.0, 0)]);
+        let mut sys_full = System::new(1);
+        let full = sys_full.run_jobs(vec![ClusterJob::new(vec![one.clone(); 3], 0)]);
+        assert_eq!(scaled.cycles, full.cycles, "steady-state scaling must be exact");
+        // rated extra compute shifts a compute-bound makespan 1:1
+        let mut sys_base = System::new(1);
+        let base = sys_base.run_jobs(vec![ClusterJob::new(vec![one.clone()], 0)]);
+        let mut sys_extra = System::new(1);
+        let extra =
+            sys_extra.run_jobs(vec![ClusterJob::new(vec![one], 0).with_scaling(1.0, 5000)]);
+        assert_eq!(extra.cycles, base.cycles + 5000);
     }
 
     #[test]

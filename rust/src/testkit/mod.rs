@@ -2,6 +2,11 @@
 //! crate cache): a seeded SplitMix64 generator plus a `forall` driver
 //! that reports the failing seed for reproduction.
 
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 /// Deterministic SplitMix64 PRNG.
 #[derive(Clone, Debug)]
 pub struct Rng(u64);

@@ -12,6 +12,11 @@
 //! bit-equality over all 65536 BF16 inputs via the AOT-dumped golden
 //! table — the hardware-correctness invariant of this reproduction.
 
+// Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
+// missing_docs gate to exec/coordinator/model); module docs above are
+// the contract. Remove this allow as the gap closes.
+#![allow(missing_docs)]
+
 pub mod consts;
 pub mod exps;
 pub mod poly;

@@ -5,7 +5,9 @@
 //! ships, and at system level for multi-cluster jobs.
 
 use vexp::exec::program::Program;
-use vexp::kernels::flash_attention::{build_fa_program, seed_fa_inputs, FaVariant};
+use vexp::kernels::flash_attention::{
+    build_fa_decode_program, build_fa_program, seed_fa_decode_inputs, seed_fa_inputs, FaVariant,
+};
 use vexp::kernels::gemm::build_gemm_program;
 use vexp::kernels::softmax::{build_softmax_program, seed_softmax_inputs, SoftmaxVariant};
 use vexp::sim::stats::CLASSES;
@@ -92,6 +94,23 @@ fn flash_attention_both_variants_two_lengths_bit_identical() {
                 &program,
                 |spm| seed_fa_inputs(spm, sq, sk, d, bk, 0xFA ^ sk as u64),
                 &format!("fa {variant:?} sq={sq} sk={sk}"),
+            );
+        }
+    }
+}
+
+/// The single-query decode slice (split-KV + merge, DESIGN.md §10) must
+/// hold the same bit-identity contract as every other shipped kernel —
+/// the acceptance gate for running it on the fast path in serving.
+#[test]
+fn flash_decode_both_variants_two_windows_bit_identical() {
+    for variant in [FaVariant::Baseline, FaVariant::Optimized] {
+        for (sk, d, bk) in [(64u32, 64u32, 16u32), (256, 64, 16)] {
+            let program = build_fa_decode_program(variant, sk, d, bk);
+            differential_cluster(
+                &program,
+                |spm| seed_fa_decode_inputs(spm, sk, d, bk, 0xDEC ^ sk as u64),
+                &format!("fa-decode {variant:?} sk={sk}"),
             );
         }
     }
