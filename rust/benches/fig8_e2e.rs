@@ -4,9 +4,11 @@
 //! beyond-paper serving extension: a prefill+decode sweep (per-token
 //! decode cost over KV length) and a continuously-batched serving
 //! summary (TTFT / per-token latency / tokens/s).
-use vexp::exec::{AnalyticBackend, Backend, Engine, Request};
+use vexp::coordinator::CLUSTERS;
+use vexp::exec::{AnalyticBackend, Backend, CycleSimBackend, Engine, Request};
 use vexp::model::config::{ALL_MODELS, GPT2_SMALL, GPT3_XL, VIT_BASE};
 use vexp::model::Phase;
+use vexp::sim::SamplePolicy;
 
 fn main() {
     let mut backend = AnalyticBackend::new();
@@ -84,4 +86,39 @@ fn main() {
             r.energy_mj()
         );
     }
+
+    // --- raw-speed tier: GPT-3 prefill+decode on the cycle simulator -----
+    // Every instruction of the slice programs actually executes (or
+    // replays from the tile memo); remaining repetitions are sampled and
+    // extrapolated with a reported cycle error bound (DESIGN.md §11).
+    // The committed host wall-clock baseline for this sweep lives in
+    // BENCH_sim.json at the repo root.
+    println!();
+    println!(
+        "GPT-3 prefill+decode, cycle simulator raw-speed tier (tile memo + sampled simulation):"
+    );
+    let t0 = std::time::Instant::now();
+    let mut sim = CycleSimBackend::new(CLUSTERS).with_sampling(SamplePolicy::default());
+    let mut engine = Engine::new();
+    let mut gpt3 = GPT3_XL;
+    gpt3.seq = 512;
+    engine.submit_request(Request::new(0, gpt3).with_tokens(16));
+    let report = engine.serve_continuous(&mut sim);
+    let wall_s = t0.elapsed().as_secs_f64();
+    for r in &report.per_request {
+        println!(
+            "  req {:>2} {:12}: TTFT {:>8.3} ms, {:>4} tokens, {:>8.1} us/token, \
+             sampling error bound {:>6.0} cycles",
+            r.request_id,
+            r.model,
+            r.ttft_ms(),
+            r.tokens,
+            r.token_latency_us(),
+            r.error_bound_cycles
+        );
+    }
+    println!(
+        "  {} simulated cycles end-to-end in {:.2} s of host time",
+        report.total_cycles, wall_s
+    );
 }

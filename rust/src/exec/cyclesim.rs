@@ -35,7 +35,9 @@ use crate::kernels::flash_attention::{
 use crate::kernels::gemm::build_gemm_program;
 use crate::kernels::softmax::{build_softmax_program, seed_softmax_inputs};
 use crate::model::{Phase, WorkloadOps};
-use crate::sim::{Cluster, ClusterJob, ClusterStats, System, CORES_PER_CLUSTER};
+use crate::sim::{
+    shared_memo, Cluster, ClusterJob, ClusterStats, SamplePolicy, System, CORES_PER_CLUSTER,
+};
 
 /// Rows used for the softmax rate measurement (one per core).
 const SM_ROWS: u32 = 8;
@@ -61,13 +63,30 @@ pub struct CycleSimBackend {
 }
 
 impl CycleSimBackend {
-    /// Backend over a fresh system of `n_clusters` clusters.
+    /// Backend over a fresh system of `n_clusters` clusters. The tile
+    /// memo is on by default — replayed tiles are bit-identical to
+    /// re-executed ones by construction (DESIGN.md §11), so the memo is
+    /// a pure host-speed win; [`Self::without_memo`] turns it off.
     pub fn new(n_clusters: usize) -> Self {
-        CycleSimBackend {
-            system: System::new(n_clusters),
-            cache: ProgramCache::new(),
-            gemm_cal: None,
-        }
+        let mut system = System::new(n_clusters);
+        system.memo = Some(shared_memo());
+        CycleSimBackend { system, cache: ProgramCache::new(), gemm_cal: None }
+    }
+
+    /// Disable the tile memo (e.g. to time the raw unmemoized fast path
+    /// or A/B the two in the differential tests).
+    pub fn without_memo(mut self) -> Self {
+        self.system.memo = None;
+        self
+    }
+
+    /// Enable sampled simulation (the raw-speed tier): `execute` then
+    /// simulates a warm-up plus a strided sample of each request's slice
+    /// repetitions and extrapolates the rest, reporting the cycle error
+    /// bound in [`RunReport::error_bound_cycles`].
+    pub fn with_sampling(mut self, policy: SamplePolicy) -> Self {
+        self.system.sampling = Some(policy);
+        self
     }
 
     /// Measured cluster-scope softmax cycles and energy per element at
@@ -84,7 +103,7 @@ impl CycleSimBackend {
             .get_or_build(key, || build_softmax_program(variant, SM_ROWS, n));
         let mut cluster = Cluster::new();
         seed_softmax_inputs(&mut cluster.spm, SM_ROWS, n, 0x50F7);
-        let stats = cluster.run_program(&prog);
+        let stats = cluster.run_program_memo(&prog, self.system.memo.as_ref());
         let elems = (SM_ROWS * n) as f64;
         let cyc = stats.cycles as f64 / elems;
         let pj = cluster_energy_pj(&stats, req.softmax_optimized).total() / elems;
@@ -102,7 +121,7 @@ impl CycleSimBackend {
         );
         let prog = self.cache.get_or_build(key, || build_gemm_program(m, k, n).1);
         let mut cluster = Cluster::new();
-        let stats = cluster.run_program(&prog);
+        let stats = cluster.run_program_memo(&prog, self.system.memo.as_ref());
         let flops = (2 * m as u64 * n as u64 * k as u64) as f64;
         let cal = (
             stats.cycles as f64 / flops,
@@ -149,7 +168,7 @@ impl CycleSimBackend {
             .get_or_build(key, || build_fa_program(variant, cal.sq, cal.sk, cal.d, cal.bk));
         let mut cluster = Cluster::new();
         seed_fa_inputs(&mut cluster.spm, cal.sq, cal.sk, cal.d, cal.bk, 0xFA ^ req.id);
-        let stats = cluster.run_program(&prog);
+        let stats = cluster.run_program_memo(&prog, self.system.memo.as_ref());
         let e = cluster_energy_pj(&stats, req.softmax_optimized).total();
         (stats.cycles as f64, e, stats, cal)
     }
@@ -170,7 +189,7 @@ impl CycleSimBackend {
         });
         let mut cluster = Cluster::new();
         seed_fa_decode_inputs(&mut cluster.spm, plan.sk_slice, plan.d, plan.bk, 0xDEC0 ^ req.id);
-        let stats = cluster.run_program(&prog);
+        let stats = cluster.run_program_memo(&prog, self.system.memo.as_ref());
         let e = cluster_energy_pj(&stats, req.softmax_optimized).total();
         (stats.cycles as f64, e, stats)
     }
@@ -333,11 +352,20 @@ impl Backend for CycleSimBackend {
 
         let mut jobs: Vec<ClusterJob> =
             (0..self.system.len()).map(|_| ClusterJob::idle()).collect();
+        // sampled mode hands *all* repetitions to the system (which
+        // simulates a sample of them and extrapolates with a bound)
+        // instead of the MAX_SIM_REPS-then-scale-exactly default
+        let sampling = self.system.sampling.is_some();
         let mut scales = Vec::with_capacity(batch.requests.len());
         let mut extras = Vec::with_capacity(batch.requests.len());
         for cr in &batch.requests {
-            let sim_reps = cr.reps.clamp(1, MAX_SIM_REPS);
-            let scale = cr.reps.max(1) as f64 / sim_reps as f64;
+            let reps = cr.reps.max(1);
+            let (sim_reps, scale) = if sampling {
+                (reps, 1.0)
+            } else {
+                let s = reps.min(MAX_SIM_REPS);
+                (s, reps as f64 / s as f64)
+            };
             scales.push(scale);
             let (proj_rate, _) = derate_gemm(proj_cyc_rate, proj_pj_rate, cr.req.gemm_optimized);
             let extra = (cr.proj_flops_per_cluster as f64 * proj_rate) as u64;
@@ -360,11 +388,20 @@ impl Backend for CycleSimBackend {
                         cr.req.id ^ c as u64,
                     ),
                 }
-                jobs[c] = ClusterJob::new(
-                    vec![cr.program.clone(); sim_reps as usize],
-                    cr.hbm_bytes_per_cluster,
-                )
-                .with_scaling(scale, extra);
+                jobs[c] = if sampling {
+                    ClusterJob::repeated(
+                        cr.program.clone(),
+                        sim_reps as u64,
+                        cr.hbm_bytes_per_cluster,
+                    )
+                    .with_scaling(scale, extra)
+                } else {
+                    ClusterJob::new(
+                        vec![cr.program.clone(); sim_reps as usize],
+                        cr.hbm_bytes_per_cluster,
+                    )
+                    .with_scaling(scale, extra)
+                };
             }
         }
         let stats = self.system.run_jobs(jobs);
@@ -378,6 +415,8 @@ impl Backend for CycleSimBackend {
                 .collect();
             let cycles = mine.iter().map(|s| s.cycles).max().unwrap_or(0) as f64;
             let dma_cycles = mine.iter().map(|s| s.dma_cycles).max().unwrap_or(0) as f64;
+            let error_bound_cycles =
+                mine.iter().map(|s| s.sampled_error_cycles).max().unwrap_or(0) as f64;
             let (_, proj_pj) = derate_gemm(proj_cyc_rate, proj_pj_rate, cr.req.gemm_optimized);
             // Energy composition: per-core instr/SSR energy covers only
             // the simulated repetitions, so it extrapolates by `scale`;
@@ -411,6 +450,7 @@ impl Backend for CycleSimBackend {
                 dma_cycles,
                 clusters_used: cr.clusters.len(),
                 per_cluster: mine,
+                error_bound_cycles,
                 ..Default::default()
             });
         }

@@ -96,6 +96,11 @@ impl Engine {
     /// growing KV-cache, and retire at their token target while the
     /// cluster shares rebalance every iteration. Returns per-request
     /// time-to-first-token, per-token latency, tokens/s and energy.
+    ///
+    /// When the backend runs the raw-speed simulation tier (tile memo +
+    /// [`crate::sim::SamplePolicy`], DESIGN.md §11), each retired
+    /// report's `error_bound_cycles` accumulates the per-iteration
+    /// sampling bounds, so end-to-end serving numbers stay auditable.
     pub fn serve_continuous(&mut self, backend: &mut dyn Backend) -> ServeReport {
         self.serve_continuous_bounded(backend, DEFAULT_MAX_ITERS)
     }

@@ -70,6 +70,13 @@ impl Program {
         &self.decoded
     }
 
+    /// The shared decoded-stream handle itself. Its pointer identity is
+    /// the tile memo's program key ([`crate::sim::memo`]): cache-cloned
+    /// handles compare equal, rebuilt ones don't.
+    pub fn decoded_arc(&self) -> &Arc<Vec<DecodedProgram>> {
+        &self.decoded
+    }
+
     /// Total instructions across all cores (static count, not dynamic).
     pub fn instr_count(&self) -> usize {
         self.per_core.iter().map(Vec::len).sum()

@@ -44,6 +44,12 @@ pub struct RunReport {
     pub decode_token_cycles: f64,
     /// Per-cluster statistics (empty for the analytic backend).
     pub per_cluster: Vec<ClusterStats>,
+    /// Upper bound on the cycle error introduced by sampled-simulation
+    /// extrapolation (DESIGN.md §11). Zero unless the cycle-sim backend
+    /// ran with a [`crate::sim::SamplePolicy`] and actually skipped
+    /// repetitions; `cycles` is then accurate to within this bound of
+    /// the fully simulated fast-path run.
+    pub error_bound_cycles: f64,
 }
 
 impl RunReport {

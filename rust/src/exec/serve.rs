@@ -115,6 +115,9 @@ struct LiveReq {
     gemm_cycles: f64,
     attn_cycles: f64,
     dma_cycles: f64,
+    /// Accumulated sampled-simulation error bound over this request's
+    /// iterations (zero unless the backend sampled).
+    error_bound_cycles: f64,
     last_clusters: usize,
 }
 
@@ -133,6 +136,7 @@ impl LiveReq {
             gemm_cycles: 0.0,
             attn_cycles: 0.0,
             dma_cycles: 0.0,
+            error_bound_cycles: 0.0,
             last_clusters: 0,
         }
     }
@@ -169,6 +173,7 @@ impl LiveReq {
             attn_cycles: self.attn_cycles,
             dma_cycles: self.dma_cycles,
             clusters_used: self.last_clusters,
+            error_bound_cycles: self.error_bound_cycles,
             ttft_cycles: self.ttft_cycles,
             tokens: self.generated,
             decode_token_cycles,
@@ -245,6 +250,7 @@ pub(crate) fn run_continuous(
             lr.gemm_cycles += r.gemm_cycles;
             lr.attn_cycles += r.attn_cycles;
             lr.dma_cycles += r.dma_cycles;
+            lr.error_bound_cycles += r.error_bound_cycles;
             lr.last_clusters = cr.clusters.len();
             entries_log.push(IterationEntry {
                 id: lr.req.id,

@@ -15,11 +15,14 @@
 //!                             staggered arrivals on the 16-cluster
 //!                             backend; reports TTFT, per-token latency,
 //!                             tokens/s and energy per request
-//!   bench [--json <path>] [--small]
+//!   bench [--json <path>] [--small] [--fast-only] [--compare <path>]
 //!                             fig6 softmax + FlashAttention sweep with
 //!                             simulated cycles AND host wall-clock per
 //!                             configuration (fast path vs reference
-//!                             interpreter), written as BENCH_sim.json
+//!                             interpreter), plus a raw-tier GPT-3
+//!                             prefill+decode e2e row (tile memo +
+//!                             sampled simulation vs the full fast
+//!                             path); written as BENCH_sim.json
 //!   area                      GF12 area report (Fig. 5)
 
 use vexp::bf16::Bf16;
@@ -30,7 +33,7 @@ use vexp::error::Result;
 use vexp::exec::{AnalyticBackend, Backend, CycleSimBackend, Engine, Request};
 use vexp::kernels::flash_attention::{run_flash_attention, FaVariant};
 use vexp::kernels::softmax::{run_softmax, SoftmaxVariant};
-use vexp::model::config::{ALL_MODELS, GPT2_SMALL, VIT_BASE};
+use vexp::model::config::{ALL_MODELS, GPT2_SMALL, GPT3_XL, VIT_BASE};
 use vexp::runtime::pjrt::Input;
 use vexp::runtime::Runtime;
 use vexp::vexp::exp_unit;
@@ -59,7 +62,14 @@ fn main() -> Result<()> {
                                   instead of the cycle-accurate simulator\n\
                  bench options:\n\
                    --json PATH    write the measured sweep as JSON\n\
-                   --small        single tiny configuration (CI smoke)"
+                   --small        single tiny configuration (CI smoke)\n\
+                   --fast-only    skip the reference-interpreter timing leg\n\
+                                  (the fast-vs-reference differential check\n\
+                                  stays the default)\n\
+                   --compare PATH gate simulated cycles against a committed\n\
+                                  baseline; wall-clock is reported, never\n\
+                                  gated; a \"provisional\": true baseline\n\
+                                  reports divergences without failing"
             );
             Ok(())
         }
@@ -378,7 +388,9 @@ fn bench_cmd(args: &[String]) -> Result<()> {
     use vexp::sim::Cluster;
 
     let mut json_path: Option<String> = None;
+    let mut compare_path: Option<String> = None;
     let mut small = false;
+    let mut fast_only = false;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -386,7 +398,12 @@ fn bench_cmd(args: &[String]) -> Result<()> {
                 Some(p) if !p.starts_with("--") => json_path = Some(p.clone()),
                 _ => vexp::bail!("bench: --json requires a path argument"),
             },
+            "--compare" => match it.next() {
+                Some(p) if !p.starts_with("--") => compare_path = Some(p.clone()),
+                _ => vexp::bail!("bench: --compare requires a path argument"),
+            },
             "--small" => small = true,
+            "--fast-only" => fast_only = true,
             other => eprintln!("bench: ignoring unknown flag {other}"),
         }
     }
@@ -404,16 +421,21 @@ fn bench_cmd(args: &[String]) -> Result<()> {
                 seed_softmax_inputs(&mut cl.spm, SM_ROWS, n, 0xBE7C ^ n as u64);
                 cl.run_decoded(program.decoded())
             });
-            let (ref_stats, ref_ms) = time_best(reps, || {
-                let mut cl = Cluster::new();
-                seed_softmax_inputs(&mut cl.spm, SM_ROWS, n, 0xBE7C ^ n as u64);
-                cl.run(program.per_core())
-            });
-            assert_stats_identical(
-                &fast_stats,
-                &ref_stats,
-                &format!("softmax {variant:?} n={n}"),
-            );
+            let ref_ms = if fast_only {
+                0.0
+            } else {
+                let (ref_stats, ref_ms) = time_best(reps, || {
+                    let mut cl = Cluster::new();
+                    seed_softmax_inputs(&mut cl.spm, SM_ROWS, n, 0xBE7C ^ n as u64);
+                    cl.run(program.per_core())
+                });
+                assert_stats_identical(
+                    &fast_stats,
+                    &ref_stats,
+                    &format!("softmax {variant:?} n={n}"),
+                );
+                ref_ms
+            };
             rows.push(BenchRow {
                 kernel: "softmax",
                 variant: variant.label(),
@@ -439,16 +461,21 @@ fn bench_cmd(args: &[String]) -> Result<()> {
                 seed_fa_inputs(&mut cl.spm, sq, sk, d, bk, 0xFA ^ sk as u64);
                 cl.run_decoded(program.decoded())
             });
-            let (ref_stats, ref_ms) = time_best(reps, || {
-                let mut cl = Cluster::new();
-                seed_fa_inputs(&mut cl.spm, sq, sk, d, bk, 0xFA ^ sk as u64);
-                cl.run(program.per_core())
-            });
-            assert_stats_identical(
-                &fast_stats,
-                &ref_stats,
-                &format!("fa {variant:?} sk={sk}"),
-            );
+            let ref_ms = if fast_only {
+                0.0
+            } else {
+                let (ref_stats, ref_ms) = time_best(reps, || {
+                    let mut cl = Cluster::new();
+                    seed_fa_inputs(&mut cl.spm, sq, sk, d, bk, 0xFA ^ sk as u64);
+                    cl.run(program.per_core())
+                });
+                assert_stats_identical(
+                    &fast_stats,
+                    &ref_stats,
+                    &format!("fa {variant:?} sk={sk}"),
+                );
+                ref_ms
+            };
             rows.push(BenchRow {
                 kernel: "flashattention",
                 variant: match variant {
@@ -466,6 +493,63 @@ fn bench_cmd(args: &[String]) -> Result<()> {
                 wall_ms_reference: ref_ms,
             });
         }
+    }
+
+    // --- fig8 e2e: GPT-3 prefill + decode on the raw-speed tier -----------
+    // The "fast" leg is the raw tier (tile memo + sampled simulation,
+    // DESIGN.md §11); the "reference" leg here is the *full fast path*
+    // (memo off, every repetition simulated), not the reference
+    // interpreter — this row is what the order-of-magnitude host
+    // wall-clock claim in BENCH_sim.json is measured on.
+    {
+        use vexp::sim::SamplePolicy;
+        let (prompt, toks): (u32, u32) = if small { (128, 4) } else { (512, 16) };
+        let mut gpt3 = GPT3_XL;
+        gpt3.seq = prompt;
+        let run_e2e = |backend: &mut dyn Backend| -> (u64, f64, f64) {
+            let mut engine = Engine::new();
+            engine.submit_request(Request::new(0, gpt3).with_tokens(toks));
+            let t0 = std::time::Instant::now();
+            let report = engine.serve_continuous(backend);
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let bound: f64 =
+                report.per_request.iter().map(|r| r.error_bound_cycles).sum();
+            (report.total_cycles, wall_ms, bound)
+        };
+        let mut raw =
+            CycleSimBackend::new(CLUSTERS).with_sampling(SamplePolicy::default());
+        let (raw_cycles, raw_ms, bound) = run_e2e(&mut raw);
+        let full_ms = if fast_only {
+            0.0
+        } else {
+            let mut full = CycleSimBackend::new(CLUSTERS).without_memo();
+            let (full_cycles, full_ms, _) = run_e2e(&mut full);
+            // sampling's own accuracy contract, checked end to end: the
+            // raw tier's clock may differ from the fully simulated fast
+            // path only within the bound it itself reported
+            assert!(
+                raw_cycles.abs_diff(full_cycles) as f64 <= bound,
+                "e2e raw tier diverged beyond its reported bound: \
+                 raw {raw_cycles} vs full {full_cycles} (bound {bound})"
+            );
+            full_ms
+        };
+        println!(
+            "e2e gpt3 prompt={prompt} tokens={toks}: raw tier {raw_cycles} cycles \
+             (error bound {bound:.0}), host {raw_ms:.1} ms"
+        );
+        rows.push(BenchRow {
+            kernel: "e2e",
+            variant: "gpt3-raw-tier",
+            dims: vec![
+                ("prompt", prompt as u64),
+                ("tokens", toks as u64),
+                ("clusters", CLUSTERS as u64),
+            ],
+            cycles: raw_cycles,
+            wall_ms_fast: raw_ms,
+            wall_ms_reference: full_ms,
+        });
     }
 
     // --- report -----------------------------------------------------------
@@ -497,7 +581,8 @@ fn bench_cmd(args: &[String]) -> Result<()> {
     if let Some(path) = json_path {
         let body: Vec<String> = rows.iter().map(|r| format!("    {}", r.json())).collect();
         let json = format!(
-            "{{\n  \"bench\": \"vexp-sim\",\n  \"mode\": \"{}\",\n  \"host_reps\": {},\n  \
+            "{{\n  \"bench\": \"vexp-sim\",\n  \"provisional\": false,\n  \
+             \"mode\": \"{}\",\n  \"host_reps\": {},\n  \
              \"configs\": [\n{}\n  ],\n  \"total_wall_ms_fast\": {:.4},\n  \
              \"total_wall_ms_reference\": {:.4},\n  \"total_host_speedup\": {:.2}\n}}\n",
             if small { "small" } else { "full" },
@@ -510,7 +595,100 @@ fn bench_cmd(args: &[String]) -> Result<()> {
         std::fs::write(&path, json)?;
         println!("wrote {path}");
     }
+    if let Some(path) = compare_path {
+        compare_against_baseline(&rows, &path, small)?;
+    }
     Ok(())
+}
+
+/// Gate the measured rows against a committed baseline (BENCH_sim.json):
+/// simulated cycles must match row-for-row **exactly** — the simulator
+/// is deterministic, so any divergence is a timing-model change that
+/// needs the baseline re-pinned. Host wall-clock is machine-dependent
+/// and is reported but never gates. A baseline marked
+/// `"provisional": true` reports divergences without failing, so the
+/// gate can be committed before real numbers are pinned; a baseline
+/// recorded in a different mode (`--small` vs full) is shape-disjoint
+/// and skips the row comparison with a notice.
+fn compare_against_baseline(rows: &[BenchRow], path: &str, small: bool) -> Result<()> {
+    use vexp::error::Context;
+    use vexp::runtime::json::Json;
+
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("bench: reading baseline {path}"))?;
+    let doc =
+        Json::parse(&text).map_err(|e| vexp::err!("bench: parsing {path}: {e}"))?;
+    let provisional = matches!(doc.get("provisional"), Some(Json::Bool(true)));
+    let mode = if small { "small" } else { "full" };
+    let base_mode = doc.get("mode").and_then(Json::as_str).unwrap_or("full");
+    if base_mode != mode {
+        println!(
+            "compare: baseline {path} is mode \"{base_mode}\", this run is \
+             \"{mode}\" — configurations are disjoint, nothing to gate"
+        );
+        return Ok(());
+    }
+    let configs = doc
+        .get("configs")
+        .and_then(Json::as_arr)
+        .context("bench: baseline has no configs array")?;
+
+    let mut divergent: Vec<String> = Vec::new();
+    let mut matched = 0usize;
+    for row in rows {
+        let found = configs.iter().find(|c| {
+            c.get("kernel").and_then(Json::as_str) == Some(row.kernel)
+                && c.get("variant").and_then(Json::as_str) == Some(row.variant)
+                && row
+                    .dims
+                    .iter()
+                    .all(|(k, v)| c.get(k).and_then(Json::as_f64) == Some(*v as f64))
+        });
+        let Some(base) = found else {
+            println!(
+                "compare: {} {} has no baseline row (new configuration?)",
+                row.kernel, row.variant
+            );
+            continue;
+        };
+        let base_cycles = base.get("cycles").and_then(Json::as_f64).unwrap_or(-1.0);
+        if base_cycles == row.cycles as f64 {
+            matched += 1;
+        } else {
+            divergent.push(format!(
+                "{} {}: {} cycles, baseline has {}",
+                row.kernel, row.variant, row.cycles, base_cycles
+            ));
+        }
+        // wall-clock: informational only, never a gate
+        if let Some(w) = base.get("wall_ms_fast").and_then(Json::as_f64) {
+            println!(
+                "compare: {} {} host {:.3} ms (baseline {:.3} ms)",
+                row.kernel, row.variant, row.wall_ms_fast, w
+            );
+        }
+    }
+    if divergent.is_empty() {
+        println!("compare: {matched} configurations match {path} exactly");
+        return Ok(());
+    }
+    for d in &divergent {
+        println!("compare: CYCLE DIVERGENCE {d}");
+    }
+    if provisional {
+        println!(
+            "compare: baseline is provisional — {} divergences reported, not \
+             gating (re-run `vexp bench --json` on a reference machine and \
+             commit the result to pin real numbers)",
+            divergent.len()
+        );
+        Ok(())
+    } else {
+        vexp::bail!(
+            "bench: {} configurations diverge from {path} in simulated cycles",
+            divergent.len()
+        )
+    }
 }
 
 fn area_cmd() -> Result<()> {

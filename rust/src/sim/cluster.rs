@@ -10,6 +10,7 @@ use super::decode::DecodedProgram;
 use super::dma::DmaModel;
 use super::fastcore::FastCore;
 use super::mem::Mem;
+use super::memo::SharedMemo;
 use super::stats::{ClusterStats, CoreStats};
 use crate::exec::program::Program;
 use crate::isa::Instr;
@@ -51,7 +52,7 @@ impl Cluster {
             per_core.push(core.run(&mut self.spm, prog));
         }
         let cycles = per_core.iter().map(|s: &CoreStats| s.cycles).max().unwrap_or(0);
-        ClusterStats { per_core, cycles, dma_bytes: 0, dma_cycles: 0 }
+        ClusterStats { per_core, cycles, ..Default::default() }
     }
 
     /// Run one pre-decoded program per core through the micro-op fast
@@ -69,7 +70,31 @@ impl Cluster {
             per_core.push(core.run(&mut self.spm, prog));
         }
         let cycles = per_core.iter().map(|s: &CoreStats| s.cycles).max().unwrap_or(0);
-        ClusterStats { per_core, cycles, dma_bytes: 0, dma_cycles: 0 }
+        ClusterStats { per_core, cycles, ..Default::default() }
+    }
+
+    /// Fast-path execution of a compiled [`Program`] through the tile
+    /// memo: an identical (decoded stream, SPM image) pair replays the
+    /// recorded stats and SPM effect instead of re-executing. The lock
+    /// is held only for the probe and the record, never across the
+    /// execution itself, so concurrently running clusters don't
+    /// serialize on the memo.
+    pub fn run_decoded_memo(
+        &mut self,
+        program: &Program,
+        memo: Option<&SharedMemo>,
+    ) -> ClusterStats {
+        let Some(memo) = memo else {
+            return self.run_decoded(program.decoded());
+        };
+        let key = program.decoded_arc();
+        if let Some(stats) = memo.lock().unwrap().replay(key, &mut self.spm) {
+            return stats;
+        }
+        let before = self.spm.read_bytes(0, self.spm.len()).to_vec();
+        let stats = self.run_decoded(program.decoded());
+        memo.lock().unwrap().record(key, before, &self.spm, &stats);
+        stats
     }
 
     /// Run a compiled [`Program`] on this cluster: the decoded fast path
@@ -80,6 +105,20 @@ impl Cluster {
             self.run(program.per_core())
         } else {
             self.run_decoded(program.decoded())
+        }
+    }
+
+    /// [`Cluster::run_program`] with a tile memo on the fast path (the
+    /// reference-interp build ignores the memo and stays the oracle).
+    pub fn run_program_memo(
+        &mut self,
+        program: &Program,
+        memo: Option<&SharedMemo>,
+    ) -> ClusterStats {
+        if cfg!(feature = "reference-interp") {
+            self.run(program.per_core())
+        } else {
+            self.run_decoded_memo(program, memo)
         }
     }
 

@@ -44,10 +44,27 @@ pub enum FpShape {
     FromInt { wide: bool },
 }
 
+/// Identity of the handful of SIMD ops that dominate FREP steady-state
+/// bodies. The batched executor dispatches on this instead of the
+/// [`FpShape`] function pointer so the compiler can inline (and
+/// autovectorize) the hot lane arithmetic; `Other` falls back to the
+/// pointer call and covers everything else.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HotOp {
+    VfmacH,
+    VfaddH,
+    VfmulH,
+    VfmaxH,
+    VfexpH,
+    Other,
+}
+
 /// A fully pre-decoded FP instruction.
 #[derive(Clone, Copy, Debug)]
 pub struct FpOp {
     pub shape: FpShape,
+    /// Static identity for the batched executor's inline dispatch.
+    pub hot: HotOp,
     pub dst: u8,
     pub a: u8,
     pub b: u8,
@@ -159,16 +176,17 @@ fn f_cvt_d_s(v: u64) -> u64 { (f32::from_bits(v as u32) as f64).to_bits() }
 fn f_cvt_s_d(v: u64) -> u64 { (f64::from_bits(v) as f32).to_bits() as u64 }
 fn f_cvt_h_s(v: u64) -> u64 { Bf16::from_f32(f32::from_bits(v as u32)).0 as u64 }
 
-// packed SIMD (4 × BF16)
-fn f_vfadd_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::add) }
+// packed SIMD (4 × BF16); the five `pub(crate)` ones are also dispatched
+// statically by the batched executor (`fastcore::run_body_batch`)
+pub(crate) fn f_vfadd_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::add) }
 fn f_vfsub_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::sub) }
-fn f_vfmul_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::mul) }
-fn f_vfmax_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::max) }
+pub(crate) fn f_vfmul_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::mul) }
+pub(crate) fn f_vfmax_h(a: u64, b: u64) -> u64 { simd2(a, b, Bf16::max) }
 fn f_vfsgnj_h(a: u64, b: u64) -> u64 {
     let sgn = 0x8000_8000_8000_8000u64;
     (a & !sgn) | (b & sgn)
 }
-fn f_vfmac_h(a: u64, b: u64, c: u64) -> u64 {
+pub(crate) fn f_vfmac_h(a: u64, b: u64, c: u64) -> u64 {
     let la = unpack4(a);
     let lb = unpack4(b);
     let lc = unpack4(c);
@@ -194,7 +212,7 @@ fn f_vfrep_h(v: u64) -> u64 {
 
 // EXP extension
 fn f_fexp_h(v: u64) -> u64 { exp_unit(h(v)).0 as u64 }
-fn f_vfexp_h(v: u64) -> u64 { vfexp(v) }
+pub(crate) fn f_vfexp_h(v: u64) -> u64 { vfexp(v) }
 
 // ---------------------------------------------------------------------------
 // Decoder
@@ -253,9 +271,18 @@ fn decode_fp(i: &Instr) -> FpOp {
         VfexpH { fd, fs1 } => (FpShape::Un(f_vfexp_h), fd.0, fs1.0, 0, 0, 4),
         other => unreachable!("not an FPU instruction: {other:?}"),
     };
+    let hot = match i {
+        VfmacH { .. } => HotOp::VfmacH,
+        VfaddH { .. } => HotOp::VfaddH,
+        VfmulH { .. } => HotOp::VfmulH,
+        VfmaxH { .. } => HotOp::VfmaxH,
+        VfexpH { .. } => HotOp::VfexpH,
+        _ => HotOp::Other,
+    };
     let class = i.class();
     FpOp {
         shape,
+        hot,
         dst,
         a,
         b,
@@ -413,11 +440,14 @@ mod tests {
         assert_eq!(op.occupancy, FDIV_OCCUPANCY as u8);
         assert_eq!(op.latency, latency(Class::FpDivH) as u8);
         assert_eq!(op.flops, 1);
+        assert_eq!(op.hot, HotOp::Other);
         let op = decode_fp(&Instr::VfexpH { fd: FT3, fs1: FT4 });
         assert_eq!(op.exps, 4);
         assert_eq!(op.latency, 2);
+        assert_eq!(op.hot, HotOp::VfexpH);
         let op = decode_fp(&Instr::VfmacH { fd: FT3, fs1: FT0, fs2: FT1 });
         assert_eq!((op.a, op.b, op.c, op.dst), (0, 1, 3, 3));
         assert_eq!(op.flops, 8);
+        assert_eq!(op.hot, HotOp::VfmacH);
     }
 }

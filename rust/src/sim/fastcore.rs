@@ -31,7 +31,10 @@
 //! `tests/sim_differential.rs` holds this executor bit-identical to the
 //! reference interpreter on every kernel the crate ships.
 
-use super::decode::{DecodedProgram, FpOp, FpShape, FrepInfo, MicroOp};
+use super::decode::{
+    f_vfadd_h, f_vfexp_h, f_vfmac_h, f_vfmax_h, f_vfmul_h, DecodedProgram, FpOp, FpShape,
+    FrepInfo, HotOp, MicroOp,
+};
 use super::fpu::{latency, BRANCH_TAKEN_PENALTY, FP_OFFLOAD_OVERHEAD};
 use super::mem::Mem;
 use super::ssr::SsrStream;
@@ -41,6 +44,46 @@ use crate::isa::instr::Class;
 /// Iterations timed in full while watching for steady state before
 /// giving up and timing the remainder op-by-op.
 const WARMUP_CAP: u64 = 8;
+
+/// Remainders shorter than this run through the simple per-op functional
+/// loop — building a batch plan costs more than it saves.
+const BATCH_MIN_ITERS: u64 = 4;
+
+/// Where one batched operand comes from. Resolved once per steady-state
+/// entry: SSR mappings and integer registers cannot change inside an
+/// FREP body (all body ops are FP), so the per-op stream/register
+/// decision `read_freg` makes every iteration is loop-invariant.
+#[derive(Clone, Copy)]
+enum Src {
+    /// Plain FP register read.
+    Reg(u8),
+    /// Pop from SSR read stream `r` (r < 3, mapped, read direction).
+    Pop(u8),
+    /// Loop-invariant immediate (`FromInt` reads an integer register).
+    Imm(u64),
+}
+
+/// Where one batched result goes.
+#[derive(Clone, Copy)]
+enum Dst {
+    Reg(u8),
+    /// Push to SSR write stream `r`.
+    Push(u8),
+}
+
+/// One body op with operands/destination pre-resolved for the batch loop.
+#[derive(Clone, Copy)]
+struct BatchOp {
+    shape: FpShape,
+    hot: HotOp,
+    a: Src,
+    b: Src,
+    c: Src,
+    dst: Dst,
+    class_idx: u8,
+    flops: u8,
+    exps: u8,
+}
 
 /// One Snitch core executing decoded micro-ops.
 pub struct FastCore {
@@ -242,6 +285,213 @@ impl FastCore {
         }
     }
 
+    /// Resolve one FP source operand the way `read_freg` would decide it
+    /// on every single iteration.
+    fn batch_src(&self, r: u8) -> Src {
+        if self.ssr_enabled && r < 3 {
+            if let Some(st) = &self.ssr[r as usize] {
+                if !st.is_write() {
+                    return Src::Pop(r);
+                }
+            }
+        }
+        Src::Reg(r)
+    }
+
+    /// Resolve one FP destination the way `write_freg_value` would.
+    fn batch_dst(&self, r: u8) -> Dst {
+        if self.ssr_enabled && r < 3 {
+            if let Some(st) = &self.ssr[r as usize] {
+                if st.is_write() {
+                    return Dst::Push(r);
+                }
+            }
+        }
+        Dst::Reg(r)
+    }
+
+    /// Batched replacement for `n` runs of [`Self::run_body_functional`]:
+    /// same op order, same operand read order (a, b, c — each read pops
+    /// its stream exactly when the per-op path would), same value-only
+    /// write semantics, same statistics totals. When every used stream
+    /// is a flat descriptor with enough beats, addresses become local
+    /// `+8` cursors and the hot SIMD ops dispatch statically, giving the
+    /// host compiler a tight, autovectorizable inner loop; otherwise
+    /// beats pop one-by-one so mid-loop stream exhaustion still panics
+    /// at exactly the reference beat.
+    fn run_body_batch(&mut self, spm: &mut Mem, body: &[MicroOp], n: u64) {
+        if n < BATCH_MIN_ITERS {
+            for _ in 0..n {
+                self.run_body_functional(spm, body);
+            }
+            return;
+        }
+        // Plan: resolve operands/destinations once, count per-iteration
+        // stream uses.
+        let mut plan: Vec<BatchOp> = Vec::with_capacity(body.len());
+        let mut uses = [0u64; 3];
+        for op in body {
+            let fp = match op {
+                MicroOp::Fp(fp) => fp,
+                other => unreachable!("non-FP micro-op {other:?} in FREP body"),
+            };
+            let (a, b, c) = match fp.shape {
+                FpShape::Un(_) => (self.batch_src(fp.a), Src::Reg(0), Src::Reg(0)),
+                FpShape::Bin(_) => (self.batch_src(fp.a), self.batch_src(fp.b), Src::Reg(0)),
+                FpShape::Tri(_) => {
+                    (self.batch_src(fp.a), self.batch_src(fp.b), self.batch_src(fp.c))
+                }
+                FpShape::FromInt { wide } => {
+                    let v = self.ireg(fp.a) as u64;
+                    (Src::Imm(if wide { v } else { v & 0xFFFF_FFFF }), Src::Reg(0), Src::Reg(0))
+                }
+            };
+            let dst = self.batch_dst(fp.dst);
+            for s in [a, b, c] {
+                if let Src::Pop(r) = s {
+                    uses[r as usize] += 1;
+                }
+            }
+            if let Dst::Push(r) = dst {
+                uses[r as usize] += 1;
+            }
+            plan.push(BatchOp {
+                shape: fp.shape,
+                hot: fp.hot,
+                a,
+                b,
+                c,
+                dst,
+                class_idx: fp.class_idx,
+                flops: fp.flops,
+                exps: fp.exps,
+            });
+        }
+        // Cursor mode needs every used stream flat with >= n iterations
+        // of beats left; anything less falls back to per-beat pops (so
+        // an overrun panics at the exact beat the reference would).
+        let mut cursor_mode = true;
+        for r in 0..3usize {
+            if uses[r] > 0 {
+                let st = self.ssr[r].as_ref().expect("planned stream must exist");
+                if !matches!(st, SsrStream::Flat { .. }) || st.remaining() < n * uses[r] {
+                    cursor_mode = false;
+                }
+            }
+        }
+        if cursor_mode {
+            let mut cursors = [0u32; 3];
+            for r in 0..3usize {
+                if uses[r] > 0 {
+                    cursors[r] = self.ssr[r].as_ref().unwrap().peek_addr().unwrap();
+                }
+            }
+            macro_rules! fetch {
+                ($s:expr) => {
+                    match $s {
+                        Src::Reg(r) => self.fregs[r as usize],
+                        Src::Pop(r) => {
+                            let addr = cursors[r as usize];
+                            cursors[r as usize] = addr.wrapping_add(8);
+                            spm.read_u64(addr)
+                        }
+                        Src::Imm(v) => v,
+                    }
+                };
+            }
+            for _ in 0..n {
+                for bo in &plan {
+                    let result = match bo.shape {
+                        FpShape::Un(f) => {
+                            let va = fetch!(bo.a);
+                            if bo.hot == HotOp::VfexpH { f_vfexp_h(va) } else { f(va) }
+                        }
+                        FpShape::Bin(f) => {
+                            let va = fetch!(bo.a);
+                            let vb = fetch!(bo.b);
+                            match bo.hot {
+                                HotOp::VfaddH => f_vfadd_h(va, vb),
+                                HotOp::VfmulH => f_vfmul_h(va, vb),
+                                HotOp::VfmaxH => f_vfmax_h(va, vb),
+                                _ => f(va, vb),
+                            }
+                        }
+                        FpShape::Tri(f) => {
+                            let va = fetch!(bo.a);
+                            let vb = fetch!(bo.b);
+                            let vc = fetch!(bo.c);
+                            if bo.hot == HotOp::VfmacH {
+                                f_vfmac_h(va, vb, vc)
+                            } else {
+                                f(va, vb, vc)
+                            }
+                        }
+                        FpShape::FromInt { .. } => fetch!(bo.a),
+                    };
+                    match bo.dst {
+                        Dst::Reg(r) => self.fregs[r as usize] = result,
+                        Dst::Push(r) => {
+                            let addr = cursors[r as usize];
+                            cursors[r as usize] = addr.wrapping_add(8);
+                            spm.write_u64(addr, result);
+                        }
+                    }
+                }
+            }
+            for r in 0..3usize {
+                if uses[r] > 0 {
+                    self.ssr[r].as_mut().unwrap().advance(n * uses[r]);
+                }
+            }
+        } else {
+            macro_rules! fetch {
+                ($s:expr) => {
+                    match $s {
+                        Src::Reg(r) => self.fregs[r as usize],
+                        Src::Pop(r) => {
+                            let addr = self.ssr[r as usize].as_mut().unwrap().next_addr();
+                            spm.read_u64(addr)
+                        }
+                        Src::Imm(v) => v,
+                    }
+                };
+            }
+            for _ in 0..n {
+                for bo in &plan {
+                    let result = match bo.shape {
+                        FpShape::Un(f) => f(fetch!(bo.a)),
+                        FpShape::Bin(f) => {
+                            let va = fetch!(bo.a);
+                            let vb = fetch!(bo.b);
+                            f(va, vb)
+                        }
+                        FpShape::Tri(f) => {
+                            let va = fetch!(bo.a);
+                            let vb = fetch!(bo.b);
+                            let vc = fetch!(bo.c);
+                            f(va, vb, vc)
+                        }
+                        FpShape::FromInt { .. } => fetch!(bo.a),
+                    };
+                    match bo.dst {
+                        Dst::Reg(r) => self.fregs[r as usize] = result,
+                        Dst::Push(r) => {
+                            let addr = self.ssr[r as usize].as_mut().unwrap().next_addr();
+                            spm.write_u64(addr, result);
+                        }
+                    }
+                }
+            }
+        }
+        // Bulk statistics: identical totals to n per-op executions.
+        for bo in &plan {
+            self.stats.bump_idx_n(bo.class_idx as usize, n);
+            self.stats.flops += bo.flops as u64 * n;
+            self.stats.exp_ops += bo.exps as u64 * n;
+        }
+        self.stats.ssr_beats += (uses[0] + uses[1] + uses[2]) * n;
+    }
+
     /// Scoreboard state relative to `fpu_free` at an iteration boundary.
     /// Ready times at or behind `fpu_free` are clamped to -1: they can
     /// never bind a future `max` against the (monotone) `fpu_free`, nor
@@ -313,9 +563,7 @@ impl FastCore {
                         live.push((r, self.freg_ready[r] - free0));
                     }
                 }
-                for _ in 0..remaining {
-                    self.run_body_functional(spm, body);
-                }
+                self.run_body_batch(spm, body, remaining);
                 self.fpu_free = free0 + delta * remaining;
                 self.last_retire = self.last_retire.max(self.fpu_free + lr_rel);
                 for (r, off) in live {
@@ -645,6 +893,49 @@ mod tests {
         a.fsh(FT3, A0, 4);
         differential(a.finish(), |m| {
             m.write_f32_as_bf16(0x200, &(0..256).map(|i| (i % 7) as f32 * 0.25).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn walker_stream_body_matches_reference() {
+        // repeat-beat pattern (stride0 = 0) stays on the reference
+        // walker, forcing the batched executor's per-beat pop fallback
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read3d(0x100, 0, 4, 8, 50, 0, 1));
+        a.ssr_enable();
+        a.li(A1, 200);
+        a.frep(A1, 1);
+        a.vfadd_h(FT3, FT3, FT0);
+        a.ssr_disable();
+        a.li(A0, 0x8000);
+        a.fsd(FT3, A0, 0);
+        differential(a.finish(), |m| {
+            m.write_f32_as_bf16(
+                0x100,
+                &(0..200).map(|i| (i % 11) as f32 * 0.125).collect::<Vec<_>>(),
+            );
+        });
+    }
+
+    #[test]
+    fn long_aliased_stream_matches_reference() {
+        // read and write streams over the same region (the softmax NORM
+        // aliasing pattern) with a long steady state: the batch loop's
+        // cursor interleaving must read each beat before rewriting it
+        let n = 256u32;
+        let mut a = Asm::new();
+        a.ssr_cfg(0, SsrPattern::read1d(0x300, n));
+        a.ssr_cfg(1, SsrPattern::write1d(0x300, n));
+        a.ssr_enable();
+        a.li(A1, n as i64);
+        a.frep(A1, 1);
+        a.vfmul_h(FT1, FT0, FT0);
+        a.ssr_disable();
+        differential(a.finish(), |m| {
+            m.write_f32_as_bf16(
+                0x300,
+                &(0..4 * n as usize).map(|i| (i % 17) as f32 * 0.2 - 1.5).collect::<Vec<_>>(),
+            );
         });
     }
 

@@ -1,0 +1,247 @@
+//! Tile-level memoization for the fast path (DESIGN.md §11).
+//!
+//! A "tile" is one cluster-level [`Program`](crate::exec::program::Program)
+//! execution: the serving/bench layers re-run the *same* decoded micro-op
+//! stream against the *same* SPM image thousands of times (decode steps,
+//! layer repeats, steady-state slices). The memo caches the complete
+//! effect of such an execution — the [`ClusterStats`] delta and the SPM
+//! after-image — and replays it with a hash probe + byte compare +
+//! byte copy instead of re-executing the micro-ops.
+//!
+//! Cache key: `(decoded-stream identity, FNV-1a hash of SPM bytes)`.
+//! Stream identity is the address of the shared `Arc<Vec<DecodedProgram>>`
+//! inside `Program` — programs built through `ProgramCache` share storage,
+//! so identical kernels compare equal by pointer. Each entry pins its Arc,
+//! so an address can never be recycled by a different program while the
+//! entry lives (no ABA). Hash collisions are resolved by an exact
+//! before-image compare, so replay is *bit-exact by construction*:
+//! a replayed result is only ever the recording of an identical
+//! (program, SPM) pair. Values differ → compare fails → miss →
+//! re-execute (the invalidation rule).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::decode::DecodedProgram;
+use super::mem::Mem;
+use super::stats::ClusterStats;
+
+/// Cap on live entries; each entry holds two SPM images (~256 KiB), so
+/// the default cap bounds the memo at ~64 MiB. When full, new tiles
+/// simply execute unmemoized — correctness never depends on capacity.
+pub const MEMO_CAP: usize = 256;
+
+/// One recorded tile execution.
+struct MemoEntry {
+    /// Pins the decoded stream so its address stays unique (see module docs).
+    _prog: Arc<Vec<DecodedProgram>>,
+    /// Full SPM image the execution started from.
+    before: Vec<u8>,
+    /// Full SPM image the execution ended with.
+    after: Vec<u8>,
+    /// Stats delta produced by the execution.
+    stats: ClusterStats,
+}
+
+/// The tile memo. Shared across clusters via [`SharedMemo`]; the lock is
+/// held only for the probe/record itself, never across an execution.
+#[derive(Default)]
+pub struct TileMemo {
+    entries: HashMap<(usize, u64), Vec<MemoEntry>>,
+    len: usize,
+    /// Successful replays.
+    pub hits: u64,
+    /// Probes that fell through to real execution.
+    pub misses: u64,
+}
+
+/// FNV-1a over the SPM image: cheap prefilter for the exact compare.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl TileMemo {
+    /// An empty memo.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of cached tile executions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn key(prog: &Arc<Vec<DecodedProgram>>, spm_hash: u64) -> (usize, u64) {
+        (Arc::as_ptr(prog) as *const u8 as usize, spm_hash)
+    }
+
+    /// Try to replay a cached execution of `prog` against the current
+    /// contents of `spm`. On a hit, writes the after-image into `spm`
+    /// and returns the recorded stats delta; on a miss returns `None`
+    /// (the caller executes for real and should [`record`](Self::record)).
+    pub fn replay(
+        &mut self,
+        prog: &Arc<Vec<DecodedProgram>>,
+        spm: &mut Mem,
+    ) -> Option<ClusterStats> {
+        let image = spm.read_bytes(0, spm.len());
+        let key = Self::key(prog, fnv1a(image));
+        if let Some(cands) = self.entries.get(&key) {
+            for e in cands {
+                if e.before == image {
+                    let after = e.after.clone();
+                    let stats = e.stats.clone();
+                    spm.load_bytes(0, &after);
+                    self.hits += 1;
+                    return Some(stats);
+                }
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Record an execution: `before` is the SPM image the run started
+    /// from (captured by the caller pre-execution), `spm` holds the
+    /// post-execution state, `stats` is the delta the run produced.
+    /// Silently drops the entry once [`MEMO_CAP`] is reached.
+    pub fn record(
+        &mut self,
+        prog: &Arc<Vec<DecodedProgram>>,
+        before: Vec<u8>,
+        spm: &Mem,
+        stats: &ClusterStats,
+    ) {
+        if self.len >= MEMO_CAP {
+            return;
+        }
+        let key = Self::key(prog, fnv1a(&before));
+        let cands = self.entries.entry(key).or_default();
+        // A concurrent cluster may have recorded the same tile between
+        // our probe and this record; keep the first copy only.
+        if cands.iter().any(|e| e.before == before) {
+            return;
+        }
+        cands.push(MemoEntry {
+            _prog: Arc::clone(prog),
+            before,
+            after: spm.read_bytes(0, spm.len()).to_vec(),
+            stats: stats.clone(),
+        });
+        self.len += 1;
+    }
+}
+
+/// A memo shared across clusters (and across the threaded cluster pool).
+pub type SharedMemo = Arc<Mutex<TileMemo>>;
+
+/// Construct an empty [`SharedMemo`].
+pub fn shared_memo() -> SharedMemo {
+    Arc::new(Mutex::new(TileMemo::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::stats::CoreStats;
+
+    fn stats_with_cycles(cycles: u64) -> ClusterStats {
+        ClusterStats {
+            per_core: vec![CoreStats::default()],
+            cycles,
+            ..Default::default()
+        }
+    }
+
+    fn dummy_prog() -> Arc<Vec<DecodedProgram>> {
+        Arc::new(vec![])
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let mut memo = TileMemo::new();
+        let prog = dummy_prog();
+        let mut spm = Mem::new(64);
+        spm.write_u64(0, 0x1111);
+        assert!(memo.replay(&prog, &mut spm).is_none());
+        let before = spm.read_bytes(0, spm.len()).to_vec();
+
+        // "Execute": mutate the SPM, produce stats.
+        spm.write_u64(8, 0x2222);
+        let stats = stats_with_cycles(42);
+        memo.record(&prog, before, &spm, &stats);
+        assert_eq!(memo.len(), 1);
+
+        // Fresh SPM with the same starting image replays the effect.
+        let mut spm2 = Mem::new(64);
+        spm2.write_u64(0, 0x1111);
+        let replayed = memo.replay(&prog, &mut spm2).expect("hit");
+        assert_eq!(replayed.cycles, 42);
+        assert_eq!(spm2.read_u64(8), 0x2222);
+        assert_eq!(memo.hits, 1);
+        assert_eq!(memo.misses, 1);
+    }
+
+    #[test]
+    fn different_values_miss() {
+        let mut memo = TileMemo::new();
+        let prog = dummy_prog();
+        let mut spm = Mem::new(64);
+        spm.write_u64(0, 0xAAAA);
+        let before = spm.read_bytes(0, spm.len()).to_vec();
+        spm.write_u64(8, 1);
+        memo.record(&prog, before, &spm, &stats_with_cycles(7));
+
+        let mut other = Mem::new(64);
+        other.write_u64(0, 0xBBBB); // different input values
+        assert!(memo.replay(&prog, &mut other).is_none());
+        // The miss must not have touched the SPM.
+        assert_eq!(other.read_u64(8), 0);
+    }
+
+    #[test]
+    fn different_program_identity_misses() {
+        let mut memo = TileMemo::new();
+        let p1 = dummy_prog();
+        let p2 = dummy_prog();
+        let mut spm = Mem::new(64);
+        let before = spm.read_bytes(0, spm.len()).to_vec();
+        memo.record(&p1, before, &spm, &stats_with_cycles(1));
+        assert!(memo.replay(&p2, &mut spm).is_none());
+        assert!(memo.replay(&p1, &mut spm).is_some());
+    }
+
+    #[test]
+    fn cap_stops_growth() {
+        let mut memo = TileMemo::new();
+        let prog = dummy_prog();
+        for i in 0..(MEMO_CAP as u64 + 10) {
+            let mut spm = Mem::new(16);
+            spm.write_u64(0, i);
+            let before = spm.read_bytes(0, spm.len()).to_vec();
+            memo.record(&prog, before, &spm, &stats_with_cycles(i));
+        }
+        assert_eq!(memo.len(), MEMO_CAP);
+    }
+
+    #[test]
+    fn duplicate_record_is_dropped() {
+        let mut memo = TileMemo::new();
+        let prog = dummy_prog();
+        let spm = Mem::new(16);
+        let before = spm.read_bytes(0, spm.len()).to_vec();
+        memo.record(&prog, before.clone(), &spm, &stats_with_cycles(1));
+        memo.record(&prog, before, &spm, &stats_with_cycles(1));
+        assert_eq!(memo.len(), 1);
+    }
+}

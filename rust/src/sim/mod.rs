@@ -7,6 +7,8 @@
 //! - [`decode`]: `Instr` → flat micro-op lowering for the fast path;
 //! - [`fastcore`]: micro-op executor with FREP steady-state timing —
 //!   differential-tested bit-identical to [`core`];
+//! - [`memo`]: tile-level memoization of whole program executions for
+//!   the raw-speed tier (DESIGN.md §11);
 //! - [`ssr`]: SSR stream address generation (reference walk + bulk flat
 //!   descriptors);
 //! - [`fpu`]: latency table of the extended FPU;
@@ -26,6 +28,7 @@ pub mod dma;
 pub mod fastcore;
 pub mod fpu;
 pub mod mem;
+pub mod memo;
 pub mod ssr;
 pub mod stats;
 pub mod system;
@@ -36,9 +39,10 @@ pub use decode::{decode, DecodedProgram, MicroOp};
 pub use dma::{DmaModel, HbmModel};
 pub use fastcore::FastCore;
 pub use mem::{Mem, SPM_BANKS, SPM_BYTES};
+pub use memo::{shared_memo, SharedMemo, TileMemo};
 pub use ssr::{SsrState, SsrStream};
 pub use stats::{ClusterStats, CoreStats};
-pub use system::{ClusterJob, System, SystemStats};
+pub use system::{ClusterJob, SamplePolicy, System, SystemStats};
 
 /// Cluster clock in Hz (paper: 1 GHz operating point).
 pub const CLOCK_HZ: f64 = 1.0e9;

@@ -113,6 +113,56 @@ impl SsrStream {
             SsrStream::Walk(st) => st.next_addr(),
         }
     }
+
+    /// Beats left before the stream exhausts. Exact for flat streams;
+    /// for the reference walker it is derived from the counter state.
+    pub fn remaining(&self) -> u64 {
+        match self {
+            SsrStream::Flat { pos, len, .. } => (*len - *pos) as u64,
+            SsrStream::Walk(st) => {
+                let p = &st.pat;
+                let consumed = st.i2 as u64 * p.reps1 as u64 * p.reps0 as u64
+                    + st.i1 as u64 * p.reps0 as u64
+                    + st.i0 as u64;
+                p.beats().saturating_sub(consumed)
+            }
+        }
+    }
+
+    /// Address the next `next_addr` call would return, without consuming
+    /// a beat; `None` when the stream is exhausted. Only flat streams
+    /// answer — the batched executor uses this to seed its local cursor
+    /// and falls back to per-beat pops for walker streams.
+    pub fn peek_addr(&self) -> Option<u32> {
+        match self {
+            SsrStream::Flat { pat, pos, len } if pos < len => {
+                Some(pat.base.wrapping_add(*pos * 8))
+            }
+            _ => None,
+        }
+    }
+
+    /// Consume `n` beats at once (the batched executor resolves the
+    /// addresses itself from [`peek_addr`](Self::peek_addr) for flat
+    /// streams). Panics with the reference walker's message if fewer
+    /// than `n` beats remain.
+    pub fn advance(&mut self, n: u64) {
+        match self {
+            SsrStream::Flat { pat, pos, len } => {
+                assert!(
+                    (*pos as u64 + n) <= *len as u64,
+                    "SSR stream exhausted (pattern {:?})",
+                    pat
+                );
+                *pos += n as u32;
+            }
+            SsrStream::Walk(st) => {
+                for _ in 0..n {
+                    st.next_addr();
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -166,5 +216,45 @@ mod tests {
         s.next_addr();
         s.next_addr();
         s.next_addr();
+    }
+
+    #[test]
+    fn peek_advance_matches_next_addr() {
+        let pat = SsrPattern::read1d(0x100, 8);
+        let mut popped = SsrStream::new(pat);
+        let mut bulk = SsrStream::new(pat);
+        assert_eq!(bulk.remaining(), 8);
+        // consume 3 beats each way, checking the peeked cursor walk
+        let mut cursor = bulk.peek_addr().unwrap();
+        for _ in 0..3 {
+            assert_eq!(cursor, popped.next_addr());
+            cursor = cursor.wrapping_add(8);
+        }
+        bulk.advance(3);
+        assert_eq!(bulk.remaining(), 5);
+        assert_eq!(bulk.peek_addr(), Some(cursor));
+        assert_eq!(bulk.next_addr(), popped.next_addr());
+    }
+
+    #[test]
+    fn walker_remaining_counts_down() {
+        // repeat-beat pattern stays on the walker
+        let pat = SsrPattern::read3d(0x100, 0, 8, 8, 4, 0, 2);
+        let mut s = SsrStream::new(pat);
+        assert!(matches!(s, SsrStream::Walk(_)));
+        let total = s.remaining();
+        assert_eq!(total, pat.beats());
+        s.next_addr();
+        assert_eq!(s.remaining(), total - 1);
+        s.advance(2);
+        assert_eq!(s.remaining(), total - 3);
+        assert_eq!(s.peek_addr(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "SSR stream exhausted")]
+    fn flat_bulk_advance_past_end_panics() {
+        let mut s = SsrStream::new(SsrPattern::read1d(0x0, 2));
+        s.advance(3);
     }
 }

@@ -59,6 +59,28 @@ impl CoreStats {
         self.retired_arr[idx] += 1;
     }
 
+    /// Bump a pre-resolved counter by `n` at once (the batched fast path
+    /// accounts a whole steady-state chunk with one call per op).
+    #[inline]
+    pub(crate) fn bump_idx_n(&mut self, idx: usize, n: u64) {
+        self.retired_arr[idx] += n;
+    }
+
+    /// These stats repeated back-to-back `k` times on the same core:
+    /// cycles and every counter scale by `k` (sampled-mode extrapolation).
+    pub fn scaled(&self, k: u64) -> CoreStats {
+        let mut out = self.clone();
+        out.cycles *= k;
+        for c in out.retired_arr.iter_mut() {
+            *c *= k;
+        }
+        out.ssr_beats *= k;
+        out.mem_bytes *= k;
+        out.exp_ops *= k;
+        out.flops *= k;
+        out
+    }
+
     /// Iterate (class, count) pairs with non-zero counts.
     pub fn retired(&self) -> impl Iterator<Item = (Class, u64)> + '_ {
         CLASSES.iter().zip(self.retired_arr.iter())
@@ -123,6 +145,11 @@ pub struct ClusterStats {
     pub dma_bytes: u64,
     /// Cycles the DMA engine was busy.
     pub dma_cycles: u64,
+    /// Upper bound on the cycle error introduced by sampled-mode
+    /// extrapolation (0 for fully simulated runs; DESIGN.md §11).
+    pub sampled_error_cycles: u64,
+    /// Repetitions whose effect was extrapolated rather than simulated.
+    pub sampled_reps: u64,
 }
 
 impl ClusterStats {
@@ -148,6 +175,21 @@ impl ClusterStats {
         self.cycles += other.cycles;
         self.dma_bytes += other.dma_bytes;
         self.dma_cycles += other.dma_cycles;
+        self.sampled_error_cycles += other.sampled_error_cycles;
+        self.sampled_reps += other.sampled_reps;
+    }
+
+    /// This cluster run repeated back-to-back `k` times: everything
+    /// scales linearly (sampled-mode extrapolation of skipped reps).
+    pub fn scaled(&self, k: u64) -> ClusterStats {
+        ClusterStats {
+            per_core: self.per_core.iter().map(|c| c.scaled(k)).collect(),
+            cycles: self.cycles * k,
+            dma_bytes: self.dma_bytes * k,
+            dma_cycles: self.dma_cycles * k,
+            sampled_error_cycles: self.sampled_error_cycles * k,
+            sampled_reps: self.sampled_reps * k,
+        }
     }
 }
 
@@ -185,8 +227,20 @@ mod tests {
         assert_eq!(a.cycles, 14);
         assert_eq!(a.count(Class::FpSimd), 2);
 
-        let mut ca = ClusterStats { per_core: vec![a.clone()], cycles: 14, dma_bytes: 10, dma_cycles: 3 };
-        let cb = ClusterStats { per_core: vec![b.clone(), b], cycles: 9, dma_bytes: 1, dma_cycles: 2 };
+        let mut ca = ClusterStats {
+            per_core: vec![a.clone()],
+            cycles: 14,
+            dma_bytes: 10,
+            dma_cycles: 3,
+            ..Default::default()
+        };
+        let cb = ClusterStats {
+            per_core: vec![b.clone(), b],
+            cycles: 9,
+            dma_bytes: 1,
+            dma_cycles: 2,
+            ..Default::default()
+        };
         ca.append_sequential(&cb);
         assert_eq!(ca.cycles, 23);
         assert_eq!(ca.dma_bytes, 11);
@@ -208,5 +262,33 @@ mod tests {
         assert_eq!(a.cycles, 9);
         assert_eq!(a.count(Class::FpExp), 2);
         assert_eq!(a.exp_ops, 8);
+    }
+
+    #[test]
+    fn scaled_matches_repeated_append() {
+        let mut core = CoreStats { cycles: 7, ssr_beats: 3, flops: 12, ..Default::default() };
+        core.bump(Class::FpSimd);
+        let one = ClusterStats {
+            per_core: vec![core],
+            cycles: 7,
+            dma_bytes: 64,
+            dma_cycles: 2,
+            ..Default::default()
+        };
+        let mut appended = one.clone();
+        for _ in 0..4 {
+            appended.append_sequential(&one);
+        }
+        let scaled = one.scaled(5);
+        assert_eq!(scaled.cycles, appended.cycles);
+        assert_eq!(scaled.dma_bytes, appended.dma_bytes);
+        assert_eq!(scaled.dma_cycles, appended.dma_cycles);
+        assert_eq!(scaled.per_core[0].cycles, appended.per_core[0].cycles);
+        assert_eq!(scaled.per_core[0].flops, appended.per_core[0].flops);
+        assert_eq!(scaled.per_core[0].ssr_beats, appended.per_core[0].ssr_beats);
+        assert_eq!(
+            scaled.per_core[0].count(Class::FpSimd),
+            appended.per_core[0].count(Class::FpSimd)
+        );
     }
 }

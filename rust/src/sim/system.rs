@@ -8,6 +8,7 @@
 
 use super::cluster::Cluster;
 use super::dma::{DmaModel, HbmModel};
+use super::memo::SharedMemo;
 use super::stats::ClusterStats;
 use crate::exec::program::{KernelKind, Program};
 use crate::isa::Instr;
@@ -20,6 +21,35 @@ pub struct SystemStats {
     pub cycles: u64,
     /// Total bytes streamed from HBM across all clusters.
     pub hbm_bytes: u64,
+    /// Upper bound on the makespan error introduced by sampled-mode
+    /// extrapolation: the max over the per-cluster bounds (the makespan
+    /// is a max over clusters, so its error cannot exceed any single
+    /// cluster's). Zero for fully simulated runs.
+    pub error_bound_cycles: u64,
+}
+
+/// Sampled-simulation policy (DESIGN.md §11): cycle-simulate the first
+/// `warmup` repetitions of a repeated [`ClusterJob`] plus every
+/// `stride`-th of the rest (up to `max_samples` samples), and
+/// extrapolate the skipped repetitions from the sampled ones. The
+/// spread of the sampled cycle counts bounds the extrapolation error,
+/// reported in [`ClusterStats::sampled_error_cycles`] /
+/// [`SystemStats::error_bound_cycles`].
+#[derive(Clone, Copy, Debug)]
+pub struct SamplePolicy {
+    /// Repetitions always simulated up front (covers first-iteration
+    /// effects like running-max initialization).
+    pub warmup: u32,
+    /// After warm-up, simulate every `stride`-th repetition.
+    pub stride: u32,
+    /// Cap on post-warm-up samples.
+    pub max_samples: u32,
+}
+
+impl Default for SamplePolicy {
+    fn default() -> Self {
+        SamplePolicy { warmup: 2, stride: 16, max_samples: 6 }
+    }
 }
 
 /// One cluster's workload in a system run: a list of cached
@@ -44,11 +74,22 @@ pub struct ClusterJob {
     /// leg, e.g. the projection GEMMs of a serving iteration priced at
     /// the measured GEMM rate.
     pub compute_extra: u64,
+    /// Back-to-back repetitions of the whole program list. Unlike
+    /// `compute_scale` (which prices repeats analytically) every
+    /// repetition here really executes — unless sampled mode elides
+    /// some of them with an error bound.
+    pub reps: u64,
 }
 
 impl Default for ClusterJob {
     fn default() -> Self {
-        ClusterJob { programs: vec![], hbm_bytes: 0, compute_scale: 1.0, compute_extra: 0 }
+        ClusterJob {
+            programs: vec![],
+            hbm_bytes: 0,
+            compute_scale: 1.0,
+            compute_extra: 0,
+            reps: 1,
+        }
     }
 }
 
@@ -56,6 +97,13 @@ impl ClusterJob {
     /// A job executing `programs` once, streaming `hbm_bytes`.
     pub fn new(programs: Vec<Program>, hbm_bytes: u64) -> Self {
         ClusterJob { programs, hbm_bytes, ..Default::default() }
+    }
+
+    /// A job executing one program `reps` times back-to-back — the shape
+    /// sampled-simulation mode understands.
+    pub fn repeated(program: Program, reps: u64, hbm_bytes: u64) -> Self {
+        assert!(reps >= 1, "a repeated job runs at least once");
+        ClusterJob { programs: vec![program], hbm_bytes, reps, ..Default::default() }
     }
 
     /// Attach steady-state scaling and rated extra compute cycles.
@@ -89,6 +137,12 @@ pub struct System {
     /// [`SystemStats`]; the `reference-interp` cargo feature forces this
     /// on for a whole build.
     pub reference_interp: bool,
+    /// Tile memo shared by all clusters (fast path only; the reference
+    /// interpreter never consults it). `None` disables memoization.
+    pub memo: Option<SharedMemo>,
+    /// Sampled-simulation policy for repeated jobs. `None` (the
+    /// default) simulates every repetition.
+    pub sampling: Option<SamplePolicy>,
 }
 
 impl System {
@@ -98,6 +152,8 @@ impl System {
             hbm: HbmModel::default(),
             dma: DmaModel::default(),
             reference_interp: cfg!(feature = "reference-interp"),
+            memo: None,
+            sampling: None,
         }
     }
 
@@ -153,6 +209,9 @@ impl System {
             self.hbm.contention_factor(streaming.max(1), self.dma.bytes_per_cycle);
 
         let reference = self.reference_interp;
+        let memo = self.memo.clone();
+        let memo_ref = memo.as_ref();
+        let sampling = self.sampling;
         let raw: Vec<Option<ClusterStats>> = if reference || active <= 1 {
             self.clusters
                 .iter_mut()
@@ -161,7 +220,7 @@ impl System {
                     if job.is_idle() {
                         None
                     } else {
-                        Some(run_cluster_job(cluster, job, reference))
+                        Some(run_cluster_job(cluster, job, reference, memo_ref, sampling))
                     }
                 })
                 .collect()
@@ -175,7 +234,11 @@ impl System {
                         if job.is_idle() {
                             None
                         } else {
-                            Some(s.spawn(move || run_cluster_job(cluster, job, false)))
+                            Some(
+                                s.spawn(move || {
+                                    run_cluster_job(cluster, job, false, memo_ref, sampling)
+                                }),
+                            )
                         }
                     })
                     .collect();
@@ -189,6 +252,7 @@ impl System {
         let mut per_cluster = Vec::with_capacity(jobs.len());
         let mut makespan = 0u64;
         let mut hbm_bytes = 0u64;
+        let mut error_bound = 0u64;
         for (job, stats) in jobs.iter().zip(raw) {
             let mut stats = match stats {
                 None => {
@@ -213,23 +277,93 @@ impl System {
             let total = compute.max(dma) + fill;
             makespan = makespan.max(total);
             stats.cycles = total;
+            // sampled-mode error passes through the same compute scaling
+            // (an off-by-e compute leg scales to off-by-scale·e at most)
+            stats.sampled_error_cycles =
+                (stats.sampled_error_cycles as f64 * job.compute_scale).ceil() as u64;
+            error_bound = error_bound.max(stats.sampled_error_cycles);
             per_cluster.push(stats);
         }
-        SystemStats { per_cluster, cycles: makespan, hbm_bytes }
+        SystemStats { per_cluster, cycles: makespan, hbm_bytes, error_bound_cycles: error_bound }
     }
 }
 
 /// One cluster's compute leg of a system run: its programs back-to-back
-/// through the fast path (or the reference interpreter as oracle).
-fn run_cluster_job(cluster: &mut Cluster, job: &ClusterJob, reference: bool) -> ClusterStats {
+/// through the fast path (or the reference interpreter as oracle),
+/// repeated `job.reps` times. Sampled mode elides eligible repetitions
+/// (never under the reference interpreter — it stays the exact oracle).
+fn run_cluster_job(
+    cluster: &mut Cluster,
+    job: &ClusterJob,
+    reference: bool,
+    memo: Option<&SharedMemo>,
+    sampling: Option<SamplePolicy>,
+) -> ClusterStats {
+    if !reference {
+        if let Some(policy) = sampling {
+            if job.programs.len() == 1 && job.reps > policy.warmup as u64 + 1 {
+                return run_sampled(cluster, job, policy, memo);
+            }
+        }
+    }
     let mut stats = ClusterStats::default();
-    for program in &job.programs {
-        let run = if reference {
-            cluster.run(program.per_core())
+    for _ in 0..job.reps {
+        for program in &job.programs {
+            let run = if reference {
+                cluster.run(program.per_core())
+            } else {
+                cluster.run_decoded_memo(program, memo)
+            };
+            stats.append_sequential(&run);
+        }
+    }
+    stats
+}
+
+/// Sampled execution of a repeated single-program job: simulate the
+/// warm-up and a strided sample of the rest, extrapolate the skipped
+/// repetitions from the sampled ones, and bound the cycle error by the
+/// observed sample spread (plus one rounding cycle).
+fn run_sampled(
+    cluster: &mut Cluster,
+    job: &ClusterJob,
+    policy: SamplePolicy,
+    memo: Option<&SharedMemo>,
+) -> ClusterStats {
+    let program = &job.programs[0];
+    let total = job.reps;
+    let warmup = (policy.warmup as u64).min(total);
+    let stride = (policy.stride as u64).max(1);
+    let max_samples = (policy.max_samples as u64).max(1);
+
+    let mut stats = ClusterStats::default();
+    let mut sample_cycles: Vec<u64> = Vec::new();
+    let mut representative: Option<ClusterStats> = None;
+    let mut skipped = 0u64;
+    for r in 0..total {
+        let simulate = r < warmup
+            || (sample_cycles.len() < max_samples as usize && (r - warmup) % stride == 0);
+        if simulate {
+            let run = cluster.run_decoded_memo(program, memo);
+            if r >= warmup {
+                sample_cycles.push(run.cycles);
+                representative = Some(run.clone());
+            }
+            stats.append_sequential(&run);
         } else {
-            cluster.run_decoded(program.decoded())
-        };
-        stats.append_sequential(&run);
+            skipped += 1;
+        }
+    }
+    if skipped > 0 {
+        let rep = representative.expect("eligibility guarantees a post-warm-up sample");
+        let lo = *sample_cycles.iter().min().unwrap();
+        let hi = *sample_cycles.iter().max().unwrap();
+        let mean = sample_cycles.iter().sum::<u64>() as f64 / sample_cycles.len() as f64;
+        let mut extra = rep.scaled(skipped);
+        extra.cycles = (mean * skipped as f64).round() as u64;
+        extra.sampled_error_cycles = skipped * (hi - lo) + 1;
+        extra.sampled_reps = skipped;
+        stats.append_sequential(&extra);
     }
     stats
 }
@@ -371,5 +505,68 @@ mod tests {
         let r1 = single.per_cluster[0].combined().retired_total();
         let r2 = double.per_cluster[0].combined().retired_total();
         assert_eq!(r2, 2 * r1);
+    }
+
+    #[test]
+    fn repeated_job_equals_program_list() {
+        use crate::exec::program::{KernelKind, Program};
+        let one = Program::new(KernelKind::Raw, cluster_programs(150));
+        let mut sys_list = System::new(1);
+        let list = sys_list.run_jobs(vec![ClusterJob::new(vec![one.clone(); 3], 0)]);
+        let mut sys_reps = System::new(1);
+        let reps = sys_reps.run_jobs(vec![ClusterJob::repeated(one, 3, 0)]);
+        assert_eq!(list.cycles, reps.cycles);
+        assert_eq!(
+            list.per_cluster[0].combined().retired_total(),
+            reps.per_cluster[0].combined().retired_total()
+        );
+    }
+
+    #[test]
+    fn sampled_mode_honors_its_error_bound() {
+        use crate::exec::program::{KernelKind, Program};
+        let one = Program::new(KernelKind::Raw, cluster_programs(200));
+        let reps = 40u64;
+        let mut full_sys = System::new(1);
+        let full = full_sys.run_jobs(vec![ClusterJob::repeated(one.clone(), reps, 0)]);
+        assert_eq!(full.error_bound_cycles, 0, "full runs report no error");
+
+        let mut s_sys = System::new(1);
+        s_sys.sampling = Some(SamplePolicy::default());
+        let sampled = s_sys.run_jobs(vec![ClusterJob::repeated(one, reps, 0)]);
+        let bound = sampled.error_bound_cycles;
+        assert!(bound > 0, "extrapolated run must report a bound");
+        let diff = sampled.cycles.abs_diff(full.cycles);
+        assert!(diff <= bound, "diff {diff} exceeds reported bound {bound}");
+        assert!(sampled.per_cluster[0].sampled_reps > 0);
+        // identical repetitions extrapolate counters exactly
+        assert_eq!(
+            sampled.per_cluster[0].combined().retired_total(),
+            full.per_cluster[0].combined().retired_total()
+        );
+    }
+
+    #[test]
+    fn memoized_run_is_bit_identical_and_hits() {
+        use crate::exec::program::{KernelKind, Program};
+        use crate::sim::memo::shared_memo;
+        let one = Program::new(KernelKind::Raw, cluster_programs(100));
+        let job = || vec![ClusterJob::repeated(one.clone(), 4, 0)];
+
+        let mut plain_sys = System::new(1);
+        let plain = plain_sys.run_jobs(job());
+
+        let memo = shared_memo();
+        let mut memo_sys = System::new(1);
+        memo_sys.memo = Some(memo.clone());
+        let memoized = memo_sys.run_jobs(job());
+
+        assert_eq!(plain.cycles, memoized.cycles);
+        assert_eq!(
+            plain.per_cluster[0].combined().retired_total(),
+            memoized.per_cluster[0].combined().retired_total()
+        );
+        let m = memo.lock().unwrap();
+        assert!(m.hits > 0, "repeated identical tiles must replay from the memo");
     }
 }

@@ -4,14 +4,20 @@
 //! traffic, and byte-identical SPM contents — for every kernel the crate
 //! ships, and at system level for multi-cluster jobs.
 
+use vexp::coordinator::{DecodePlan, TilePlan};
+use vexp::exec::batch::CalShape;
 use vexp::exec::program::Program;
 use vexp::kernels::flash_attention::{
     build_fa_decode_program, build_fa_program, seed_fa_decode_inputs, seed_fa_inputs, FaVariant,
 };
 use vexp::kernels::gemm::build_gemm_program;
 use vexp::kernels::softmax::{build_softmax_program, seed_softmax_inputs, SoftmaxVariant};
+use vexp::model::config::{ALL_MODELS, GPT2_SMALL, GPT3_XL};
 use vexp::sim::stats::CLASSES;
-use vexp::sim::{Cluster, ClusterJob, ClusterStats, CoreStats, Mem, System};
+use vexp::sim::{
+    shared_memo, Cluster, ClusterJob, ClusterStats, CoreStats, Mem, SamplePolicy, System,
+};
+use vexp::testkit::forall;
 
 fn assert_core_stats_eq(reference: &CoreStats, fast: &CoreStats, what: &str) {
     assert_eq!(reference.cycles, fast.cycles, "{what}: cycles");
@@ -176,6 +182,222 @@ fn system_run_jobs_bit_identical_across_paths() {
     for (i, (rc, fc)) in ref_sys.clusters.iter().zip(&fast_sys.clusters).enumerate() {
         assert_mem_eq(&rc.spm, &fc.spm, &format!("cluster {i}"));
     }
+}
+
+/// Run `program` through the tile memo twice (a recording miss, then a
+/// replaying hit) and through the plain fast path, all on identically
+/// seeded clusters: stats and SPM bytes must be bit-identical across
+/// the three, and the hit/miss counters must prove the second memoized
+/// run actually replayed instead of re-executing.
+fn differential_memo(program: &Program, seed: impl Fn(&mut Mem), what: &str) {
+    let mut plain = Cluster::new();
+    seed(&mut plain.spm);
+    let p = plain.run_decoded_memo(program, None);
+
+    let memo = shared_memo();
+    let mut first = Cluster::new();
+    seed(&mut first.spm);
+    let f1 = first.run_decoded_memo(program, Some(&memo));
+    let mut second = Cluster::new();
+    seed(&mut second.spm);
+    let f2 = second.run_decoded_memo(program, Some(&memo));
+
+    assert_cluster_stats_eq(&p, &f1, &format!("{what} (memo miss)"));
+    assert_cluster_stats_eq(&p, &f2, &format!("{what} (memo hit)"));
+    assert_mem_eq(&plain.spm, &first.spm, &format!("{what} (memo miss)"));
+    assert_mem_eq(&plain.spm, &second.spm, &format!("{what} (memo hit)"));
+    let m = memo.lock().unwrap();
+    assert_eq!(m.misses, 1, "{what}: first run must record");
+    assert_eq!(m.hits, 1, "{what}: second run must replay");
+}
+
+/// Memo-on vs memo-off must be bit-identical — stats *and* SPM bytes —
+/// for every kernel the crate ships (ISSUE 6 satellite: the raw-speed
+/// tier's correctness gate).
+#[test]
+fn memo_replay_bit_identical_all_kernels() {
+    const N: u32 = 128;
+    for variant in SoftmaxVariant::ALL {
+        let program = build_softmax_program(variant, 8, N);
+        differential_memo(
+            &program,
+            |spm| seed_softmax_inputs(spm, 8, N, 0x3E30 ^ N as u64),
+            &format!("memo softmax {variant:?}"),
+        );
+    }
+    let program = build_softmax_program(SoftmaxVariant::SwExpHwScalar, 8, 64);
+    differential_memo(
+        &program,
+        |spm| seed_softmax_inputs(spm, 8, 64, 0x3E3A),
+        "memo softmax SwExpHwScalar",
+    );
+    for variant in [FaVariant::Baseline, FaVariant::Optimized] {
+        let program = build_fa_program(variant, 16, 64, 64, 32);
+        differential_memo(
+            &program,
+            |spm| seed_fa_inputs(spm, 16, 64, 64, 32, 0x3E31),
+            &format!("memo fa {variant:?}"),
+        );
+    }
+    for variant in [FaVariant::Baseline, FaVariant::Optimized] {
+        let program = build_fa_decode_program(variant, 64, 64, 16);
+        differential_memo(
+            &program,
+            |spm| seed_fa_decode_inputs(spm, 64, 64, 16, 0x3E32),
+            &format!("memo fa-decode {variant:?}"),
+        );
+    }
+    let (lay, program) = build_gemm_program(32, 64, 32);
+    differential_memo(
+        &program,
+        |spm| {
+            let a: Vec<f32> = (0..32 * 64).map(|i| ((i * 7) % 83) as f32 * 0.02 - 0.8).collect();
+            let bt: Vec<f32> = (0..32 * 64).map(|i| ((i * 5) % 71) as f32 * 0.02 - 0.7).collect();
+            spm.write_f32_as_bf16(lay.a, &a);
+            spm.write_f32_as_bf16(lay.bt, &bt);
+        },
+        "memo gemm",
+    );
+}
+
+/// The memo key is (program identity, tile *values*): the same program
+/// over different input bytes must miss and recompute correctly, and a
+/// rebuilt (not cache-cloned) program must not alias a recorded entry.
+#[test]
+fn memo_invalidates_on_values_and_program_identity() {
+    let program = build_softmax_program(SoftmaxVariant::SwExpHw, 8, 64);
+    let memo = shared_memo();
+    let mut a = Cluster::new();
+    seed_softmax_inputs(&mut a.spm, 8, 64, 111);
+    let ra = a.run_decoded_memo(&program, Some(&memo));
+
+    // same program, different tile values: miss, and the recompute is
+    // exactly the unmemoized result
+    let mut b = Cluster::new();
+    seed_softmax_inputs(&mut b.spm, 8, 64, 222);
+    let rb = b.run_decoded_memo(&program, Some(&memo));
+    {
+        let m = memo.lock().unwrap();
+        assert_eq!(m.hits, 0, "different values must not replay");
+        assert_eq!(m.misses, 2);
+    }
+    let mut b2 = Cluster::new();
+    seed_softmax_inputs(&mut b2.spm, 8, 64, 222);
+    let rb2 = b2.run_decoded_memo(&program, None);
+    assert_cluster_stats_eq(&rb2, &rb, "memo value invalidation");
+    assert_mem_eq(&b2.spm, &b.spm, "memo value invalidation");
+
+    // a rebuilt program is a different tile even over identical bytes
+    let rebuilt = build_softmax_program(SoftmaxVariant::SwExpHw, 8, 64);
+    let mut c = Cluster::new();
+    seed_softmax_inputs(&mut c.spm, 8, 64, 111);
+    let rc = c.run_decoded_memo(&rebuilt, Some(&memo));
+    assert_cluster_stats_eq(&ra, &rc, "rebuilt program identity");
+    assert_eq!(memo.lock().unwrap().hits, 0, "pointer-identity keys must not alias");
+}
+
+/// Run a repeated job fully simulated and sampled (identical seeding)
+/// and check sampled mode's contract: the clock differs from the fully
+/// simulated fast path by at most the bound it reports, and counters
+/// extrapolate exactly for cycle-identical repetitions.
+fn check_sampled_bound(
+    program: &Program,
+    seed: &dyn Fn(&mut Mem),
+    reps: u64,
+    policy: SamplePolicy,
+    what: &str,
+) -> Result<(), String> {
+    let mut full_sys = System::new(1);
+    seed(&mut full_sys.clusters[0].spm);
+    let full = full_sys.run_jobs(vec![ClusterJob::repeated(program.clone(), reps, 0)]);
+    if full.error_bound_cycles != 0 {
+        return Err(format!("{what}: full run reported a nonzero bound"));
+    }
+
+    let mut s_sys = System::new(1);
+    s_sys.sampling = Some(policy);
+    seed(&mut s_sys.clusters[0].spm);
+    let sampled = s_sys.run_jobs(vec![ClusterJob::repeated(program.clone(), reps, 0)]);
+
+    let diff = sampled.cycles.abs_diff(full.cycles);
+    let bound = sampled.error_bound_cycles;
+    if diff > bound {
+        return Err(format!("{what}: cycle diff {diff} exceeds reported bound {bound}"));
+    }
+    if sampled.per_cluster[0].sampled_reps > 0 && bound == 0 {
+        return Err(format!("{what}: skipped repetitions but claimed a zero bound"));
+    }
+    let fr = full.per_cluster[0].combined().retired_total();
+    let sr = sampled.per_cluster[0].combined().retired_total();
+    if fr != sr {
+        return Err(format!("{what}: retired {sr} vs fully simulated {fr}"));
+    }
+    Ok(())
+}
+
+/// Property: the sampled-simulation error bound is honored on every
+/// fig6 configuration (softmax variants, FlashAttention slices) and
+/// every fig8 configuration (each model's prefill slice and the GPT
+/// decode slices), across randomized repetition counts and policies.
+#[test]
+fn sampled_bound_holds_on_fig6_and_fig8_configs() {
+    type Seeder = Box<dyn Fn(&mut Mem)>;
+    let mut configs: Vec<(Program, Seeder, String)> = Vec::new();
+
+    // fig6: the four softmax kernels + both FA variants
+    for variant in SoftmaxVariant::ALL {
+        let program = build_softmax_program(variant, 8, 64);
+        configs.push((
+            program,
+            Box::new(|spm| seed_softmax_inputs(spm, 8, 64, 0x516)),
+            format!("fig6 softmax {variant:?}"),
+        ));
+    }
+    for variant in [FaVariant::Baseline, FaVariant::Optimized] {
+        let program = build_fa_program(variant, 16, 64, 64, 32);
+        configs.push((
+            program,
+            Box::new(|spm| seed_fa_inputs(spm, 16, 64, 64, 32, 0x517)),
+            format!("fig6 fa {variant:?}"),
+        ));
+    }
+    // fig8: each model's prefill calibration slice…
+    for cfg in ALL_MODELS {
+        let plan = TilePlan::plan(&cfg);
+        let cal = CalShape::for_plan(&plan);
+        let program = build_fa_program(FaVariant::Optimized, cal.sq, cal.sk, cal.d, cal.bk);
+        configs.push((
+            program,
+            Box::new(move |spm| {
+                seed_fa_inputs(spm, cal.sq, cal.sk, cal.d, cal.bk, 0x518)
+            }),
+            format!("fig8 prefill slice {}", cfg.name),
+        ));
+    }
+    // …and the autoregressive models' decode slices
+    for cfg in [GPT2_SMALL, GPT3_XL] {
+        let plan = DecodePlan::plan(&cfg);
+        let cal = CalShape::for_decode(&plan);
+        let program = build_fa_decode_program(FaVariant::Optimized, cal.sk, cal.d, cal.bk);
+        configs.push((
+            program,
+            Box::new(move |spm| seed_fa_decode_inputs(spm, cal.sk, cal.d, cal.bk, 0x519)),
+            format!("fig8 decode slice {}", cfg.name),
+        ));
+    }
+
+    forall(3, |rng| {
+        let policy = SamplePolicy {
+            warmup: rng.range(1, 4) as u32,
+            stride: rng.range(2, 8) as u32,
+            max_samples: rng.range(2, 6) as u32,
+        };
+        let reps = rng.range(policy.warmup as u64 + 2, 24);
+        for (program, seed, what) in &configs {
+            check_sampled_bound(program, seed.as_ref(), reps, policy, what)?;
+        }
+        Ok(())
+    });
 }
 
 /// The fast path must stay deterministic run-to-run (threads only
