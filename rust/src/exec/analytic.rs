@@ -10,7 +10,7 @@
 
 use super::batch::CompiledBatch;
 use super::report::{BatchReport, RunReport};
-use super::{Backend, Request};
+use super::{Backend, ExecMode, Request};
 use crate::coordinator::{KernelRates, SystemEstimator};
 use crate::energy::power::DMA_PJ_PER_BYTE;
 use crate::model::{Phase, WorkloadOps};
@@ -150,6 +150,15 @@ impl Backend for AnalyticBackend {
             hbm_bytes,
             cache_hits: batch.cache_hits,
             cache_misses: batch.cache_misses,
+            faults_injected: 0,
+            failed_clusters: Vec::new(),
+            offline_clusters: Vec::new(),
         }
+    }
+
+    fn set_mode(&mut self, mode: ExecMode) -> bool {
+        // The rate model has no cheaper tier below itself: it *is* the
+        // bottom of the degradation ladder, so it accepts only Analytic.
+        matches!(mode, ExecMode::Analytic)
     }
 }

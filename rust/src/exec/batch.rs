@@ -174,16 +174,33 @@ impl BatchScheduler {
     /// and the phase-aware serving scheduler. Requests receive disjoint
     /// contiguous cluster index ranges, each at least one cluster.
     pub fn assign_by_work(&self, work: &[f64], caps: &[usize]) -> Vec<Vec<usize>> {
+        let all: Vec<usize> = (0..self.clusters).collect();
+        self.assign_by_work_on(work, caps, &all)
+    }
+
+    /// [`Self::assign_by_work`] restricted to an explicit set of
+    /// `available` cluster indices — the resilient serve loop re-plans
+    /// around quarantined/offline clusters by shrinking this set.
+    /// Requests receive disjoint contiguous *ranges of `available`*
+    /// (which need not be contiguous cluster indices), each at least
+    /// one cluster.
+    pub fn assign_by_work_on(
+        &self,
+        work: &[f64],
+        caps: &[usize],
+        available: &[usize],
+    ) -> Vec<Vec<usize>> {
         assert!(!work.is_empty(), "empty batch");
         assert_eq!(work.len(), caps.len());
         assert!(
-            work.len() <= self.clusters,
-            "{} requests exceed {} clusters; split the batch",
+            work.len() <= available.len(),
+            "{} requests exceed {} available clusters; split the batch",
             work.len(),
-            self.clusters
+            available.len()
         );
+        debug_assert!(available.iter().all(|&c| c < self.clusters));
         let mut counts = vec![1usize; work.len()];
-        for _ in work.len()..self.clusters {
+        for _ in work.len()..available.len() {
             // highest remaining per-cluster work, capped per request
             let mut best: Option<usize> = None;
             for i in 0..work.len() {
@@ -208,7 +225,7 @@ impl BatchScheduler {
         counts
             .iter()
             .map(|&n| {
-                let ids = (next..next + n).collect();
+                let ids = available[next..next + n].to_vec();
                 next += n;
                 ids
             })
@@ -273,6 +290,21 @@ impl BatchScheduler {
         entries: &[(Request, Phase)],
         cache: &mut ProgramCache,
     ) -> CompiledBatch {
+        let all: Vec<usize> = (0..self.clusters).collect();
+        self.compile_phased_on(entries, cache, &all)
+    }
+
+    /// [`Self::compile_phased`] restricted to an explicit set of
+    /// `available` cluster indices: the resilient serve loop compiles
+    /// each retry attempt around the clusters currently quarantined or
+    /// offline (DESIGN.md §12). Cluster shares, head rounds, reps and
+    /// per-cluster HBM bytes all follow the shrunken set.
+    pub fn compile_phased_on(
+        &self,
+        entries: &[(Request, Phase)],
+        cache: &mut ProgramCache,
+        available: &[usize],
+    ) -> CompiledBatch {
         if entries.is_empty() {
             return CompiledBatch::empty(self.clusters);
         }
@@ -281,7 +313,7 @@ impl BatchScheduler {
             .map(|(r, p)| WorkloadOps::for_phase(&r.cfg, *p).total().total_flops() as f64)
             .collect();
         let caps: Vec<usize> = entries.iter().map(|(r, _)| r.cfg.heads as usize).collect();
-        let assignment = self.assign_by_work(&work, &caps);
+        let assignment = self.assign_by_work_on(&work, &caps, available);
         let (h0, m0) = (cache.hits, cache.misses);
         let requests = entries
             .iter()
@@ -429,6 +461,35 @@ mod tests {
             Request::new(1, VIT_BASE),
             Request::new(2, VIT_BASE),
         ]);
+    }
+
+    #[test]
+    fn assignment_on_a_restricted_set_covers_exactly_that_set() {
+        let sched = BatchScheduler::new(8);
+        // clusters 2 and 5 quarantined
+        let available = vec![0, 1, 3, 4, 6, 7];
+        let work = [100.0, 50.0];
+        let caps = [16, 16];
+        let assignment = sched.assign_by_work_on(&work, &caps, &available);
+        let mut got: Vec<usize> = assignment.iter().flatten().copied().collect();
+        got.sort_unstable();
+        assert_eq!(got, available, "assignment must cover exactly the available set");
+        assert!(assignment.iter().all(|ids| !ids.is_empty()));
+        assert!(assignment[0].len() >= assignment[1].len());
+    }
+
+    #[test]
+    fn compile_phased_on_respects_the_available_set() {
+        let sched = BatchScheduler::new(4);
+        let mut cache = ProgramCache::new();
+        let req = Request::new(0, GPT2_SMALL);
+        let batch = sched.compile_phased_on(
+            &[(req, Phase::Decode { kv_len: 256 })],
+            &mut cache,
+            &[1, 3],
+        );
+        assert_eq!(batch.requests[0].clusters, vec![1, 3]);
+        assert_eq!(batch.n_clusters, 4);
     }
 
     #[test]

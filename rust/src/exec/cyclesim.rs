@@ -25,7 +25,7 @@
 use super::batch::CompiledBatch;
 use super::program::{KernelKind, ProgramCache, ProgramKey};
 use super::report::{BatchReport, RunReport};
-use super::{Backend, Request};
+use super::{Backend, ExecMode, Request};
 use crate::coordinator::{DecodePlan, HeadMap, TilePlan};
 use crate::energy::power::{cluster_energy_pj, DMA_PJ_PER_BYTE};
 use crate::isa::Class;
@@ -435,6 +435,7 @@ impl Backend for CycleSimBackend {
                 instr_ssr * scale + rest + n_cl * cr.proj_flops_per_cluster as f64 * proj_pj;
             // attribute the softmax share from retired-instruction classes
             let sm_frac = Self::softmax_fraction(&mine);
+            let failed = mine.iter().any(|s| s.failed);
             per_request.push(RunReport {
                 backend: self.name(),
                 request_id: cr.req.id,
@@ -451,6 +452,7 @@ impl Backend for CycleSimBackend {
                 clusters_used: cr.clusters.len(),
                 per_cluster: mine,
                 error_bound_cycles,
+                failed,
                 ..Default::default()
             });
         }
@@ -461,6 +463,23 @@ impl Backend for CycleSimBackend {
             hbm_bytes: stats.hbm_bytes,
             cache_hits: batch.cache_hits,
             cache_misses: batch.cache_misses,
+            faults_injected: stats.faults_injected,
+            failed_clusters: stats.failed_clusters,
+            offline_clusters: stats.offline_clusters,
+        }
+    }
+
+    fn set_mode(&mut self, mode: ExecMode) -> bool {
+        match mode {
+            ExecMode::Full => {
+                self.system.sampling = None;
+                true
+            }
+            ExecMode::Sampled => {
+                self.system.sampling = Some(SamplePolicy::default());
+                true
+            }
+            ExecMode::Analytic => false,
         }
     }
 }

@@ -4,7 +4,7 @@
 use super::batch::{BatchScheduler, CompiledBatch};
 use super::program::ProgramCache;
 use super::report::BatchReport;
-use super::serve::{run_continuous, ServeReport};
+use super::serve::{run_continuous, run_resilient, ServeOptions, ServeReport};
 use super::{Backend, Request};
 use crate::coordinator::CLUSTERS;
 use crate::model::TransformerConfig;
@@ -113,6 +113,26 @@ impl Engine {
     ) -> ServeReport {
         let reqs = std::mem::take(&mut self.queue);
         run_continuous(self.scheduler, &mut self.cache, reqs, backend, max_iters)
+    }
+
+    /// The **resilient** serving loop (DESIGN.md §12): continuous
+    /// batching plus bounded retries with re-planning around
+    /// quarantined/offline clusters, admission control (live-set and
+    /// queue-depth bounds, projected-TTFT shedding), per-request
+    /// deadlines, and graceful degradation under overload. `fallback`
+    /// executes iterations once the degradation ladder reaches
+    /// [`super::ExecMode::Analytic`] and the primary backend cannot
+    /// switch itself. The returned [`ServeReport`] carries the SLO
+    /// summary (tail percentiles, attainment, shed/retry counts) and
+    /// per-cluster health history.
+    pub fn serve_resilient(
+        &mut self,
+        primary: &mut dyn Backend,
+        fallback: Option<&mut dyn Backend>,
+        opts: &ServeOptions,
+    ) -> ServeReport {
+        let reqs = std::mem::take(&mut self.queue);
+        run_resilient(self.scheduler, &mut self.cache, reqs, primary, fallback, opts)
     }
 }
 

@@ -30,14 +30,18 @@ pub mod engine;
 pub mod program;
 pub mod report;
 pub mod serve;
+pub mod trace;
 
 pub use analytic::AnalyticBackend;
 pub use batch::{BatchScheduler, CalShape, CompiledBatch, CompiledRequest};
 pub use cyclesim::CycleSimBackend;
 pub use engine::Engine;
 pub use program::{KernelKind, Program, ProgramCache, ProgramKey};
-pub use report::{BatchReport, RunReport};
-pub use serve::{IterationEntry, IterationRecord, ServeReport};
+pub use report::{BatchReport, Outcome, RunReport};
+pub use serve::{
+    ClusterHealth, IterationEntry, IterationRecord, ServeOptions, ServeReport, SloSummary,
+};
+pub use trace::{TraceKind, TraceSpec};
 
 use crate::kernels::flash_attention::FaVariant;
 use crate::kernels::softmax::SoftmaxVariant;
@@ -63,6 +67,14 @@ pub struct Request {
     /// Continuous-batching iteration at which the request arrives; the
     /// engine admits it no earlier (staggered-arrival traffic).
     pub arrival_iter: u32,
+    /// Open-loop arrival time in cycles (trace-driven serving). The
+    /// resilient serve loop admits the request no earlier than this
+    /// clock; TTFT and deadlines are measured from it.
+    pub arrival_cycles: u64,
+    /// Deadline in cycles after `arrival_cycles`: the request is retired
+    /// as [`Outcome::TimedOut`] (keeping partial progress) once the
+    /// clock passes `arrival_cycles + deadline`. `None` = no deadline.
+    pub deadline_cycles: Option<u64>,
 }
 
 impl Request {
@@ -75,6 +87,8 @@ impl Request {
             gemm_optimized: true,
             decode_tokens: 0,
             arrival_iter: 0,
+            arrival_cycles: 0,
+            deadline_cycles: None,
         }
     }
 
@@ -92,6 +106,18 @@ impl Request {
     /// Set the arrival iteration for staggered serving traffic.
     pub fn arriving_at(mut self, iter: u32) -> Self {
         self.arrival_iter = iter;
+        self
+    }
+
+    /// Set the open-loop arrival clock for trace-driven serving.
+    pub fn arriving_at_cycles(mut self, cycles: u64) -> Self {
+        self.arrival_cycles = cycles;
+        self
+    }
+
+    /// Set a completion deadline, in cycles after arrival.
+    pub fn with_deadline(mut self, cycles: u64) -> Self {
+        self.deadline_cycles = Some(cycles);
         self
     }
 
@@ -119,6 +145,22 @@ impl Request {
     }
 }
 
+/// Simulation fidelity level of a backend — the graceful-degradation
+/// ladder the resilient serve loop walks under overload (DESIGN.md
+/// §12): full cycle simulation → sampled simulation (cheaper, with an
+/// error bound) → analytic rate estimates (cheapest, coarsest).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Simulate every repetition (bit-exact fast path).
+    #[default]
+    Full,
+    /// Sampled simulation: [`crate::sim::SamplePolicy`] elides
+    /// repetitions and reports an error bound (DESIGN.md §11).
+    Sampled,
+    /// Analytic rate estimates; no instruction stream executes.
+    Analytic,
+}
+
 /// A unified execution backend over the 16-cluster system.
 ///
 /// `estimate` answers "what does this request cost end-to-end" for one
@@ -140,4 +182,13 @@ pub trait Backend {
 
     /// Run a compiled batch; one report per request, in batch order.
     fn execute(&mut self, batch: &CompiledBatch) -> BatchReport;
+
+    /// Ask the backend to run at a fidelity level (the degradation
+    /// ladder). Returns `true` if the backend now runs at `mode`;
+    /// backends that cannot switch (the default) return `false` and the
+    /// caller falls back — e.g. to a separate [`AnalyticBackend`].
+    fn set_mode(&mut self, mode: ExecMode) -> bool {
+        let _ = mode;
+        false
+    }
 }

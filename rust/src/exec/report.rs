@@ -2,6 +2,23 @@
 
 use crate::sim::{ClusterStats, CLOCK_HZ};
 
+/// How a served request left the system (continuous-batching scope;
+/// requests outside the serve loop are always `Completed`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Outcome {
+    /// Reached its token target and retired normally.
+    #[default]
+    Completed,
+    /// Rejected by the admission controller; never executed. Shed
+    /// requests appear in counts but contribute no tokens or energy.
+    Shed,
+    /// Missed its deadline and was retired with partial progress.
+    TimedOut,
+    /// Still in flight when the run ended (iteration bound, or every
+    /// cluster offline); partial progress is reported.
+    Unfinished,
+}
+
 /// One request's execution/estimation result, in a backend-independent
 /// shape: cycles + energy + the paper's breakdown axes, plus per-cluster
 /// stats when the backend actually ran cluster programs, plus the
@@ -50,6 +67,16 @@ pub struct RunReport {
     /// repetitions; `cycles` is then accurate to within this bound of
     /// the fully simulated fast-path run.
     pub error_bound_cycles: f64,
+    /// How the request left the serve loop (always `Completed` outside
+    /// the continuous-batching scope).
+    pub outcome: Outcome,
+    /// Iteration attempts that had to be repeated for this request
+    /// because a cluster it ran on failed (continuous-batching scope).
+    pub retries: u32,
+    /// A cluster this request ran on failed in the *last* attempt, so
+    /// this report's results are untrusted (batch-execute scope; the
+    /// serve loop retries instead of surfacing this).
+    pub failed: bool,
 }
 
 impl RunReport {
@@ -108,6 +135,13 @@ pub struct BatchReport {
     pub cache_hits: u64,
     /// Program-cache misses recorded while compiling this batch.
     pub cache_misses: u64,
+    /// Effective faults the simulator injected into this batch (zero on
+    /// the analytic backend or with no [`crate::sim::FaultPlan`] armed).
+    pub faults_injected: u32,
+    /// Clusters whose job transiently failed during this batch.
+    pub failed_clusters: Vec<usize>,
+    /// Clusters that were offline during this batch.
+    pub offline_clusters: Vec<usize>,
 }
 
 impl BatchReport {

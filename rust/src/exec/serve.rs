@@ -1,33 +1,47 @@
-//! Continuous batching (DESIGN.md §10): the autoregressive serving loop
-//! over the unified [`Backend`] API.
+//! Continuous batching (DESIGN.md §10) and the resilient serving tier
+//! on top of it (DESIGN.md §12): the autoregressive serving loop over
+//! the unified [`Backend`] API.
 //!
 //! The engine steps in **iterations**. Each iteration:
 //!
-//! 1. **Admit** — waiting requests whose `arrival_iter` has come join
-//!    the live set, as long as a cluster is free for them (at most one
-//!    live request per cluster).
-//! 2. **Rebalance** — the cluster grid is repartitioned among the live
-//!    requests proportionally to their *current-phase* work (a prefill
-//!    outweighs a decode by orders of magnitude), every live request
-//!    keeping at least one cluster and cluster sets staying disjoint.
+//! 1. **Admit** — waiting requests whose `arrival_iter` and
+//!    `arrival_cycles` have come join the live set, as long as a
+//!    healthy cluster is free for them and the admission controller's
+//!    live-set bound allows it. Ready requests the controller cannot
+//!    take may be **shed** (bounded queue depth, projected-TTFT bound)
+//!    or expire against their deadline while waiting.
+//! 2. **Rebalance** — the *healthy* cluster grid is repartitioned among
+//!    the live requests proportionally to their *current-phase* work (a
+//!    prefill outweighs a decode by orders of magnitude), every live
+//!    request keeping at least one cluster and cluster sets staying
+//!    disjoint. Quarantined and offline clusters are planned around.
 //! 3. **Execute** — each request runs one phase step: its whole prompt
 //!    prefill (first scheduled iteration), or one decode token against
 //!    its KV-cache (subsequent iterations). The backend executes the
 //!    compiled iteration; the global clock advances by the iteration
-//!    makespan (a synchronous iteration barrier — requests that finish
-//!    their step early idle until the barrier).
+//!    makespan (a synchronous iteration barrier). If a cluster's job
+//!    **failed** (injected fault), the iteration re-plans around the
+//!    now-quarantined cluster and retries, up to a bounded number of
+//!    attempts; failed attempts cost time and energy but grant no
+//!    progress, so tokens are never double-counted.
 //! 4. **Retire** — requests that produced their token target leave the
-//!    live set; their clusters are rebalanced next iteration.
+//!    live set ([`Outcome::Completed`]); requests past their deadline
+//!    are retired with partial progress ([`Outcome::TimedOut`]).
+//!
+//! Under overload (ready backlog above configurable thresholds) the
+//! loop walks the graceful-degradation ladder ([`ExecMode`]): full
+//! cycle simulation → sampled simulation → analytic estimates, and
+//! records the level per iteration.
 //!
 //! The prefill iteration produces the request's first token (the last
-//! prompt position predicts it), so time-to-first-token is admission →
+//! prompt position predicts it), so time-to-first-token is arrival →
 //! end of the prefill iteration. Each decode iteration produces one
 //! more token at KV length `prompt + generated`.
 
 use super::batch::BatchScheduler;
 use super::program::ProgramCache;
-use super::report::RunReport;
-use super::{Backend, Request};
+use super::report::{Outcome, RunReport};
+use super::{Backend, ExecMode, Request};
 use crate::model::Phase;
 
 /// One live request's share of an iteration, for the record log.
@@ -52,10 +66,142 @@ pub struct IterationRecord {
     pub clock_cycles: u64,
     /// Per-live-request shares.
     pub entries: Vec<IterationEntry>,
+    /// Degradation level the iteration ran at ([`ExecMode::Full`]
+    /// unless overload pushed the loop down the ladder).
+    pub mode: ExecMode,
+    /// Execution attempts this iteration took (1 = no retry).
+    pub attempts: u32,
+    /// Clusters quarantined or offline while this iteration planned.
+    pub quarantined: Vec<usize>,
+}
+
+/// Admission, deadline, retry and degradation policy for the resilient
+/// serve loop. [`ServeOptions::default`] turns every resilience knob
+/// off (unbounded admission, no deadlines, no degradation), which makes
+/// a fault-free run bit-identical to the plain continuous-batching
+/// loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Iteration safety bound.
+    pub max_iters: u32,
+    /// Admission controller: max concurrently live requests (further
+    /// bounded by the number of healthy clusters).
+    pub max_live: usize,
+    /// Admission controller: max *ready* requests allowed to wait in
+    /// the queue; newest arrivals beyond it are shed.
+    pub max_queue: usize,
+    /// TTFT service-level objective in cycles (used by projected-TTFT
+    /// shedding and SLO attainment).
+    pub ttft_slo_cycles: Option<u64>,
+    /// Per-token latency SLO in cycles (SLO attainment).
+    pub token_slo_cycles: Option<u64>,
+    /// Default per-request deadline (cycles after arrival) applied when
+    /// a request carries none of its own.
+    pub deadline_cycles: Option<u64>,
+    /// Shed a ready waiting request when its projected TTFT — time
+    /// already waited plus the last iteration's makespan — exceeds the
+    /// TTFT SLO (it could no longer meet it anyway).
+    pub shed_over_projected_ttft: bool,
+    /// Bounded retry: max execution attempts per iteration.
+    pub max_attempts: u32,
+    /// Iterations a transiently-failed cluster sits out before being
+    /// planned on again.
+    pub quarantine_iters: u32,
+    /// Ready-backlog pressure at which the loop degrades to sampled
+    /// simulation ([`ExecMode::Sampled`]).
+    pub degrade_sampled_at: usize,
+    /// Ready-backlog pressure at which the loop degrades to analytic
+    /// estimates ([`ExecMode::Analytic`]).
+    pub degrade_analytic_at: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_iters: 4096,
+            max_live: usize::MAX,
+            max_queue: usize::MAX,
+            ttft_slo_cycles: None,
+            token_slo_cycles: None,
+            deadline_cycles: None,
+            shed_over_projected_ttft: false,
+            max_attempts: 3,
+            quarantine_iters: 3,
+            degrade_sampled_at: usize::MAX,
+            degrade_analytic_at: usize::MAX,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// The plain continuous-batching policy (every resilience knob
+    /// off) with an explicit iteration bound.
+    pub fn legacy(max_iters: u32) -> Self {
+        ServeOptions { max_iters, ..Default::default() }
+    }
+}
+
+/// Tail-latency and robustness summary of a serve run (DESIGN.md §12).
+/// Percentiles are over requests that reached the respective milestone
+/// (TTFT: produced a first token; token latency: decoded ≥ 1 step);
+/// shed requests appear only in the outcome counts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloSummary {
+    /// Median time-to-first-token (cycles).
+    pub ttft_p50_cycles: f64,
+    /// 95th-percentile TTFT (cycles).
+    pub ttft_p95_cycles: f64,
+    /// 99th-percentile TTFT (cycles).
+    pub ttft_p99_cycles: f64,
+    /// Median per-token decode latency (cycles).
+    pub token_p50_cycles: f64,
+    /// 95th-percentile per-token decode latency (cycles).
+    pub token_p95_cycles: f64,
+    /// 99th-percentile per-token decode latency (cycles).
+    pub token_p99_cycles: f64,
+    /// Fraction of submitted requests that completed within the SLO
+    /// targets (completed fraction when no targets are set).
+    pub attainment: f64,
+    /// Requests that retired normally.
+    pub completed: u32,
+    /// Requests the admission controller shed.
+    pub shed: u32,
+    /// Requests retired at their deadline with partial progress.
+    pub timed_out: u32,
+    /// Requests still in flight when the run ended.
+    pub unfinished: u32,
+    /// Iteration attempts that had to be re-executed after a cluster
+    /// failure.
+    pub retries: u32,
+    /// Effective faults the simulator injected over the whole run.
+    pub faults_injected: u32,
+    /// Times a cluster entered quarantine.
+    pub quarantine_events: u32,
+    /// Iterations executed at full cycle-sim fidelity.
+    pub full_iters: u32,
+    /// Iterations executed at sampled fidelity.
+    pub sampled_iters: u32,
+    /// Iterations executed on analytic estimates.
+    pub analytic_iters: u32,
+}
+
+/// One cluster's health history over a serve run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClusterHealth {
+    /// Cluster index.
+    pub cluster: usize,
+    /// Transient failures observed on this cluster.
+    pub failures: u32,
+    /// Iterations the cluster spent quarantined.
+    pub quarantined_iters: u32,
+    /// The cluster ended the run offline.
+    pub offline: bool,
 }
 
 /// Result of a continuous-batching run: per-request serving reports
-/// (TTFT, tokens, per-token latency, energy) plus the iteration log.
+/// (TTFT, tokens, per-token latency, energy) plus the iteration log
+/// and — for the resilient path — the SLO summary and per-cluster
+/// health history.
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
     /// Which backend executed the run.
@@ -73,6 +219,10 @@ pub struct ServeReport {
     pub per_request: Vec<RunReport>,
     /// The per-iteration schedule, for introspection and invariants.
     pub log: Vec<IterationRecord>,
+    /// Tail-latency / robustness summary.
+    pub slo: SloSummary,
+    /// Per-cluster health history (failures, quarantine, offline).
+    pub health: Vec<ClusterHealth>,
 }
 
 impl ServeReport {
@@ -94,6 +244,55 @@ impl ServeReport {
     pub fn total_energy_pj(&self) -> f64 {
         self.per_request.iter().map(|r| r.energy_pj).sum()
     }
+
+    /// Accounting invariants every serve run upholds (checked at the
+    /// end of each run; also directly testable):
+    ///
+    /// - every submitted request appears exactly once, so the outcome
+    ///   counts sum to `per_request.len()`;
+    /// - shed requests never executed: zero tokens, energy, TTFT and
+    ///   decode latency — they appear in counts but not throughput;
+    /// - retried work grants no extra tokens: every request's `tokens`
+    ///   is bounded by prefill + its decode target.
+    pub fn assert_consistent(&self) {
+        let by_outcome = |o: Outcome| {
+            self.per_request.iter().filter(|r| r.outcome == o).count() as u32
+        };
+        assert_eq!(
+            by_outcome(Outcome::Completed),
+            self.slo.completed,
+            "completed count mismatch"
+        );
+        assert_eq!(by_outcome(Outcome::Shed), self.slo.shed, "shed count mismatch");
+        assert_eq!(
+            by_outcome(Outcome::TimedOut),
+            self.slo.timed_out,
+            "timed-out count mismatch"
+        );
+        assert_eq!(
+            by_outcome(Outcome::Unfinished),
+            self.slo.unfinished,
+            "unfinished count mismatch"
+        );
+        assert_eq!(
+            (self.slo.completed + self.slo.shed + self.slo.timed_out + self.slo.unfinished)
+                as usize,
+            self.per_request.len(),
+            "outcome counts must cover every submitted request"
+        );
+        for r in &self.per_request {
+            if r.outcome == Outcome::Shed {
+                assert_eq!(r.tokens, 0, "shed request {} has tokens", r.request_id);
+                assert_eq!(r.energy_pj, 0.0, "shed request {} has energy", r.request_id);
+                assert_eq!(r.ttft_cycles, 0.0, "shed request {} has TTFT", r.request_id);
+                assert_eq!(
+                    r.decode_token_cycles, 0.0,
+                    "shed request {} has decode latency",
+                    r.request_id
+                );
+            }
+        }
+    }
 }
 
 /// A request in flight through the continuous batch.
@@ -104,12 +303,18 @@ struct LiveReq {
     /// Tokens produced so far (the prefill's first token included).
     generated: u32,
     admit_clock: u64,
+    /// TTFT/deadline reference: the open-loop arrival clock when the
+    /// request carries one, else the admission clock (legacy traffic).
+    arrival_ref: u64,
+    /// Effective deadline clock (arrival + deadline), if any.
+    deadline_clock: Option<u64>,
     ttft_cycles: f64,
     /// Sum of the iteration-barrier cycles over this request's decode
     /// iterations — the *observed* inter-token time under
     /// co-scheduling, on the same clock as TTFT and tokens/s.
     decode_cycles: f64,
     decode_iters: u32,
+    retries: u32,
     energy_pj: f64,
     softmax_cycles: f64,
     gemm_cycles: f64,
@@ -122,15 +327,24 @@ struct LiveReq {
 }
 
 impl LiveReq {
-    fn new(req: Request, admit_clock: u64) -> Self {
+    fn new(req: Request, admit_clock: u64, default_deadline: Option<u64>) -> Self {
+        let arrival_ref =
+            if req.arrival_cycles > 0 { req.arrival_cycles } else { admit_clock };
+        let deadline_clock = req
+            .deadline_cycles
+            .or(default_deadline)
+            .map(|d| arrival_ref.saturating_add(d));
         LiveReq {
             req,
             prefilled: false,
             generated: 0,
             admit_clock,
+            arrival_ref,
+            deadline_clock,
             ttft_cycles: 0.0,
             decode_cycles: 0.0,
             decode_iters: 0,
+            retries: 0,
             energy_pj: 0.0,
             softmax_cycles: 0.0,
             gemm_cycles: 0.0,
@@ -156,7 +370,12 @@ impl LiveReq {
         self.prefilled && self.generated >= self.req.decode_tokens
     }
 
-    fn retire(self, finish_clock: u64, backend: &'static str) -> RunReport {
+    /// Past the effective deadline at `clock`?
+    fn expired(&self, clock: u64) -> bool {
+        self.deadline_clock.is_some_and(|d| clock >= d)
+    }
+
+    fn retire(self, finish_clock: u64, backend: &'static str, outcome: Outcome) -> RunReport {
         let decode_token_cycles = if self.decode_iters > 0 {
             self.decode_cycles / self.decode_iters as f64
         } else {
@@ -177,114 +396,345 @@ impl LiveReq {
             ttft_cycles: self.ttft_cycles,
             tokens: self.generated,
             decode_token_cycles,
+            outcome,
+            retries: self.retries,
             ..Default::default()
         }
     }
 }
 
-/// Drive the continuous-batching loop until every request retires (or
-/// `max_iters` is hit — a safety bound for misconfigured traffic).
-/// `requests` is the admission queue, ordered by engine submission;
-/// arrival iterations stagger admission within it.
+/// Per-cluster health bookkeeping of the resilient loop.
+#[derive(Clone, Copy, Debug, Default)]
+struct Health {
+    failures: u32,
+    /// Iteration index at which quarantine lifts.
+    quarantined_until: Option<u32>,
+    quarantined_iters: u32,
+    offline: bool,
+}
+
+impl Health {
+    fn available(&self, iter: u32) -> bool {
+        !self.offline && self.quarantined_until.is_none_or(|u| iter >= u)
+    }
+}
+
+/// Plain continuous batching: the resilient loop with every resilience
+/// knob off (bit-identical to the pre-robustness behavior).
 pub(crate) fn run_continuous(
     scheduler: BatchScheduler,
     cache: &mut ProgramCache,
-    mut waiting: Vec<Request>,
+    waiting: Vec<Request>,
     backend: &mut dyn Backend,
     max_iters: u32,
 ) -> ServeReport {
+    run_resilient(scheduler, cache, waiting, backend, None, &ServeOptions::legacy(max_iters))
+}
+
+/// Drive the resilient continuous-batching loop until every request
+/// retires, is shed, or times out (or `max_iters` is hit — a safety
+/// bound for misconfigured traffic). `waiting` is the admission queue;
+/// arrival iterations/cycles stagger admission within it. `fallback`
+/// executes iterations once the degradation ladder reaches
+/// [`ExecMode::Analytic`] and `primary` cannot switch itself.
+pub(crate) fn run_resilient(
+    scheduler: BatchScheduler,
+    cache: &mut ProgramCache,
+    mut waiting: Vec<Request>,
+    primary: &mut dyn Backend,
+    mut fallback: Option<&mut dyn Backend>,
+    opts: &ServeOptions,
+) -> ServeReport {
     // admit in arrival order, stable by submission id
-    waiting.sort_by_key(|r| (r.arrival_iter, r.id));
+    waiting.sort_by_key(|r| (r.arrival_iter, r.arrival_cycles, r.id));
     let mut waiting = std::collections::VecDeque::from(waiting);
     let mut live: Vec<LiveReq> = Vec::new();
-    let mut report = ServeReport { backend: backend.name(), ..Default::default() };
+    let mut report = ServeReport { backend: primary.name(), ..Default::default() };
+    let mut health = vec![Health::default(); scheduler.clusters];
     let mut clock: u64 = 0;
     let mut iter: u32 = 0;
     let mut executed: u32 = 0;
+    // degradation-ladder state: the level the loop currently runs at,
+    // and whether `primary` was ever switched off Full (so a backend
+    // that never degrades never sees a set_mode call)
+    let mut level = ExecMode::Full;
+    let mut primary_switched = false;
 
-    while iter < max_iters {
+    while iter < opts.max_iters {
+        let backend_name = report.backend;
+        // ---- cluster health ----------------------------------------------
+        if health.iter().all(|h| h.offline) {
+            break; // nothing left to run on
+        }
+        let healthy: Vec<usize> =
+            (0..scheduler.clusters).filter(|&c| health[c].available(iter)).collect();
+        for h in health.iter_mut() {
+            if !h.offline && !h.available(iter) {
+                h.quarantined_iters += 1;
+            }
+        }
+
+        // ---- deadlines of waiting requests --------------------------------
+        waiting.retain(|r| {
+            let lr = LiveReq::new(*r, clock, opts.deadline_cycles);
+            if lr.expired(clock) {
+                report.slo.timed_out += 1;
+                report.per_request.push(lr.retire(clock, backend_name, Outcome::TimedOut));
+                false
+            } else {
+                true
+            }
+        });
+
         // ---- admit --------------------------------------------------------
-        while live.len() < scheduler.clusters {
+        let cap = opts.max_live.max(1).min(healthy.len().max(1));
+        while live.len() < cap {
             match waiting.front() {
-                Some(r) if r.arrival_iter <= iter => {
+                Some(r) if r.arrival_iter <= iter && r.arrival_cycles <= clock => {
                     let r = waiting.pop_front().expect("front checked");
-                    live.push(LiveReq::new(r, clock));
+                    live.push(LiveReq::new(r, clock, opts.deadline_cycles));
                 }
                 _ => break,
             }
         }
+
+        // ---- shed ---------------------------------------------------------
+        // ready requests the admission loop could not take
+        let ready = |r: &Request| r.arrival_iter <= iter && r.arrival_cycles <= clock;
+        if opts.shed_over_projected_ttft {
+            if let Some(slo) = opts.ttft_slo_cycles {
+                let last_makespan = report
+                    .log
+                    .last()
+                    .map_or(0, |l| l.entries.iter().map(|e| e.cycles as u64).max().unwrap_or(0));
+                while let Some(idx) = waiting.iter().position(|r| {
+                    ready(r)
+                        && clock.saturating_sub(r.arrival_cycles) + last_makespan > slo
+                }) {
+                    let r = waiting.remove(idx).expect("position checked");
+                    report.slo.shed += 1;
+                    report.per_request.push(
+                        LiveReq::new(r, clock, None).retire(clock, backend_name, Outcome::Shed),
+                    );
+                }
+            }
+        }
+        loop {
+            let ready_waiting = waiting.iter().filter(|r| ready(r)).count();
+            if ready_waiting <= opts.max_queue {
+                break;
+            }
+            // shed the newest ready arrival (back of the queue)
+            let idx = waiting
+                .iter()
+                .rposition(|r| ready(r))
+                .expect("ready_waiting > 0 implies a ready entry");
+            let r = waiting.remove(idx).expect("rposition checked");
+            report.slo.shed += 1;
+            report
+                .per_request
+                .push(LiveReq::new(r, clock, None).retire(clock, backend_name, Outcome::Shed));
+        }
+
         if live.is_empty() {
             match waiting.front() {
                 // idle gap in the arrival schedule: fast-forward
                 Some(r) => {
-                    iter = r.arrival_iter;
+                    iter = iter.max(r.arrival_iter);
+                    if r.arrival_cycles > clock {
+                        clock = r.arrival_cycles;
+                    }
+                    if r.arrival_iter <= iter && r.arrival_cycles <= clock && !healthy.is_empty()
+                    {
+                        continue;
+                    }
+                    iter += 1; // every cluster quarantined: sit the iteration out
                     continue;
                 }
                 None => break,
             }
         }
+        if healthy.is_empty() {
+            // every cluster quarantined (none offline, or we'd have
+            // broken above): sit this iteration out until one returns
+            iter += 1;
+            continue;
+        }
 
-        // ---- rebalance + compile this iteration ---------------------------
-        let entries: Vec<(Request, Phase)> =
-            live.iter().map(|lr| (lr.req, lr.phase())).collect();
-        let batch = scheduler.compile_phased(&entries, cache);
-        let exec = backend.execute(&batch);
-
-        // ---- advance the synchronous iteration barrier --------------------
-        let makespan = exec
-            .per_request
-            .iter()
-            .map(|r| r.cycles)
-            .fold(0.0f64, f64::max);
-        clock += makespan as u64;
-
-        // ---- account per request ------------------------------------------
-        let mut entries_log = Vec::with_capacity(live.len());
-        for ((lr, cr), r) in live
-            .iter_mut()
-            .zip(&batch.requests)
-            .zip(&exec.per_request)
-        {
-            lr.energy_pj += r.energy_pj;
-            lr.softmax_cycles += r.softmax_cycles;
-            lr.gemm_cycles += r.gemm_cycles;
-            lr.attn_cycles += r.attn_cycles;
-            lr.dma_cycles += r.dma_cycles;
-            lr.error_bound_cycles += r.error_bound_cycles;
-            lr.last_clusters = cr.clusters.len();
-            entries_log.push(IterationEntry {
-                id: lr.req.id,
-                phase: cr.phase,
-                clusters: cr.clusters.clone(),
-                cycles: r.cycles,
-            });
-            if !lr.prefilled {
-                lr.prefilled = true;
-                lr.ttft_cycles = (clock - lr.admit_clock) as f64;
-                if lr.req.decode_tokens > 0 {
-                    lr.generated = 1; // the prefill's first token
+        // ---- degradation ladder -------------------------------------------
+        let pressure = live.len() + waiting.iter().filter(|r| ready(r)).count();
+        let desired = if pressure >= opts.degrade_analytic_at {
+            ExecMode::Analytic
+        } else if pressure >= opts.degrade_sampled_at {
+            ExecMode::Sampled
+        } else {
+            ExecMode::Full
+        };
+        if desired != level {
+            match desired {
+                ExecMode::Full => {
+                    // only un-degrade a backend this loop degraded; a
+                    // backend configured by its owner is never touched
+                    if primary_switched && primary.set_mode(ExecMode::Full) {
+                        primary_switched = false;
+                    }
+                    level = ExecMode::Full;
                 }
-            } else {
-                lr.generated += 1;
-                // observed inter-token time is the iteration barrier,
-                // not the request's own compute — consistent with the
-                // clock that tokens_per_s and TTFT are measured on
-                lr.decode_cycles += makespan;
-                lr.decode_iters += 1;
+                ExecMode::Sampled => {
+                    if primary.set_mode(ExecMode::Sampled) {
+                        primary_switched = true;
+                        level = ExecMode::Sampled;
+                    } else {
+                        level = ExecMode::Full; // backend cannot degrade
+                    }
+                }
+                ExecMode::Analytic => {
+                    if fallback.is_some() {
+                        level = ExecMode::Analytic;
+                    } else if primary.set_mode(ExecMode::Analytic) {
+                        primary_switched = true;
+                        level = ExecMode::Analytic;
+                    } else if primary.set_mode(ExecMode::Sampled) {
+                        // no separate estimator: sampled mode is the
+                        // deepest the primary can degrade to
+                        primary_switched = true;
+                        level = ExecMode::Sampled;
+                    } else {
+                        level = ExecMode::Full;
+                    }
+                }
             }
         }
-        report.log.push(IterationRecord {
-            iter,
-            clock_cycles: clock,
-            entries: entries_log,
-        });
+        let use_fallback = level == ExecMode::Analytic && fallback.is_some();
+
+        // ---- execute with bounded retries ---------------------------------
+        let mut attempts = 0u32;
+        let mut iter_cycles_total = 0.0f64;
+        let (batch, exec) = loop {
+            attempts += 1;
+            let avail: Vec<usize> =
+                (0..scheduler.clusters).filter(|&c| health[c].available(iter)).collect();
+            if avail.is_empty() {
+                break (None, None); // everything failed into quarantine
+            }
+            let runnable = live.len().min(avail.len());
+            let entries: Vec<(Request, Phase)> =
+                live[..runnable].iter().map(|lr| (lr.req, lr.phase())).collect();
+            let batch = scheduler.compile_phased_on(&entries, cache, &avail);
+            let exec = match fallback {
+                Some(ref mut fb) if use_fallback => fb.execute(&batch),
+                _ => primary.execute(&batch),
+            };
+
+            // barrier: the attempt costs wall-clock whether it failed
+            // or not
+            let makespan = exec.per_request.iter().map(|r| r.cycles).fold(0.0f64, f64::max);
+            clock += makespan as u64;
+            iter_cycles_total += makespan;
+            report.slo.faults_injected += exec.faults_injected;
+
+            // energy and breakdowns accrue on every attempt — wasted
+            // work burns real energy and time
+            for (lr, r) in live[..runnable].iter_mut().zip(&exec.per_request) {
+                lr.energy_pj += r.energy_pj;
+                lr.softmax_cycles += r.softmax_cycles;
+                lr.gemm_cycles += r.gemm_cycles;
+                lr.attn_cycles += r.attn_cycles;
+                lr.dma_cycles += r.dma_cycles;
+                lr.error_bound_cycles += r.error_bound_cycles;
+            }
+
+            // health bookkeeping from the attempt's fault surface
+            for &c in &exec.offline_clusters {
+                if !health[c].offline {
+                    health[c].offline = true;
+                }
+            }
+            let failed = !exec.failed_clusters.is_empty();
+            for &c in &exec.failed_clusters {
+                if !health[c].offline {
+                    health[c].failures += 1;
+                    health[c].quarantined_until = Some(iter + 1 + opts.quarantine_iters);
+                    report.slo.quarantine_events += 1;
+                }
+            }
+            if !failed {
+                break (Some(batch), Some(exec));
+            }
+            // per-request retry accounting: the requests whose reports
+            // are untrusted pay the retry
+            for (lr, r) in live[..runnable].iter_mut().zip(&exec.per_request) {
+                if r.failed {
+                    lr.retries += 1;
+                }
+            }
+            if attempts >= opts.max_attempts {
+                break (Some(batch), Some(exec));
+            }
+            report.slo.retries += 1;
+        };
+
+        // ---- account per request ------------------------------------------
+        let quarantined: Vec<usize> =
+            (0..scheduler.clusters).filter(|&c| !health[c].available(iter)).collect();
+        if let (Some(batch), Some(exec)) = (batch, exec) {
+            let mut entries_log = Vec::with_capacity(batch.requests.len());
+            for ((lr, cr), r) in live
+                .iter_mut()
+                .zip(&batch.requests)
+                .zip(&exec.per_request)
+            {
+                lr.last_clusters = cr.clusters.len();
+                entries_log.push(IterationEntry {
+                    id: lr.req.id,
+                    phase: cr.phase,
+                    clusters: cr.clusters.clone(),
+                    cycles: r.cycles,
+                });
+                if r.failed {
+                    continue; // attempts exhausted: no progress granted
+                }
+                if !lr.prefilled {
+                    lr.prefilled = true;
+                    lr.ttft_cycles = (clock - lr.arrival_ref) as f64;
+                    if lr.req.decode_tokens > 0 {
+                        lr.generated = 1; // the prefill's first token
+                    }
+                } else {
+                    lr.generated += 1;
+                    // observed inter-token time is the iteration barrier
+                    // (including failed attempts), not the request's own
+                    // compute — consistent with the clock that
+                    // tokens_per_s and TTFT are measured on
+                    lr.decode_cycles += iter_cycles_total;
+                    lr.decode_iters += 1;
+                }
+            }
+            match level {
+                ExecMode::Full => report.slo.full_iters += 1,
+                ExecMode::Sampled => report.slo.sampled_iters += 1,
+                ExecMode::Analytic => report.slo.analytic_iters += 1,
+            }
+            report.log.push(IterationRecord {
+                iter,
+                clock_cycles: clock,
+                entries: entries_log,
+                mode: level,
+                attempts,
+                quarantined,
+            });
+            executed += 1;
+        }
 
         // ---- retire -------------------------------------------------------
-        let backend_name = report.backend;
         let mut still_live = Vec::with_capacity(live.len());
         for lr in live {
             if lr.done() {
-                report.per_request.push(lr.retire(clock, backend_name));
+                report.slo.completed += 1;
+                report.per_request.push(lr.retire(clock, backend_name, Outcome::Completed));
+            } else if lr.expired(clock) {
+                report.slo.timed_out += 1;
+                report.per_request.push(lr.retire(clock, backend_name, Outcome::TimedOut));
             } else {
                 still_live.push(lr);
             }
@@ -292,20 +742,86 @@ pub(crate) fn run_continuous(
         live = still_live;
 
         iter += 1;
-        executed += 1;
     }
 
-    // safety bound hit: report unfinished requests as-is, and requests
-    // the bound prevented from ever being admitted with zero progress —
+    // safety bound (or total cluster loss) hit: report unfinished
+    // requests as-is, and requests never admitted with zero progress —
     // nothing submitted may vanish from the report
     let backend_name = report.backend;
     for lr in live {
-        report.per_request.push(lr.retire(clock, backend_name));
+        report.slo.unfinished += 1;
+        report.per_request.push(lr.retire(clock, backend_name, Outcome::Unfinished));
     }
     for r in waiting {
-        report.per_request.push(LiveReq::new(r, clock).retire(clock, backend_name));
+        report.slo.unfinished += 1;
+        report.per_request.push(
+            LiveReq::new(r, clock, None).retire(clock, backend_name, Outcome::Unfinished),
+        );
     }
     report.iterations = executed;
     report.total_cycles = clock;
+    report.health = (0..scheduler.clusters)
+        .map(|c| ClusterHealth {
+            cluster: c,
+            failures: health[c].failures,
+            quarantined_iters: health[c].quarantined_iters,
+            offline: health[c].offline,
+        })
+        .collect();
+    finish_slo(&mut report, opts);
+    report.assert_consistent();
     report
+}
+
+/// Percentile over an unsorted sample (nearest-rank on the sorted
+/// order); 0 for an empty sample.
+fn percentile(values: &mut [f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let idx = ((values.len() - 1) as f64 * p).round() as usize;
+    values[idx]
+}
+
+/// Fill the percentile and attainment fields from the per-request
+/// reports.
+fn finish_slo(report: &mut ServeReport, opts: &ServeOptions) {
+    let mut ttft: Vec<f64> = report
+        .per_request
+        .iter()
+        .filter(|r| r.outcome != Outcome::Shed && r.ttft_cycles > 0.0)
+        .map(|r| r.ttft_cycles)
+        .collect();
+    let mut tok: Vec<f64> = report
+        .per_request
+        .iter()
+        .filter(|r| r.outcome != Outcome::Shed && r.decode_token_cycles > 0.0)
+        .map(|r| r.decode_token_cycles)
+        .collect();
+    report.slo.ttft_p50_cycles = percentile(&mut ttft, 0.50);
+    report.slo.ttft_p95_cycles = percentile(&mut ttft, 0.95);
+    report.slo.ttft_p99_cycles = percentile(&mut ttft, 0.99);
+    report.slo.token_p50_cycles = percentile(&mut tok, 0.50);
+    report.slo.token_p95_cycles = percentile(&mut tok, 0.95);
+    report.slo.token_p99_cycles = percentile(&mut tok, 0.99);
+    let total = report.per_request.len();
+    if total == 0 {
+        report.slo.attainment = 1.0;
+        return;
+    }
+    let attained = report
+        .per_request
+        .iter()
+        .filter(|r| {
+            r.outcome == Outcome::Completed
+                && opts
+                    .ttft_slo_cycles
+                    .is_none_or(|s| r.ttft_cycles <= s as f64 || r.ttft_cycles == 0.0)
+                && opts
+                    .token_slo_cycles
+                    .is_none_or(|s| r.decode_token_cycles <= s as f64)
+        })
+        .count();
+    report.slo.attainment = attained as f64 / total as f64;
 }

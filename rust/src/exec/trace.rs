@@ -1,0 +1,230 @@
+//! Open-loop arrival traces for trace-driven serving (DESIGN.md §12).
+//!
+//! The resilient serve loop ([`super::Engine::serve_resilient`]) admits
+//! requests no earlier than their `arrival_cycles`, so serving
+//! experiments need an *open-loop* arrival process — one whose timing
+//! does not depend on how fast the server happens to drain its queue.
+//! This module generates two such processes from the in-tree seeded
+//! PRNG ([`crate::testkit::Rng`]), reproducible from a single `--seed`:
+//!
+//! - [`TraceKind::Poisson`]: independent exponential gaps with a
+//!   configurable mean — the classic memoryless arrival model;
+//! - [`TraceKind::Bursty`]: the same Poisson baseline, but every
+//!   `burst_every`-th arrival brings `burst_len - 1` simultaneous
+//!   companions. Bursts are what exercise admission control, shedding
+//!   and the graceful-degradation ladder.
+//!
+//! [`TraceSpec::mixed_traffic`] turns a trace into the benchmark's
+//! request mix: short-prompt GPT-2 decode, long-prompt GPT-2 decode,
+//! and prefill-only ViT classification, round-robin.
+
+use super::Request;
+use crate::model::{GPT2_SMALL, VIT_BASE};
+use crate::testkit::{mix, Rng};
+
+/// Domain-separation constant for the arrival-gap PRNG stream (keeps
+/// trace draws independent of fault-plan draws at the same seed).
+const TRACE_STREAM: u64 = 0x7214_CE00_A221_7A15;
+
+/// The arrival-process family of a [`TraceSpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Independent exponential inter-arrival gaps (memoryless).
+    Poisson,
+    /// Poisson baseline plus periodic simultaneous-arrival bursts.
+    Bursty,
+}
+
+/// A seeded open-loop arrival trace: how many requests arrive, how they
+/// are spaced, and the PRNG seed that makes the trace reproducible.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpec {
+    /// Arrival-process family.
+    pub kind: TraceKind,
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Mean inter-arrival gap in cycles (the exponential's mean).
+    pub mean_gap_cycles: f64,
+    /// For [`TraceKind::Bursty`]: every `burst_every`-th arrival starts
+    /// a burst (ignored for Poisson).
+    pub burst_every: usize,
+    /// For [`TraceKind::Bursty`]: total arrivals sharing the burst's
+    /// clock, including the one that started it (ignored for Poisson).
+    pub burst_len: usize,
+    /// PRNG seed; the whole trace is a pure function of the spec.
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// A Poisson trace of `requests` arrivals with the given mean gap.
+    pub fn poisson(requests: usize, mean_gap_cycles: f64, seed: u64) -> Self {
+        TraceSpec {
+            kind: TraceKind::Poisson,
+            requests,
+            mean_gap_cycles,
+            burst_every: 0,
+            burst_len: 0,
+            seed,
+        }
+    }
+
+    /// A bursty trace: Poisson gaps, but every 4th arrival brings two
+    /// simultaneous companions (burst length 3).
+    pub fn bursty(requests: usize, mean_gap_cycles: f64, seed: u64) -> Self {
+        TraceSpec {
+            kind: TraceKind::Bursty,
+            requests,
+            mean_gap_cycles,
+            burst_every: 4,
+            burst_len: 3,
+            seed,
+        }
+    }
+
+    /// The arrival clock of every request, in cycles, non-decreasing.
+    /// Deterministic: the same spec always yields the same trace.
+    pub fn arrivals(&self) -> Vec<u64> {
+        let mut rng = Rng::new(mix(self.seed, TRACE_STREAM));
+        let mut out = Vec::with_capacity(self.requests);
+        let mut clock = 0u64;
+        let mut lead = 0usize; // burst-leading arrivals drawn so far
+        while out.len() < self.requests {
+            clock += rng.exp(self.mean_gap_cycles).round() as u64;
+            out.push(clock);
+            lead += 1;
+            if self.kind == TraceKind::Bursty
+                && self.burst_every > 0
+                && lead % self.burst_every == 0
+            {
+                for _ in 1..self.burst_len {
+                    if out.len() >= self.requests {
+                        break;
+                    }
+                    out.push(clock);
+                }
+            }
+        }
+        out
+    }
+
+    /// Instantiate the trace as the benchmark's mixed request stream:
+    /// round-robin over short-prompt GPT-2 decode (`prompt` tokens),
+    /// long-prompt GPT-2 decode (`2 * prompt`), and prefill-only
+    /// ViT-Base, each stamped with its arrival clock and, if given, a
+    /// deadline of `deadline_cycles` after arrival. Ids are trace-local;
+    /// [`super::Engine::submit_request`] overwrites them.
+    pub fn mixed_traffic(
+        &self,
+        prompt: u32,
+        tokens: u32,
+        deadline_cycles: Option<u64>,
+    ) -> Vec<Request> {
+        let prompt = prompt.max(8);
+        let mut out = Vec::with_capacity(self.requests);
+        for (i, &at) in self.arrivals().iter().enumerate() {
+            let mut req = match i % 3 {
+                0 => {
+                    let mut cfg = GPT2_SMALL;
+                    cfg.seq = prompt;
+                    Request::new(i as u64, cfg).with_tokens(tokens)
+                }
+                1 => {
+                    let mut cfg = GPT2_SMALL;
+                    cfg.seq = prompt * 2;
+                    Request::new(i as u64, cfg).with_tokens(tokens)
+                }
+                _ => {
+                    let mut cfg = VIT_BASE;
+                    cfg.seq = prompt.min(VIT_BASE.seq);
+                    Request::new(i as u64, cfg)
+                }
+            };
+            req = req.arriving_at_cycles(at);
+            if let Some(d) = deadline_cycles {
+                req = req.with_deadline(d);
+            }
+            out.push(req);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_deterministic_and_seed_sensitive() {
+        let a = TraceSpec::poisson(50, 10_000.0, 7).arrivals();
+        let b = TraceSpec::poisson(50, 10_000.0, 7).arrivals();
+        let c = TraceSpec::poisson(50, 10_000.0, 8).arrivals();
+        assert_eq!(a, b, "same seed must reproduce the trace");
+        assert_ne!(a, c, "different seeds must diverge");
+        assert_eq!(a.len(), 50);
+    }
+
+    #[test]
+    fn arrivals_are_monotone_nondecreasing() {
+        for spec in [
+            TraceSpec::poisson(100, 5_000.0, 3),
+            TraceSpec::bursty(100, 5_000.0, 3),
+        ] {
+            let at = spec.arrivals();
+            assert!(at.windows(2).all(|w| w[0] <= w[1]), "{:?}", spec.kind);
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_tracks_the_spec() {
+        let at = TraceSpec::poisson(4000, 10_000.0, 11).arrivals();
+        let mean = at.last().copied().unwrap() as f64 / at.len() as f64;
+        assert!(
+            (8_000.0..12_000.0).contains(&mean),
+            "empirical mean gap {mean} should track 10000"
+        );
+    }
+
+    #[test]
+    fn bursty_trace_contains_simultaneous_arrivals() {
+        let at = TraceSpec::bursty(30, 50_000.0, 5).arrivals();
+        let dup = at.windows(2).filter(|w| w[0] == w[1]).count();
+        // every 4th lead arrival adds 2 companions at the same clock
+        assert!(dup >= 8, "expected burst duplicates, got {dup}");
+        // a Poisson trace at the same seed has (almost surely) none
+        let p = TraceSpec::poisson(30, 50_000.0, 5).arrivals();
+        let pdup = p.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(pdup < dup);
+    }
+
+    #[test]
+    fn mixed_traffic_round_robins_models_and_stamps_fields() {
+        let spec = TraceSpec::bursty(9, 20_000.0, 2);
+        let reqs = spec.mixed_traffic(64, 4, Some(1_000_000));
+        let at = spec.arrivals();
+        assert_eq!(reqs.len(), 9);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.arrival_cycles, at[i]);
+            assert_eq!(r.deadline_cycles, Some(1_000_000));
+            match i % 3 {
+                0 => {
+                    assert_eq!(r.cfg.name, "GPT-2 Small");
+                    assert_eq!((r.cfg.seq, r.decode_tokens), (64, 4));
+                }
+                1 => {
+                    assert_eq!(r.cfg.name, "GPT-2 Small");
+                    assert_eq!((r.cfg.seq, r.decode_tokens), (128, 4));
+                }
+                _ => {
+                    assert_eq!(r.cfg.name, "ViT-Base");
+                    assert_eq!(r.decode_tokens, 0, "ViT is prefill-only");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_traffic_without_deadline_leaves_requests_open() {
+        let reqs = TraceSpec::poisson(3, 1_000.0, 1).mixed_traffic(32, 2, None);
+        assert!(reqs.iter().all(|r| r.deadline_cycles.is_none()));
+    }
+}

@@ -15,6 +15,16 @@
 //!                             staggered arrivals on the 16-cluster
 //!                             backend; reports TTFT, per-token latency,
 //!                             tokens/s and energy per request
+//!   serve --trace poisson|burst [--requests N] [--gap CYC] [--seed N]
+//!         [--faults SPEC] [--slo TTFT_MS:TOKEN_US] [--deadline MS]
+//!                             the resilient serving loop (DESIGN.md
+//!                             §12): open-loop arrival trace, seeded
+//!                             fault injection, admission control,
+//!                             bounded retries around quarantined
+//!                             clusters, per-request deadlines and
+//!                             graceful degradation; prints the SLO
+//!                             report (tail percentiles, attainment,
+//!                             shed/retry/quarantine counts, health)
 //!   bench [--json <path>] [--small] [--fast-only] [--compare <path>]
 //!                             fig6 softmax + FlashAttention sweep with
 //!                             simulated cycles AND host wall-clock per
@@ -30,16 +40,61 @@ use vexp::coordinator::CLUSTERS;
 use vexp::energy::power::{cluster_energy_pj, power_mw};
 use vexp::energy::AreaModel;
 use vexp::error::Result;
-use vexp::exec::{AnalyticBackend, Backend, CycleSimBackend, Engine, Request};
+use vexp::exec::{
+    AnalyticBackend, Backend, CycleSimBackend, Engine, Outcome, Request, ServeOptions,
+    TraceKind, TraceSpec,
+};
 use vexp::kernels::flash_attention::{run_flash_attention, FaVariant};
 use vexp::kernels::softmax::{run_softmax, SoftmaxVariant};
 use vexp::model::config::{ALL_MODELS, GPT2_SMALL, GPT3_XL, VIT_BASE};
 use vexp::runtime::pjrt::Input;
 use vexp::runtime::Runtime;
+use vexp::sim::{FaultPlan, FaultSpec};
 use vexp::vexp::exp_unit;
 
-fn main() -> Result<()> {
+/// The CLI contract, printed on bare invocation and on every usage error.
+const USAGE: &str = "usage: vexp <info|exp|softmax|flashattention|e2e|serve|bench|area> [args]\n\
+     \n\
+     serve options:\n\
+       --tokens N     decode-token target per GPT request (default 12)\n\
+       --prompt N     GPT-2 prompt length (default 256)\n\
+       --stagger N    arrival spacing in iterations (default 2)\n\
+       --iters N      iteration safety bound (default 256)\n\
+       --analytic     rate the run on the analytic backend\n\
+                      instead of the cycle-accurate simulator\n\
+       --trace T      open-loop trace mode, T = poisson | burst: runs\n\
+                      the resilient serving loop and prints an SLO\n\
+                      report instead of the staggered-arrival demo\n\
+       --requests N   trace length in requests (default 12)\n\
+       --gap CYC      mean inter-arrival gap in cycles (default 100000)\n\
+       --seed N       trace + fault-plan PRNG seed (default 1)\n\
+       --faults SPEC  off | chaos | zero | \n\
+                      slow=P:FACTOR,stall=P:CYCLES,fail=P,offline=N\n\
+       --slo T:U      SLO targets, TTFT ms : per-token us (default 5:1000)\n\
+       --deadline MS  per-request deadline, ms after arrival (default 25)\n\
+     bench options:\n\
+       --json PATH    write the measured sweep as JSON\n\
+       --small        single tiny configuration (CI smoke)\n\
+       --fast-only    skip the reference-interpreter timing leg\n\
+                      (the fast-vs-reference differential check\n\
+                      stays the default)\n\
+       --compare PATH gate simulated cycles against a committed\n\
+                      baseline; wall-clock is reported, never\n\
+                      gated; a \"provisional\": true baseline\n\
+                      reports divergences without failing";
+
+fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("vexp: {e}\n\n{USAGE}");
+        std::process::exit(2);
+    }
+}
+
+/// Dispatch one CLI invocation. Every malformed flag or value comes
+/// back as an `Err` (never a panic), which `main` turns into usage +
+/// a non-zero exit; the unit tests below drive this directly.
+fn run(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("info") => info(),
         Some("exp") => exp_cmd(&args[1..]),
@@ -49,31 +104,63 @@ fn main() -> Result<()> {
         Some("serve") => serve_cmd(&args[1..]),
         Some("bench") => bench_cmd(&args[1..]),
         Some("area") => area_cmd(),
-        _ => {
-            eprintln!(
-                "usage: vexp <info|exp|softmax|flashattention|e2e|serve|bench|area> [args]\n\
-                 \n\
-                 serve options:\n\
-                   --tokens N     decode-token target per GPT request (default 12)\n\
-                   --prompt N     GPT-2 prompt length (default 256)\n\
-                   --stagger N    arrival spacing in iterations (default 2)\n\
-                   --iters N      iteration safety bound (default 256)\n\
-                   --analytic     rate the run on the analytic backend\n\
-                                  instead of the cycle-accurate simulator\n\
-                 bench options:\n\
-                   --json PATH    write the measured sweep as JSON\n\
-                   --small        single tiny configuration (CI smoke)\n\
-                   --fast-only    skip the reference-interpreter timing leg\n\
-                                  (the fast-vs-reference differential check\n\
-                                  stays the default)\n\
-                   --compare PATH gate simulated cycles against a committed\n\
-                                  baseline; wall-clock is reported, never\n\
-                                  gated; a \"provisional\": true baseline\n\
-                                  reports divergences without failing"
-            );
+        Some(other) => vexp::bail!("unknown subcommand {other:?}"),
+        None => {
+            println!("{USAGE}");
             Ok(())
         }
     }
+}
+
+/// The flag's value argument, or a usage error naming the flag.
+fn flag_val<'a>(v: Option<&'a String>, flag: &str) -> Result<&'a str> {
+    match v {
+        Some(s) => Ok(s.as_str()),
+        None => vexp::bail!("{flag} requires a value"),
+    }
+}
+
+/// Parse a flag value as a positive `u32`.
+fn flag_u32(v: Option<&String>, flag: &str) -> Result<u32> {
+    match flag_val(v, flag)?.parse::<u32>() {
+        Ok(n) if n > 0 => Ok(n),
+        _ => vexp::bail!("{flag} requires a positive integer"),
+    }
+}
+
+/// Parse a flag value as a positive `u64`.
+fn flag_u64(v: Option<&String>, flag: &str) -> Result<u64> {
+    match flag_val(v, flag)?.parse::<u64>() {
+        Ok(n) if n > 0 => Ok(n),
+        _ => vexp::bail!("{flag} requires a positive integer"),
+    }
+}
+
+/// Parse a flag value as any `u64` (seeds may be 0).
+fn flag_seed(v: Option<&String>, flag: &str) -> Result<u64> {
+    flag_val(v, flag)?
+        .parse::<u64>()
+        .map_err(|_| vexp::err!("{flag} requires an unsigned integer"))
+}
+
+/// Parse a flag value as a positive finite float.
+fn flag_f64(v: Option<&String>, flag: &str) -> Result<f64> {
+    match flag_val(v, flag)?.parse::<f64>() {
+        Ok(x) if x > 0.0 && x.is_finite() => Ok(x),
+        _ => vexp::bail!("{flag} requires a positive number"),
+    }
+}
+
+/// Parse `--slo TTFT_MS:TOKEN_US` into its two positive targets.
+fn parse_slo(s: &str) -> Result<(f64, f64)> {
+    let parsed = s.split_once(':').and_then(|(t, u)| {
+        let t = t.parse::<f64>().ok().filter(|x| *x > 0.0 && x.is_finite())?;
+        let u = u.parse::<f64>().ok().filter(|x| *x > 0.0 && x.is_finite())?;
+        Some((t, u))
+    });
+    parsed.ok_or_else(|| {
+        vexp::err!("--slo wants TTFT_MS:TOKEN_US as positive numbers, got {s:?}")
+    })
 }
 
 fn info() -> Result<()> {
@@ -96,7 +183,17 @@ fn exp_cmd(args: &[String]) -> Result<()> {
     let xs: Vec<f32> = if args.is_empty() {
         vec![-2.0, -1.0, 0.0, 1.0, 2.0]
     } else {
-        args.iter().map(|a| a.parse().unwrap_or(0.0)).collect()
+        let mut xs = Vec::with_capacity(args.len());
+        for a in args {
+            match a.parse::<f32>() {
+                Ok(x) => xs.push(x),
+                Err(_) => vexp::bail!("exp: {a:?} is not a number"),
+            }
+        }
+        if xs.len() > 4096 {
+            vexp::bail!("exp: at most 4096 inputs per invocation, got {}", xs.len());
+        }
+        xs
     };
     let mut buf = vec![0.0f32; 4096];
     buf[..xs.len()].copy_from_slice(&xs);
@@ -125,8 +222,20 @@ fn exp_cmd(args: &[String]) -> Result<()> {
 }
 
 fn softmax_cmd(args: &[String]) -> Result<()> {
-    let rows: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(8);
-    let cols: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(1024);
+    if args.len() > 2 {
+        vexp::bail!("softmax: expected at most [rows] [cols], got {} arguments", args.len());
+    }
+    let dim = |v: Option<&String>, name: &str, default: usize| -> Result<usize> {
+        match v {
+            None => Ok(default),
+            Some(s) => match s.parse::<usize>() {
+                Ok(n) if n > 0 => Ok(n),
+                _ => vexp::bail!("softmax: {name} must be a positive integer, got {s:?}"),
+            },
+        }
+    };
+    let rows = dim(args.first(), "rows", 8)?;
+    let cols = dim(args.get(1), "cols", 1024)?;
     let data: Vec<Vec<f32>> = (0..rows)
         .map(|r| (0..cols).map(|i| ((i * 7 + r * 13) % 97) as f32 * 0.15 - 7.0).collect())
         .collect();
@@ -215,22 +324,89 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     let mut stagger: u32 = 2;
     let mut iters: u32 = 256;
     let mut analytic = false;
+    let mut trace: Option<TraceKind> = None;
+    let mut requests: usize = 12;
+    let mut gap: u64 = 100_000;
+    let mut seed: u64 = 1;
+    let mut faults = FaultSpec::off();
+    let mut slo_ttft_ms: f64 = 5.0;
+    let mut slo_token_us: f64 = 1000.0;
+    let mut deadline_ms: f64 = 25.0;
+    // first trace-only flag seen, to reject it if --trace never shows up
+    let mut trace_only: Option<&'static str> = None;
+
     let mut it = args.iter();
     while let Some(a) = it.next() {
-        let mut num = |name: &str| -> Result<u32> {
-            match it.next().and_then(|v| v.parse::<u32>().ok()) {
-                Some(v) if v > 0 => Ok(v),
-                _ => vexp::bail!("serve: {name} requires a positive integer"),
-            }
-        };
         match a.as_str() {
-            "--tokens" => tokens = num("--tokens")?,
-            "--prompt" => prompt = num("--prompt")?.clamp(32, 2048),
-            "--stagger" => stagger = num("--stagger")?,
-            "--iters" => iters = num("--iters")?,
+            "--tokens" => tokens = flag_u32(it.next(), "serve: --tokens")?,
+            "--prompt" => {
+                prompt = flag_u32(it.next(), "serve: --prompt")?.clamp(32, 2048)
+            }
+            "--stagger" => stagger = flag_u32(it.next(), "serve: --stagger")?,
+            "--iters" => iters = flag_u32(it.next(), "serve: --iters")?,
             "--analytic" => analytic = true,
-            other => eprintln!("serve: ignoring unknown flag {other}"),
+            "--trace" => {
+                trace = Some(match flag_val(it.next(), "serve: --trace")? {
+                    "poisson" => TraceKind::Poisson,
+                    "burst" | "bursty" => TraceKind::Bursty,
+                    other => {
+                        vexp::bail!("serve: --trace must be poisson|burst, got {other:?}")
+                    }
+                })
+            }
+            "--requests" => {
+                requests = flag_u32(it.next(), "serve: --requests")? as usize;
+                trace_only.get_or_insert("--requests");
+            }
+            "--gap" => {
+                gap = flag_u64(it.next(), "serve: --gap")?;
+                trace_only.get_or_insert("--gap");
+            }
+            "--seed" => {
+                seed = flag_seed(it.next(), "serve: --seed")?;
+                trace_only.get_or_insert("--seed");
+            }
+            "--faults" => {
+                faults = FaultSpec::parse(flag_val(it.next(), "serve: --faults")?)?;
+                trace_only.get_or_insert("--faults");
+            }
+            "--slo" => {
+                (slo_ttft_ms, slo_token_us) =
+                    parse_slo(flag_val(it.next(), "serve: --slo")?)?;
+                trace_only.get_or_insert("--slo");
+            }
+            "--deadline" => {
+                deadline_ms = flag_f64(it.next(), "serve: --deadline")?;
+                trace_only.get_or_insert("--deadline");
+            }
+            other => vexp::bail!("serve: unknown flag {other}"),
         }
+    }
+
+    if let Some(kind) = trace {
+        if analytic {
+            vexp::bail!(
+                "serve: --analytic is not supported with --trace (the fault \
+                 layer lives in the cycle simulator; the analytic backend is \
+                 the degradation fallback instead)"
+            );
+        }
+        return serve_trace_cmd(TraceServeCfg {
+            kind,
+            requests,
+            gap,
+            seed,
+            faults,
+            slo_ttft_ms,
+            slo_token_us,
+            deadline_ms,
+            prompt,
+            tokens,
+            iters,
+        });
+    }
+    if let Some(flag) = trace_only {
+        vexp::bail!("serve: {flag} requires --trace poisson|burst");
     }
 
     let mut gpt2 = GPT2_SMALL;
@@ -303,6 +479,140 @@ fn serve_cmd(args: &[String]) -> Result<()> {
         engine.cache.hits,
         engine.cache.misses
     );
+    Ok(())
+}
+
+/// Parsed configuration of `vexp serve --trace ...`.
+struct TraceServeCfg {
+    kind: TraceKind,
+    requests: usize,
+    gap: u64,
+    seed: u64,
+    faults: FaultSpec,
+    slo_ttft_ms: f64,
+    slo_token_us: f64,
+    deadline_ms: f64,
+    prompt: u32,
+    tokens: u32,
+    iters: u32,
+}
+
+/// Trace-driven resilient serving (DESIGN.md §12): seeded open-loop
+/// arrivals + seeded fault injection on the cycle-accurate backend with
+/// the analytic backend as degradation fallback, then the SLO report.
+/// Every printed number derives from simulated cycles only — the same
+/// seed reproduces the output byte-for-byte (the CI smoke diffs two
+/// invocations).
+fn serve_trace_cmd(cfg: TraceServeCfg) -> Result<()> {
+    let ttft_slo = (cfg.slo_ttft_ms * 1e6) as u64; // 1 GHz: 1 ms = 1e6 cycles
+    let token_slo = (cfg.slo_token_us * 1e3) as u64;
+    let deadline = (cfg.deadline_ms * 1e6) as u64;
+    let spec = match cfg.kind {
+        TraceKind::Poisson => TraceSpec::poisson(cfg.requests, cfg.gap as f64, cfg.seed),
+        TraceKind::Bursty => TraceSpec::bursty(cfg.requests, cfg.gap as f64, cfg.seed),
+    };
+
+    let arrivals = spec.arrivals();
+    let mut engine = Engine::new();
+    for r in spec.mixed_traffic(cfg.prompt, cfg.tokens, Some(deadline)) {
+        engine.submit_request(r); // ids are 0..requests, in trace order
+    }
+
+    let opts = ServeOptions {
+        max_iters: cfg.iters,
+        max_live: 6,
+        max_queue: 4,
+        ttft_slo_cycles: Some(ttft_slo),
+        token_slo_cycles: Some(token_slo),
+        deadline_cycles: Some(deadline),
+        shed_over_projected_ttft: true,
+        max_attempts: 3,
+        quarantine_iters: 3,
+        degrade_sampled_at: 4,
+        degrade_analytic_at: 10,
+    };
+
+    let armed = cfg.faults != FaultSpec::off();
+    let mut primary = CycleSimBackend::new(CLUSTERS);
+    if armed {
+        primary.system.faults = Some(FaultPlan::new(cfg.faults, cfg.seed, CLUSTERS));
+    }
+    let mut fallback = AnalyticBackend::new();
+
+    println!(
+        "resilient serving on the {CLUSTERS}-cluster system: {} requests, \
+         {:?} trace (mean gap {} cycles), seed {}, faults {}",
+        cfg.requests,
+        cfg.kind,
+        cfg.gap,
+        cfg.seed,
+        if armed { format!("{:?}", cfg.faults) } else { "off".to_string() }
+    );
+    let report = engine.serve_resilient(&mut primary, Some(&mut fallback), &opts);
+
+    println!(
+        "{:>3} {:12} {:>12} {:>7} {:>10} {:>10} {:>12} {:>8}",
+        "id", "model", "arrive cyc", "tokens", "outcome", "TTFT ms", "tok lat us", "retries"
+    );
+    for r in &report.per_request {
+        let outcome = match r.outcome {
+            Outcome::Completed => "completed",
+            Outcome::Shed => "shed",
+            Outcome::TimedOut => "timed-out",
+            Outcome::Unfinished => "unfinished",
+        };
+        println!(
+            "{:>3} {:12} {:>12} {:>7} {:>10} {:>10.3} {:>12.1} {:>8}",
+            r.request_id,
+            r.model,
+            arrivals.get(r.request_id as usize).copied().unwrap_or(0),
+            r.tokens,
+            outcome,
+            r.ttft_ms(),
+            r.token_latency_us(),
+            r.retries
+        );
+    }
+
+    let s = &report.slo;
+    println!("SLO report (targets: TTFT {} ms, token {} us, deadline {} ms):",
+        cfg.slo_ttft_ms, cfg.slo_token_us, cfg.deadline_ms);
+    println!(
+        "  TTFT  ms: p50 {:.3}  p95 {:.3}  p99 {:.3}",
+        s.ttft_p50_cycles / 1e6,
+        s.ttft_p95_cycles / 1e6,
+        s.ttft_p99_cycles / 1e6
+    );
+    println!(
+        "  token us: p50 {:.1}  p95 {:.1}  p99 {:.1}",
+        s.token_p50_cycles / 1e3,
+        s.token_p95_cycles / 1e3,
+        s.token_p99_cycles / 1e3
+    );
+    println!("  attainment {:.1}% of all requests", s.attainment * 100.0);
+    println!(
+        "  outcomes: {} completed, {} shed, {} timed out, {} unfinished",
+        s.completed, s.shed, s.timed_out, s.unfinished
+    );
+    println!(
+        "  resilience: retries {}, faults injected {}, quarantine events {}",
+        s.retries, s.faults_injected, s.quarantine_events
+    );
+    println!(
+        "  iterations: {} full, {} sampled, {} analytic ({} total, {} cycles)",
+        s.full_iters, s.sampled_iters, s.analytic_iters, report.iterations, report.total_cycles
+    );
+    for h in &report.health {
+        if h.failures > 0 || h.offline || h.quarantined_iters > 0 {
+            println!(
+                "  cluster {:>2}: {} failures, {} iterations quarantined{}",
+                h.cluster,
+                h.failures,
+                h.quarantined_iters,
+                if h.offline { ", offline" } else { "" }
+            );
+        }
+    }
     Ok(())
 }
 
@@ -404,7 +714,7 @@ fn bench_cmd(args: &[String]) -> Result<()> {
             },
             "--small" => small = true,
             "--fast-only" => fast_only = true,
-            other => eprintln!("bench: ignoring unknown flag {other}"),
+            other => vexp::bail!("bench: unknown flag {other}"),
         }
     }
     let reps: u32 = if small { 1 } else { 3 };
@@ -700,4 +1010,55 @@ fn area_cmd() -> Result<()> {
     println!("  core complex     : {:>8.0} kGE (+{:.1}%)", r.core_complex_kge, r.core_complex_overhead * 100.0);
     println!("  cluster          : {:>8.0} kGE (+{:.1}%)", r.cluster_kge, r.cluster_overhead * 100.0);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::run;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Every malformed invocation must come back as a clean `Err` (which
+    /// `main` turns into usage + exit 2) — never a panic, never silent
+    /// acceptance. All of these fail during argument parsing, before any
+    /// simulation work starts.
+    #[test]
+    fn malformed_invocations_error_instead_of_panicking() {
+        let bad: &[&[&str]] = &[
+            &["frobnicate"],
+            &["exp", "not-a-number"],
+            &["exp", "1.0", "nan?"],
+            &["softmax", "abc"],
+            &["softmax", "0"],
+            &["softmax", "8", "-3"],
+            &["softmax", "8", "1024", "extra"],
+            &["serve", "--tokens"],
+            &["serve", "--tokens", "0"],
+            &["serve", "--tokens", "many"],
+            &["serve", "--prompt", "-1"],
+            &["serve", "--frobnicate"],
+            &["serve", "--trace"],
+            &["serve", "--trace", "weird"],
+            &["serve", "--faults", "slow=2:0.5"],
+            &["serve", "--faults", "wat=1"],
+            &["serve", "--slo", "5"],
+            &["serve", "--slo", "0:1000"],
+            &["serve", "--deadline", "0"],
+            &["serve", "--requests", "10"], // trace-only flag without --trace
+            &["serve", "--seed", "-7"],
+            &["bench", "--json"],
+            &["bench", "--wat"],
+        ];
+        for case in bad {
+            let a = args(case);
+            assert!(run(&a).is_err(), "expected a usage error for {case:?}");
+        }
+    }
+
+    #[test]
+    fn bare_invocation_prints_usage_and_succeeds() {
+        assert!(run(&[]).is_ok());
+    }
 }

@@ -1,0 +1,409 @@
+//! Deterministic fault injection for the cluster system (DESIGN.md §12).
+//!
+//! A [`FaultPlan`] decides, per *fault epoch* (one [`super::System::run_jobs`]
+//! call) and per cluster, which [`ClusterFault`] applies:
+//!
+//! - **slowdown** — the cluster's compute cycles are multiplied by a
+//!   factor ≥ 1 (thermal throttling, a straggler core);
+//! - **stall** — a fixed number of extra cycles is added to the
+//!   cluster's makespan (an interconnect hiccup);
+//! - **transient failure** — the job "completes" but its SPM image is
+//!   corrupted (one byte flipped), detectable via checksum mismatch;
+//!   the cluster reports `failed` and callers are expected to retry;
+//! - **offline** — from some epoch on the cluster accepts no jobs at
+//!   all (a hard fault); it reports `offline` permanently.
+//!
+//! Sampling is *stateless*: each (seed, epoch, cluster) triple derives
+//! its own SplitMix64 stream, so draws are independent of execution
+//! order, thread interleaving, and how many other clusters ran — the
+//! same plan replayed against the same jobs yields bit-identical runs.
+
+use crate::testkit::{mix, Rng};
+
+use super::mem::Mem;
+
+/// The fault applied to one cluster for one epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterFault {
+    /// Multiplier on the cluster's compute cycles (1.0 = none).
+    pub slow_factor: f64,
+    /// Extra cycles added to the cluster's makespan.
+    pub stall_cycles: u64,
+    /// Corrupt the cluster's SPM after the job (transient failure).
+    pub fail: bool,
+    /// The cluster is offline and executes nothing.
+    pub offline: bool,
+}
+
+impl ClusterFault {
+    /// The no-fault identity.
+    pub fn none() -> Self {
+        ClusterFault { slow_factor: 1.0, stall_cycles: 0, fail: false, offline: false }
+    }
+
+    /// Does this fault change anything observable? A slowdown of exactly
+    /// 1.0 and a stall of 0 cycles are identities (IEEE `x * 1.0 == x`),
+    /// so a "zero-impact" plan leaves runs bit-identical.
+    pub fn is_effective(&self) -> bool {
+        self.slow_factor != 1.0 || self.stall_cycles != 0 || self.fail || self.offline
+    }
+
+    /// Merge another fault into this one (scripted events compose):
+    /// factors multiply, stalls add, flags OR.
+    fn merge(&mut self, other: &ClusterFault) {
+        self.slow_factor *= other.slow_factor;
+        self.stall_cycles += other.stall_cycles;
+        self.fail |= other.fail;
+        self.offline |= other.offline;
+    }
+}
+
+impl Default for ClusterFault {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Random fault rates, sampled independently per (epoch, cluster).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Probability a cluster is slowed this epoch.
+    pub p_slow: f64,
+    /// Slowdown factor applied when slowed (≥ 1).
+    pub slow_factor: f64,
+    /// Probability a cluster stalls this epoch.
+    pub p_stall: f64,
+    /// Stall length in cycles when stalled.
+    pub stall_cycles: u64,
+    /// Probability a cluster's job transiently fails this epoch.
+    pub p_fail: f64,
+    /// Number of clusters taken permanently offline at a random epoch
+    /// in [1, 8) (never epoch 0, so every run makes some progress).
+    pub offline: u32,
+}
+
+impl FaultSpec {
+    /// No faults at all.
+    pub fn off() -> Self {
+        FaultSpec {
+            p_slow: 0.0,
+            slow_factor: 1.0,
+            p_stall: 0.0,
+            stall_cycles: 0,
+            p_fail: 0.0,
+            offline: 0,
+        }
+    }
+
+    /// A lively mixed-fault preset for demos and CI smoke: frequent
+    /// transient failures (so retries are statistically certain over a
+    /// run), occasional slowdowns and stalls, one cluster lost.
+    pub fn chaos() -> Self {
+        FaultSpec {
+            p_slow: 0.15,
+            slow_factor: 2.0,
+            p_stall: 0.10,
+            stall_cycles: 5_000,
+            p_fail: 0.25,
+            offline: 1,
+        }
+    }
+
+    /// Faults that fire constantly but change nothing: slowdown factor
+    /// exactly 1.0 and stalls of 0 cycles, no failures, no offlining.
+    /// Exercises the whole injection arithmetic while provably leaving
+    /// stats and SPM bytes bit-identical (the differential test).
+    pub fn zero_impact() -> Self {
+        FaultSpec {
+            p_slow: 1.0,
+            slow_factor: 1.0,
+            p_stall: 1.0,
+            stall_cycles: 0,
+            p_fail: 0.0,
+            offline: 0,
+        }
+    }
+
+    /// Parse a `key=value,...` spec: `slow=P:FACTOR`, `stall=P:CYCLES`,
+    /// `fail=P`, `offline=N`. Omitted keys default to off. The strings
+    /// `off` and `none` yield [`FaultSpec::off`]; `chaos` the preset.
+    pub fn parse(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "off" | "none" => return Ok(Self::off()),
+            "chaos" => return Ok(Self::chaos()),
+            "zero" => return Ok(Self::zero_impact()),
+            _ => {}
+        }
+        let mut spec = Self::off();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| crate::err!("fault spec `{part}`: expected key=value"))?;
+            match key {
+                "slow" => {
+                    let (p, f) = val
+                        .split_once(':')
+                        .ok_or_else(|| crate::err!("slow=`{val}`: expected P:FACTOR"))?;
+                    spec.p_slow = parse_prob(p, "slow probability")?;
+                    spec.slow_factor = f
+                        .parse::<f64>()
+                        .map_err(|_| crate::err!("slow factor `{f}` is not a number"))?;
+                    if spec.slow_factor < 1.0 || !spec.slow_factor.is_finite() {
+                        crate::bail!("slow factor {} must be a finite value >= 1", spec.slow_factor);
+                    }
+                }
+                "stall" => {
+                    let (p, c) = val
+                        .split_once(':')
+                        .ok_or_else(|| crate::err!("stall=`{val}`: expected P:CYCLES"))?;
+                    spec.p_stall = parse_prob(p, "stall probability")?;
+                    spec.stall_cycles = c
+                        .parse::<u64>()
+                        .map_err(|_| crate::err!("stall cycles `{c}` is not an integer"))?;
+                }
+                "fail" => spec.p_fail = parse_prob(val, "fail probability")?,
+                "offline" => {
+                    spec.offline = val
+                        .parse::<u32>()
+                        .map_err(|_| crate::err!("offline count `{val}` is not an integer"))?;
+                }
+                _ => crate::bail!(
+                    "unknown fault key `{key}` (expected slow/stall/fail/offline)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+fn parse_prob(s: &str, what: &str) -> crate::error::Result<f64> {
+    let p = s
+        .parse::<f64>()
+        .map_err(|_| crate::err!("{what} `{s}` is not a number"))?;
+    if !(0.0..=1.0).contains(&p) {
+        crate::bail!("{what} {p} must be in [0, 1]");
+    }
+    Ok(p)
+}
+
+/// A scripted fault: `fault` applies to `cluster` for epochs in
+/// `[from_epoch, until_epoch)`. Used by tests for exact scenarios.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultEvent {
+    /// Target cluster index.
+    pub cluster: usize,
+    /// First epoch the fault applies (inclusive).
+    pub from_epoch: u64,
+    /// First epoch the fault no longer applies (exclusive).
+    pub until_epoch: u64,
+    /// The fault itself.
+    pub fault: ClusterFault,
+}
+
+/// A seeded, deterministic fault schedule over a cluster system.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: FaultSpec,
+    /// Per cluster: the epoch from which it is permanently offline.
+    offline_from: Vec<Option<u64>>,
+    /// Scripted events, merged on top of the sampled spec.
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build a plan from random rates. The offline schedule (which
+    /// clusters die, and when) is drawn once here from the seed.
+    pub fn new(spec: FaultSpec, seed: u64, n_clusters: usize) -> Self {
+        let mut offline_from = vec![None; n_clusters];
+        let mut rng = Rng::new(mix(seed, 0x0FF1_1BAD));
+        let victims = (spec.offline as usize).min(n_clusters);
+        for _ in 0..victims {
+            // pick a not-yet-offline cluster and a death epoch >= 1
+            let mut c = rng.range(0, n_clusters as u64) as usize;
+            while offline_from[c].is_some() {
+                c = (c + 1) % n_clusters;
+            }
+            offline_from[c] = Some(rng.range(1, 8));
+        }
+        FaultPlan { seed, spec, offline_from, events: Vec::new() }
+    }
+
+    /// A plan made only of scripted events (tests): no random component.
+    pub fn scripted(n_clusters: usize, events: Vec<FaultEvent>) -> Self {
+        FaultPlan {
+            seed: 0,
+            spec: FaultSpec::off(),
+            offline_from: vec![None; n_clusters],
+            events,
+        }
+    }
+
+    /// The fault for `cluster` at `epoch`. Stateless: derives a fresh
+    /// stream from (seed, epoch, cluster), so calls commute.
+    pub fn fault_at(&self, epoch: u64, cluster: usize) -> ClusterFault {
+        let mut fault = ClusterFault::none();
+        if let Some(from) = self.offline_from.get(cluster).copied().flatten() {
+            if epoch >= from {
+                fault.offline = true;
+            }
+        }
+        let mut rng = Rng::new(mix(self.seed, mix(epoch, cluster as u64)));
+        if self.spec.p_slow > 0.0 && rng.chance(self.spec.p_slow) {
+            fault.slow_factor *= self.spec.slow_factor;
+        }
+        if self.spec.p_stall > 0.0 && rng.chance(self.spec.p_stall) {
+            fault.stall_cycles += self.spec.stall_cycles;
+        }
+        if self.spec.p_fail > 0.0 && rng.chance(self.spec.p_fail) {
+            fault.fail = true;
+        }
+        for ev in &self.events {
+            if ev.cluster == cluster && (ev.from_epoch..ev.until_epoch).contains(&epoch) {
+                fault.merge(&ev.fault);
+            }
+        }
+        fault
+    }
+
+    /// Deterministic byte offset to corrupt for a transient failure.
+    pub fn corruption_offset(&self, epoch: u64, cluster: usize, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        (mix(self.seed ^ 0xC0DE_FA11, mix(epoch, cluster as u64)) % len as u64) as usize
+    }
+}
+
+/// Checksum of a memory's SPM image (FNV-1a). A job's post-run checksum
+/// differing from the fault-free run of the same program is how
+/// transient corruption is detected.
+pub fn spm_checksum(mem: &Mem) -> u64 {
+    super::memo::fnv1a(mem.read_bytes(0, mem.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_at_is_deterministic_and_order_free() {
+        let plan = FaultPlan::new(FaultSpec::chaos(), 42, 16);
+        let a: Vec<_> = (0..16).map(|c| plan.fault_at(3, c)).collect();
+        let b: Vec<_> = (0..16).rev().map(|c| plan.fault_at(3, c)).collect();
+        for (c, f) in a.iter().enumerate() {
+            assert_eq!(*f, b[15 - c]);
+        }
+        let plan2 = FaultPlan::new(FaultSpec::chaos(), 42, 16);
+        assert_eq!(plan.fault_at(7, 5), plan2.fault_at(7, 5));
+    }
+
+    #[test]
+    fn different_seeds_differ_somewhere() {
+        let a = FaultPlan::new(FaultSpec::chaos(), 1, 8);
+        let b = FaultPlan::new(FaultSpec::chaos(), 2, 8);
+        let differs = (0..64).any(|e| (0..8).any(|c| a.fault_at(e, c) != b.fault_at(e, c)));
+        assert!(differs);
+    }
+
+    #[test]
+    fn zero_impact_faults_fire_but_change_nothing() {
+        let plan = FaultPlan::new(FaultSpec::zero_impact(), 9, 8);
+        for epoch in 0..32 {
+            for c in 0..8 {
+                let f = plan.fault_at(epoch, c);
+                assert_eq!(f.slow_factor, 1.0);
+                assert_eq!(f.stall_cycles, 0);
+                assert!(!f.fail && !f.offline);
+                assert!(!f.is_effective());
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_produces_failures_at_roughly_the_requested_rate() {
+        let plan = FaultPlan::new(FaultSpec::chaos(), 1234, 16);
+        let n = 64 * 16;
+        let fails: usize = (0..64)
+            .flat_map(|e| (0..16).map(move |c| (e, c)))
+            .filter(|&(e, c)| plan.fault_at(e, c).fail)
+            .count();
+        let rate = fails as f64 / n as f64;
+        assert!((0.15..0.35).contains(&rate), "fail rate = {rate}");
+    }
+
+    #[test]
+    fn offline_is_permanent_once_hit() {
+        let plan = FaultPlan::new(
+            FaultSpec { offline: 3, ..FaultSpec::off() },
+            7,
+            8,
+        );
+        let dead: Vec<usize> =
+            (0..8).filter(|&c| plan.fault_at(100, c).offline).collect();
+        assert_eq!(dead.len(), 3);
+        for &c in &dead {
+            let from = (0..100).find(|&e| plan.fault_at(e, c).offline).unwrap();
+            assert!(from >= 1, "never offline at epoch 0");
+            assert!((from..100).all(|e| plan.fault_at(e, c).offline));
+        }
+    }
+
+    #[test]
+    fn scripted_events_apply_in_their_window_only() {
+        let f = ClusterFault { slow_factor: 2.0, stall_cycles: 10, fail: true, offline: false };
+        let plan = FaultPlan::scripted(
+            4,
+            vec![FaultEvent { cluster: 2, from_epoch: 1, until_epoch: 3, fault: f }],
+        );
+        assert!(!plan.fault_at(0, 2).is_effective());
+        assert_eq!(plan.fault_at(1, 2), f);
+        assert_eq!(plan.fault_at(2, 2), f);
+        assert!(!plan.fault_at(3, 2).is_effective());
+        assert!(!plan.fault_at(1, 1).is_effective());
+    }
+
+    #[test]
+    fn parse_round_trips_the_grammar() {
+        let s = FaultSpec::parse("slow=0.1:2.5,stall=0.2:500,fail=0.05,offline=2").unwrap();
+        assert_eq!(s.p_slow, 0.1);
+        assert_eq!(s.slow_factor, 2.5);
+        assert_eq!(s.p_stall, 0.2);
+        assert_eq!(s.stall_cycles, 500);
+        assert_eq!(s.p_fail, 0.05);
+        assert_eq!(s.offline, 2);
+        assert_eq!(FaultSpec::parse("off").unwrap(), FaultSpec::off());
+        assert_eq!(FaultSpec::parse("chaos").unwrap(), FaultSpec::chaos());
+        assert_eq!(FaultSpec::parse("zero").unwrap(), FaultSpec::zero_impact());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "slow=2",            // missing factor
+            "slow=1.5:2.0",      // probability out of range
+            "slow=0.5:0.5",      // factor below 1
+            "stall=0.1:abc",     // non-integer cycles
+            "fail=nope",         // non-numeric probability
+            "fail=-0.1",         // negative probability
+            "offline=x",         // non-integer count
+            "warp=0.1",          // unknown key
+            "noequals",          // missing '='
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "`{bad}` should fail");
+        }
+    }
+
+    #[test]
+    fn corruption_offset_is_in_bounds_and_deterministic() {
+        let plan = FaultPlan::new(FaultSpec::chaos(), 3, 4);
+        for epoch in 0..8 {
+            for c in 0..4 {
+                let o = plan.corruption_offset(epoch, c, 1024);
+                assert!(o < 1024);
+                assert_eq!(o, plan.corruption_offset(epoch, c, 1024));
+            }
+        }
+        assert_eq!(plan.corruption_offset(0, 0, 0), 0);
+    }
+}

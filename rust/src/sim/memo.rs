@@ -55,8 +55,9 @@ pub struct TileMemo {
     pub misses: u64,
 }
 
-/// FNV-1a over the SPM image: cheap prefilter for the exact compare.
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a over the SPM image: cheap prefilter for the exact compare
+/// (also the SPM checksum the fault layer uses to detect corruption).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;

@@ -14,7 +14,10 @@
 //! - [`fpu`]: latency table of the extended FPU;
 //! - [`dma`]: DMA/double-buffer/HBM-contention timing;
 //! - [`cluster`]: the 8-core cluster;
-//! - [`stats`]: retired-instruction statistics feeding the energy model.
+//! - [`stats`]: retired-instruction statistics feeding the energy model;
+//! - [`fault`]: seeded, deterministic fault injection (slowdowns,
+//!   stalls, transient SPM corruption, offline clusters) for the
+//!   robustness tier (DESIGN.md §12).
 
 // Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
 // missing_docs gate to exec/coordinator/model); module docs above are
@@ -26,6 +29,7 @@ pub mod core;
 pub mod decode;
 pub mod dma;
 pub mod fastcore;
+pub mod fault;
 pub mod fpu;
 pub mod mem;
 pub mod memo;
@@ -38,6 +42,7 @@ pub use core::Core;
 pub use decode::{decode, DecodedProgram, MicroOp};
 pub use dma::{DmaModel, HbmModel};
 pub use fastcore::FastCore;
+pub use fault::{spm_checksum, ClusterFault, FaultEvent, FaultPlan, FaultSpec};
 pub use mem::{Mem, SPM_BANKS, SPM_BYTES};
 pub use memo::{shared_memo, SharedMemo, TileMemo};
 pub use ssr::{SsrState, SsrStream};

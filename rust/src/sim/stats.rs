@@ -150,6 +150,16 @@ pub struct ClusterStats {
     pub sampled_error_cycles: u64,
     /// Repetitions whose effect was extrapolated rather than simulated.
     pub sampled_reps: u64,
+    /// The cluster's job transiently failed this run (SPM corrupted by
+    /// an injected fault; the result must not be trusted).
+    pub failed: bool,
+    /// The cluster was offline and executed nothing.
+    pub offline: bool,
+    /// Extra cycles the fault layer added (slowdown + stall), i.e.
+    /// `cycles` minus what the fault-free run would have cost.
+    pub injected_cycles: u64,
+    /// Number of effective faults injected into this cluster's run.
+    pub faults_injected: u32,
 }
 
 impl ClusterStats {
@@ -177,6 +187,10 @@ impl ClusterStats {
         self.dma_cycles += other.dma_cycles;
         self.sampled_error_cycles += other.sampled_error_cycles;
         self.sampled_reps += other.sampled_reps;
+        self.failed |= other.failed;
+        self.offline |= other.offline;
+        self.injected_cycles += other.injected_cycles;
+        self.faults_injected += other.faults_injected;
     }
 
     /// This cluster run repeated back-to-back `k` times: everything
@@ -189,6 +203,10 @@ impl ClusterStats {
             dma_cycles: self.dma_cycles * k,
             sampled_error_cycles: self.sampled_error_cycles * k,
             sampled_reps: self.sampled_reps * k,
+            failed: self.failed,
+            offline: self.offline,
+            injected_cycles: self.injected_cycles * k,
+            faults_injected: self.faults_injected * k as u32,
         }
     }
 }

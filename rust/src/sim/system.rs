@@ -8,6 +8,7 @@
 
 use super::cluster::Cluster;
 use super::dma::{DmaModel, HbmModel};
+use super::fault::{ClusterFault, FaultPlan};
 use super::memo::SharedMemo;
 use super::stats::ClusterStats;
 use crate::exec::program::{KernelKind, Program};
@@ -26,6 +27,17 @@ pub struct SystemStats {
     /// is a max over clusters, so its error cannot exceed any single
     /// cluster's). Zero for fully simulated runs.
     pub error_bound_cycles: u64,
+    /// Effective faults injected this run, summed over clusters
+    /// (DESIGN.md §12). Zero when no plan is armed or every sampled
+    /// fault was a no-op.
+    pub faults_injected: u32,
+    /// Extra makespan cycles the fault layer added, summed over
+    /// clusters (slowdowns + stalls).
+    pub injected_cycles: u64,
+    /// Clusters whose job transiently failed (corrupted SPM) this run.
+    pub failed_clusters: Vec<usize>,
+    /// Clusters that were offline this run (hard faults).
+    pub offline_clusters: Vec<usize>,
 }
 
 /// Sampled-simulation policy (DESIGN.md §11): cycle-simulate the first
@@ -143,6 +155,12 @@ pub struct System {
     /// Sampled-simulation policy for repeated jobs. `None` (the
     /// default) simulates every repetition.
     pub sampling: Option<SamplePolicy>,
+    /// Armed fault plan (DESIGN.md §12). `None` (the default) injects
+    /// nothing and leaves runs bit-identical to a fault-free system.
+    pub faults: Option<FaultPlan>,
+    /// Fault epoch: increments once per [`System::run_jobs`] call while
+    /// a plan is armed, so every run samples fresh faults.
+    pub fault_epoch: u64,
 }
 
 impl System {
@@ -154,6 +172,8 @@ impl System {
             reference_interp: cfg!(feature = "reference-interp"),
             memo: None,
             sampling: None,
+            faults: None,
+            fault_epoch: 0,
         }
     }
 
@@ -201,10 +221,31 @@ impl System {
     /// (`reference_interp = true`).
     pub fn run_jobs(&mut self, jobs: Vec<ClusterJob>) -> SystemStats {
         assert_eq!(jobs.len(), self.clusters.len(), "one job per cluster");
-        let active = jobs.iter().filter(|j| !j.is_idle()).count();
+        // sample this run's faults up front (one epoch per call). With
+        // no plan armed the identity fault applies everywhere and every
+        // expression below reduces to the fault-free arithmetic
+        // bit-for-bit (x * 1.0 == x, + 0).
+        let epoch = self.fault_epoch;
+        let faults: Vec<ClusterFault> = match &self.faults {
+            Some(plan) => {
+                self.fault_epoch += 1;
+                (0..jobs.len()).map(|c| plan.fault_at(epoch, c)).collect()
+            }
+            None => vec![ClusterFault::none(); jobs.len()],
+        };
+        // offline clusters take no part in the run at all
+        let active = jobs
+            .iter()
+            .zip(&faults)
+            .filter(|(j, f)| !j.is_idle() && !f.offline)
+            .count();
         // only clusters that actually stream contend for HBM: a
         // compute-only job (no bytes) must not slow other clusters' DMA
-        let streaming = jobs.iter().filter(|j| j.hbm_bytes > 0).count();
+        let streaming = jobs
+            .iter()
+            .zip(&faults)
+            .filter(|(j, f)| j.hbm_bytes > 0 && !f.offline)
+            .count();
         let contention =
             self.hbm.contention_factor(streaming.max(1), self.dma.bytes_per_cycle);
 
@@ -215,9 +256,9 @@ impl System {
         let raw: Vec<Option<ClusterStats>> = if reference || active <= 1 {
             self.clusters
                 .iter_mut()
-                .zip(&jobs)
-                .map(|(cluster, job)| {
-                    if job.is_idle() {
+                .zip(jobs.iter().zip(&faults))
+                .map(|(cluster, (job, fault))| {
+                    if job.is_idle() || fault.offline {
                         None
                     } else {
                         Some(run_cluster_job(cluster, job, reference, memo_ref, sampling))
@@ -229,9 +270,9 @@ impl System {
                 let handles: Vec<_> = self
                     .clusters
                     .iter_mut()
-                    .zip(&jobs)
-                    .map(|(cluster, job)| {
-                        if job.is_idle() {
+                    .zip(jobs.iter().zip(&faults))
+                    .map(|(cluster, (job, fault))| {
+                        if job.is_idle() || fault.offline {
                             None
                         } else {
                             Some(
@@ -253,10 +294,30 @@ impl System {
         let mut makespan = 0u64;
         let mut hbm_bytes = 0u64;
         let mut error_bound = 0u64;
-        for (job, stats) in jobs.iter().zip(raw) {
+        let mut faults_injected = 0u32;
+        let mut injected_cycles = 0u64;
+        let mut failed_clusters = Vec::new();
+        let mut offline_clusters = Vec::new();
+        for (i, (job, stats)) in jobs.iter().zip(raw).enumerate() {
+            let fault = faults[i];
+            if fault.offline {
+                offline_clusters.push(i);
+            }
             let mut stats = match stats {
                 None => {
-                    per_cluster.push(ClusterStats::default());
+                    // offline cluster holding real work: the job did
+                    // not run, so it counts as failed for retry logic
+                    let dropped = fault.offline && !job.is_idle();
+                    if dropped {
+                        failed_clusters.push(i);
+                        faults_injected += 1;
+                    }
+                    per_cluster.push(ClusterStats {
+                        offline: fault.offline,
+                        failed: dropped,
+                        faults_injected: dropped as u32,
+                        ..ClusterStats::default()
+                    });
                     continue;
                 }
                 Some(s) => s,
@@ -270,21 +331,57 @@ impl System {
             // The compute leg is extrapolated by the job's exact
             // repetition scale plus any rated extra cycles before the
             // max — so DMA that a longer compute leg would hide stays
-            // hidden, and DMA that exceeds it stays exposed.
-            let compute =
-                (stats.cycles as f64 * job.compute_scale).round() as u64 + job.compute_extra;
+            // hidden, and DMA that exceeds it stays exposed. The fault
+            // slowdown multiplies the compute leg; the stall lands on
+            // the makespan after the overlap max (it models a global
+            // hiccup nothing can hide behind).
+            let clean = (stats.cycles as f64 * job.compute_scale).round() as u64
+                + job.compute_extra;
+            let compute = (stats.cycles as f64 * job.compute_scale * fault.slow_factor)
+                .round() as u64
+                + job.compute_extra;
             let fill = self.dma.startup as u64;
-            let total = compute.max(dma) + fill;
+            let clean_total = clean.max(dma) + fill;
+            let total = compute.max(dma) + fill + fault.stall_cycles;
             makespan = makespan.max(total);
             stats.cycles = total;
+            stats.injected_cycles = total.saturating_sub(clean_total);
             // sampled-mode error passes through the same compute scaling
             // (an off-by-e compute leg scales to off-by-scale·e at most)
             stats.sampled_error_cycles =
                 (stats.sampled_error_cycles as f64 * job.compute_scale).ceil() as u64;
             error_bound = error_bound.max(stats.sampled_error_cycles);
+            // transient failure: corrupt one SPM byte post-run. The tile
+            // memo recorded the clean image during execution, so the
+            // corruption never pollutes the cache; a retry re-runs clean.
+            if fault.fail {
+                let spm = &mut self.clusters[i].spm;
+                let off = self
+                    .faults
+                    .as_ref()
+                    .expect("fail faults only come from a plan")
+                    .corruption_offset(epoch, i, spm.len());
+                let byte = spm.read_bytes(off as u32, 1)[0] ^ 0x5A;
+                spm.load_bytes(off as u32, &[byte]);
+                stats.failed = true;
+                failed_clusters.push(i);
+            }
+            let n_eff = (stats.cycles != clean_total) as u32 + fault.fail as u32;
+            stats.faults_injected = n_eff;
+            faults_injected += n_eff;
+            injected_cycles += stats.injected_cycles;
             per_cluster.push(stats);
         }
-        SystemStats { per_cluster, cycles: makespan, hbm_bytes, error_bound_cycles: error_bound }
+        SystemStats {
+            per_cluster,
+            cycles: makespan,
+            hbm_bytes,
+            error_bound_cycles: error_bound,
+            faults_injected,
+            injected_cycles,
+            failed_clusters,
+            offline_clusters,
+        }
     }
 }
 

@@ -43,6 +43,34 @@ impl Rng {
     pub fn bool(&mut self) -> bool {
         self.next_u64() & 1 == 1
     }
+
+    /// Bernoulli draw: true with probability `p` (clamped to [0, 1]).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64(0.0, 1.0) < p
+    }
+
+    /// Exponential draw with the given mean (inter-arrival gaps of a
+    /// Poisson process). `mean <= 0` returns 0.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let u = self.f64(0.0, 1.0); // in [0, 1) so 1-u is in (0, 1]
+        -mean * (1.0 - u).ln()
+    }
+}
+
+/// Mix two u64 streams into one (SplitMix64 finalizer over the pair):
+/// used to derive independent, order-free substreams from a base seed,
+/// e.g. per-(epoch, cluster) fault draws.
+pub fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(b)
+        .wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
 }
 
 /// Run `prop` for `cases` seeded cases; panic with the seed on failure.
@@ -76,6 +104,36 @@ mod tests {
             let v = r.range(5, 17);
             assert!((5..17).contains(&v));
         }
+    }
+
+    #[test]
+    fn chance_tracks_probability() {
+        let mut r = Rng::new(11);
+        let hits = (0..4000).filter(|_| r.chance(0.25)).count();
+        assert!((800..1200).contains(&hits), "hits = {hits}");
+        let mut r = Rng::new(11);
+        assert!((0..100).all(|_| !r.chance(0.0)));
+        let mut r = Rng::new(11);
+        assert!((0..100).all(|_| r.chance(1.0)));
+    }
+
+    #[test]
+    fn exp_has_requested_mean_and_is_nonnegative() {
+        let mut r = Rng::new(5);
+        let n = 8000;
+        let sum: f64 = (0..n).map(|_| r.exp(100.0)).sum();
+        let mean = sum / n as f64;
+        assert!((80.0..120.0).contains(&mean), "mean = {mean}");
+        let mut r = Rng::new(5);
+        assert!((0..1000).all(|_| r.exp(3.0) >= 0.0));
+        assert_eq!(r.exp(0.0), 0.0);
+    }
+
+    #[test]
+    fn mix_is_deterministic_and_spreads() {
+        assert_eq!(mix(1, 2), mix(1, 2));
+        assert_ne!(mix(1, 2), mix(2, 1));
+        assert_ne!(mix(0, 0), mix(0, 1));
     }
 
     #[test]

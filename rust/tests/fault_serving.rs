@@ -1,0 +1,498 @@
+//! Fault-injection and resilient-serving integration tests
+//! (DESIGN.md §12).
+//!
+//! Two layers are covered:
+//!
+//! - **Simulator**: scripted [`FaultPlan`]s must change exactly what
+//!   they claim (slowdowns scale compute, stalls add cycles, transient
+//!   failures corrupt SPM and flag the cluster, offline clusters
+//!   execute nothing) — and a *zero-impact* plan must leave both
+//!   simulator paths bit-identical to running with no plan at all.
+//! - **Serving**: the resilient loop must retry around failed
+//!   clusters without double-counting tokens, quarantine them, shed
+//!   over admission limits, honor deadlines, walk the degradation
+//!   ladder under pressure, and reproduce a whole chaos run from its
+//!   seed.
+
+use vexp::exec::program::Program;
+use vexp::exec::{
+    AnalyticBackend, CycleSimBackend, Engine, Outcome, Request, ServeOptions, ServeReport,
+    TraceSpec,
+};
+use vexp::kernels::flash_attention::{
+    build_fa_decode_program, build_fa_program, seed_fa_decode_inputs, seed_fa_inputs, FaVariant,
+};
+use vexp::kernels::softmax::{build_softmax_program, seed_softmax_inputs, SoftmaxVariant};
+use vexp::model::{GPT2_SMALL, VIT_BASE};
+use vexp::sim::{
+    spm_checksum, ClusterFault, ClusterJob, DmaModel, FaultEvent, FaultPlan, FaultSpec, Mem,
+    System, SystemStats, SPM_BYTES,
+};
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+type Seeder = Box<dyn Fn(&mut Mem)>;
+
+/// The kernel matrix for the zero-impact differential: softmax (both
+/// the optimized and baseline variants), FA-2 prefill, and FA-2 decode.
+fn kernel_suite() -> Vec<(&'static str, Program, Seeder)> {
+    vec![
+        (
+            "softmax/SwExpHw",
+            build_softmax_program(SoftmaxVariant::SwExpHw, 8, 64),
+            Box::new(|spm: &mut Mem| seed_softmax_inputs(spm, 8, 64, 42)),
+        ),
+        (
+            "softmax/Baseline",
+            build_softmax_program(SoftmaxVariant::Baseline, 4, 64),
+            Box::new(|spm: &mut Mem| seed_softmax_inputs(spm, 4, 64, 42)),
+        ),
+        (
+            "fa2/Optimized",
+            build_fa_program(FaVariant::Optimized, 16, 64, 64, 32),
+            Box::new(|spm: &mut Mem| seed_fa_inputs(spm, 16, 64, 64, 32, 7)),
+        ),
+        (
+            "fa2-decode/Optimized",
+            build_fa_decode_program(FaVariant::Optimized, 64, 64, 16),
+            Box::new(|spm: &mut Mem| seed_fa_decode_inputs(spm, 64, 64, 16, 7)),
+        ),
+    ]
+}
+
+/// Run `program` on both clusters of a 2-cluster system for two fault
+/// epochs and return (per-epoch stats, final per-cluster SPM sums).
+fn run_twice(
+    program: &Program,
+    seeder: &dyn Fn(&mut Mem),
+    plan: Option<FaultPlan>,
+    reference: bool,
+) -> (Vec<SystemStats>, Vec<u64>) {
+    let mut sys = System::new(2);
+    sys.reference_interp = reference;
+    sys.faults = plan;
+    let mut epochs = Vec::new();
+    for _ in 0..2 {
+        for cl in &mut sys.clusters {
+            seeder(&mut cl.spm);
+        }
+        epochs.push(sys.run_jobs(vec![
+            ClusterJob::new(vec![program.clone()], 4096),
+            ClusterJob::new(vec![program.clone()], 4096),
+        ]));
+    }
+    let sums = sys.clusters.iter().map(|c| spm_checksum(&c.spm)).collect();
+    (epochs, sums)
+}
+
+fn assert_stats_identical(a: &SystemStats, b: &SystemStats, ctx: &str) {
+    assert_eq!(a.cycles, b.cycles, "{ctx}: makespan");
+    assert_eq!(a.hbm_bytes, b.hbm_bytes, "{ctx}: hbm bytes");
+    assert_eq!(a.error_bound_cycles, b.error_bound_cycles, "{ctx}: error bound");
+    assert_eq!(a.faults_injected, b.faults_injected, "{ctx}: faults injected");
+    assert_eq!(a.injected_cycles, b.injected_cycles, "{ctx}: injected cycles");
+    assert_eq!(a.failed_clusters, b.failed_clusters, "{ctx}: failed clusters");
+    assert_eq!(a.offline_clusters, b.offline_clusters, "{ctx}: offline clusters");
+    assert_eq!(a.per_cluster.len(), b.per_cluster.len(), "{ctx}: cluster count");
+    for (i, (x, y)) in a.per_cluster.iter().zip(&b.per_cluster).enumerate() {
+        assert_eq!(x.cycles, y.cycles, "{ctx}: cluster {i} cycles");
+        assert_eq!(x.dma_bytes, y.dma_bytes, "{ctx}: cluster {i} dma bytes");
+        assert_eq!(x.dma_cycles, y.dma_cycles, "{ctx}: cluster {i} dma cycles");
+        assert_eq!(x.failed, y.failed, "{ctx}: cluster {i} failed");
+        assert_eq!(x.offline, y.offline, "{ctx}: cluster {i} offline");
+        assert_eq!(x.injected_cycles, y.injected_cycles, "{ctx}: cluster {i} injected");
+        assert_eq!(x.faults_injected, y.faults_injected, "{ctx}: cluster {i} faults");
+    }
+}
+
+fn zero_impact_differential(reference: bool) {
+    for (name, program, seeder) in kernel_suite() {
+        let (clean, clean_sums) = run_twice(&program, &seeder, None, reference);
+        let plan = FaultPlan::new(FaultSpec::zero_impact(), 7, 2);
+        let (zero, zero_sums) = run_twice(&program, &seeder, Some(plan), reference);
+        for (epoch, (a, b)) in clean.iter().zip(&zero).enumerate() {
+            assert_stats_identical(a, b, &format!("{name} epoch {epoch}"));
+            assert_eq!(b.faults_injected, 0, "{name}: zero-impact plan must inject nothing");
+        }
+        assert_eq!(clean_sums, zero_sums, "{name}: SPM bytes must be bit-identical");
+    }
+}
+
+fn softmax_prog() -> Program {
+    build_softmax_program(SoftmaxVariant::SwExpHw, 8, 64)
+}
+
+fn seed_sm(spm: &mut Mem, seed: u64) {
+    seed_softmax_inputs(spm, 8, 64, seed);
+}
+
+/// A decode request on a seq-shortened GPT-2 Small.
+fn gpt(seq: u32, tokens: u32) -> Request {
+    let mut cfg = GPT2_SMALL;
+    cfg.seq = seq;
+    Request::new(0, cfg).with_tokens(tokens)
+}
+
+// ---------------------------------------------------------------------------
+// simulator layer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_impact_faults_are_bit_identical_fast_path() {
+    zero_impact_differential(false);
+}
+
+#[test]
+fn zero_impact_faults_are_bit_identical_reference_interp() {
+    zero_impact_differential(true);
+}
+
+#[test]
+fn scripted_slowdown_scales_compute_exactly() {
+    let p = softmax_prog();
+    let mut clean_sys = System::new(1);
+    seed_sm(&mut clean_sys.clusters[0].spm, 1);
+    let clean = clean_sys.run_jobs(vec![ClusterJob::new(vec![p.clone()], 0)]);
+
+    let fill = u64::from(DmaModel::default().startup);
+    let compute = clean.cycles - fill;
+    let mut sys = System::new(1);
+    sys.faults = Some(FaultPlan::scripted(
+        1,
+        vec![FaultEvent {
+            cluster: 0,
+            from_epoch: 0,
+            until_epoch: 1,
+            fault: ClusterFault { slow_factor: 2.0, ..ClusterFault::none() },
+        }],
+    ));
+    seed_sm(&mut sys.clusters[0].spm, 1);
+    let s = sys.run_jobs(vec![ClusterJob::new(vec![p.clone()], 0)]);
+    assert_eq!(s.cycles, 2 * compute + fill, "2x slowdown doubles compute, not fill");
+    assert_eq!(s.injected_cycles, compute);
+    assert_eq!(s.faults_injected, 1);
+    assert!(s.failed_clusters.is_empty());
+
+    // the event window [0, 1) has closed: the next epoch runs clean
+    seed_sm(&mut sys.clusters[0].spm, 1);
+    let s2 = sys.run_jobs(vec![ClusterJob::new(vec![p], 0)]);
+    assert_eq!(s2.cycles, clean.cycles);
+    assert_eq!(s2.faults_injected, 0);
+}
+
+#[test]
+fn scripted_stall_adds_exactly_its_cycles() {
+    let p = softmax_prog();
+    let mut clean_sys = System::new(1);
+    seed_sm(&mut clean_sys.clusters[0].spm, 2);
+    let clean = clean_sys.run_jobs(vec![ClusterJob::new(vec![p.clone()], 0)]);
+
+    let mut sys = System::new(1);
+    sys.faults = Some(FaultPlan::scripted(
+        1,
+        vec![FaultEvent {
+            cluster: 0,
+            from_epoch: 0,
+            until_epoch: 1,
+            fault: ClusterFault { stall_cycles: 7_000, ..ClusterFault::none() },
+        }],
+    ));
+    seed_sm(&mut sys.clusters[0].spm, 2);
+    let s = sys.run_jobs(vec![ClusterJob::new(vec![p], 0)]);
+    assert_eq!(s.cycles, clean.cycles + 7_000);
+    assert_eq!(s.injected_cycles, 7_000);
+    assert_eq!(s.faults_injected, 1);
+}
+
+#[test]
+fn scripted_transient_failure_corrupts_spm_and_clears_next_epoch() {
+    let p = softmax_prog();
+    let zeros = vec![0u8; SPM_BYTES];
+
+    // clean reference image
+    let mut clean_sys = System::new(1);
+    clean_sys.clusters[0].spm.load_bytes(0, &zeros);
+    seed_sm(&mut clean_sys.clusters[0].spm, 3);
+    clean_sys.run_jobs(vec![ClusterJob::new(vec![p.clone()], 0)]);
+    let clean_sum = spm_checksum(&clean_sys.clusters[0].spm);
+
+    let mut sys = System::new(1);
+    sys.faults = Some(FaultPlan::scripted(
+        1,
+        vec![FaultEvent {
+            cluster: 0,
+            from_epoch: 0,
+            until_epoch: 1,
+            fault: ClusterFault { fail: true, ..ClusterFault::none() },
+        }],
+    ));
+    sys.clusters[0].spm.load_bytes(0, &zeros);
+    seed_sm(&mut sys.clusters[0].spm, 3);
+    let s1 = sys.run_jobs(vec![ClusterJob::new(vec![p.clone()], 0)]);
+    assert_eq!(s1.failed_clusters, vec![0]);
+    assert!(s1.per_cluster[0].failed);
+    assert_eq!(s1.faults_injected, 1);
+    assert_ne!(
+        spm_checksum(&sys.clusters[0].spm),
+        clean_sum,
+        "the corruption must be visible in the SPM checksum"
+    );
+
+    // retry epoch: reset + reseed; the fault window has passed
+    sys.clusters[0].spm.load_bytes(0, &zeros);
+    seed_sm(&mut sys.clusters[0].spm, 3);
+    let s2 = sys.run_jobs(vec![ClusterJob::new(vec![p], 0)]);
+    assert!(s2.failed_clusters.is_empty());
+    assert!(!s2.per_cluster[0].failed);
+    assert_eq!(spm_checksum(&sys.clusters[0].spm), clean_sum, "retry must run clean");
+}
+
+#[test]
+fn scripted_offline_cluster_executes_nothing_and_drops_its_job() {
+    let p = softmax_prog();
+    let mut sys = System::new(2);
+    sys.faults = Some(FaultPlan::scripted(
+        2,
+        vec![FaultEvent {
+            cluster: 1,
+            from_epoch: 0,
+            until_epoch: u64::MAX,
+            fault: ClusterFault { offline: true, ..ClusterFault::none() },
+        }],
+    ));
+    seed_sm(&mut sys.clusters[0].spm, 4);
+    seed_sm(&mut sys.clusters[1].spm, 4);
+    let before = spm_checksum(&sys.clusters[1].spm);
+    let s = sys.run_jobs(vec![
+        ClusterJob::new(vec![p.clone()], 0),
+        ClusterJob::new(vec![p], 0),
+    ]);
+    assert_eq!(s.offline_clusters, vec![1]);
+    assert_eq!(s.failed_clusters, vec![1], "an offline cluster's pending job is lost");
+    assert!(s.per_cluster[1].offline);
+    assert_eq!(s.per_cluster[1].cycles, 0);
+    assert_eq!(spm_checksum(&sys.clusters[1].spm), before, "offline SPM is untouched");
+    assert_eq!(s.cycles, s.per_cluster[0].cycles, "makespan excludes the offline cluster");
+}
+
+// ---------------------------------------------------------------------------
+// serving layer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transient_failure_triggers_retry_and_quarantine_without_double_count() {
+    let mut engine = Engine::with_clusters(4);
+    engine.submit_request(gpt(64, 2));
+    let mut backend = CycleSimBackend::new(4);
+    backend.system.faults = Some(FaultPlan::scripted(
+        4,
+        vec![FaultEvent {
+            cluster: 0,
+            from_epoch: 0,
+            until_epoch: 1,
+            fault: ClusterFault { fail: true, ..ClusterFault::none() },
+        }],
+    ));
+    let opts = ServeOptions { max_attempts: 3, quarantine_iters: 1, ..Default::default() };
+    let report = engine.serve_resilient(&mut backend, None, &opts);
+
+    assert_eq!(report.per_request.len(), 1);
+    let r = &report.per_request[0];
+    assert_eq!(r.outcome, Outcome::Completed);
+    assert_eq!(r.tokens, 2, "a retried iteration must not double-count tokens");
+    assert_eq!(r.retries, 1);
+    assert_eq!(report.total_tokens(), 2);
+    assert_eq!(report.slo.retries, 1);
+    assert!(report.slo.faults_injected >= 1);
+    assert_eq!(report.slo.quarantine_events, 1);
+    assert_eq!(report.log[0].attempts, 2, "iteration 0 = failed attempt + clean retry");
+    assert_eq!(report.health[0].failures, 1);
+    assert!(report.health[0].quarantined_iters >= 1);
+}
+
+#[test]
+fn admission_control_sheds_over_queue_depth() {
+    let mut engine = Engine::with_clusters(4);
+    for _ in 0..6 {
+        engine.submit_request(gpt(32, 1));
+    }
+    let mut backend = AnalyticBackend::new();
+    let opts = ServeOptions { max_live: 1, max_queue: 0, ..Default::default() };
+    let report = engine.serve_resilient(&mut backend, None, &opts);
+
+    assert_eq!(report.slo.shed, 5, "1 admitted, 0 allowed to wait, 5 shed");
+    assert_eq!(report.slo.completed, 1);
+    let shed: Vec<_> = report
+        .per_request
+        .iter()
+        .filter(|r| r.outcome == Outcome::Shed)
+        .collect();
+    assert_eq!(shed.len(), 5);
+    assert!(shed.iter().all(|r| r.tokens == 0), "shed requests generate no tokens");
+    let served = report.total_tokens();
+    assert_eq!(served, 1, "throughput counts only served requests");
+}
+
+#[test]
+fn deadline_expiry_times_out_with_partial_progress() {
+    let mut engine = Engine::with_clusters(4);
+    engine.submit_request(gpt(32, 50));
+    let mut backend = AnalyticBackend::new();
+    let opts = ServeOptions { deadline_cycles: Some(1), ..Default::default() };
+    let report = engine.serve_resilient(&mut backend, None, &opts);
+
+    let r = &report.per_request[0];
+    assert_eq!(r.outcome, Outcome::TimedOut);
+    assert!(r.tokens < 50, "the deadline must cut the request short");
+    assert_eq!(report.slo.timed_out, 1);
+    assert_eq!(report.slo.completed, 0);
+}
+
+#[test]
+fn overload_walks_the_degradation_ladder_and_recovers() {
+    let mut engine = Engine::with_clusters(4);
+    engine.submit_request(gpt(32, 1));
+    engine.submit_request(gpt(32, 3));
+    engine.submit_request(gpt(32, 5));
+    let mut primary = CycleSimBackend::new(4);
+    let mut fallback = AnalyticBackend::new();
+    let opts = ServeOptions {
+        degrade_sampled_at: 2,
+        degrade_analytic_at: 3,
+        ..Default::default()
+    };
+    let report = engine.serve_resilient(&mut primary, Some(&mut fallback), &opts);
+
+    let s = &report.slo;
+    assert!(s.analytic_iters >= 1, "pressure 3 must reach the analytic tier");
+    assert!(s.sampled_iters >= 1, "pressure 2 must reach the sampled tier");
+    assert!(s.full_iters >= 1, "the loop must recover full fidelity as pressure drops");
+    assert_eq!(s.full_iters + s.sampled_iters + s.analytic_iters, report.iterations);
+    assert!(report.per_request.iter().all(|r| r.outcome == Outcome::Completed));
+    assert_eq!(report.total_tokens(), 1 + 3 + 5, "degraded iterations still make progress");
+}
+
+#[test]
+fn sampled_degradation_works_without_a_fallback_backend() {
+    let mut engine = Engine::with_clusters(4);
+    engine.submit_request(gpt(32, 2));
+    engine.submit_request(gpt(32, 2));
+    let mut primary = CycleSimBackend::new(4);
+    let opts = ServeOptions { degrade_sampled_at: 2, ..Default::default() };
+    let report = engine.serve_resilient(&mut primary, None, &opts);
+    assert!(report.slo.sampled_iters >= 1);
+    assert_eq!(
+        report.slo.full_iters + report.slo.sampled_iters + report.slo.analytic_iters,
+        report.iterations
+    );
+    assert!(report.per_request.iter().all(|r| r.outcome == Outcome::Completed));
+}
+
+fn serve_mixed(plan: Option<FaultPlan>) -> (ServeReport, Vec<u64>) {
+    let mut engine = Engine::with_clusters(4);
+    engine.submit_request(gpt(64, 2));
+    let mut vit = VIT_BASE;
+    vit.seq = 64;
+    engine.submit_request(Request::new(0, vit));
+    let mut backend = CycleSimBackend::new(4);
+    backend.system.faults = plan;
+    let report = engine.serve_continuous_bounded(&mut backend, 32);
+    let sums = backend
+        .system
+        .clusters
+        .iter()
+        .map(|c| spm_checksum(&c.spm))
+        .collect();
+    (report, sums)
+}
+
+#[test]
+fn zero_impact_faults_leave_a_serve_run_bit_identical() {
+    let (clean, clean_sums) = serve_mixed(None);
+    let plan = FaultPlan::new(FaultSpec::zero_impact(), 5, 4);
+    let (zero, zero_sums) = serve_mixed(Some(plan));
+
+    assert_eq!(clean.iterations, zero.iterations);
+    assert_eq!(clean.total_cycles, zero.total_cycles);
+    assert_eq!(zero.slo.faults_injected, 0);
+    assert_eq!(clean.per_request.len(), zero.per_request.len());
+    for (a, b) in clean.per_request.iter().zip(&zero.per_request) {
+        assert_eq!(a.request_id, b.request_id);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        assert_eq!(a.ttft_cycles.to_bits(), b.ttft_cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.decode_token_cycles.to_bits(), b.decode_token_cycles.to_bits());
+    }
+    assert_eq!(clean_sums, zero_sums, "SPM images must match byte-for-byte");
+}
+
+fn chaos_trace_run(seed: u64) -> ServeReport {
+    let spec = TraceSpec::bursty(6, 50_000.0, seed);
+    let mut engine = Engine::with_clusters(4);
+    for r in spec.mixed_traffic(32, 2, Some(10_000_000)) {
+        engine.submit_request(r);
+    }
+    let mut primary = CycleSimBackend::new(4);
+    primary.system.faults = Some(FaultPlan::new(FaultSpec::chaos(), seed, 4));
+    let mut fallback = AnalyticBackend::new();
+    let opts = ServeOptions {
+        max_iters: 64,
+        max_live: 2,
+        max_queue: 2,
+        ttft_slo_cycles: Some(5_000_000),
+        token_slo_cycles: Some(1_000_000),
+        deadline_cycles: None,
+        shed_over_projected_ttft: true,
+        max_attempts: 3,
+        quarantine_iters: 2,
+        degrade_sampled_at: 3,
+        degrade_analytic_at: 5,
+    };
+    engine.serve_resilient(&mut primary, Some(&mut fallback), &opts)
+}
+
+#[test]
+fn chaos_trace_serving_is_reproducible_from_its_seed() {
+    let a = chaos_trace_run(7);
+    let b = chaos_trace_run(7);
+
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.per_request.len(), b.per_request.len());
+    for (x, y) in a.per_request.iter().zip(&b.per_request) {
+        assert_eq!(x.request_id, y.request_id);
+        assert_eq!(x.outcome, y.outcome);
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.retries, y.retries);
+        assert_eq!(x.cycles.to_bits(), y.cycles.to_bits());
+        assert_eq!(x.ttft_cycles.to_bits(), y.ttft_cycles.to_bits());
+    }
+    let (sa, sb) = (&a.slo, &b.slo);
+    assert_eq!(
+        (sa.completed, sa.shed, sa.timed_out, sa.unfinished),
+        (sb.completed, sb.shed, sb.timed_out, sb.unfinished)
+    );
+    assert_eq!(
+        (sa.retries, sa.faults_injected, sa.quarantine_events),
+        (sb.retries, sb.faults_injected, sb.quarantine_events)
+    );
+    assert_eq!(
+        (sa.full_iters, sa.sampled_iters, sa.analytic_iters),
+        (sb.full_iters, sb.sampled_iters, sb.analytic_iters)
+    );
+    for (h1, h2) in a.health.iter().zip(&b.health) {
+        assert_eq!(
+            (h1.cluster, h1.failures, h1.quarantined_iters, h1.offline),
+            (h2.cluster, h2.failures, h2.quarantined_iters, h2.offline)
+        );
+    }
+    // a different seed must produce a genuinely different run
+    let c = chaos_trace_run(8);
+    assert!(
+        c.total_cycles != a.total_cycles || c.slo.faults_injected != a.slo.faults_injected,
+        "seed must steer both the trace and the fault plan"
+    );
+}
