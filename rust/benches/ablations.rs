@@ -3,7 +3,8 @@
 //!   A2  P(x) mantissa correction vs plain Schraudolph (accuracy cost)
 //!   A3  FlashAttention-2 K-tile size sweep (SPM/double-buffer choice)
 //!   A4  multi-cluster scaling with HBM contention (real programs)
-use vexp::accuracy::{exp_error_exhaustive, exp_error_in_range};
+//!   A5  polynomial-exp axis: Schraudolph vs Horner-6 vs VFEXP hardware
+use vexp::accuracy::{exp_error_exhaustive, exp_error_in_range, softmax_mse};
 use vexp::kernels::flash_attention::{run_flash_attention, FaVariant};
 use vexp::kernels::softmax::{run_softmax, SoftmaxVariant};
 use vexp::sim::System;
@@ -79,5 +80,18 @@ fn main() {
         }).collect();
         let s = sys.run(workloads);
         println!("  {n_cl:>2} clusters: makespan {:>7} cycles, HBM {:>8} B", s.cycles, s.hbm_bytes);
+    }
+
+    // --- A5: polynomial-exp technology in the softmax EXP block ----------
+    // The software frontier: Schraudolph's bit-trick (fast, ~2% error)
+    // vs the degree-6 Horner polynomial (accurate to bf16 resolution,
+    // many more instructions), with the VFEXP hardware unit as the
+    // reference point that gets both at once.
+    println!("A5 — polynomial-exp axis (softmax 8x512)");
+    let data = rows(8, 512);
+    for v in [SoftmaxVariant::SwExpSw, SoftmaxVariant::SwExpHorner, SoftmaxVariant::SwExpHw] {
+        let run = run_softmax(v, &data);
+        let mse = softmax_mse(&data, &run.out);
+        println!("  {:26}: {:>7.2} cyc/out  output MSE {:.2e}", v.label(), run.cycles_per_output, mse);
     }
 }

@@ -13,14 +13,16 @@ use vexp::sim::SamplePolicy;
 fn main() {
     let mut backend = AnalyticBackend::new();
     println!("Fig. 8 — 16-cluster end-to-end (non-autoregressive), backend: {}", backend.name());
-    println!("{:12} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8}",
-        "model", "BL ms", "Optim ms", "speedup", "BL mJ", "Optim mJ", "E-ratio");
+    println!("{:12} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8} {:>7}",
+        "model", "BL ms", "Optim ms", "speedup", "BL mJ", "Optim mJ", "E-ratio", "nonlin");
     for cfg in ALL_MODELS {
         let b = backend.estimate(&Request::baseline(0, cfg));
         let o = backend.estimate(&Request::new(1, cfg));
-        println!("{:12} {:>10.2} {:>10.2} {:>7.1}x {:>10.1} {:>10.1} {:>7.1}x",
+        // nonlin = the GELU+LayerNorm share of optimized end-to-end cycles
+        println!("{:12} {:>10.2} {:>10.2} {:>7.1}x {:>10.1} {:>10.1} {:>7.1}x {:>6.1}%",
             cfg.name, b.latency_ms(), o.latency_ms(), b.cycles / o.cycles,
-            b.energy_mj(), o.energy_mj(), b.energy_pj / o.energy_pj);
+            b.energy_mj(), o.energy_mj(), b.energy_pj / o.energy_pj,
+            100.0 * o.nonlin_cycles / o.cycles);
     }
     println!("(paper: GPT-2 5.8x/3.6x, GPT-3 2.9x/1.7x, ViT-B 1.9x/1.4x, ViT-H 1.4x/1.2x)");
 

@@ -6,6 +6,8 @@
 #![allow(missing_docs)]
 
 use crate::bf16::Bf16;
+use crate::kernels::gelu::{gelu_ref, run_gelu, GeluVariant};
+use crate::kernels::layernorm::{layernorm_ref, run_layernorm, LayerNormVariant};
 use crate::vexp::exp_unit;
 
 /// Relative-error summary of an approximation against a reference.
@@ -45,7 +47,22 @@ pub fn exp_error_exhaustive() -> ErrorStats {
 
 /// Error stats restricted to a value range (e.g. the softmax domain
 /// `[-20, 0]` used for the Table IV MSE row).
+///
+/// Edge cases are well-defined: a NaN endpoint **panics** (a silent
+/// `n = 0` hid real bugs here — `(lo..=hi).contains` never matches a
+/// NaN bound); an empty or inverted range (`lo > hi`) returns
+/// [`ErrorStats::default`] with `n = 0`; infinite endpoints are legal
+/// and cover every finite BF16 input on that side. Inputs whose exact
+/// exponential overflows `f64` are excluded (they sit far past every
+/// normal BF16 target anyway).
 pub fn exp_error_in_range(lo: f32, hi: f32) -> ErrorStats {
+    assert!(
+        !lo.is_nan() && !hi.is_nan(),
+        "exp_error_in_range: NaN endpoint (lo={lo}, hi={hi})"
+    );
+    if lo > hi {
+        return ErrorStats::default();
+    }
     let mut sum = 0.0f64;
     let mut max = 0.0f64;
     let mut mse = 0.0f64;
@@ -53,16 +70,105 @@ pub fn exp_error_in_range(lo: f32, hi: f32) -> ErrorStats {
     for bits in 0..=u16::MAX {
         let x = Bf16(bits);
         let xf = x.to_f32();
-        if x.is_nan() || !(lo..=hi).contains(&xf) {
+        if !xf.is_finite() || !(lo..=hi).contains(&xf) {
             continue;
         }
         let t = (xf as f64).exp();
+        if !t.is_finite() {
+            continue;
+        }
         let y = exp_unit(x).to_f32() as f64;
         let rel = (y - t).abs() / t.max(1e-300);
         sum += rel;
         max = max.max(rel);
         mse += (y - t) * (y - t);
         n += 1;
+    }
+    ErrorStats { mean_rel: sum / n.max(1) as f64, max_rel: max, mse: mse / n.max(1) as f64, n }
+}
+
+/// Relative-error denominator floor for the GELU sweeps: below this
+/// output magnitude the reported error is effectively absolute, which
+/// keeps the deep saturation tail (`gelu(x) → 0⁻` as `x → −∞`) from
+/// dominating the statistics with meaningless huge ratios.
+pub const GELU_REL_FLOOR: f64 = 0.0625;
+
+/// Exhaustive GELU error sweep: every finite BF16 input, executed on
+/// the real cluster kernel in 8-row × 512 chunks, against the f64
+/// oracle [`gelu_ref`]. In this sweep `mse` is the mean *squared
+/// relative* error (the absolute output scale spans the whole BF16
+/// range, so an absolute MSE would be meaningless).
+pub fn gelu_error_exhaustive(variant: GeluVariant) -> ErrorStats {
+    let inputs: Vec<f32> = (0..=u16::MAX)
+        .map(Bf16)
+        .filter(|x| !x.is_nan() && !x.is_inf())
+        .map(|x| x.to_f32())
+        .collect();
+    gelu_error_on(variant, &inputs)
+}
+
+/// GELU error stats over an explicit input set, executed on the real
+/// cluster kernel (inputs are padded to full SIMD rows with zeros; the
+/// padding is excluded from the statistics). See
+/// [`gelu_error_exhaustive`] for the error conventions.
+pub fn gelu_error_on(variant: GeluVariant, inputs: &[f32]) -> ErrorStats {
+    const N: usize = 512;
+    const ROWS: usize = 8;
+    let form = variant.form();
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut mse = 0.0f64;
+    let mut n = 0u64;
+    for chunk in inputs.chunks(ROWS * N) {
+        let mut rows: Vec<Vec<f32>> = chunk.chunks(N).map(|c| c.to_vec()).collect();
+        for row in &mut rows {
+            row.resize(N, 0.0);
+        }
+        let run = run_gelu(variant, &rows);
+        let mut idx = 0usize;
+        'chunk: for (r, row) in rows.iter().enumerate() {
+            for (c, &x) in row.iter().enumerate() {
+                if idx >= chunk.len() {
+                    break 'chunk;
+                }
+                idx += 1;
+                let t = gelu_ref(form, x as f64);
+                let y = run.out[r][c] as f64;
+                let rel = (y - t).abs() / t.abs().max(GELU_REL_FLOOR);
+                sum += rel;
+                max = max.max(rel);
+                mse += rel * rel;
+                n += 1;
+            }
+        }
+    }
+    ErrorStats { mean_rel: sum / n.max(1) as f64, max_rel: max, mse: mse / n.max(1) as f64, n }
+}
+
+/// LayerNorm error stats on explicit rows vs the f64 two-pass oracle
+/// [`layernorm_ref`]. Rows are BF16-quantized first so the oracle sees
+/// exactly what the kernel reads. Outputs are standardized (O(1)), so
+/// the relative denominator floors at 1.
+pub fn layernorm_error_on(variant: LayerNormVariant, rows: &[Vec<f32>]) -> ErrorStats {
+    let q: Vec<Vec<f32>> = rows
+        .iter()
+        .map(|r| r.iter().map(|&v| Bf16::from_f32(v).to_f32()).collect())
+        .collect();
+    let run = run_layernorm(variant, &q);
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut mse = 0.0f64;
+    let mut n = 0u64;
+    for (i, row) in q.iter().enumerate() {
+        let want = layernorm_ref(row);
+        for (&got, &w) in run.out[i].iter().zip(&want) {
+            let (y, t) = (got as f64, w as f64);
+            let rel = (y - t).abs() / t.abs().max(1.0);
+            sum += rel;
+            max = max.max(rel);
+            mse += (y - t) * (y - t);
+            n += 1;
+        }
     }
     ErrorStats { mean_rel: sum / n.max(1) as f64, max_rel: max, mse: mse / n.max(1) as f64, n }
 }
@@ -121,5 +227,164 @@ mod tests {
         let s: f64 = e.iter().sum();
         let outs = vec![e.iter().map(|v| (v / s) as f32).collect::<Vec<_>>()];
         assert!(softmax_mse(&rows, &outs) < 1e-14);
+    }
+
+    // ---- exp_error_in_range edge-case table -------------------------------
+
+    #[test]
+    fn in_range_inverted_is_empty() {
+        let s = exp_error_in_range(1.0, -1.0);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean_rel, 0.0);
+        assert_eq!(s.max_rel, 0.0);
+        assert_eq!(s.mse, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN endpoint")]
+    fn in_range_nan_lo_panics() {
+        exp_error_in_range(f32::NAN, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN endpoint")]
+    fn in_range_nan_hi_panics() {
+        exp_error_in_range(-1.0, f32::NAN);
+    }
+
+    #[test]
+    fn in_range_infinite_endpoints_cover_all_finite_inputs() {
+        let s = exp_error_in_range(f32::NEG_INFINITY, f32::INFINITY);
+        // every finite BF16 whose exact exp fits in f64 (±inf inputs and
+        // overflowing targets excluded)
+        assert!(s.n > 60_000, "n = {}", s.n);
+        assert!(s.max_rel.is_finite());
+    }
+
+    #[test]
+    fn in_range_single_point_counts_both_zeros() {
+        // lo == hi == 0.0 matches +0 and -0; exp(0) = 1 exactly
+        let s = exp_error_in_range(0.0, 0.0);
+        assert_eq!(s.n, 2);
+        assert!(s.max_rel < 0.011, "max {:.5}", s.max_rel);
+    }
+
+    // ---- GELU sweeps ------------------------------------------------------
+
+    use crate::kernels::gelu::GeluForm;
+
+    /// Every finite BF16 value inside [lo, hi].
+    fn bf16_inputs_in(lo: f32, hi: f32) -> Vec<f32> {
+        (0..=u16::MAX)
+            .map(Bf16)
+            .filter(|x| !x.is_nan() && !x.is_inf())
+            .map(|x| x.to_f32())
+            .filter(|&v| (lo..=hi).contains(&v))
+            .collect()
+    }
+
+    #[test]
+    fn gelu_hw_exhaustive_within_bounds() {
+        // the SIMD VFEXP kernel is fast enough to sweep every finite
+        // BF16 input for all three forms
+        for form in GeluForm::ALL {
+            let s = gelu_error_exhaustive(GeluVariant::Hw(form));
+            assert!(s.n > 60_000, "{form:?}: n = {}", s.n);
+            assert!(s.max_rel < 0.10, "{form:?}: max {:.4}", s.max_rel);
+            assert!(s.mean_rel < 0.01, "{form:?}: mean {:.5}", s.mean_rel);
+        }
+    }
+
+    #[test]
+    fn gelu_sw_schraudolph_nontrivial_range_within_bounds() {
+        // scalar-software sweeps are slow in the simulator, so the unit
+        // test covers the nontrivial range; the table2_accuracy bench
+        // gate sweeps all variants exhaustively in release mode
+        let inputs = bf16_inputs_in(-8.0, 8.0);
+        let s = gelu_error_on(GeluVariant::Sw(GeluForm::Tanh), &inputs);
+        assert!(s.n as usize == inputs.len());
+        assert!(s.max_rel < 0.20, "max {:.4}", s.max_rel);
+    }
+
+    #[test]
+    fn gelu_sw_horner_nontrivial_range_beats_schraudolph_bound() {
+        let inputs = bf16_inputs_in(-8.0, 8.0);
+        let s = gelu_error_on(GeluVariant::SwHorner(GeluForm::Tanh), &inputs);
+        assert!(s.max_rel < 0.10, "max {:.4}", s.max_rel);
+    }
+
+    // ---- LayerNorm adversarial rows ---------------------------------------
+
+    #[test]
+    fn layernorm_high_variance_rows_within_bounds() {
+        let mut rng = crate::testkit::Rng::new(0xAD5E);
+        let rows: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..256).map(|_| rng.f32(-200.0, 200.0)).collect())
+            .collect();
+        for variant in LayerNormVariant::ALL {
+            let s = layernorm_error_on(variant, &rows);
+            assert!(s.max_rel < 0.10, "{variant:?}: max {:.4}", s.max_rel);
+        }
+    }
+
+    #[test]
+    fn layernorm_denormal_rows_within_bounds() {
+        // magnitudes at the bottom of the BF16 normal range: the
+        // variance underflows to zero, epsilon takes over, outputs are
+        // ~0 for both kernel and oracle
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|r| {
+                (0..64)
+                    .map(|i| if (i + r) % 2 == 0 { 1.2e-38 } else { -1.2e-38 })
+                    .collect()
+            })
+            .collect();
+        for variant in LayerNormVariant::ALL {
+            let s = layernorm_error_on(variant, &rows);
+            assert!(s.max_rel < 0.01, "{variant:?}: max {:.4}", s.max_rel);
+        }
+    }
+
+    #[test]
+    fn layernorm_random_rows_property() {
+        crate::testkit::forall(25, |rng| {
+            let row: Vec<f32> = (0..128).map(|_| rng.f32(-8.0, 8.0)).collect();
+            let s = layernorm_error_on(LayerNormVariant::Optimized, &[row]);
+            if s.max_rel < 0.08 {
+                Ok(())
+            } else {
+                Err(format!("max_rel {:.4}", s.max_rel))
+            }
+        });
+    }
+
+    // ---- softmax-backward Jacobian property -------------------------------
+
+    #[test]
+    fn softmax_bwd_one_hot_matches_jacobian_forall() {
+        use crate::kernels::softmax::{run_softmax_bwd, softmax_ref, SoftmaxBwdVariant};
+        crate::testkit::forall(50, |rng| {
+            let n = 32usize;
+            let logits: Vec<f32> = (0..n).map(|_| rng.f32(-4.0, 4.0)).collect();
+            let y = softmax_ref(&logits);
+            let yq: Vec<f32> = y.iter().map(|&v| Bf16::from_f32(v).to_f32()).collect();
+            let k = rng.range(0, n as u64) as usize;
+            let mut g = vec![0.0f32; n];
+            g[k] = 1.0;
+            let run = run_softmax_bwd(SoftmaxBwdVariant::Optimized, &[y], &[g]);
+            for (j, &got) in run.dx[0].iter().enumerate() {
+                let delta = if j == k { 1.0 } else { 0.0 };
+                let want = yq[j] as f64 * (delta - yq[k] as f64);
+                // ~4 BF16 ULP: two exactly-representable operands, one
+                // rounded subtract, one rounded multiply
+                let tol = 0.02 * want.abs().max(1e-3);
+                if (got as f64 - want).abs() >= tol {
+                    return Err(format!(
+                        "k={k} j={j}: got {got}, want {want:.6}"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }

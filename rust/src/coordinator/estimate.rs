@@ -12,7 +12,9 @@
 
 use super::schedule::{HeadMap, TilePlan, CLUSTERS};
 use crate::energy::power::{cluster_energy_pj, DMA_PJ_PER_BYTE};
+use crate::kernels::gelu::{run_gelu, GeluForm, GeluVariant};
 use crate::kernels::gemm::run_gemm;
+use crate::kernels::layernorm::{run_layernorm, LayerNormVariant};
 use crate::kernels::softmax::{run_softmax, SoftmaxVariant};
 use crate::model::{TransformerConfig, WorkloadOps};
 use crate::sim::{DmaModel, HbmModel};
@@ -34,6 +36,22 @@ pub struct KernelRates {
     pub softmax_base_pj: f64,
     /// Cluster energy per softmax element (pJ), optimized variant.
     pub softmax_opt_pj: f64,
+    /// Cluster cycles per GELU element, scalar software variant.
+    pub gelu_base_cyc: f64,
+    /// Cluster cycles per GELU element, VFEXP+SIMD variant.
+    pub gelu_opt_cyc: f64,
+    /// Cluster cycles per LayerNorm element, scalar baseline.
+    pub ln_base_cyc: f64,
+    /// Cluster cycles per LayerNorm element, FREP+SSR+SIMD variant.
+    pub ln_opt_cyc: f64,
+    /// Cluster energy per GELU element (pJ), scalar software variant.
+    pub gelu_base_pj: f64,
+    /// Cluster energy per GELU element (pJ), VFEXP+SIMD variant.
+    pub gelu_opt_pj: f64,
+    /// Cluster energy per LayerNorm element (pJ), scalar baseline.
+    pub ln_base_pj: f64,
+    /// Cluster energy per LayerNorm element (pJ), optimized variant.
+    pub ln_opt_pj: f64,
 }
 
 impl KernelRates {
@@ -60,6 +78,16 @@ impl KernelRates {
         let base = run_softmax(SoftmaxVariant::Baseline, &rows);
         let opt = run_softmax(SoftmaxVariant::SwExpHw, &rows);
         let n = (8 * 512) as f64;
+
+        // -- nonlinearities: same 8 rows x 512 shape ----------------------
+        let acts: Vec<Vec<f32>> = (0..8)
+            .map(|r| (0..512).map(|i| ((i * 11 + r * 17) % 89) as f32 * 0.09 - 4.0).collect())
+            .collect();
+        let gelu_base = run_gelu(GeluVariant::Sw(GeluForm::Tanh), &acts);
+        let gelu_opt = run_gelu(GeluVariant::Hw(GeluForm::Tanh), &acts);
+        let ln_base = run_layernorm(LayerNormVariant::Baseline, &acts);
+        let ln_opt = run_layernorm(LayerNormVariant::Optimized, &acts);
+
         KernelRates {
             gemm_cyc_per_flop,
             gemm_unopt_cyc_per_flop,
@@ -68,6 +96,14 @@ impl KernelRates {
             gemm_pj_per_flop,
             softmax_base_pj: cluster_energy_pj(&base.stats, false).total() / n,
             softmax_opt_pj: cluster_energy_pj(&opt.stats, true).total() / n,
+            gelu_base_cyc: gelu_base.stats.cycles as f64 / n,
+            gelu_opt_cyc: gelu_opt.stats.cycles as f64 / n,
+            ln_base_cyc: ln_base.stats.cycles as f64 / n,
+            ln_opt_cyc: ln_opt.stats.cycles as f64 / n,
+            gelu_base_pj: cluster_energy_pj(&gelu_base.stats, false).total() / n,
+            gelu_opt_pj: cluster_energy_pj(&gelu_opt.stats, true).total() / n,
+            ln_base_pj: cluster_energy_pj(&ln_base.stats, false).total() / n,
+            ln_opt_pj: cluster_energy_pj(&ln_opt.stats, true).total() / n,
         }
     }
 }
@@ -88,6 +124,8 @@ pub struct E2eEstimate {
     pub attn_cycles: f64,
     /// Cycles attributed to DMA streaming.
     pub dma_cycles: f64,
+    /// Cycles attributed to the GELU + LayerNorm nonlinearities.
+    pub nonlin_cycles: f64,
 }
 
 impl E2eEstimate {
@@ -163,6 +201,13 @@ impl SystemEstimator {
         } else {
             (r.softmax_base_cyc, r.softmax_base_pj)
         };
+        // the nonlinearities ride the same FREP/SSR/SIMD (+VFEXP for
+        // GELU) optimization axis as softmax
+        let (gelu_cyc, gelu_pj, ln_cyc, ln_pj) = if softmax_optimized {
+            (r.gelu_opt_cyc, r.gelu_opt_pj, r.ln_opt_cyc, r.ln_opt_pj)
+        } else {
+            (r.gelu_base_cyc, r.gelu_base_pj, r.ln_base_cyc, r.ln_base_pj)
+        };
 
         // projections: all clusters cooperate
         let proj_cycles = l.proj_flops as f64 * gemm_rate / self.clusters as f64;
@@ -176,12 +221,16 @@ impl SystemEstimator {
         let attn_cycles = map.rounds() as f64 * (head_gemm + head_sm);
         let softmax_cycles = map.rounds() as f64 * head_sm;
 
+        // nonlinearities: element-parallel, all clusters cooperate
+        let nonlin_cycles = (l.gelu_elems as f64 * gelu_cyc + l.layernorm_elems as f64 * ln_cyc)
+            / self.clusters as f64;
+
         // DMA: weights + activations streamed per layer, double-buffered
         // against compute; HBM contention when all clusters stream
         let contention = self.hbm.contention_factor(self.clusters, self.dma.bytes_per_cycle);
         let bytes = (l.weight_bytes + l.act_bytes) as f64;
         let dma_cycles = self.dma.cycles((bytes / self.clusters as f64) as u64) as f64 * contention;
-        let compute = proj_cycles + attn_cycles;
+        let compute = proj_cycles + attn_cycles + nonlin_cycles;
         let layer_cycles = compute.max(dma_cycles) + dma_cycles.min(compute) * 0.05;
 
         let layers = ops.layers as f64;
@@ -193,6 +242,8 @@ impl SystemEstimator {
         let energy = layers
             * (l.total_flops() as f64 * gemm_pj
                 + l.softmax_elems as f64 * sm_pj
+                + l.gelu_elems as f64 * gelu_pj
+                + l.layernorm_elems as f64 * ln_pj
                 + bytes * DMA_PJ_PER_BYTE);
 
         E2eEstimate {
@@ -202,6 +253,7 @@ impl SystemEstimator {
             gemm_cycles,
             attn_cycles: attn_cycles * layers,
             dma_cycles: dma_cycles * layers,
+            nonlin_cycles: nonlin_cycles * layers,
         }
     }
 
@@ -231,6 +283,19 @@ mod tests {
         assert!(r.gemm_cyc_per_flop < 0.06, "gemm {0} cyc/flop", r.gemm_cyc_per_flop);
         assert!(r.softmax_base_cyc / r.softmax_opt_cyc > 50.0);
         assert!(r.softmax_base_pj / r.softmax_opt_pj > 20.0);
+    }
+
+    #[test]
+    fn nonlinearities_are_priced() {
+        let r = rates();
+        assert!(r.gelu_base_cyc / r.gelu_opt_cyc > 4.0, "gelu {} / {}", r.gelu_base_cyc, r.gelu_opt_cyc);
+        assert!(r.ln_base_cyc / r.ln_opt_cyc > 3.0, "ln {} / {}", r.ln_base_cyc, r.ln_opt_cyc);
+        let est = SystemEstimator::new(r);
+        let e = est.estimate(&GPT2_SMALL, true, true);
+        assert!(e.nonlin_cycles > 0.0);
+        // the nonlinearities are real but must never dominate a forward
+        // pass — the GEMMs do
+        assert!(e.nonlin_cycles < 0.5 * e.cycles, "nonlin share {}", e.nonlin_cycles / e.cycles);
     }
 
     #[test]

@@ -56,6 +56,7 @@ impl Backend for AnalyticBackend {
             gemm_cycles: e.gemm_cycles,
             attn_cycles: e.attn_cycles,
             dma_cycles: e.dma_cycles,
+            nonlin_cycles: e.nonlin_cycles,
             clusters_used: self.est.clusters,
             ..Default::default()
         }
@@ -77,6 +78,7 @@ impl Backend for AnalyticBackend {
             gemm_cycles: e.gemm_cycles,
             attn_cycles: e.attn_cycles,
             dma_cycles: e.dma_cycles,
+            nonlin_cycles: e.nonlin_cycles,
             clusters_used: self.est.clusters,
             tokens,
             decode_token_cycles: if phase.is_decode() { e.cycles } else { 0.0 },
@@ -105,15 +107,22 @@ impl Backend for AnalyticBackend {
             } else {
                 (r.softmax_base_cyc, r.softmax_base_pj)
             };
+            let (gelu_cyc, gelu_pj, ln_cyc, ln_pj) = if cr.req.softmax_optimized {
+                (r.gelu_opt_cyc, r.gelu_opt_pj, r.ln_opt_cyc, r.ln_opt_pj)
+            } else {
+                (r.gelu_base_cyc, r.gelu_base_pj, r.ln_base_cyc, r.ln_base_pj)
+            };
             let reps = cr.reps as f64;
             let proj = cr.proj_flops_per_cluster as f64;
             let gemm_cycles = (reps * cr.cal.attn_flops() as f64 + proj) * gemm_rate;
             let softmax_cycles = reps * cr.cal.softmax_elems() as f64 * sm_cyc;
+            let nonlin_cycles = cr.gelu_elems_per_cluster as f64 * gelu_cyc
+                + cr.layernorm_elems_per_cluster as f64 * ln_cyc;
             // attention scope excludes the projection leg (RunReport
             // contract: attn_cycles is the FlashAttention slice work)
             let attn_cycles =
                 reps * cr.cal.attn_flops() as f64 * gemm_rate + softmax_cycles;
-            let compute = gemm_cycles + softmax_cycles;
+            let compute = gemm_cycles + softmax_cycles + nonlin_cycles;
             let dma =
                 self.est.dma.cycles(cr.hbm_bytes_per_cluster) as f64 * contention;
             let cycles = compute.max(dma) + self.est.dma.startup as f64;
@@ -126,6 +135,8 @@ impl Backend for AnalyticBackend {
             let energy_pj = n_cl
                 * ((reps * cr.cal.attn_flops() as f64 + proj) * gemm_pj
                     + reps * cr.cal.softmax_elems() as f64 * sm_pj
+                    + cr.gelu_elems_per_cluster as f64 * gelu_pj
+                    + cr.layernorm_elems_per_cluster as f64 * ln_pj
                     + cr.hbm_bytes_per_cluster as f64 * DMA_PJ_PER_BYTE);
             makespan = makespan.max(cycles as u64);
             hbm_bytes += cr.hbm_bytes_per_cluster * cr.clusters.len() as u64;
@@ -139,6 +150,7 @@ impl Backend for AnalyticBackend {
                 gemm_cycles,
                 attn_cycles,
                 dma_cycles: dma,
+                nonlin_cycles,
                 clusters_used: cr.clusters.len(),
                 ..Default::default()
             });

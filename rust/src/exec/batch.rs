@@ -109,6 +109,13 @@ pub struct CompiledRequest {
     /// at their measured/calibrated GEMM rate (serving scope only;
     /// zero in the calibration scope).
     pub proj_flops_per_cluster: u64,
+    /// GELU activations per owned cluster, priced by the backends at
+    /// their measured/calibrated GELU rate (serving scope only; zero in
+    /// the calibration scope).
+    pub gelu_elems_per_cluster: u64,
+    /// LayerNorm elements per owned cluster (serving scope only; zero
+    /// in the calibration scope).
+    pub layernorm_elems_per_cluster: u64,
 }
 
 /// A scheduled, compiled batch ready for any [`super::Backend`].
@@ -270,6 +277,8 @@ impl BatchScheduler {
                     program,
                     hbm_bytes_per_cluster,
                     proj_flops_per_cluster: 0,
+                    gelu_elems_per_cluster: 0,
+                    layernorm_elems_per_cluster: 0,
                 }
             })
             .collect();
@@ -389,6 +398,8 @@ impl BatchScheduler {
                     program,
                     hbm_bytes_per_cluster,
                     proj_flops_per_cluster,
+                    gelu_elems_per_cluster: ops.gelu_elems / n_cl as u64,
+                    layernorm_elems_per_cluster: ops.layernorm_elems / n_cl as u64,
                 }
             })
             .collect();

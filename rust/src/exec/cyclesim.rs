@@ -32,7 +32,11 @@ use crate::isa::Class;
 use crate::kernels::flash_attention::{
     build_fa_decode_program, build_fa_program, seed_fa_decode_inputs, seed_fa_inputs,
 };
+use crate::kernels::gelu::{build_gelu_program, seed_gelu_inputs, GeluForm, GeluVariant};
 use crate::kernels::gemm::build_gemm_program;
+use crate::kernels::layernorm::{
+    build_layernorm_program, seed_layernorm_inputs, LayerNormVariant,
+};
 use crate::kernels::softmax::{build_softmax_program, seed_softmax_inputs};
 use crate::model::{Phase, WorkloadOps};
 use crate::sim::{
@@ -60,6 +64,10 @@ pub struct CycleSimBackend {
     /// Memoized optimized-GEMM rate (cycles/FLOP, pJ/FLOP) for pricing
     /// the serving scope's projection legs.
     gemm_cal: Option<(f64, f64)>,
+    /// Memoized nonlinearity rates (GELU cyc/elem, GELU pJ/elem,
+    /// LayerNorm cyc/elem, LayerNorm pJ/elem), one slot per
+    /// optimization level (`[baseline, optimized]`).
+    nonlin_cal: [Option<(f64, f64, f64, f64)>; 2],
 }
 
 impl CycleSimBackend {
@@ -70,7 +78,12 @@ impl CycleSimBackend {
     pub fn new(n_clusters: usize) -> Self {
         let mut system = System::new(n_clusters);
         system.memo = Some(shared_memo());
-        CycleSimBackend { system, cache: ProgramCache::new(), gemm_cal: None }
+        CycleSimBackend {
+            system,
+            cache: ProgramCache::new(),
+            gemm_cal: None,
+            nonlin_cal: [None, None],
+        }
     }
 
     /// Disable the tile memo (e.g. to time the raw unmemoized fast path
@@ -138,6 +151,57 @@ impl CycleSimBackend {
         }
         let (cyc, pj, _) = self.gemm_measure();
         (cyc, pj)
+    }
+
+    /// Measured nonlinearity rates at the requested optimization level:
+    /// (GELU cyc/elem, GELU pJ/elem, LayerNorm cyc/elem, LayerNorm
+    /// pJ/elem). Runs the real GELU and LayerNorm programs once per
+    /// level and memoizes the result.
+    fn nonlin_cal(&mut self, optimized: bool) -> (f64, f64, f64, f64) {
+        let idx = optimized as usize;
+        if let Some(cal) = self.nonlin_cal[idx] {
+            return cal;
+        }
+        let (rows, n) = (SM_ROWS, 512u32);
+        let gv = if optimized {
+            GeluVariant::Hw(GeluForm::Tanh)
+        } else {
+            GeluVariant::Sw(GeluForm::Tanh)
+        };
+        let gkey = ProgramKey::for_kernel(
+            KernelKind::Gelu(gv),
+            [rows, n, 0, 0, 0, 0],
+            CORES_PER_CLUSTER as u32,
+        );
+        let gprog = self.cache.get_or_build(gkey, || build_gelu_program(gv, rows, n));
+        let mut cluster = Cluster::new();
+        seed_gelu_inputs(&mut cluster.spm, rows, n, 0x6E10);
+        let gstats = cluster.run_program_memo(&gprog, self.system.memo.as_ref());
+
+        let lv = if optimized {
+            LayerNormVariant::Optimized
+        } else {
+            LayerNormVariant::Baseline
+        };
+        let lkey = ProgramKey::for_kernel(
+            KernelKind::LayerNorm(lv),
+            [rows, n, 0, 0, 0, 0],
+            CORES_PER_CLUSTER as u32,
+        );
+        let lprog = self.cache.get_or_build(lkey, || build_layernorm_program(lv, rows, n));
+        let mut cluster = Cluster::new();
+        seed_layernorm_inputs(&mut cluster.spm, rows, n, 0x1A7E);
+        let lstats = cluster.run_program_memo(&lprog, self.system.memo.as_ref());
+
+        let elems = (rows * n) as f64;
+        let cal = (
+            gstats.cycles as f64 / elems,
+            cluster_energy_pj(&gstats, optimized).total() / elems,
+            lstats.cycles as f64 / elems,
+            cluster_energy_pj(&lstats, optimized).total() / elems,
+        );
+        self.nonlin_cal[idx] = Some(cal);
+        cal
     }
 
     /// Measured cluster-scope GEMM cycles and energy per FLOP, derated
@@ -239,6 +303,11 @@ impl Backend for CycleSimBackend {
         let per_head_sm = l.softmax_elems as f64 / cfg.heads as f64;
         let softmax_cycles = rounds * per_head_sm * sm_cyc;
 
+        // nonlinearities at measured rates, element-parallel
+        let (g_cyc, g_pj, ln_cyc, ln_pj) = self.nonlin_cal(req.softmax_optimized);
+        let nonlin_cycles =
+            (l.gelu_elems as f64 * g_cyc + l.layernorm_elems as f64 * ln_cyc) / clusters;
+
         let contention = self
             .system
             .hbm
@@ -246,7 +315,7 @@ impl Backend for CycleSimBackend {
         let bytes = (l.weight_bytes + l.act_bytes) as f64;
         let dma_cycles =
             self.system.dma.cycles((bytes / clusters) as u64) as f64 * contention;
-        let compute = proj_cycles + attn_cycles;
+        let compute = proj_cycles + attn_cycles + nonlin_cycles;
         let layer_cycles = compute.max(dma_cycles) + dma_cycles.min(compute) * 0.05;
         let layers = ops.layers as f64;
 
@@ -256,6 +325,8 @@ impl Backend for CycleSimBackend {
         let energy = layers
             * (l.proj_flops as f64 * gemm_pj
                 + cfg.heads as f64 * fa_pj * scale
+                + l.gelu_elems as f64 * g_pj
+                + l.layernorm_elems as f64 * ln_pj
                 + bytes * DMA_PJ_PER_BYTE);
 
         RunReport {
@@ -268,6 +339,7 @@ impl Backend for CycleSimBackend {
             gemm_cycles: (proj_cycles + attn_cycles - softmax_cycles) * layers,
             attn_cycles: attn_cycles * layers,
             dma_cycles: dma_cycles * layers,
+            nonlin_cycles: nonlin_cycles * layers,
             clusters_used: self.system.len(),
             per_cluster: vec![sm_stats, gemm_stats, fa_stats],
             ..Default::default()
@@ -300,6 +372,12 @@ impl Backend for CycleSimBackend {
                 let attn_cycles = rounds * factor * slice_cycles;
                 let proj_cycles = l.proj_flops as f64 * gemm_rate / clusters;
 
+                // decode-step nonlinearities at measured rates
+                let (g_cyc, g_pj, ln_cyc, ln_pj) = self.nonlin_cal(req.softmax_optimized);
+                let nonlin_cycles = (l.gelu_elems as f64 * g_cyc
+                    + l.layernorm_elems as f64 * ln_cyc)
+                    / clusters;
+
                 let contention = self.system.hbm.contention_factor(
                     self.system.len().max(1),
                     self.system.dma.bytes_per_cycle,
@@ -307,7 +385,7 @@ impl Backend for CycleSimBackend {
                 let bytes = (l.weight_bytes + l.act_bytes) as f64;
                 let dma_cycles =
                     self.system.dma.cycles((bytes / clusters) as u64) as f64 * contention;
-                let compute = proj_cycles + attn_cycles;
+                let compute = proj_cycles + attn_cycles + nonlin_cycles;
                 let layer_cycles = compute.max(dma_cycles) + dma_cycles.min(compute) * 0.05;
                 let layers = ops.layers as f64;
 
@@ -316,6 +394,8 @@ impl Backend for CycleSimBackend {
                 let energy = layers
                     * (l.proj_flops as f64 * gemm_pj
                         + cfg.heads as f64 * factor * slice_pj
+                        + l.gelu_elems as f64 * g_pj
+                        + l.layernorm_elems as f64 * ln_pj
                         + bytes * DMA_PJ_PER_BYTE);
 
                 RunReport {
@@ -328,6 +408,7 @@ impl Backend for CycleSimBackend {
                     gemm_cycles: (proj_cycles + attn_cycles * (1.0 - sm_frac)) * layers,
                     attn_cycles: attn_cycles * layers,
                     dma_cycles: dma_cycles * layers,
+                    nonlin_cycles: nonlin_cycles * layers,
                     clusters_used: self.system.len(),
                     tokens: 1,
                     decode_token_cycles: cycles,
@@ -358,6 +439,7 @@ impl Backend for CycleSimBackend {
         let sampling = self.system.sampling.is_some();
         let mut scales = Vec::with_capacity(batch.requests.len());
         let mut extras = Vec::with_capacity(batch.requests.len());
+        let mut nonlin_legs = Vec::with_capacity(batch.requests.len());
         for cr in &batch.requests {
             let reps = cr.reps.max(1);
             let (sim_reps, scale) = if sampling {
@@ -368,7 +450,21 @@ impl Backend for CycleSimBackend {
             };
             scales.push(scale);
             let (proj_rate, _) = derate_gemm(proj_cyc_rate, proj_pj_rate, cr.req.gemm_optimized);
-            let extra = (cr.proj_flops_per_cluster as f64 * proj_rate) as u64;
+            // nonlinearity legs of the serving scope, at measured rates
+            let (nonlin_cyc, nonlin_pj) =
+                if cr.gelu_elems_per_cluster > 0 || cr.layernorm_elems_per_cluster > 0 {
+                    let (g_cyc, g_pj, ln_cyc, ln_pj) = self.nonlin_cal(cr.req.softmax_optimized);
+                    (
+                        cr.gelu_elems_per_cluster as f64 * g_cyc
+                            + cr.layernorm_elems_per_cluster as f64 * ln_cyc,
+                        cr.gelu_elems_per_cluster as f64 * g_pj
+                            + cr.layernorm_elems_per_cluster as f64 * ln_pj,
+                    )
+                } else {
+                    (0.0, 0.0)
+                };
+            nonlin_legs.push((nonlin_cyc, nonlin_pj));
+            let extra = (cr.proj_flops_per_cluster as f64 * proj_rate + nonlin_cyc) as u64;
             extras.push(extra);
             for &c in &cr.clusters {
                 match cr.phase {
@@ -407,7 +503,9 @@ impl Backend for CycleSimBackend {
         let stats = self.system.run_jobs(jobs);
 
         let mut per_request = Vec::with_capacity(batch.requests.len());
-        for ((cr, &scale), &extra) in batch.requests.iter().zip(&scales).zip(&extras) {
+        for (((cr, &scale), &extra), &(nonlin_cyc, nonlin_pj)) in
+            batch.requests.iter().zip(&scales).zip(&extras).zip(&nonlin_legs)
+        {
             let mine: Vec<ClusterStats> = cr
                 .clusters
                 .iter()
@@ -431,8 +529,9 @@ impl Backend for CycleSimBackend {
                 rest += e.static_core + e.shared + e.dma;
             }
             let n_cl = cr.clusters.len() as f64;
-            let energy_pj =
-                instr_ssr * scale + rest + n_cl * cr.proj_flops_per_cluster as f64 * proj_pj;
+            let energy_pj = instr_ssr * scale
+                + rest
+                + n_cl * (cr.proj_flops_per_cluster as f64 * proj_pj + nonlin_pj);
             // attribute the softmax share from retired-instruction classes
             let sm_frac = Self::softmax_fraction(&mine);
             let failed = mine.iter().any(|s| s.failed);
@@ -449,6 +548,7 @@ impl Backend for CycleSimBackend {
                 // makespan this is the residual attributable window)
                 attn_cycles: (cycles - extra as f64).max(0.0),
                 dma_cycles,
+                nonlin_cycles: nonlin_cyc,
                 clusters_used: cr.clusters.len(),
                 per_cluster: mine,
                 error_bound_cycles,

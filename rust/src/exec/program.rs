@@ -16,7 +16,9 @@ use std::sync::Arc;
 use crate::coordinator::TilePlan;
 use crate::isa::Instr;
 use crate::kernels::flash_attention::FaVariant;
-use crate::kernels::softmax::SoftmaxVariant;
+use crate::kernels::gelu::GeluVariant;
+use crate::kernels::layernorm::LayerNormVariant;
+use crate::kernels::softmax::{SoftmaxBwdVariant, SoftmaxVariant};
 use crate::model::TransformerConfig;
 use crate::sim::decode::{decode, DecodedProgram};
 
@@ -25,6 +27,13 @@ use crate::sim::decode::{decode, DecodedProgram};
 pub enum KernelKind {
     /// Row-parallel softmax in one of the paper's four configurations.
     Softmax(SoftmaxVariant),
+    /// Softmax backward (training step): `dx = y ⊙ (g − ⟨g, y⟩)`.
+    SoftmaxBwd(SoftmaxBwdVariant),
+    /// Row-parallel GELU in one of the nine form × exp-technology
+    /// configurations.
+    Gelu(GeluVariant),
+    /// Row-parallel two-pass LayerNorm.
+    LayerNorm(LayerNormVariant),
     /// FlashAttention-2 prefill head (query rows over the cores).
     FlashAttention(FaVariant),
     /// Single-query FlashAttention decode slice (KV tiles over the

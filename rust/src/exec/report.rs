@@ -46,6 +46,8 @@ pub struct RunReport {
     pub attn_cycles: f64,
     /// Cycles attributed to DMA streaming.
     pub dma_cycles: f64,
+    /// Cycles attributed to the GELU + LayerNorm nonlinearities.
+    pub nonlin_cycles: f64,
     /// Clusters this request occupied (last assignment for the
     /// continuous-batching path, which rebalances every iteration).
     pub clusters_used: usize,

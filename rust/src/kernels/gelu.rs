@@ -1,0 +1,504 @@
+//! GELU activation kernels (Belano et al. show the VEXP exp block pays
+//! beyond softmax — the FFN activation is the next largest exp consumer).
+//!
+//! Three mathematical forms share one evaluation scheme, `x · σ(inner(x))`:
+//!
+//! | form      | `inner(x)`                | note                          |
+//! |-----------|---------------------------|-------------------------------|
+//! | `Tanh`    | `c1·x + c3·x³`            | tanh-form GELU via `tanh(u) = 2σ(2u) − 1` |
+//! | `Sigmoid` | `1.702·x`                 | the sigmoid-form approximation |
+//! | `Silu`    | `x`                       | SiLU / swish                   |
+//!
+//! and three exp technologies implement the sigmoid:
+//!
+//! - `Sw`: scalar loop, Schraudolph software exp, one real BF16 divide —
+//!   the honest C-compiler baseline.
+//! - `SwHorner`: scalar loop, degree-6 Horner polynomial exp (table-free
+//!   libm-grade accuracy) — the middle of the speed/accuracy frontier.
+//! - `Hw`: FREP+SSR+SIMD with VFEXP. The DIVSQRT block has no SIMD
+//!   divide, so the reciprocal of `d = 1 + e^{−|z|} ∈ (1, 2]` is three
+//!   Newton–Raphson steps from `r₀ = 0.7` (error 0.4^8 ≈ 6.5e-4, below
+//!   BF16 resolution) — the whole body stays FREP-legal.
+//!
+//! σ is evaluated division-safely as `σ(z) = e^{min(z,0)} / (1 + e^{−|z|})`,
+//! which never overflows the exponential for any BF16 input.
+
+use super::softexp::{emit_horner6_exp, emit_schraudolph_sw_hoisted, write_exp_pool};
+use crate::bf16::Bf16;
+use crate::exec::program::{KernelKind, Program};
+use crate::isa::regs::*;
+use crate::isa::{Asm, Instr, SsrPattern};
+use crate::sim::{Cluster, ClusterStats, Mem, CORES_PER_CLUSTER};
+
+/// Mathematical form of the activation (what `inner(x)` is).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GeluForm {
+    Tanh,
+    Sigmoid,
+    Silu,
+}
+
+impl GeluForm {
+    pub const ALL: [GeluForm; 3] = [GeluForm::Tanh, GeluForm::Sigmoid, GeluForm::Silu];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            GeluForm::Tanh => "tanh",
+            GeluForm::Sigmoid => "sigmoid",
+            GeluForm::Silu => "silu",
+        }
+    }
+}
+
+/// Exp technology × mathematical form of a GELU kernel configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GeluVariant {
+    /// Scalar loop + Schraudolph software exp (baseline).
+    Sw(GeluForm),
+    /// Scalar loop + degree-6 Horner polynomial exp (frontier midpoint).
+    SwHorner(GeluForm),
+    /// FREP + SSR + SIMD with VFEXP (this paper's extension).
+    Hw(GeluForm),
+}
+
+impl GeluVariant {
+    pub const ALL: [GeluVariant; 9] = [
+        GeluVariant::Sw(GeluForm::Tanh),
+        GeluVariant::Sw(GeluForm::Sigmoid),
+        GeluVariant::Sw(GeluForm::Silu),
+        GeluVariant::SwHorner(GeluForm::Tanh),
+        GeluVariant::SwHorner(GeluForm::Sigmoid),
+        GeluVariant::SwHorner(GeluForm::Silu),
+        GeluVariant::Hw(GeluForm::Tanh),
+        GeluVariant::Hw(GeluForm::Sigmoid),
+        GeluVariant::Hw(GeluForm::Silu),
+    ];
+
+    pub fn form(self) -> GeluForm {
+        match self {
+            GeluVariant::Sw(f) | GeluVariant::SwHorner(f) | GeluVariant::Hw(f) => f,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            GeluVariant::Sw(GeluForm::Tanh) => "SW Schraudolph (tanh)",
+            GeluVariant::Sw(GeluForm::Sigmoid) => "SW Schraudolph (sigmoid)",
+            GeluVariant::Sw(GeluForm::Silu) => "SW Schraudolph (silu)",
+            GeluVariant::SwHorner(GeluForm::Tanh) => "SW Horner-6 (tanh)",
+            GeluVariant::SwHorner(GeluForm::Sigmoid) => "SW Horner-6 (sigmoid)",
+            GeluVariant::SwHorner(GeluForm::Silu) => "SW Horner-6 (silu)",
+            GeluVariant::Hw(GeluForm::Tanh) => "HW VFEXP (tanh)",
+            GeluVariant::Hw(GeluForm::Sigmoid) => "HW VFEXP (sigmoid)",
+            GeluVariant::Hw(GeluForm::Silu) => "HW VFEXP (silu)",
+        }
+    }
+}
+
+/// SPM layout for the GELU kernels (same shape as the softmax layout:
+/// exp constant pool, then input rows, then output rows 48 KiB later).
+pub struct GeluLayout {
+    pub pool: u32,
+    pub input: u32,
+    pub output: u32,
+}
+
+pub const DEFAULT_LAYOUT: GeluLayout =
+    GeluLayout { pool: 0x1000, input: 0x2000, output: 0x2000 + 48 * 1024 };
+
+/// Result of a cluster GELU run.
+pub struct GeluRun {
+    pub out: Vec<Vec<f32>>,
+    pub stats: ClusterStats,
+    /// Cluster cycles per output element.
+    pub cycles_per_output: f64,
+}
+
+// tanh-form coefficients for x·σ(c1·x + c3·x³): c1 = 2·√(2/π),
+// c3 = c1·0.044715 (via tanh(u) = 2σ(2u) − 1)
+fn tanh_c1() -> f32 {
+    (2.0 * (2.0 / std::f64::consts::PI).sqrt()) as f32
+}
+fn tanh_c3() -> f32 {
+    (2.0 * (2.0 / std::f64::consts::PI).sqrt() * 0.044715) as f32
+}
+/// Sigmoid-form slope (Hendrycks & Gimpel's 1.702).
+const SIGMOID_C: f32 = 1.702;
+
+fn bits(v: f32) -> i64 {
+    Bf16::from_f32(v).0 as i64
+}
+
+/// Compile the cluster GELU kernel for `rows` rows of length `n`
+/// (multiple of 16), statically partitioned over the eight cores, into
+/// a cacheable [`Program`]. Inputs are read from [`DEFAULT_LAYOUT`]
+/// addresses — see [`seed_gelu_inputs`] / [`run_gelu`] for the data side.
+pub fn build_gelu_program(variant: GeluVariant, rows: u32, n: u32) -> Program {
+    assert!(rows > 0 && n > 0);
+    assert!(n % 16 == 0, "row length {n} must be a multiple of 16");
+    let lay = DEFAULT_LAYOUT;
+    let per_core = rows.div_ceil(CORES_PER_CLUSTER as u32);
+    let per_core_streams: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER as u32)
+        .map(|c| {
+            let lo = (c * per_core).min(rows);
+            let hi = ((c + 1) * per_core).min(rows);
+            if lo == hi {
+                return vec![];
+            }
+            build_rows_program(variant, &lay, lo, hi, n)
+        })
+        .collect();
+    Program::new(KernelKind::Gelu(variant), per_core_streams)
+}
+
+/// Write the constant pool plus `rows` deterministic pseudo-random input
+/// rows at the [`DEFAULT_LAYOUT`] addresses — the data side of a cached
+/// GELU [`Program`] (calibration and batched-serving runs).
+pub fn seed_gelu_inputs(spm: &mut Mem, rows: u32, n: u32, seed: u64) {
+    let lay = DEFAULT_LAYOUT;
+    write_exp_pool(spm, lay.pool);
+    let mut rng = crate::testkit::Rng::new(seed);
+    for r in 0..rows {
+        let row: Vec<f32> = (0..n).map(|_| rng.f32(-4.0, 4.0)).collect();
+        spm.write_f32_as_bf16(lay.input + r * 2 * n, &row);
+    }
+}
+
+/// Execute `rows` (each of equal length, multiple of 16) on one cluster.
+pub fn run_gelu(variant: GeluVariant, rows: &[Vec<f32>]) -> GeluRun {
+    let n = rows.first().map(|r| r.len()).unwrap_or(0);
+    assert!(n > 0 && rows.iter().all(|r| r.len() == n), "ragged rows");
+    assert!(n % 16 == 0, "row length {n} must be a multiple of 16");
+    let lay = DEFAULT_LAYOUT;
+    let bytes = 2 * n as u32;
+    assert!(
+        lay.output + rows.len() as u32 * bytes <= 128 * 1024,
+        "workload does not fit the 128 KiB SPM; tile it at the coordinator"
+    );
+
+    let mut cluster = Cluster::new();
+    write_exp_pool(&mut cluster.spm, lay.pool);
+    for (i, row) in rows.iter().enumerate() {
+        cluster.spm.write_f32_as_bf16(lay.input + i as u32 * bytes, row);
+    }
+
+    let program = build_gelu_program(variant, rows.len() as u32, n as u32);
+    let stats = cluster.run_program(&program);
+
+    let out = (0..rows.len())
+        .map(|i| cluster.spm.read_bf16_as_f32(lay.output + i as u32 * bytes, n))
+        .collect();
+    let cores_used = rows.len().min(CORES_PER_CLUSTER);
+    let rows_on_busiest = rows.len().div_ceil(cores_used.max(1));
+    let per_core_outputs = (rows_on_busiest * n) as f64;
+    GeluRun { cycles_per_output: stats.cycles as f64 / per_core_outputs, out, stats }
+}
+
+/// Build one core's program covering rows [lo, hi).
+fn build_rows_program(
+    variant: GeluVariant,
+    lay: &GeluLayout,
+    lo: u32,
+    hi: u32,
+    n: u32,
+) -> Vec<Instr> {
+    let mut a = Asm::new();
+    a.li(A4, lay.pool as i64);
+    match variant {
+        GeluVariant::Hw(form) => {
+            emit_hw_constants(&mut a, form);
+            for r in lo..hi {
+                emit_row_hw(&mut a, lay.input + r * 2 * n, lay.output + r * 2 * n, n, form);
+            }
+        }
+        GeluVariant::Sw(form) | GeluVariant::SwHorner(form) => {
+            emit_sw_constants(&mut a, variant, form);
+            for r in lo..hi {
+                emit_row_sw(&mut a, lay.input + r * 2 * n, lay.output + r * 2 * n, n, variant);
+            }
+        }
+    }
+    a.finish()
+}
+
+/// Hoist the broadcast SIMD constants: FS0 = 0, FS1 = 1, FS2 = 2,
+/// FS3 = r₀ = 0.7, FS4 = c1 (form slope), FS5 = c3 (tanh cubic term).
+fn emit_hw_constants(a: &mut Asm, form: GeluForm) {
+    let bcast = |a: &mut Asm, fd: FReg, v: f32| {
+        a.li(T0, bits(v));
+        a.fmv_w_x(fd, T0);
+        a.vfrep_h(fd, fd);
+    };
+    a.fmv_d_x(FS0, ZERO); // all four lanes +0
+    bcast(a, FS1, 1.0);
+    bcast(a, FS2, 2.0);
+    bcast(a, FS3, 0.7);
+    match form {
+        GeluForm::Tanh => {
+            bcast(a, FS4, tanh_c1());
+            bcast(a, FS5, tanh_c3());
+        }
+        GeluForm::Sigmoid => bcast(a, FS4, SIGMOID_C),
+        GeluForm::Silu => {}
+    }
+}
+
+/// Hoist the scalar constants: FS0 = 0, FS1 = 1, FS4/FS5 as for SIMD,
+/// FS2/FS3 = Schraudolph scale/bias (Sw only; Horner reads its pool
+/// constants through A4 directly).
+fn emit_sw_constants(a: &mut Asm, variant: GeluVariant, form: GeluForm) {
+    let scalar = |a: &mut Asm, fd: FReg, v: f32| {
+        a.li(T0, bits(v));
+        a.fmv_w_x(fd, T0);
+    };
+    a.fmv_w_x(FS0, ZERO);
+    scalar(a, FS1, 1.0);
+    match form {
+        GeluForm::Tanh => {
+            scalar(a, FS4, tanh_c1());
+            scalar(a, FS5, tanh_c3());
+        }
+        GeluForm::Sigmoid => scalar(a, FS4, SIGMOID_C),
+        GeluForm::Silu => {}
+    }
+    if matches!(variant, GeluVariant::Sw(_)) {
+        a.fld(FS2, A4, 576); // SCHRAU_SCALE (see softexp.rs pool)
+        a.fld(FS3, A4, 584); // SCHRAU_BIAS
+    }
+}
+
+/// One row, FREP+SSR+SIMD with VFEXP: ft0 streams the input, ft2 the
+/// output; the body is a single straight-line SIMD chain per 4-lane
+/// beat (all FP, FREP-legal — the reciprocal is NR, not a divide).
+fn emit_row_hw(a: &mut Asm, input: u32, output: u32, n: u32, form: GeluForm) {
+    a.ssr_cfg(0, SsrPattern::read1d(input, n / 4));
+    a.ssr_cfg(2, SsrPattern::write1d(output, n / 4));
+    a.ssr_enable();
+    a.li(A3, (n / 4) as i64);
+    let body = match form {
+        GeluForm::Tanh => 25,
+        GeluForm::Sigmoid => 22,
+        GeluForm::Silu => 22,
+    };
+    a.frep(A3, body);
+    // xv = x + 0: ft0 is SSR-mapped and pops per *operand read*, so the
+    // copy must read it exactly once (vfsgnj ft3,ft0,ft0 would pop two
+    // stream elements)
+    a.vfadd_h(FT3, FT0, FS0);
+    // z = inner(x)
+    match form {
+        GeluForm::Tanh => {
+            a.vfmul_h(FT4, FT3, FT3); // x²
+            a.vfsgnj_h(FT5, FS4, FS4); // t := c1
+            a.vfmac_h(FT5, FT4, FS5); // t += x²·c3
+            a.vfmul_h(FT4, FT3, FT5); // z = x·t
+        }
+        GeluForm::Sigmoid => {
+            a.vfmul_h(FT4, FT3, FS4); // z = 1.702·x
+        }
+        GeluForm::Silu => {
+            a.vfsgnj_h(FT4, FT3, FT3); // z = x
+        }
+    }
+    // σ(z) = e^{min(z,0)} / (1 + e^{−|z|}), division-free
+    a.vfsub_h(FT5, FS0, FT4); // −z
+    a.vfmax_h(FT6, FT4, FT5); // |z|
+    a.vfsub_h(FT6, FS0, FT6); // −|z|
+    a.vfmax_h(FT5, FT5, FS0); // max(−z, 0)
+    a.vfsub_h(FT5, FS0, FT5); // min(z, 0)
+    a.vfexp_h(FT6, FT6); // e^{−|z|}
+    a.vfexp_h(FT5, FT5); // e^{min(z,0)}
+    a.vfadd_h(FT6, FT6, FS1); // d = 1 + e^{−|z|} ∈ (1, 2]
+    a.vfsgnj_h(FT7, FS3, FS3); // r := r₀ = 0.7
+    for _ in 0..3 {
+        // r ← r·(2 − d·r)
+        a.vfmul_h(FA0, FT6, FT7);
+        a.vfsub_h(FA0, FS2, FA0);
+        a.vfmul_h(FT7, FT7, FA0);
+    }
+    a.vfmul_h(FT5, FT5, FT7); // σ = e^{min(z,0)}·(1/d)
+    a.vfmul_h(FT2, FT3, FT5); // out = x·σ (pushes the write stream)
+    a.ssr_disable();
+}
+
+/// One row, scalar loop: per element, `inner(x)`, the division-safe σ
+/// with two software exponentials, one real BF16 divide, and the final
+/// multiply — the shape a C compiler gives the baseline.
+fn emit_row_sw(a: &mut Asm, input: u32, output: u32, n: u32, variant: GeluVariant) {
+    a.li(A0, input as i64);
+    a.li(A1, output as i64);
+    a.li(A3, n as i64);
+    let body = a.label();
+    a.bind(body);
+    a.flh(FT3, A0, 0); // x
+    match variant.form() {
+        GeluForm::Tanh => {
+            a.fmul_h(FT4, FT3, FT3); // x²
+            a.fmadd_h(FT4, FT4, FS5, FS4); // c1 + x²·c3
+            a.fmul_h(FT4, FT3, FT4); // z
+        }
+        GeluForm::Sigmoid => {
+            a.fmul_h(FT4, FT3, FS4);
+        }
+        GeluForm::Silu => {
+            a.fadd_h(FT4, FT3, FS0); // z = x (+0 keeps it a pure copy)
+        }
+    }
+    a.fsub_h(FT5, FS0, FT4); // −z
+    a.fmax_h(FT6, FT4, FT5); // |z|
+    a.fsub_h(FT6, FS0, FT6); // −|z|
+    a.fmax_h(FT5, FT5, FS0); // max(−z, 0)
+    a.fsub_h(FT5, FS0, FT5); // min(z, 0)
+    match variant {
+        GeluVariant::Sw(_) => {
+            emit_schraudolph_sw_hoisted(a, FT7, FT6, FS2, FS3); // e^{−|z|}
+            emit_schraudolph_sw_hoisted(a, FT5, FT5, FS2, FS3); // e^{min(z,0)}
+        }
+        GeluVariant::SwHorner(_) => {
+            emit_horner6_exp(a, FT7, FT6);
+            emit_horner6_exp(a, FT5, FT5);
+        }
+        GeluVariant::Hw(_) => unreachable!(),
+    }
+    a.fadd_h(FT7, FT7, FS1); // d = 1 + e^{−|z|}
+    a.fdiv_h(FT5, FT5, FT7); // σ = e^{min(z,0)} / d
+    a.fmul_h(FT5, FT3, FT5); // out = x·σ
+    a.fsh(FT5, A1, 0);
+    a.addi(A0, A0, 2);
+    a.addi(A1, A1, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, body);
+}
+
+/// Host-side f64 oracle: the same mathematical function each form
+/// approximates, evaluated in double precision.
+pub fn gelu_ref(form: GeluForm, x: f64) -> f64 {
+    fn sigmoid(z: f64) -> f64 {
+        if z >= 0.0 {
+            1.0 / (1.0 + (-z).exp())
+        } else {
+            let e = z.exp();
+            e / (1.0 + e)
+        }
+    }
+    match form {
+        GeluForm::Tanh => {
+            let c = (2.0 / std::f64::consts::PI).sqrt();
+            0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+        }
+        GeluForm::Sigmoid => x * sigmoid(1.702 * x),
+        GeluForm::Silu => x * sigmoid(x),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(r: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::testkit::Rng::new(seed);
+        (0..r).map(|_| (0..n).map(|_| rng.f32(-4.0, 4.0)).collect()).collect()
+    }
+
+    fn check_correct(variant: GeluVariant, tol: f64) {
+        let data = rows(8, 64, 42);
+        let run = run_gelu(variant, &data);
+        for (i, row) in data.iter().enumerate() {
+            for (j, (&x, &got)) in row.iter().zip(&run.out[i]).enumerate() {
+                let xq = Bf16::from_f32(x).to_f32() as f64;
+                let want = gelu_ref(variant.form(), xq);
+                let err = (got as f64 - want).abs();
+                let rel = err / want.abs().max(0.25);
+                assert!(
+                    rel < tol,
+                    "{variant:?} row {i} col {j}: gelu({xq}) = {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sw_schraudolph_correct_within_its_exp_error() {
+        for form in GeluForm::ALL {
+            // Schraudolph's ~4 % exp error reaches the output roughly
+            // doubled (numerator and denominator err independently)
+            check_correct(GeluVariant::Sw(form), 0.10);
+        }
+    }
+
+    #[test]
+    fn sw_horner_correct_to_bf16_chain() {
+        for form in GeluForm::ALL {
+            // exp is libm-grade; error is the BF16 rounding of ~8 chained
+            // ops (≈ 8 × 0.4 %)
+            check_correct(GeluVariant::SwHorner(form), 0.04);
+        }
+    }
+
+    #[test]
+    fn hw_vfexp_correct_within_exp_unit_error() {
+        for form in GeluForm::ALL {
+            // VFEXP ≤1.1 % per exp + NR reciprocal ≈ BF16 resolution
+            check_correct(GeluVariant::Hw(form), 0.05);
+        }
+    }
+
+    #[test]
+    fn large_magnitude_inputs_saturate_correctly() {
+        // gelu(x) → x for large +x, → ∓0 for large −x, all forms/techs
+        let data = [vec![
+            30.0f32, -30.0, 100.0, -100.0, 1000.0, -1000.0, 0.0, -0.0, 8.5, -8.5, 2.25, -2.25,
+            0.125, -0.125, 16.0, -16.0,
+        ]];
+        for v in GeluVariant::ALL {
+            let run = run_gelu(v, &data);
+            for (&x, &got) in data[0].iter().zip(&run.out[0]) {
+                let xq = Bf16::from_f32(x).to_f32() as f64;
+                let want = gelu_ref(v.form(), xq);
+                let err = (got as f64 - want).abs();
+                assert!(
+                    err < 0.12 * want.abs().max(0.3),
+                    "{v:?}: gelu({xq}) = {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hw_much_faster_than_scalar_and_horner_slowest() {
+        let data = rows(8, 256, 7);
+        let hw = run_gelu(GeluVariant::Hw(GeluForm::Tanh), &data).cycles_per_output;
+        let sw = run_gelu(GeluVariant::Sw(GeluForm::Tanh), &data).cycles_per_output;
+        let horner = run_gelu(GeluVariant::SwHorner(GeluForm::Tanh), &data).cycles_per_output;
+        assert!(hw * 5.0 < sw, "hw {hw:.1} vs sw {sw:.1} cycles/output");
+        assert!(sw < horner, "sw {sw:.1} vs horner {horner:.1} cycles/output");
+    }
+
+    #[test]
+    fn uneven_rows_still_correct() {
+        let data = rows(5, 32, 11);
+        let run = run_gelu(GeluVariant::Hw(GeluForm::Silu), &data);
+        for (i, row) in data.iter().enumerate() {
+            for (&x, &got) in row.iter().zip(&run.out[i]) {
+                let xq = Bf16::from_f32(x).to_f32() as f64;
+                let want = gelu_ref(GeluForm::Silu, xq);
+                assert!((got as f64 - want).abs() < 0.05 * want.abs().max(0.25));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 16")]
+    fn ragged_simd_length_panics() {
+        run_gelu(GeluVariant::Hw(GeluForm::Tanh), &rows(2, 17, 1));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let data = rows(4, 64, 33);
+        let a = run_gelu(GeluVariant::Hw(GeluForm::Tanh), &data);
+        let b = run_gelu(GeluVariant::Hw(GeluForm::Tanh), &data);
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.out, b.out);
+    }
+}

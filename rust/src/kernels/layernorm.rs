@@ -1,0 +1,455 @@
+//! LayerNorm kernels (SOLE co-designs softmax with LayerNorm; pricing it
+//! is what makes the e2e model honest about non-attention work).
+//!
+//! Normalization is `y = (x − mean) / sqrt(var + eps)` with γ = 1, β = 0
+//! (the affine pair folds into the adjacent projection GEMM on this
+//! dataflow, so the kernel cost is the normalization itself).
+//!
+//! Algorithm choice (see DESIGN.md §13): the classic **two-pass**
+//! mean/variance — pass A sums x, pass B computes `t = x − mean`, stores
+//! it, and accumulates `t²`. Welford's online form needs a divide per
+//! element (not FREP-able on the shared DIVSQRT block) and the naive
+//! `E[x²] − E[x]²` form cancels catastrophically in BF16; two-pass costs
+//! one extra stream but keeps every FREP body divide-free.
+//!
+//! The Snitch FPU has no square root, so `1/sqrt(v)` is the classic
+//! integer bit-trick seeded Newton–Raphson — valid on BF16 directly
+//! because BF16 is truncated FP32: magic `0x5F37` is the top half of the
+//! FP32 magic `0x5F3759DF`. Two NR steps land below BF16 resolution.
+//!
+//! Variants: `Baseline` is the honest scalar three-loop C shape;
+//! `Optimized` streams all three passes through FREP + SSR + SIMD.
+
+use super::softexp::write_exp_pool;
+use crate::bf16::Bf16;
+use crate::exec::program::{KernelKind, Program};
+use crate::isa::regs::*;
+use crate::isa::{Asm, Instr, SsrPattern};
+use crate::sim::{Cluster, ClusterStats, Mem, CORES_PER_CLUSTER};
+
+/// The two evaluated configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerNormVariant {
+    /// Scalar three-loop C shape (no FREP/SSR/SIMD).
+    Baseline,
+    /// FREP + SSR + SIMD streaming on all three passes.
+    Optimized,
+}
+
+impl LayerNormVariant {
+    pub const ALL: [LayerNormVariant; 2] =
+        [LayerNormVariant::Baseline, LayerNormVariant::Optimized];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            LayerNormVariant::Baseline => "Baseline",
+            LayerNormVariant::Optimized => "FREP+SSR+SIMD",
+        }
+    }
+}
+
+/// SPM layout for the LayerNorm kernels (softmax-shaped: pool, input
+/// rows, output rows 48 KiB later).
+pub struct LayerNormLayout {
+    pub pool: u32,
+    pub input: u32,
+    pub output: u32,
+}
+
+pub const DEFAULT_LAYOUT: LayerNormLayout =
+    LayerNormLayout { pool: 0x1000, input: 0x2000, output: 0x2000 + 48 * 1024 };
+
+/// The ε inside the square root (the common 1e-5 default).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Result of a cluster LayerNorm run.
+pub struct LayerNormRun {
+    pub out: Vec<Vec<f32>>,
+    pub stats: ClusterStats,
+    /// Cluster cycles per output element.
+    pub cycles_per_output: f64,
+}
+
+fn bits(v: f32) -> i64 {
+    Bf16::from_f32(v).0 as i64
+}
+
+/// Compile the cluster LayerNorm kernel for `rows` rows of length `n`
+/// (multiple of 16), statically partitioned over the eight cores, into
+/// a cacheable [`Program`].
+pub fn build_layernorm_program(variant: LayerNormVariant, rows: u32, n: u32) -> Program {
+    assert!(rows > 0 && n > 0);
+    assert!(n % 16 == 0, "row length {n} must be a multiple of 16");
+    let lay = DEFAULT_LAYOUT;
+    let per_core = rows.div_ceil(CORES_PER_CLUSTER as u32);
+    let per_core_streams: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER as u32)
+        .map(|c| {
+            let lo = (c * per_core).min(rows);
+            let hi = ((c + 1) * per_core).min(rows);
+            if lo == hi {
+                return vec![];
+            }
+            build_rows_program(variant, &lay, lo, hi, n)
+        })
+        .collect();
+    Program::new(KernelKind::LayerNorm(variant), per_core_streams)
+}
+
+/// Write the constant pool plus `rows` deterministic pseudo-random input
+/// rows at the [`DEFAULT_LAYOUT`] addresses.
+pub fn seed_layernorm_inputs(spm: &mut Mem, rows: u32, n: u32, seed: u64) {
+    let lay = DEFAULT_LAYOUT;
+    write_exp_pool(spm, lay.pool);
+    let mut rng = crate::testkit::Rng::new(seed);
+    for r in 0..rows {
+        let row: Vec<f32> = (0..n).map(|_| rng.f32(-8.0, 8.0)).collect();
+        spm.write_f32_as_bf16(lay.input + r * 2 * n, &row);
+    }
+}
+
+/// Execute `rows` (each of equal length, multiple of 16) on one cluster.
+pub fn run_layernorm(variant: LayerNormVariant, rows: &[Vec<f32>]) -> LayerNormRun {
+    let n = rows.first().map(|r| r.len()).unwrap_or(0);
+    assert!(n > 0 && rows.iter().all(|r| r.len() == n), "ragged rows");
+    assert!(n % 16 == 0, "row length {n} must be a multiple of 16");
+    let lay = DEFAULT_LAYOUT;
+    let bytes = 2 * n as u32;
+    assert!(
+        lay.output + rows.len() as u32 * bytes <= 128 * 1024,
+        "workload does not fit the 128 KiB SPM; tile it at the coordinator"
+    );
+
+    let mut cluster = Cluster::new();
+    write_exp_pool(&mut cluster.spm, lay.pool);
+    for (i, row) in rows.iter().enumerate() {
+        cluster.spm.write_f32_as_bf16(lay.input + i as u32 * bytes, row);
+    }
+
+    let program = build_layernorm_program(variant, rows.len() as u32, n as u32);
+    let stats = cluster.run_program(&program);
+
+    let out = (0..rows.len())
+        .map(|i| cluster.spm.read_bf16_as_f32(lay.output + i as u32 * bytes, n))
+        .collect();
+    let cores_used = rows.len().min(CORES_PER_CLUSTER);
+    let rows_on_busiest = rows.len().div_ceil(cores_used.max(1));
+    let per_core_outputs = (rows_on_busiest * n) as f64;
+    LayerNormRun { cycles_per_output: stats.cycles as f64 / per_core_outputs, out, stats }
+}
+
+/// Build one core's program covering rows [lo, hi).
+fn build_rows_program(
+    variant: LayerNormVariant,
+    lay: &LayerNormLayout,
+    lo: u32,
+    hi: u32,
+    n: u32,
+) -> Vec<Instr> {
+    let mut a = Asm::new();
+    // hoisted scalar constants: 1.5 / 0.5 (NR), 1/n, eps
+    let scalar = |a: &mut Asm, fd: FReg, v: f32| {
+        a.li(T0, bits(v));
+        a.fmv_w_x(fd, T0);
+    };
+    scalar(&mut a, FS2, 1.5);
+    scalar(&mut a, FS3, 0.5);
+    scalar(&mut a, FS4, 1.0 / n as f32);
+    scalar(&mut a, FS5, LN_EPS);
+    for r in lo..hi {
+        let in_addr = lay.input + r * 2 * n;
+        let out_addr = lay.output + r * 2 * n;
+        match variant {
+            LayerNormVariant::Baseline => emit_row_baseline(&mut a, in_addr, out_addr, n),
+            LayerNormVariant::Optimized => emit_row_optim(&mut a, in_addr, out_addr, n),
+        }
+    }
+    a.finish()
+}
+
+/// Scalar `1/sqrt(v)`: BF16 bit-trick seed (magic `0x5F37`) plus two
+/// Newton–Raphson steps `y ← y·(1.5 − 0.5·v·y²)`. Reads `src` (low
+/// lane), writes `dst`; clobbers T0, T1, FA0; wants 1.5 in FS2 and 0.5
+/// in FS3. The `andi` mask strips both the sign bit and whatever junk
+/// the preceding BF16 ops left in bits 16..31 of the register.
+fn emit_rsqrt(a: &mut Asm, dst: FReg, src: FReg) {
+    a.fmv_x_w(T0, src);
+    a.andi(T0, T0, 0x7FFF);
+    a.srli(T0, T0, 1);
+    a.li(T1, 0x5F37);
+    a.sub(T1, T1, T0);
+    a.fmv_w_x(dst, T1);
+    for _ in 0..2 {
+        a.fmul_h(FA0, dst, dst); // y²
+        a.fmul_h(FA0, FA0, src); // v·y²
+        a.fmul_h(FA0, FA0, FS3); // 0.5·v·y²
+        a.fsub_h(FA0, FS2, FA0); // 1.5 − …
+        a.fmul_h(dst, dst, FA0);
+    }
+}
+
+/// The plain-C three-loop shape: sum, center+square-accumulate (writes
+/// the centered row), scale by rsqrt.
+fn emit_row_baseline(a: &mut Asm, input: u32, output: u32, n: u32) {
+    // ---- pass A: sum ----------------------------------------------------
+    a.li(A0, input as i64);
+    a.li(A3, n as i64);
+    a.fmv_w_x(FT5, ZERO); // sum := 0
+    let sum_loop = a.label();
+    a.bind(sum_loop);
+    a.flh(FT3, A0, 0);
+    a.fadd_h(FT5, FT5, FT3);
+    a.addi(A0, A0, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, sum_loop);
+    a.fmul_h(FT5, FT5, FS4); // mean = sum/n
+
+    // ---- pass B: t = x − mean → out; varsum += t² -----------------------
+    a.li(A0, input as i64);
+    a.li(A1, output as i64);
+    a.li(A3, n as i64);
+    a.fmv_w_x(FT6, ZERO); // varsum := 0
+    let center_loop = a.label();
+    a.bind(center_loop);
+    a.flh(FT3, A0, 0);
+    a.fsub_h(FT4, FT3, FT5);
+    a.fsh(FT4, A1, 0);
+    a.fmadd_h(FT6, FT4, FT4, FT6);
+    a.addi(A0, A0, 2);
+    a.addi(A1, A1, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, center_loop);
+    a.fmul_h(FT6, FT6, FS4); // var = varsum/n (biased)
+    a.fadd_h(FT6, FT6, FS5); // + eps
+    emit_rsqrt(a, FT7, FT6); // rstd
+
+    // ---- pass C: out *= rstd -------------------------------------------
+    a.li(A1, output as i64);
+    a.li(A3, n as i64);
+    let scale_loop = a.label();
+    a.bind(scale_loop);
+    a.flh(FT4, A1, 0);
+    a.fmul_h(FT4, FT4, FT7);
+    a.fsh(FT4, A1, 0);
+    a.addi(A1, A1, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, scale_loop);
+}
+
+/// FREP + SSR + SIMD: pass A streams the row into two vector
+/// accumulators; pass B re-streams it, pushes the centered row through
+/// the write stream while two VFMAC accumulators square-accumulate; the
+/// scalar rsqrt bridges to pass C, a broadcast VFMUL stream (the softmax
+/// NORM shape).
+fn emit_row_optim(a: &mut Asm, input: u32, output: u32, n: u32) {
+    // ---- pass A: sum → mean broadcast in FT5 ----------------------------
+    a.ssr_cfg(0, SsrPattern::read1d(input, n / 4));
+    a.fmv_d_x(FT3, ZERO); // accumulators := 0 (all lanes)
+    a.fmv_d_x(FT4, ZERO);
+    a.ssr_enable();
+    a.li(A3, (n / 8) as i64);
+    a.frep(A3, 2);
+    a.vfadd_h(FT3, FT3, FT0);
+    a.vfadd_h(FT4, FT4, FT0);
+    a.ssr_disable();
+    a.vfadd_h(FT3, FT3, FT4);
+    a.vfsum_h(FT3, FT3); // row sum in low lane
+    a.fmul_h(FT3, FT3, FS4); // mean
+    a.vfrep_h(FT5, FT3); // broadcast
+
+    // ---- pass B: centered row out, t² accumulated -----------------------
+    a.ssr_cfg(0, SsrPattern::read1d(input, n / 4));
+    a.ssr_cfg(2, SsrPattern::write1d(output, n / 4));
+    a.fmv_d_x(FT3, ZERO);
+    a.fmv_d_x(FT4, ZERO);
+    a.ssr_enable();
+    a.li(A3, (n / 8) as i64);
+    a.frep(A3, 6);
+    a.vfsub_h(FT6, FT0, FT5); // t = x − mean
+    a.vfsgnj_h(FT2, FT6, FT6); // push t
+    a.vfmac_h(FT3, FT6, FT6); // varsum += t²
+    a.vfsub_h(FT7, FT0, FT5);
+    a.vfsgnj_h(FT2, FT7, FT7);
+    a.vfmac_h(FT4, FT7, FT7);
+    a.ssr_disable();
+    a.vfadd_h(FT3, FT3, FT4);
+    a.vfsum_h(FT3, FT3);
+    a.fmul_h(FT3, FT3, FS4); // var
+    a.fadd_h(FT3, FT3, FS5); // + eps
+    emit_rsqrt(a, FT6, FT3);
+    a.vfrep_h(FT6, FT6); // rstd broadcast
+
+    // ---- pass C: out *= rstd (softmax NORM shape) -----------------------
+    a.ssr_cfg(0, SsrPattern::read1d(output, n / 4));
+    a.ssr_cfg(1, SsrPattern::write1d(output, n / 4));
+    a.ssr_enable();
+    a.li(A3, (n / 16) as i64);
+    a.frep(A3, 4);
+    a.vfmul_h(FT1, FT6, FT0);
+    a.vfmul_h(FT1, FT6, FT0);
+    a.vfmul_h(FT1, FT6, FT0);
+    a.vfmul_h(FT1, FT6, FT0);
+    a.ssr_disable();
+}
+
+/// Host-side f64 oracle (γ = 1, β = 0, biased variance, same ε).
+pub fn layernorm_ref(row: &[f32]) -> Vec<f32> {
+    let n = row.len() as f64;
+    let mean = row.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = row.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>() / n;
+    let rstd = 1.0 / (var + LN_EPS as f64).sqrt();
+    row.iter().map(|&x| ((x as f64 - mean) * rstd) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quantized_rows(r: usize, n: usize, lo: f32, hi: f32, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::testkit::Rng::new(seed);
+        (0..r)
+            .map(|_| (0..n).map(|_| Bf16::from_f32(rng.f32(lo, hi)).to_f32()).collect())
+            .collect()
+    }
+
+    fn check_elementwise(variant: LayerNormVariant, data: &[Vec<f32>], abs: f64, rel: f64) {
+        let run = run_layernorm(variant, data);
+        for (i, row) in data.iter().enumerate() {
+            let want = layernorm_ref(row);
+            for (j, (&got, &w)) in run.out[i].iter().zip(&want).enumerate() {
+                let err = (got as f64 - w as f64).abs();
+                assert!(
+                    err < abs + rel * (w as f64).abs(),
+                    "{variant:?} row {i} col {j}: got {got}, want {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_matches_reference_on_random_rows() {
+        check_elementwise(LayerNormVariant::Baseline, &quantized_rows(8, 64, -8.0, 8.0, 42), 0.06, 0.03);
+    }
+
+    #[test]
+    fn optimized_matches_reference_on_random_rows() {
+        check_elementwise(LayerNormVariant::Optimized, &quantized_rows(8, 64, -8.0, 8.0, 42), 0.06, 0.03);
+    }
+
+    #[test]
+    fn output_is_standardized() {
+        // mean ≈ 0, var ≈ 1 of the kernel's own output, both variants
+        let data = quantized_rows(8, 512, -8.0, 8.0, 7);
+        for v in LayerNormVariant::ALL {
+            let run = run_layernorm(v, &data);
+            for out in &run.out {
+                let n = out.len() as f64;
+                let mean = out.iter().map(|&x| x as f64).sum::<f64>() / n;
+                let var = out.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>() / n;
+                assert!(mean.abs() < 0.05, "{v:?}: output mean {mean}");
+                assert!((var - 1.0).abs() < 0.12, "{v:?}: output var {var}");
+            }
+        }
+    }
+
+    #[test]
+    fn exactly_constant_row_normalizes_to_zero() {
+        // n = 64 and x = 1.0: every partial sum and 1/n are exact in
+        // BF16, so mean is exact, t ≡ 0, var = 0, and ε keeps the rsqrt
+        // finite — the output must be exactly zero.
+        let data = [vec![1.0f32; 64], vec![1.0f32; 64]];
+        for v in LayerNormVariant::ALL {
+            let run = run_layernorm(v, &data);
+            for out in &run.out {
+                assert!(out.iter().all(|&x| x == 0.0), "{v:?}: {out:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn near_constant_rows_stay_bounded() {
+        // BF16 summation error on a near-constant row can make the
+        // centered values pure rounding noise; the normalization then
+        // amplifies that noise to O(1) — but never beyond the algebraic
+        // bound |out| ≤ √n (var ≥ t²/n for any single t).
+        let mut rng = crate::testkit::Rng::new(11);
+        let data: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..256).map(|_| 5.0 + rng.f32(-1e-3, 1e-3)).collect())
+            .collect();
+        for v in LayerNormVariant::ALL {
+            let run = run_layernorm(v, &data);
+            for out in &run.out {
+                for &x in out {
+                    assert!(x.is_finite(), "{v:?} produced {x}");
+                    assert!(x.abs() <= 1.1 * (256.0f32).sqrt(), "{v:?} out {x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn denormal_rows_flush_to_zero_like_reference() {
+        // inputs at the bottom of the BF16 range: var underflows to 0 in
+        // BF16, ε dominates, outputs are ~0 — and so is the reference
+        let data = [vec![1e-38f32; 64], vec![-1e-38f32; 64]];
+        for v in LayerNormVariant::ALL {
+            let run = run_layernorm(v, &data);
+            for out in &run.out {
+                for &x in out {
+                    assert!(x.is_finite());
+                    assert!(x.abs() < 1e-3, "{v:?} out {x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn high_variance_rows_match_reference() {
+        // adversarial spread: values across ±200 — the variance is ~1e4,
+        // well inside BF16 range, and the normalized outputs must still
+        // track the f64 reference
+        check_elementwise(
+            LayerNormVariant::Optimized,
+            &quantized_rows(4, 128, -200.0, 200.0, 13),
+            0.06,
+            0.04,
+        );
+        check_elementwise(
+            LayerNormVariant::Baseline,
+            &quantized_rows(4, 128, -200.0, 200.0, 13),
+            0.06,
+            0.04,
+        );
+    }
+
+    #[test]
+    fn optimized_much_faster_than_baseline() {
+        let data = quantized_rows(8, 256, -8.0, 8.0, 21);
+        let base = run_layernorm(LayerNormVariant::Baseline, &data).cycles_per_output;
+        let opt = run_layernorm(LayerNormVariant::Optimized, &data).cycles_per_output;
+        assert!(
+            opt * 4.0 < base,
+            "optimized {opt:.1} vs baseline {base:.1} cycles/output"
+        );
+    }
+
+    #[test]
+    fn uneven_rows_still_correct() {
+        let data = quantized_rows(5, 32, -8.0, 8.0, 31);
+        check_elementwise(LayerNormVariant::Optimized, &data, 0.08, 0.05);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 16")]
+    fn ragged_simd_length_panics() {
+        run_layernorm(LayerNormVariant::Optimized, &[vec![0.0f32; 17], vec![0.0f32; 17]]);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let data = quantized_rows(4, 64, -8.0, 8.0, 33);
+        let a = run_layernorm(LayerNormVariant::Optimized, &data);
+        let b = run_layernorm(LayerNormVariant::Optimized, &data);
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.out, b.out);
+    }
+}

@@ -1,6 +1,8 @@
 //! The paper's software kernels as simulator instruction streams:
-//! the four softmax configurations (Fig. 4/6), the [5]-style GEMM, the
-//! FlashAttention-2 forward, and the software exponentials they build on.
+//! the four softmax configurations (Fig. 4/6), the softmax backward
+//! (training) step, GELU and LayerNorm nonlinearities, the [5]-style
+//! GEMM, the FlashAttention-2 forward, and the software exponentials
+//! they build on.
 
 // Item-level docs in this module are a tracked gap (ISSUE 3 scopes the
 // missing_docs gate to exec/coordinator/model); module docs above are
@@ -8,6 +10,8 @@
 #![allow(missing_docs)]
 
 pub mod flash_attention;
+pub mod gelu;
 pub mod gemm;
+pub mod layernorm;
 pub mod softexp;
 pub mod softmax;

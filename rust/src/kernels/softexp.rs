@@ -28,9 +28,16 @@ const POLY0: i32 = 32; // c2..c5 Horner coefficients (4 × f64)
 const TABLE0: i32 = 64; // 64-entry 2^(j/64) table (f64)
 const SCHRAU_SCALE: i32 = TABLE0 + 64 * 8; // 2^7/ln2
 const SCHRAU_BIAS: i32 = SCHRAU_SCALE + 8; // (127<<7) - 0.5 + magic
+// Degree-6 Horner exponential (the table-free middle point of the
+// speed/accuracy frontier): 1/ln2, -ln2 split hi/lo, and the seven
+// Taylor coefficients 1/k! for k = 0..6.
+const HORNER_INV_LN2: i32 = SCHRAU_BIAS + 8;
+const HORNER_NEG_LN2_HI: i32 = HORNER_INV_LN2 + 8;
+const HORNER_NEG_LN2_LO: i32 = HORNER_NEG_LN2_HI + 8;
+const HORNER_C0: i32 = HORNER_NEG_LN2_LO + 8; // c0..c6, 7 × f64
 
 /// Total pool footprint in bytes.
-pub const EXP_POOL_BYTES: u32 = (SCHRAU_BIAS + 8) as u32;
+pub const EXP_POOL_BYTES: u32 = (HORNER_C0 + 7 * 8) as u32;
 
 /// Write the software-exp constant pool at `base`.
 pub fn write_exp_pool(spm: &mut Mem, base: u32) {
@@ -55,6 +62,16 @@ pub fn write_exp_pool(spm: &mut Mem, base: u32) {
         SCHRAU_BIAS,
         ((127u64 << 7) as f64 - 0.5 - 0.0430 * 128.0) + 1.5 * (1u64 << 52) as f64,
     );
+    w(spm, HORNER_INV_LN2, 1.0 / std::f64::consts::LN_2);
+    // Cody–Waite split of ln2 (hi exactly representable with trailing
+    // zeros, lo the standard f64 residual) — negated for the fmadd form
+    // r = x + k·(-ln2).
+    w(spm, HORNER_NEG_LN2_HI, -0.693_147_180_369_123_816_49);
+    w(spm, HORNER_NEG_LN2_LO, -1.908_214_929_270_587_700_02e-10);
+    let fact = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0];
+    for (k, f) in fact.iter().enumerate() {
+        w(spm, HORNER_C0 + 8 * k as i32, 1.0 / f);
+    }
 }
 
 /// Emit the baseline `math.h`-style exponential.
@@ -205,6 +222,74 @@ pub fn emit_schraudolph_sw_hoisted(a: &mut Asm, dst: FReg, src: FReg, scale: FRe
     a.bind(done);
 }
 
+/// Emit the degree-6 Horner polynomial exponential: the SNIPPETS-style
+/// table-free middle point between Schraudolph (~12 instructions, ~4 %
+/// worst-case error) and the libm reconstruction (~319 cycles, exact to
+/// BF16). Same magic-number range reduction as libm but k is a whole
+/// power of two (no LUT): e^x = 2^k · P6(r), r = x − k·ln2 ∈
+/// [−ln2/2, ln2/2], with P6 the Taylor polynomial (max relative error
+/// (ln2/2)^7/7! ≈ 1.2e-7 — far below BF16 quantization).
+///
+/// Scalar BF16 in low lane of `src` → BF16 `exp` in low lane of `dst`.
+/// Clobbers FA0..FA5 and T0..T3; expects the pool base in A4.
+pub fn emit_horner6_exp(a: &mut Asm, dst: FReg, src: FReg) {
+    let special = a.label();
+    let done = a.label();
+
+    // --- special-case screen: |x| ≥ 128 saturates (as in libm) ----------
+    a.fmv_x_w(T0, src);
+    a.srli(T2, T0, 7);
+    a.andi(T2, T2, 0xFF);
+    a.li(T3, 0x86);
+    a.bgeu(T2, T3, special);
+
+    // --- widen to FP64 (BF16 → FP32 → FP64, like C's (double)x) ---------
+    a.fcvt_s_h(FA0, src);
+    a.fcvt_d_s(FA0, FA0);
+
+    // --- k = round(x / ln2) via the magic-number trick -------------------
+    a.fld(FA1, A4, HORNER_INV_LN2);
+    a.fld(FA2, A4, MAGIC);
+    a.fmadd_d(FA3, FA0, FA1, FA2);
+    a.fmv_x_w(T1, FA3); // low 32 bits = k (two's complement)
+    a.fsub_d(FA3, FA3, FA2); // k as a double
+
+    // --- r = x - k*ln2, Cody–Waite two-step ------------------------------
+    a.fld(FA1, A4, HORNER_NEG_LN2_HI);
+    a.fmadd_d(FA0, FA3, FA1, FA0);
+    a.fld(FA1, A4, HORNER_NEG_LN2_LO);
+    a.fmadd_d(FA0, FA3, FA1, FA0);
+
+    // --- degree-6 Horner chain: P = c0 + r(c1 + r(... + r·c6)) ----------
+    a.fld(FA5, A4, HORNER_C0 + 48); // c6
+    for c in (0..6).rev() {
+        a.fld(FA1, A4, HORNER_C0 + 8 * c);
+        a.fmadd_d(FA5, FA5, FA0, FA1);
+    }
+
+    // --- scale by 2^k via exponent surgery, then narrow to BF16 ---------
+    a.slli(T2, T1, 52);
+    a.fmv_x_d(T3, FA5);
+    a.add(T3, T3, T2); // bits += k << 52
+    a.fmv_d_x(FA5, T3);
+    a.fcvt_s_d(FA5, FA5);
+    a.fcvt_h_s(dst, FA5);
+    a.j(done);
+
+    // --- special path: ±inf/0 by sign ------------------------------------
+    a.bind(special);
+    a.srli(T2, T0, 15);
+    a.andi(T2, T2, 1);
+    let neg = a.label();
+    a.bnez(T2, neg);
+    a.li(T3, 0x7F80); // +inf
+    a.fmv_w_x(dst, T3);
+    a.j(done);
+    a.bind(neg);
+    a.fmv_w_x(dst, ZERO); // exp(-large) → 0
+    a.bind(done);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,5 +373,40 @@ mod tests {
     fn schraudolph_sw_clamps() {
         assert_eq!(run_exp(emit_schraudolph_sw, 1e20).0, f32::INFINITY);
         assert_eq!(run_exp(emit_schraudolph_sw, -1e20).0, 0.0);
+    }
+
+    #[test]
+    fn horner6_exp_accurate_to_bf16() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, -0.5, 5.0, -5.0, 20.0, -20.0, 80.0, -80.0] {
+            let (y, _) = run_exp(emit_horner6_exp, x);
+            let xq = Bf16::from_f32(x).to_f32() as f64;
+            let t = xq.exp();
+            let rel = ((y as f64) - t).abs() / t;
+            // polynomial error 1.2e-7 ≪ BF16 quantization: within 0.4 %
+            assert!(rel < 0.004, "horner exp({x}) = {y}, want {t}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn horner6_exp_specials() {
+        assert_eq!(run_exp(emit_horner6_exp, 1e30).0, f32::INFINITY);
+        assert_eq!(run_exp(emit_horner6_exp, -1e30).0, 0.0);
+        assert_eq!(run_exp(emit_horner6_exp, 200.0).0, f32::INFINITY);
+        assert_eq!(run_exp(emit_horner6_exp, -200.0).0, 0.0);
+    }
+
+    #[test]
+    fn horner6_exp_sits_between_schraudolph_and_libm() {
+        // the frontier point: strictly slower than Schraudolph (it pays
+        // the range reduction + 6 FMAs), strictly faster than the libm
+        // reconstruction (no LUT load-use stalls, no dd passes, no ABI
+        // spill model).
+        let (_, c_libm) = run_exp(emit_libm_exp, 0.73);
+        let (_, c_horner) = run_exp(emit_horner6_exp, 0.73);
+        let (_, c_schr) = run_exp(emit_schraudolph_sw, 0.73);
+        assert!(
+            c_schr < c_horner && c_horner < c_libm,
+            "schraudolph {c_schr} < horner {c_horner} < libm {c_libm} violated"
+        );
     }
 }

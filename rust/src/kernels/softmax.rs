@@ -11,7 +11,9 @@
 //! emits one program per core. Row length must be a multiple of 16 for
 //! the SIMD variants (the paper's sequence lengths all are).
 
-use super::softexp::{emit_libm_exp, emit_schraudolph_sw_hoisted, write_exp_pool};
+use super::softexp::{
+    emit_horner6_exp, emit_libm_exp, emit_schraudolph_sw_hoisted, write_exp_pool,
+};
 use crate::exec::program::{KernelKind, Program};
 use crate::isa::regs::*;
 use crate::isa::{Asm, Instr, SsrPattern};
@@ -28,6 +30,11 @@ pub enum SoftmaxVariant {
     /// instruction only (no packed SIMD) — isolates the contribution of
     /// the 4-lane ExpOpGroup from the instruction itself.
     SwExpHwScalar,
+    /// Ablation: the EXP block uses the degree-6 Horner polynomial
+    /// (`emit_horner6_exp`) — accurate to below bf16 resolution but far
+    /// more instructions than Schraudolph, anchoring the software end of
+    /// the speed/accuracy frontier in `table2_accuracy`.
+    SwExpHorner,
 }
 
 impl SoftmaxVariant {
@@ -45,6 +52,7 @@ impl SoftmaxVariant {
             SoftmaxVariant::SwExpSw => "SW & EXP SW Optim",
             SoftmaxVariant::SwExpHw => "SW & EXP HW Optim",
             SoftmaxVariant::SwExpHwScalar => "SW & EXP HW (scalar FEXP)",
+            SoftmaxVariant::SwExpHorner => "SW & EXP Horner-6",
         }
     }
 }
@@ -157,6 +165,9 @@ fn build_rows_program(
             SoftmaxVariant::SwExpHwScalar => {
                 emit_row_optim(&mut a, in_addr, out_addr, n, Exp::FexpScalar)
             }
+            SoftmaxVariant::SwExpHorner => {
+                emit_row_optim(&mut a, in_addr, out_addr, n, Exp::Horner6)
+            }
         }
     }
     a.finish()
@@ -167,6 +178,7 @@ enum Exp {
     SchraudolphSw,
     Vfexp,
     FexpScalar,
+    Horner6,
 }
 
 /// Fig. 4 left column: the plain-C baseline (no FREP/SSR/SIMD).
@@ -278,7 +290,7 @@ fn emit_row_optim(a: &mut Asm, input: u32, output: u32, n: u32, exp: Exp) {
             a.addi(A3, A3, -1);
             a.bnez(A3, exp_loop);
         }
-        Exp::Libm | Exp::SchraudolphSw => {
+        Exp::Libm | Exp::SchraudolphSw | Exp::Horner6 => {
             // exponential stays scalar software: SSR/FREP cannot wrap a
             // branchy multi-instruction routine, so this is a plain loop.
             if matches!(exp, Exp::SchraudolphSw) {
@@ -298,6 +310,7 @@ fn emit_row_optim(a: &mut Asm, input: u32, output: u32, n: u32, exp: Exp) {
             match exp {
                 Exp::Libm => emit_libm_exp(a, FT6, FT5),
                 Exp::SchraudolphSw => emit_schraudolph_sw_hoisted(a, FT6, FT5, FS2, FS3),
+                Exp::Horner6 => emit_horner6_exp(a, FT6, FT5),
                 Exp::Vfexp | Exp::FexpScalar => unreachable!(),
             }
             a.fsh(FT6, A1, 0);
@@ -332,6 +345,230 @@ pub fn softmax_ref(row: &[f32]) -> Vec<f32> {
     let e: Vec<f32> = row.iter().map(|&x| (x - m).exp()).collect();
     let s: f32 = e.iter().sum();
     e.iter().map(|&x| x / s).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Softmax backward (the training step)
+// ---------------------------------------------------------------------------
+//
+// Given the forward output `y = softmax(x)` and the upstream gradient `g`,
+// the input gradient is
+//
+//     dx_i = y_i * (g_i - s),   s = Σ_j g_j * y_j
+//
+// i.e. a dot product followed by an axpy-like pass — no exponentials, so
+// the interesting axis here is FREP/SSR/SIMD vs the scalar baseline.
+
+/// Softmax-backward kernel configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SoftmaxBwdVariant {
+    /// Scalar loops, no FREP/SSR/SIMD.
+    Baseline,
+    /// FREP + SSR + packed-SIMD, mirroring the forward `SwOptim` shape.
+    Optimized,
+}
+
+impl SoftmaxBwdVariant {
+    /// Both configurations, baseline first.
+    pub const ALL: [SoftmaxBwdVariant; 2] =
+        [SoftmaxBwdVariant::Baseline, SoftmaxBwdVariant::Optimized];
+
+    /// Human-readable name for tables and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            SoftmaxBwdVariant::Baseline => "Baseline",
+            SoftmaxBwdVariant::Optimized => "FREP+SSR+SIMD",
+        }
+    }
+}
+
+/// SPM layout for the softmax-backward kernel: forward output `y`,
+/// upstream gradient `g`, and the produced input gradient `dx`.
+pub struct SoftmaxBwdLayout {
+    /// Constant pool base (unused by the kernel itself; kept so the
+    /// fault-injection suite can checksum a uniform region set).
+    pub pool: u32,
+    /// Forward softmax output rows.
+    pub y: u32,
+    /// Upstream gradient rows.
+    pub g: u32,
+    /// Output: input-gradient rows.
+    pub dx: u32,
+}
+
+/// Default [`SoftmaxBwdLayout`]: 36 KiB per region, all inside the
+/// 128 KiB SPM.
+pub const DEFAULT_BWD_LAYOUT: SoftmaxBwdLayout = SoftmaxBwdLayout {
+    pool: 0x1000,
+    y: 0x2000,
+    g: 0x2000 + 0x9000,
+    dx: 0x2000 + 0x12000,
+};
+
+/// Result of a cluster softmax-backward run.
+pub struct SoftmaxBwdRun {
+    /// Input-gradient rows read back from SPM.
+    pub dx: Vec<Vec<f32>>,
+    /// Cluster-level execution stats.
+    pub stats: ClusterStats,
+    /// Cluster cycles per produced gradient element.
+    pub cycles_per_output: f64,
+}
+
+/// Compile the softmax-backward kernel for `rows` rows of length `n`
+/// (multiple of 16), statically partitioned over the eight cores.
+pub fn build_softmax_bwd_program(variant: SoftmaxBwdVariant, rows: u32, n: u32) -> Program {
+    assert!(rows > 0 && n > 0);
+    assert!(n % 16 == 0, "row length {n} must be a multiple of 16");
+    let lay = DEFAULT_BWD_LAYOUT;
+    let per_core = rows.div_ceil(CORES_PER_CLUSTER as u32);
+    let per_core_streams: Vec<Vec<Instr>> = (0..CORES_PER_CLUSTER as u32)
+        .map(|c| {
+            let lo = (c * per_core).min(rows);
+            let hi = ((c + 1) * per_core).min(rows);
+            if lo == hi {
+                return vec![];
+            }
+            let mut a = Asm::new();
+            for r in lo..hi {
+                let y = lay.y + r * 2 * n;
+                let g = lay.g + r * 2 * n;
+                let dx = lay.dx + r * 2 * n;
+                match variant {
+                    SoftmaxBwdVariant::Baseline => emit_bwd_row_baseline(&mut a, y, g, dx, n),
+                    SoftmaxBwdVariant::Optimized => emit_bwd_row_optim(&mut a, y, g, dx, n),
+                }
+            }
+            a.finish()
+        })
+        .collect();
+    Program::new(KernelKind::SoftmaxBwd(variant), per_core_streams)
+}
+
+/// Write deterministic pseudo-random inputs for a cached backward
+/// [`Program`]: `y` rows are genuine softmax distributions (host
+/// computed), `g` rows uniform in (-1, 1).
+pub fn seed_softmax_bwd_inputs(spm: &mut Mem, rows: u32, n: u32, seed: u64) {
+    let lay = DEFAULT_BWD_LAYOUT;
+    let mut rng = crate::testkit::Rng::new(seed);
+    for r in 0..rows {
+        let logits: Vec<f32> = (0..n).map(|_| rng.f32(-4.0, 4.0)).collect();
+        spm.write_f32_as_bf16(lay.y + r * 2 * n, &softmax_ref(&logits));
+        let g: Vec<f32> = (0..n).map(|_| rng.f32(-1.0, 1.0)).collect();
+        spm.write_f32_as_bf16(lay.g + r * 2 * n, &g);
+    }
+}
+
+/// Execute softmax-backward for matching `y`/`g` rows on one cluster.
+pub fn run_softmax_bwd(
+    variant: SoftmaxBwdVariant,
+    y_rows: &[Vec<f32>],
+    g_rows: &[Vec<f32>],
+) -> SoftmaxBwdRun {
+    let n = y_rows.first().map(|r| r.len()).unwrap_or(0);
+    assert!(n > 0 && y_rows.iter().all(|r| r.len() == n), "ragged rows");
+    assert_eq!(y_rows.len(), g_rows.len(), "y/g row count mismatch");
+    assert!(g_rows.iter().all(|r| r.len() == n), "ragged g rows");
+    assert!(n % 16 == 0, "row length {n} must be a multiple of 16");
+    let lay = DEFAULT_BWD_LAYOUT;
+    let bytes = 2 * n as u32;
+    assert!(
+        lay.dx + y_rows.len() as u32 * bytes <= 128 * 1024,
+        "workload does not fit the 128 KiB SPM; tile it at the coordinator"
+    );
+
+    let mut cluster = Cluster::new();
+    for (i, (y, g)) in y_rows.iter().zip(g_rows).enumerate() {
+        cluster.spm.write_f32_as_bf16(lay.y + i as u32 * bytes, y);
+        cluster.spm.write_f32_as_bf16(lay.g + i as u32 * bytes, g);
+    }
+
+    let program = build_softmax_bwd_program(variant, y_rows.len() as u32, n as u32);
+    let stats = cluster.run_program(&program);
+
+    let dx = (0..y_rows.len())
+        .map(|i| cluster.spm.read_bf16_as_f32(lay.dx + i as u32 * bytes, n))
+        .collect();
+    let cores_used = y_rows.len().min(CORES_PER_CLUSTER);
+    let rows_on_busiest = y_rows.len().div_ceil(cores_used.max(1));
+    let per_core_outputs = (rows_on_busiest * n) as f64;
+    SoftmaxBwdRun { cycles_per_output: stats.cycles as f64 / per_core_outputs, dx, stats }
+}
+
+/// Scalar backward row: fused-multiply-add dot product, then the axpy
+/// pass, both as plain loops.
+fn emit_bwd_row_baseline(a: &mut Asm, y: u32, g: u32, dx: u32, n: u32) {
+    // ---- s = Σ g·y --------------------------------------------------------
+    a.li(A0, g as i64);
+    a.li(A1, y as i64);
+    a.li(A3, n as i64);
+    a.fmv_w_x(FT5, ZERO); // s := 0
+    let dot_loop = a.label();
+    a.bind(dot_loop);
+    a.flh(FT3, A0, 0);
+    a.flh(FT4, A1, 0);
+    a.fmadd_h(FT5, FT3, FT4, FT5);
+    a.addi(A0, A0, 2);
+    a.addi(A1, A1, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, dot_loop);
+
+    // ---- dx_i = y_i · (g_i − s) ------------------------------------------
+    a.li(A0, g as i64);
+    a.li(A1, y as i64);
+    a.li(A2, dx as i64);
+    a.li(A3, n as i64);
+    let axpy_loop = a.label();
+    a.bind(axpy_loop);
+    a.flh(FT3, A0, 0);
+    a.flh(FT4, A1, 0);
+    a.fsub_h(FT6, FT3, FT5);
+    a.fmul_h(FT6, FT6, FT4);
+    a.fsh(FT6, A2, 0);
+    a.addi(A0, A0, 2);
+    a.addi(A1, A1, 2);
+    a.addi(A2, A2, 2);
+    a.addi(A3, A3, -1);
+    a.bnez(A3, axpy_loop);
+}
+
+/// FREP+SSR+SIMD backward row: a VFMAC dot-product pass, a lane
+/// reduction, then a streamed `(g − s)·y` pass writing `dx`.
+fn emit_bwd_row_optim(a: &mut Asm, y: u32, g: u32, dx: u32, n: u32) {
+    // ---- pass 1: s = Σ g·y across two SIMD accumulators -------------------
+    a.ssr_cfg(0, SsrPattern::read1d(g, n / 4));
+    a.ssr_cfg(1, SsrPattern::read1d(y, n / 4));
+    a.fmv_d_x(FS0, ZERO); // all four lanes exactly +0
+    a.fmv_d_x(FS1, ZERO);
+    a.ssr_enable();
+    a.li(A3, (n / 8) as i64);
+    a.frep(A3, 2);
+    a.vfmac_h(FS0, FT0, FT1);
+    a.vfmac_h(FS1, FT0, FT1);
+    a.ssr_disable();
+    a.vfadd_h(FS0, FS0, FS1);
+    a.vfsum_h(FS0, FS0); // scalar s in the low lane
+    a.vfrep_h(FS2, FS0); // broadcast s to all lanes
+
+    // ---- pass 2: dx = (g − s) ⊙ y, streamed -------------------------------
+    a.ssr_cfg(0, SsrPattern::read1d(g, n / 4));
+    a.ssr_cfg(1, SsrPattern::read1d(y, n / 4));
+    a.ssr_cfg(2, SsrPattern::write1d(dx, n / 4));
+    a.ssr_enable();
+    a.li(A3, (n / 8) as i64);
+    a.frep(A3, 4);
+    a.vfsub_h(FT3, FT0, FS2);
+    a.vfmul_h(FT2, FT3, FT1);
+    a.vfsub_h(FT4, FT0, FS2);
+    a.vfmul_h(FT2, FT4, FT1);
+    a.ssr_disable();
+}
+
+/// Host-side f64 oracle: `dx_i = y_i * (g_i - Σ_j g_j*y_j)`.
+pub fn softmax_bwd_ref(y: &[f32], g: &[f32]) -> Vec<f32> {
+    assert_eq!(y.len(), g.len());
+    let s: f64 = y.iter().zip(g).map(|(&yi, &gi)| yi as f64 * gi as f64).sum();
+    y.iter().zip(g).map(|(&yi, &gi)| (yi as f64 * (gi as f64 - s)) as f32).collect()
 }
 
 #[cfg(test)]
@@ -485,5 +722,141 @@ mod tests {
         let b = run_softmax(SoftmaxVariant::SwExpHw, &data);
         assert_eq!(a.stats.cycles, b.stats.cycles);
         assert_eq!(a.out, b.out);
+    }
+
+    #[test]
+    fn sw_exp_horner_correct() {
+        // degree-6 Horner exp is libm-grade at bf16 resolution
+        check_correct(SoftmaxVariant::SwExpHorner, 0.01);
+    }
+
+    #[test]
+    fn horner_sits_between_schraudolph_and_libm_in_softmax() {
+        let data = rows(8, 256, 5);
+        let schrau = run_softmax(SoftmaxVariant::SwExpSw, &data).cycles_per_output;
+        let horner = run_softmax(SoftmaxVariant::SwExpHorner, &data).cycles_per_output;
+        let libm = run_softmax(SoftmaxVariant::SwOptim, &data).cycles_per_output;
+        assert!(
+            schrau < horner && horner < libm,
+            "schraudolph {schrau:.1} / horner {horner:.1} / libm {libm:.1}"
+        );
+    }
+
+    // ---- softmax backward -------------------------------------------------
+
+    /// Quantize a host row the way the SPM stores it, so oracle
+    /// comparisons see the same inputs as the kernel.
+    fn quantize(row: &[f32]) -> Vec<f32> {
+        row.iter().map(|&v| crate::bf16::Bf16::from_f32(v).to_f32()).collect()
+    }
+
+    fn bwd_inputs(r: usize, n: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut rng = crate::testkit::Rng::new(seed);
+        let mut ys = Vec::new();
+        let mut gs = Vec::new();
+        for _ in 0..r {
+            let logits: Vec<f32> = (0..n).map(|_| rng.f32(-4.0, 4.0)).collect();
+            ys.push(softmax_ref(&logits));
+            gs.push((0..n).map(|_| rng.f32(-1.0, 1.0)).collect());
+        }
+        (ys, gs)
+    }
+
+    fn check_bwd_correct(variant: SoftmaxBwdVariant, tol: f32) {
+        let (ys, gs) = bwd_inputs(8, 64, 17);
+        let run = run_softmax_bwd(variant, &ys, &gs);
+        for i in 0..ys.len() {
+            let want = softmax_bwd_ref(&quantize(&ys[i]), &quantize(&gs[i]));
+            for (j, (&got, &w)) in run.dx[i].iter().zip(&want).enumerate() {
+                assert!(
+                    (got - w).abs() < tol,
+                    "{variant:?} row {i} col {j}: got {got}, want {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bwd_baseline_matches_reference() {
+        check_bwd_correct(SoftmaxBwdVariant::Baseline, 0.05);
+    }
+
+    #[test]
+    fn bwd_optimized_matches_reference() {
+        check_bwd_correct(SoftmaxBwdVariant::Optimized, 0.05);
+    }
+
+    #[test]
+    fn bwd_one_hot_matches_jacobian_row() {
+        // With a one-hot upstream gradient e_k, softmax backward reduces to
+        // the k-th Jacobian row: dx_i = y_i (δ_ik − y_k). The dot product
+        // s = y_k is exact in bf16 (all other terms are exact zeros), so
+        // the kernel must land within a couple of ULP of the analytic row.
+        let (ys, _) = bwd_inputs(4, 32, 23);
+        for k in [0usize, 7, 31] {
+            let mut gs = Vec::new();
+            for _ in 0..ys.len() {
+                let mut g = vec![0.0f32; 32];
+                g[k] = 1.0;
+                gs.push(g);
+            }
+            for variant in SoftmaxBwdVariant::ALL {
+                let run = run_softmax_bwd(variant, &ys, &gs);
+                for (i, y) in ys.iter().enumerate() {
+                    let yq = quantize(y);
+                    for (j, &got) in run.dx[i].iter().enumerate() {
+                        let delta = if j == k { 1.0 } else { 0.0 };
+                        let want = yq[j] as f64 * (delta - yq[k] as f64);
+                        let tol = 0.02 * want.abs().max(1e-3);
+                        assert!(
+                            (got as f64 - want).abs() < tol,
+                            "{variant:?} one-hot k={k} row {i} col {j}: got {got}, want {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bwd_optimized_much_faster_than_baseline() {
+        let (ys, gs) = bwd_inputs(8, 512, 29);
+        let base = run_softmax_bwd(SoftmaxBwdVariant::Baseline, &ys, &gs);
+        let opt = run_softmax_bwd(SoftmaxBwdVariant::Optimized, &ys, &gs);
+        assert!(
+            opt.cycles_per_output * 3.0 < base.cycles_per_output,
+            "baseline {:.2} vs optimized {:.2} cycles/output",
+            base.cycles_per_output,
+            opt.cycles_per_output
+        );
+    }
+
+    #[test]
+    fn bwd_uneven_rows_still_correct() {
+        let (ys, gs) = bwd_inputs(5, 32, 31);
+        let run = run_softmax_bwd(SoftmaxBwdVariant::Optimized, &ys, &gs);
+        for i in 0..ys.len() {
+            let want = softmax_bwd_ref(&quantize(&ys[i]), &quantize(&gs[i]));
+            for (&got, &w) in run.dx[i].iter().zip(&want) {
+                assert!((got - w).abs() < 0.05);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 16")]
+    fn bwd_ragged_simd_length_panics() {
+        let ys = [vec![0.5f32; 17], vec![0.5f32; 17]];
+        let gs = [vec![0.0f32; 17], vec![0.0f32; 17]];
+        run_softmax_bwd(SoftmaxBwdVariant::Optimized, &ys, &gs);
+    }
+
+    #[test]
+    fn bwd_deterministic_across_runs() {
+        let (ys, gs) = bwd_inputs(4, 64, 37);
+        let a = run_softmax_bwd(SoftmaxBwdVariant::Optimized, &ys, &gs);
+        let b = run_softmax_bwd(SoftmaxBwdVariant::Optimized, &ys, &gs);
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.dx, b.dx);
     }
 }

@@ -53,6 +53,10 @@ pub struct LayerOps {
     pub weight_bytes: u64,
     /// Bytes streamed for activations and KV tiles (BF16).
     pub act_bytes: u64,
+    /// GELU activations in the FFN (one per hidden unit per token).
+    pub gelu_elems: u64,
+    /// LayerNorm elements (two norms per block, `d_model` per token).
+    pub layernorm_elems: u64,
 }
 
 impl LayerOps {
@@ -98,9 +102,21 @@ impl WorkloadOps {
         let softmax_elems = h * s * s;
         let weight_bytes = 2 * (4 * d * d + 2 * d * ff);
         let act_bytes = 2 * (s * d * 8 + h * s * dh * 4);
+        // nonlinearities: one GELU per FFN hidden unit per token, two
+        // LayerNorms (pre-attention, pre-FFN) of d elements per token
+        let gelu_elems = s * ff;
+        let layernorm_elems = 2 * s * d;
 
         WorkloadOps {
-            per_layer: LayerOps { proj_flops, attn_flops, softmax_elems, weight_bytes, act_bytes },
+            per_layer: LayerOps {
+                proj_flops,
+                attn_flops,
+                softmax_elems,
+                weight_bytes,
+                act_bytes,
+                gelu_elems,
+                layernorm_elems,
+            },
             layers: cfg.layers,
         }
     }
@@ -135,9 +151,20 @@ impl WorkloadOps {
         let weight_bytes = 2 * (4 * d * d + 2 * d * ff);
         // K and V caches (t·dh per head each) + the token's activations
         let act_bytes = 2 * (2 * h * t * dh + 8 * d);
+        // one token through the nonlinearities
+        let gelu_elems = ff;
+        let layernorm_elems = 2 * d;
 
         WorkloadOps {
-            per_layer: LayerOps { proj_flops, attn_flops, softmax_elems, weight_bytes, act_bytes },
+            per_layer: LayerOps {
+                proj_flops,
+                attn_flops,
+                softmax_elems,
+                weight_bytes,
+                act_bytes,
+                gelu_elems,
+                layernorm_elems,
+            },
             layers: cfg.layers,
         }
     }
@@ -159,6 +186,8 @@ impl WorkloadOps {
             softmax_elems: self.per_layer.softmax_elems * l,
             weight_bytes: self.per_layer.weight_bytes * l,
             act_bytes: self.per_layer.act_bytes * l,
+            gelu_elems: self.per_layer.gelu_elems * l,
+            layernorm_elems: self.per_layer.layernorm_elems * l,
         }
     }
 }
@@ -244,6 +273,22 @@ mod tests {
         let b = WorkloadOps::decode(&GPT2_SMALL, 1024).total();
         assert_eq!(b.softmax_elems, 4 * a.softmax_elems);
         assert_eq!(b.attn_flops, 4 * a.attn_flops);
+    }
+
+    #[test]
+    fn nonlinearities_are_counted() {
+        let cfg = GPT2_SMALL;
+        let pre = WorkloadOps::of(&cfg).per_layer;
+        assert_eq!(pre.gelu_elems, cfg.seq as u64 * cfg.d_ff as u64);
+        assert_eq!(pre.layernorm_elems, 2 * cfg.seq as u64 * cfg.d_model as u64);
+        // decode is one token's worth
+        let dec = WorkloadOps::decode(&cfg, 1024).per_layer;
+        assert_eq!(dec.gelu_elems, cfg.d_ff as u64);
+        assert_eq!(dec.layernorm_elems, 2 * cfg.d_model as u64);
+        // totals scale by layer count
+        let tot = WorkloadOps::of(&cfg).total();
+        assert_eq!(tot.gelu_elems, pre.gelu_elems * cfg.layers as u64);
+        assert_eq!(tot.layernorm_elems, pre.layernorm_elems * cfg.layers as u64);
     }
 
     #[test]

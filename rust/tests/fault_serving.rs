@@ -22,7 +22,12 @@ use vexp::exec::{
 use vexp::kernels::flash_attention::{
     build_fa_decode_program, build_fa_program, seed_fa_decode_inputs, seed_fa_inputs, FaVariant,
 };
-use vexp::kernels::softmax::{build_softmax_program, seed_softmax_inputs, SoftmaxVariant};
+use vexp::kernels::gelu::{build_gelu_program, seed_gelu_inputs, GeluForm, GeluVariant};
+use vexp::kernels::layernorm::{build_layernorm_program, seed_layernorm_inputs, LayerNormVariant};
+use vexp::kernels::softmax::{
+    build_softmax_bwd_program, build_softmax_program, seed_softmax_bwd_inputs,
+    seed_softmax_inputs, SoftmaxBwdVariant, SoftmaxVariant,
+};
 use vexp::model::{GPT2_SMALL, VIT_BASE};
 use vexp::sim::{
     spm_checksum, ClusterFault, ClusterJob, DmaModel, FaultEvent, FaultPlan, FaultSpec, Mem,
@@ -36,9 +41,25 @@ use vexp::sim::{
 type Seeder = Box<dyn Fn(&mut Mem)>;
 
 /// The kernel matrix for the zero-impact differential: softmax (both
-/// the optimized and baseline variants), FA-2 prefill, and FA-2 decode.
+/// the optimized and baseline variants), FA-2 prefill, FA-2 decode, and
+/// the nonlinearity kernels (GELU, LayerNorm, softmax backward).
 fn kernel_suite() -> Vec<(&'static str, Program, Seeder)> {
     vec![
+        (
+            "gelu/Hw(Tanh)",
+            build_gelu_program(GeluVariant::Hw(GeluForm::Tanh), 4, 64),
+            Box::new(|spm: &mut Mem| seed_gelu_inputs(spm, 4, 64, 11)),
+        ),
+        (
+            "layernorm/Optimized",
+            build_layernorm_program(LayerNormVariant::Optimized, 8, 64),
+            Box::new(|spm: &mut Mem| seed_layernorm_inputs(spm, 8, 64, 12)),
+        ),
+        (
+            "softmax-bwd/Optimized",
+            build_softmax_bwd_program(SoftmaxBwdVariant::Optimized, 8, 64),
+            Box::new(|spm: &mut Mem| seed_softmax_bwd_inputs(spm, 8, 64, 13)),
+        ),
         (
             "softmax/SwExpHw",
             build_softmax_program(SoftmaxVariant::SwExpHw, 8, 64),

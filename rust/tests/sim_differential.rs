@@ -10,8 +10,13 @@ use vexp::exec::program::Program;
 use vexp::kernels::flash_attention::{
     build_fa_decode_program, build_fa_program, seed_fa_decode_inputs, seed_fa_inputs, FaVariant,
 };
+use vexp::kernels::gelu::{build_gelu_program, seed_gelu_inputs, GeluForm, GeluVariant};
 use vexp::kernels::gemm::build_gemm_program;
-use vexp::kernels::softmax::{build_softmax_program, seed_softmax_inputs, SoftmaxVariant};
+use vexp::kernels::layernorm::{build_layernorm_program, seed_layernorm_inputs, LayerNormVariant};
+use vexp::kernels::softmax::{
+    build_softmax_bwd_program, build_softmax_program, seed_softmax_bwd_inputs,
+    seed_softmax_inputs, SoftmaxBwdVariant, SoftmaxVariant,
+};
 use vexp::model::config::{ALL_MODELS, GPT2_SMALL, GPT3_XL};
 use vexp::sim::stats::CLASSES;
 use vexp::sim::{
@@ -91,6 +96,69 @@ fn softmax_scalar_fexp_ablation_bit_identical() {
     );
 }
 
+/// The Horner-6 polynomial-exp ablation variant (ISSUE 8: the accurate
+/// end of the software speed/accuracy frontier) holds the same contract
+/// as the shipped softmax variants.
+#[test]
+fn softmax_sw_exp_horner_bit_identical() {
+    for n in [64u32, 256] {
+        let program = build_softmax_program(SoftmaxVariant::SwExpHorner, 8, n);
+        differential_cluster(
+            &program,
+            |spm| seed_softmax_inputs(spm, 8, n, 0x60E ^ n as u64),
+            &format!("softmax SwExpHorner n={n}"),
+        );
+    }
+}
+
+/// Every GELU variant on the speed/accuracy frontier — three exp
+/// technologies x three functional forms — must be bit-identical on the
+/// decoded fast path before the accuracy wall can trust either executor.
+#[test]
+fn gelu_all_variants_bit_identical() {
+    const ROWS: u32 = 4;
+    for variant in GeluVariant::ALL {
+        for n in [64u32, 256] {
+            let program = build_gelu_program(variant, ROWS, n);
+            differential_cluster(
+                &program,
+                |spm| seed_gelu_inputs(spm, ROWS, n, 0x6E1 ^ n as u64),
+                &format!("gelu {variant:?} n={n}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn layernorm_both_variants_two_lengths_bit_identical() {
+    const ROWS: u32 = 8;
+    for variant in LayerNormVariant::ALL {
+        for n in [64u32, 512] {
+            let program = build_layernorm_program(variant, ROWS, n);
+            differential_cluster(
+                &program,
+                |spm| seed_layernorm_inputs(spm, ROWS, n, 0x1A ^ n as u64),
+                &format!("layernorm {variant:?} n={n}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn softmax_bwd_both_variants_two_lengths_bit_identical() {
+    const ROWS: u32 = 8;
+    for variant in SoftmaxBwdVariant::ALL {
+        for n in [64u32, 256] {
+            let program = build_softmax_bwd_program(variant, ROWS, n);
+            differential_cluster(
+                &program,
+                |spm| seed_softmax_bwd_inputs(spm, ROWS, n, 0xB4D ^ n as u64),
+                &format!("softmax-bwd {variant:?} n={n}"),
+            );
+        }
+    }
+}
+
 #[test]
 fn flash_attention_both_variants_two_lengths_bit_identical() {
     for variant in [FaVariant::Baseline, FaVariant::Optimized] {
@@ -146,25 +214,34 @@ fn system_run_jobs_bit_identical_across_paths() {
         let sm = build_softmax_program(SoftmaxVariant::SwExpHw, 8, 256);
         let base = build_softmax_program(SoftmaxVariant::Baseline, 8, 64);
         let fa = build_fa_program(FaVariant::Optimized, 16, 64, 64, 32);
+        let gelu = build_gelu_program(GeluVariant::Hw(GeluForm::Tanh), 4, 128);
+        let ln = build_layernorm_program(LayerNormVariant::Optimized, 8, 128);
+        let bwd = build_softmax_bwd_program(SoftmaxBwdVariant::Optimized, 8, 128);
         vec![
             ClusterJob::new(vec![sm.clone(), sm.clone()], 64 * 1024),
             ClusterJob::new(vec![base], 16 * 1024),
             ClusterJob::idle(),
             ClusterJob::new(vec![fa], 128 * 1024),
+            ClusterJob::new(vec![gelu, ln], 32 * 1024),
+            ClusterJob::new(vec![bwd], 32 * 1024),
         ]
     };
     let seed_sys = |sys: &mut System| {
         seed_softmax_inputs(&mut sys.clusters[0].spm, 8, 256, 1);
         seed_softmax_inputs(&mut sys.clusters[1].spm, 8, 64, 2);
         seed_fa_inputs(&mut sys.clusters[3].spm, 16, 64, 64, 32, 3);
+        // the gelu and layernorm programs on cluster 4 share the input
+        // region; the gelu seeder also writes the exp constant pool
+        seed_gelu_inputs(&mut sys.clusters[4].spm, 8, 128, 4);
+        seed_softmax_bwd_inputs(&mut sys.clusters[5].spm, 8, 128, 5);
     };
 
-    let mut fast_sys = System::new(4);
+    let mut fast_sys = System::new(6);
     fast_sys.reference_interp = false;
     seed_sys(&mut fast_sys);
     let fast = fast_sys.run_jobs(jobs());
 
-    let mut ref_sys = System::new(4);
+    let mut ref_sys = System::new(6);
     ref_sys.reference_interp = true;
     seed_sys(&mut ref_sys);
     let reference = ref_sys.run_jobs(jobs());
@@ -258,6 +335,36 @@ fn memo_replay_bit_identical_all_kernels() {
         },
         "memo gemm",
     );
+    let program = build_softmax_program(SoftmaxVariant::SwExpHorner, 8, 64);
+    differential_memo(
+        &program,
+        |spm| seed_softmax_inputs(spm, 8, 64, 0x3E33),
+        "memo softmax SwExpHorner",
+    );
+    for variant in [GeluVariant::Hw(GeluForm::Tanh), GeluVariant::Sw(GeluForm::Silu)] {
+        let program = build_gelu_program(variant, 4, 64);
+        differential_memo(
+            &program,
+            |spm| seed_gelu_inputs(spm, 4, 64, 0x3E34),
+            &format!("memo gelu {variant:?}"),
+        );
+    }
+    for variant in LayerNormVariant::ALL {
+        let program = build_layernorm_program(variant, 8, 64);
+        differential_memo(
+            &program,
+            |spm| seed_layernorm_inputs(spm, 8, 64, 0x3E35),
+            &format!("memo layernorm {variant:?}"),
+        );
+    }
+    for variant in SoftmaxBwdVariant::ALL {
+        let program = build_softmax_bwd_program(variant, 8, 64);
+        differential_memo(
+            &program,
+            |spm| seed_softmax_bwd_inputs(spm, 8, 64, 0x3E36),
+            &format!("memo softmax-bwd {variant:?}"),
+        );
+    }
 }
 
 /// The memo key is (program identity, tile *values*): the same program
