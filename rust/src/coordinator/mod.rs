@@ -4,7 +4,9 @@
 //! Fig. 1 and Fig. 8 benches.
 
 pub mod estimate;
+pub mod paging;
 pub mod schedule;
 
 pub use estimate::{E2eEstimate, KernelRates, SystemEstimator};
+pub use paging::{BlockGeometry, PagedResidency};
 pub use schedule::{DecodePlan, HeadMap, KvPlacement, KvResidency, TilePlan, CLUSTERS};

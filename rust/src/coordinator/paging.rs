@@ -1,0 +1,261 @@
+//! Page-aware KV-cache placement (DESIGN.md §14): the block-granular
+//! successor of the all-or-nothing [`super::KvResidency`] rule.
+//!
+//! The serve loop's paged KV tier slices every request's cache into
+//! fixed-size **blocks** of [`BlockGeometry::block_tokens`] tokens.
+//! Placement then prices *fractions* of a cache instead of the whole
+//! share: the hottest suffix of blocks — the tail the decode step
+//! actually appends into — is pinned in the SPM budget left after the
+//! decode working set, and only the cold prefix restreams from HBM
+//! every step. With a single unbounded block the model collapses to the
+//! legacy rule exactly (the whole cache is one "tail block"), which is
+//! what keeps the unpaged serve path usable as a differential oracle
+//! for the paged one.
+
+use super::schedule::{DecodePlan, HeadMap, KvPlacement};
+use crate::kernels::flash_attention::fa_decode_footprint;
+use crate::model::TransformerConfig;
+use crate::sim::SPM_BYTES;
+
+/// Geometry of the paged KV pool: a fixed block size in **bytes** of
+/// whole-model K+V cache (BF16, all layers, all heads). Bytes — not
+/// tokens — because the pool is shared between models whose per-token
+/// cache footprints differ; each model converts the byte block into its
+/// own token capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockGeometry {
+    /// Size of one pool block in bytes.
+    pub block_bytes: u64,
+}
+
+impl BlockGeometry {
+    /// Geometry with the given block size (must be nonzero).
+    pub fn new(block_bytes: u64) -> Self {
+        assert!(block_bytes > 0, "KV block size must be nonzero");
+        BlockGeometry { block_bytes }
+    }
+
+    /// Whole-model K+V bytes one token occupies: `layers × heads ×
+    /// d_head × 2 (K and V) × 2 (BF16)`.
+    pub fn bytes_per_token(cfg: &TransformerConfig) -> u64 {
+        cfg.layers as u64 * cfg.heads as u64 * cfg.d_head() as u64 * 2 * 2
+    }
+
+    /// Tokens of `cfg`'s cache one block holds (at least 1: a block
+    /// smaller than a token row still advances one token at a time).
+    pub fn block_tokens(&self, cfg: &TransformerConfig) -> u32 {
+        (self.block_bytes / Self::bytes_per_token(cfg)).clamp(1, u32::MAX as u64) as u32
+    }
+
+    /// Blocks needed to hold `tokens` tokens of `cfg`'s cache.
+    pub fn blocks_for(&self, cfg: &TransformerConfig, tokens: u32) -> u64 {
+        (tokens as u64).div_ceil(self.block_tokens(cfg) as u64)
+    }
+}
+
+/// Page-aware KV-cache placement for one request's cluster share
+/// (DESIGN.md §14). Supersedes [`super::KvResidency`]'s binary verdict:
+/// the cache is split into blocks of `block_tokens` tokens, the tail
+/// suffix whose filled bytes fit the post-working-set SPM budget stays
+/// **hot** (append-only traffic), and the cold prefix restreams from
+/// HBM every decode step.
+///
+/// Legacy equivalence: with `block_tokens >= kv_len` there is exactly
+/// one block, filled to `kv_len`; it is hot iff the whole share fits
+/// the budget — the [`super::KvResidency`] rule verbatim (which now
+/// delegates here).
+#[derive(Clone, Copy, Debug)]
+pub struct PagedResidency {
+    /// Heads whose cache one cluster holds (= head rounds).
+    pub heads_per_cluster: u32,
+    /// Tokens per block for this model.
+    pub block_tokens: u32,
+    /// Blocks the cache occupies at the analyzed length.
+    pub blocks: u32,
+    /// Tail blocks pinned in the SPM budget.
+    pub hot_blocks: u32,
+    /// Tokens in the hot (SPM-pinned) suffix.
+    pub hot_tokens: u32,
+    /// Tokens in the cold (HBM-restreamed) prefix.
+    pub cold_tokens: u32,
+    /// Per-cluster cache bytes of one token (all layers, this share).
+    pub bytes_per_token_per_cluster: u64,
+    /// SPM bytes left after the decode slice working set.
+    pub spm_budget: u64,
+}
+
+impl PagedResidency {
+    /// Analyze placement for `cfg` at KV length `kv_len` on a share of
+    /// `clusters` clusters with `block_tokens`-token blocks. Blocks are
+    /// pinned hot from the **tail** (newest first, by *filled* bytes —
+    /// a partially filled tail block only charges what it holds) while
+    /// the cumulative footprint fits the SPM budget.
+    pub fn analyze(
+        cfg: &TransformerConfig,
+        kv_len: u32,
+        clusters: u32,
+        block_tokens: u32,
+    ) -> Self {
+        let block_tokens = block_tokens.max(1);
+        let d = cfg.d_head();
+        let heads_per_cluster = HeadMap::new(cfg.heads, clusters.max(1)).rounds();
+        let bytes_per_token_per_cluster =
+            cfg.layers as u64 * heads_per_cluster as u64 * d as u64 * 2 * 2;
+        let plan = DecodePlan::plan(cfg);
+        let spm_budget =
+            SPM_BYTES as u64 - fa_decode_footprint(plan.sk_slice, plan.d, plan.bk) as u64;
+        let blocks = kv_len.div_ceil(block_tokens);
+        let tail_fill = if blocks == 0 { 0 } else { kv_len - (blocks - 1) * block_tokens };
+        let mut hot_blocks = 0u32;
+        let mut hot_tokens = 0u32;
+        let mut bytes = 0u64;
+        for i in 0..blocks {
+            // i-th block from the tail: the tail itself is partial,
+            // every earlier block is full
+            let fill = if i == 0 { tail_fill } else { block_tokens };
+            bytes += fill as u64 * bytes_per_token_per_cluster;
+            if bytes > spm_budget {
+                break;
+            }
+            hot_blocks += 1;
+            hot_tokens += fill;
+        }
+        PagedResidency {
+            heads_per_cluster,
+            block_tokens,
+            blocks,
+            hot_blocks,
+            hot_tokens,
+            cold_tokens: kv_len - hot_tokens,
+            bytes_per_token_per_cluster,
+            spm_budget,
+        }
+    }
+
+    /// The legacy binary verdict this placement collapses to: resident
+    /// when nothing restreams, spilled otherwise.
+    pub fn placement(&self) -> KvPlacement {
+        if self.cold_tokens == 0 {
+            KvPlacement::SpmResident
+        } else {
+            KvPlacement::HbmSpill
+        }
+    }
+
+    /// HBM bytes this cluster streams per decode step for KV traffic,
+    /// over all layers: the cold prefix restreams in full; the appended
+    /// K/V rows stream once when the tail block is hot (when it is
+    /// cold, the append is part of the restream — matching the legacy
+    /// spill pricing, which charges the whole share and nothing more).
+    pub fn hbm_bytes_per_step(&self, cfg: &TransformerConfig) -> u64 {
+        let append = cfg.layers as u64
+            * self.heads_per_cluster as u64
+            * 2
+            * 2
+            * cfg.d_head() as u64;
+        if self.cold_tokens == 0 {
+            append
+        } else {
+            let restream = self.cold_tokens as u64 * self.bytes_per_token_per_cluster;
+            if self.hot_blocks > 0 {
+                restream + append
+            } else {
+                restream
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::KvResidency;
+    use crate::model::{GPT2_SMALL, GPT3_XL};
+    use crate::testkit::{forall, Rng};
+
+    #[test]
+    fn block_tokens_follow_the_model_footprint() {
+        let geom = BlockGeometry::new(256 * 1024);
+        // GPT-2 Small: 12 layers x 12 heads x 64 d x 4 B = 36864 B/token
+        assert_eq!(BlockGeometry::bytes_per_token(&GPT2_SMALL), 36_864);
+        assert_eq!(geom.block_tokens(&GPT2_SMALL), 7);
+        assert_eq!(geom.blocks_for(&GPT2_SMALL, 64), 10);
+        // a block smaller than one token row still holds one token
+        assert_eq!(BlockGeometry::new(16).block_tokens(&GPT3_XL), 1);
+    }
+
+    #[test]
+    fn giant_block_reduces_to_the_legacy_residency_rule() {
+        forall(200, |rng: &mut Rng| {
+            let cfg = if rng.range(0, 2) == 0 { GPT2_SMALL } else { GPT3_XL };
+            let kv_len = rng.range(1, 4097) as u32;
+            let clusters = rng.range(1, 17) as u32;
+            let legacy = KvResidency::analyze(&cfg, kv_len, clusters);
+            let paged = PagedResidency::analyze(&cfg, kv_len, clusters, kv_len);
+            if paged.placement() != legacy.placement {
+                return Err(format!(
+                    "placement diverged at kv={kv_len} cl={clusters}: {:?} vs {:?}",
+                    paged.placement(),
+                    legacy.placement
+                ));
+            }
+            let (a, b) = (paged.hbm_bytes_per_step(&cfg), legacy.hbm_bytes_per_step(&cfg));
+            if a != b {
+                return Err(format!("bytes diverged at kv={kv_len} cl={clusters}: {a} vs {b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn paged_placement_pins_a_hot_tail_between_the_extremes() {
+        // 16-way GPT-2 at 128 tokens: the whole share (384 KiB) spills
+        // under the legacy rule, but 16-token blocks keep a hot tail
+        let paged = PagedResidency::analyze(&GPT2_SMALL, 128, 16, 16);
+        assert!(paged.hot_blocks > 0, "a tail block must fit the budget");
+        assert!(paged.cold_tokens > 0, "the full share must not fit");
+        assert_eq!(paged.hot_tokens + paged.cold_tokens, 128);
+        assert_eq!(paged.blocks, 8);
+        // pricing sits strictly between pure-append and full-restream
+        let bytes = paged.hbm_bytes_per_step(&GPT2_SMALL);
+        let legacy = KvResidency::analyze(&GPT2_SMALL, 128, 16);
+        let append = 12 * 1 * 4 * 64;
+        assert!(bytes > append);
+        assert!(bytes < legacy.hbm_bytes_per_step(&GPT2_SMALL));
+    }
+
+    #[test]
+    fn hot_tokens_never_exceed_the_budget_and_partial_tails_charge_fill() {
+        forall(200, |rng: &mut Rng| {
+            let kv_len = rng.range(1, 2049) as u32;
+            let clusters = rng.range(1, 17) as u32;
+            let bt = rng.range(1, 257) as u32;
+            let p = PagedResidency::analyze(&GPT2_SMALL, kv_len, clusters, bt);
+            if p.hot_tokens + p.cold_tokens != kv_len {
+                return Err("token split must cover the cache".into());
+            }
+            if p.hot_tokens as u64 * p.bytes_per_token_per_cluster > p.spm_budget {
+                return Err(format!(
+                    "hot set {} tokens overflows the budget {}",
+                    p.hot_tokens, p.spm_budget
+                ));
+            }
+            if p.blocks != kv_len.div_ceil(bt.max(1)) {
+                return Err("block count mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn smaller_blocks_never_lose_hot_tokens() {
+        // halving the block size can only refine the hot boundary:
+        // the pinned tail never shrinks when blocks get finer
+        let coarse = PagedResidency::analyze(&GPT2_SMALL, 512, 16, 64);
+        let fine = PagedResidency::analyze(&GPT2_SMALL, 512, 16, 8);
+        assert!(fine.hot_tokens >= coarse.hot_tokens);
+        assert!(
+            fine.hbm_bytes_per_step(&GPT2_SMALL) <= coarse.hbm_bytes_per_step(&GPT2_SMALL)
+        );
+    }
+}

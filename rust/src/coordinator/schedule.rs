@@ -183,6 +183,12 @@ pub enum KvPlacement {
 /// every layer** to avoid restreaming between decode steps — each
 /// layer's cache is distinct, so the whole-model share is what
 /// competes for the SPM budget.
+///
+/// Superseded by the block-granular [`super::PagedResidency`]
+/// (DESIGN.md §14): this rule is its single-unbounded-block special
+/// case, and [`KvResidency::analyze`] now delegates there. It is kept
+/// as the legacy pricing of the unpaged serve path, which doubles as
+/// the differential oracle for the paged one.
 #[derive(Clone, Copy, Debug)]
 pub struct KvResidency {
     /// Heads whose cache one cluster holds (= head rounds).
@@ -198,25 +204,19 @@ pub struct KvResidency {
 
 impl KvResidency {
     /// Analyze residency for `cfg` at KV length `kv_len` on a share of
-    /// `clusters` clusters.
+    /// `clusters` clusters: the single-unbounded-block case of the
+    /// page-aware rule — the whole cache is one tail block, hot iff the
+    /// full share fits the post-working-set SPM budget.
     pub fn analyze(cfg: &TransformerConfig, kv_len: u32, clusters: u32) -> Self {
-        let d = cfg.d_head();
-        let heads_per_cluster = HeadMap::new(cfg.heads, clusters.max(1)).rounds();
-        let kv_bytes_per_cluster = cfg.layers as u64
-            * heads_per_cluster as u64
-            * kv_len as u64
-            * d as u64
-            * 2
-            * 2;
-        let plan = DecodePlan::plan(cfg);
-        let spm_budget = SPM_BYTES as u64
-            - fa_decode_footprint(plan.sk_slice, plan.d, plan.bk) as u64;
-        let placement = if kv_bytes_per_cluster <= spm_budget {
-            KvPlacement::SpmResident
-        } else {
-            KvPlacement::HbmSpill
-        };
-        KvResidency { heads_per_cluster, kv_bytes_per_cluster, spm_budget, placement }
+        let paged =
+            super::PagedResidency::analyze(cfg, kv_len, clusters, kv_len.max(1));
+        let kv_bytes_per_cluster = kv_len as u64 * paged.bytes_per_token_per_cluster;
+        KvResidency {
+            heads_per_cluster: paged.heads_per_cluster,
+            kv_bytes_per_cluster,
+            spm_budget: paged.spm_budget,
+            placement: paged.placement(),
+        }
     }
 
     /// HBM bytes this cluster streams per decode step for KV traffic,

@@ -26,8 +26,8 @@
 //!   traffic with the [`KvResidency`] placement rule.
 
 use super::program::{KernelKind, Program, ProgramCache, ProgramKey};
-use super::Request;
-use crate::coordinator::{DecodePlan, HeadMap, KvResidency, TilePlan, CLUSTERS};
+use super::{Request, SchedPolicy};
+use crate::coordinator::{DecodePlan, HeadMap, KvResidency, PagedResidency, TilePlan, CLUSTERS};
 use crate::kernels::flash_attention::{build_fa_decode_program, build_fa_program};
 use crate::model::{Phase, WorkloadOps};
 use crate::sim::CORES_PER_CLUSTER;
@@ -78,6 +78,27 @@ impl CalShape {
     }
 }
 
+/// One live request's slot in a serving-iteration compilation: the
+/// request, the phase it runs this iteration, and — when the serve loop
+/// runs the paged KV tier — the token capacity of its cache blocks,
+/// which switches decode KV pricing from the all-or-nothing
+/// [`KvResidency`] rule to the block-granular [`PagedResidency`] one.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeEntry {
+    /// The live request.
+    pub req: Request,
+    /// The phase it runs this iteration.
+    pub phase: Phase,
+    /// Tokens per KV block (`None` = legacy unpaged pricing).
+    pub kv_block_tokens: Option<u32>,
+}
+
+/// Work-weight boost a latency-policy request receives in the
+/// cluster-share rebalance: its phase work counts this many times over
+/// before the proportional split. Uniform-policy batches are unaffected
+/// (scaling every weight equally preserves the assignment exactly).
+const LATENCY_WORK_BOOST: f64 = 4.0;
+
 /// One request, compiled and placed: its phase, cluster set, head
 /// rounds, slice repetitions, the cached slice program, and the DMA
 /// bytes each of its clusters streams.
@@ -116,6 +137,12 @@ pub struct CompiledRequest {
     /// LayerNorm elements per owned cluster (serving scope only; zero
     /// in the calibration scope).
     pub layernorm_elems_per_cluster: u64,
+    /// Decode-phase KV tokens priced hot (SPM-pinned; append-only
+    /// traffic). Zero outside the decode serving scope.
+    pub kv_hot_tokens: u32,
+    /// Decode-phase KV tokens priced cold (restreamed from HBM every
+    /// step). Zero outside the decode serving scope.
+    pub kv_cold_tokens: u32,
 }
 
 /// A scheduled, compiled batch ready for any [`super::Backend`].
@@ -279,6 +306,8 @@ impl BatchScheduler {
                     proj_flops_per_cluster: 0,
                     gelu_elems_per_cluster: 0,
                     layernorm_elems_per_cluster: 0,
+                    kv_hot_tokens: 0,
+                    kv_cold_tokens: 0,
                 }
             })
             .collect();
@@ -314,26 +343,55 @@ impl BatchScheduler {
         cache: &mut ProgramCache,
         available: &[usize],
     ) -> CompiledBatch {
+        let entries: Vec<ServeEntry> = entries
+            .iter()
+            .map(|&(req, phase)| ServeEntry { req, phase, kv_block_tokens: None })
+            .collect();
+        self.compile_entries_on(&entries, cache, available)
+    }
+
+    /// The full serving-iteration compiler: [`Self::compile_phased_on`]
+    /// plus the paged-KV and policy dimensions (DESIGN.md §14). An
+    /// entry carrying `kv_block_tokens` prices its decode KV traffic
+    /// with the block-granular [`PagedResidency`] rule (hot tail
+    /// appends, cold prefix restreams); latency-policy requests weigh
+    /// [`LATENCY_WORK_BOOST`]× in the proportional cluster split.
+    pub fn compile_entries_on(
+        &self,
+        entries: &[ServeEntry],
+        cache: &mut ProgramCache,
+        available: &[usize],
+    ) -> CompiledBatch {
         if entries.is_empty() {
             return CompiledBatch::empty(self.clusters);
         }
         let work: Vec<f64> = entries
             .iter()
-            .map(|(r, p)| WorkloadOps::for_phase(&r.cfg, *p).total().total_flops() as f64)
+            .map(|e| {
+                let w = WorkloadOps::for_phase(&e.req.cfg, e.phase).total().total_flops() as f64;
+                if e.req.policy == SchedPolicy::Latency {
+                    w * LATENCY_WORK_BOOST
+                } else {
+                    w
+                }
+            })
             .collect();
-        let caps: Vec<usize> = entries.iter().map(|(r, _)| r.cfg.heads as usize).collect();
+        let caps: Vec<usize> = entries.iter().map(|e| e.req.cfg.heads as usize).collect();
         let assignment = self.assign_by_work_on(&work, &caps, available);
         let (h0, m0) = (cache.hits, cache.misses);
         let requests = entries
             .iter()
             .zip(assignment)
-            .map(|((req, phase), clusters)| {
+            .map(|(entry, clusters)| {
+                let (req, phase) = (&entry.req, &entry.phase);
                 let n_cl = clusters.len() as u32;
                 let rounds = HeadMap::new(req.cfg.heads, n_cl).rounds();
                 let ops = WorkloadOps::for_phase(&req.cfg, *phase).total();
                 let variant = req.fa_variant();
                 let layers = req.cfg.layers as u64;
                 let proj_flops_per_cluster = ops.proj_flops / n_cl as u64;
+                let mut kv_hot_tokens = 0u32;
+                let mut kv_cold_tokens = 0u32;
                 let (plan, cal, program, slice_factor, hbm_bytes_per_cluster) = match *phase {
                     Phase::Prefill { prompt } => {
                         let prompt = prompt.max(1);
@@ -369,13 +427,33 @@ impl BatchScheduler {
                         let program = cache.get_or_build(key, || {
                             build_fa_decode_program(variant, dplan.sk_slice, dplan.d, dplan.bk)
                         });
-                        let residency = KvResidency::analyze(&req.cfg, kv_len, n_cl);
                         // the whole weight set streams once per token;
-                        // whole-model KV traffic follows the residency
-                        // placement (append when resident, restream
-                        // when spilled)
-                        let bytes = ops.weight_bytes / n_cl as u64
-                            + residency.hbm_bytes_per_step(&req.cfg);
+                        // whole-model KV traffic follows the placement
+                        // rule: block-granular when the entry carries a
+                        // paged geometry, the legacy all-or-nothing
+                        // KvResidency verdict otherwise
+                        let kv_bytes = match entry.kv_block_tokens {
+                            Some(bt) => {
+                                let paged =
+                                    PagedResidency::analyze(&req.cfg, kv_len, n_cl, bt);
+                                kv_hot_tokens = paged.hot_tokens;
+                                kv_cold_tokens = paged.cold_tokens;
+                                paged.hbm_bytes_per_step(&req.cfg)
+                            }
+                            None => {
+                                let residency = KvResidency::analyze(&req.cfg, kv_len, n_cl);
+                                match residency.placement {
+                                    crate::coordinator::KvPlacement::SpmResident => {
+                                        kv_hot_tokens = kv_len
+                                    }
+                                    crate::coordinator::KvPlacement::HbmSpill => {
+                                        kv_cold_tokens = kv_len
+                                    }
+                                }
+                                residency.hbm_bytes_per_step(&req.cfg)
+                            }
+                        };
+                        let bytes = ops.weight_bytes / n_cl as u64 + kv_bytes;
                         (
                             TilePlan::plan(&req.cfg),
                             cal,
@@ -400,6 +478,8 @@ impl BatchScheduler {
                     proj_flops_per_cluster,
                     gelu_elems_per_cluster: ops.gelu_elems / n_cl as u64,
                     layernorm_elems_per_cluster: ops.layernorm_elems / n_cl as u64,
+                    kv_hot_tokens,
+                    kv_cold_tokens,
                 }
             })
             .collect();

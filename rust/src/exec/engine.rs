@@ -125,6 +125,17 @@ impl Engine {
     /// switch itself. The returned [`ServeReport`] carries the SLO
     /// summary (tail percentiles, attainment, shed/retry counts) and
     /// per-cluster health history.
+    ///
+    /// With [`super::serve::ServeOptions::paging`] set, decode KV runs
+    /// on the paged block-pool tier (DESIGN.md §14): admission reserves
+    /// block tables from a shared fixed pool (deferring or shedding
+    /// unfittable requests), prompt heads shared via
+    /// [`super::PromptSig`] skip prefill through the radix prefix
+    /// index, allocation pressure walks LRU eviction → whole-request
+    /// preemption (evict-and-requeue, token books preserved), and each
+    /// request's [`super::SchedPolicy`] steers admission order, cluster
+    /// shares and victim choice. The report then carries a
+    /// [`super::PoolReport`] and per-policy SLO attainment.
     pub fn serve_resilient(
         &mut self,
         primary: &mut dyn Backend,

@@ -1,0 +1,360 @@
+//! The paged KV-cache block pool (DESIGN.md §14): a fixed population of
+//! refcounted, fixed-size cache blocks shared by every live request of
+//! the serve loop.
+//!
+//! Blocks move through three states:
+//!
+//! - **free** — unallocated, ready for [`BlockPool::try_alloc`];
+//! - **in use** — referenced by at least one [`BlockTable`]; prefix
+//!   sharing holds a block in several tables at once (refcount > 1);
+//! - **cached** — refcount dropped to zero but the block was released
+//!   as *cacheable* (it backs a prefix-index entry), so its contents
+//!   stay resident for future prefix hits until LRU eviction reclaims
+//!   it under allocation pressure.
+//!
+//! The pool's books are exact and checked: every allocation is matched
+//! by exactly one free (`allocated == freed + resident`, resident =
+//! in-use + cached), refcounts never underflow, and eviction only ever
+//! takes zero-reference cached blocks — the invariants the serve
+//! report's [`super::report::PoolReport`] carries outward and
+//! `ServeReport::assert_consistent` re-checks after every run.
+//! Everything is deterministic: LRU order is release order, with no
+//! wall-clock involved.
+
+/// Index of a block inside its [`BlockPool`].
+pub type BlockId = u32;
+
+/// Append classification for [`BlockPool::append_need`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppendNeed {
+    /// The tail block is exclusively owned and has room: fill in place.
+    InPlace,
+    /// The table is empty or its tail block is full: a fresh block must
+    /// be allocated and pushed.
+    NewBlock,
+    /// The tail block has room but is shared (refcount > 1): appending
+    /// requires a copy-on-write duplicate so the sharer's view stays
+    /// immutable.
+    CopyOnWrite,
+}
+
+/// Lifetime counters of a [`BlockPool`] (monotonic; reported as the
+/// pool section of the serve report).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Blocks handed out by [`BlockPool::try_alloc`].
+    pub allocated: u64,
+    /// Blocks returned to the free list (discard-released or evicted).
+    pub freed: u64,
+    /// Cached blocks reclaimed by [`BlockPool::evict_lru`].
+    pub evictions: u64,
+    /// Copy-on-write tail duplications.
+    pub cow_copies: u64,
+    /// High-water mark of blocks referenced by at least one table.
+    pub peak_in_use: usize,
+}
+
+/// A request's ordered view of its KV cache: the physical blocks
+/// holding it (shared prefixes first) and the logical token count.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    /// Physical blocks, oldest KV positions first.
+    pub blocks: Vec<BlockId>,
+    /// Tokens per block for this table's model.
+    pub block_tokens: u32,
+    /// Logical tokens the table covers.
+    pub tokens: u64,
+}
+
+impl BlockTable {
+    /// An empty table for a model whose blocks hold `block_tokens`
+    /// tokens each.
+    pub fn new(block_tokens: u32) -> Self {
+        BlockTable { blocks: Vec::new(), block_tokens: block_tokens.max(1), tokens: 0 }
+    }
+}
+
+/// Per-block pool state.
+#[derive(Clone, Copy, Debug, Default)]
+struct BlockState {
+    refs: u32,
+    filled: u32,
+}
+
+/// The fixed-capacity, refcounted KV block pool (see module docs).
+#[derive(Clone, Debug)]
+pub struct BlockPool {
+    states: Vec<BlockState>,
+    /// Free block ids; allocation pops from the back.
+    free: Vec<BlockId>,
+    /// Zero-reference cacheable blocks in release order (front = least
+    /// recently released = next eviction victim).
+    cached: std::collections::VecDeque<BlockId>,
+    /// Lifetime counters.
+    pub stats: PoolStats,
+}
+
+impl BlockPool {
+    /// A pool of `capacity` blocks, all free.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "pool needs at least one block");
+        BlockPool {
+            states: vec![BlockState::default(); capacity],
+            free: (0..capacity as BlockId).rev().collect(),
+            cached: std::collections::VecDeque::new(),
+            stats: PoolStats::default(),
+        }
+    }
+
+    /// Total blocks in the pool.
+    pub fn capacity(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Blocks currently referenced by at least one table.
+    pub fn in_use(&self) -> usize {
+        self.states.len() - self.free.len() - self.cached.len()
+    }
+
+    /// Zero-reference blocks kept resident for prefix reuse.
+    pub fn cached_count(&self) -> usize {
+        self.cached.len()
+    }
+
+    /// Unallocated blocks.
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Tokens filled into `id` so far.
+    pub fn filled(&self, id: BlockId) -> u32 {
+        self.states[id as usize].filled
+    }
+
+    /// Current reference count of `id`.
+    pub fn refs(&self, id: BlockId) -> u32 {
+        self.states[id as usize].refs
+    }
+
+    /// Allocate a free block (refcount 1, empty), or `None` if the free
+    /// list is exhausted — the caller then evicts or preempts.
+    pub fn try_alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        self.states[id as usize] = BlockState { refs: 1, filled: 0 };
+        self.stats.allocated += 1;
+        self.stats.peak_in_use = self.stats.peak_in_use.max(self.in_use());
+        Some(id)
+    }
+
+    /// Reclaim the least-recently-released cached block, returning its
+    /// id so the caller can purge it from the prefix index. `None` when
+    /// nothing is evictable (every block is free or actively shared).
+    pub fn evict_lru(&mut self) -> Option<BlockId> {
+        let id = self.cached.pop_front()?;
+        debug_assert_eq!(self.states[id as usize].refs, 0, "cached block has refs");
+        self.states[id as usize].filled = 0;
+        self.free.push(id);
+        self.stats.evictions += 1;
+        self.stats.freed += 1;
+        Some(id)
+    }
+
+    /// Take an additional reference on `id` — a prefix hit pulling a
+    /// cached (or already shared) block into another table.
+    pub fn retain(&mut self, id: BlockId) {
+        let st = &mut self.states[id as usize];
+        if st.refs == 0 {
+            // revive from the cached list
+            let pos = self
+                .cached
+                .iter()
+                .position(|&b| b == id)
+                .expect("zero-ref retained block must be cached");
+            self.cached.remove(pos);
+            // in_use is derived from the free/cached lists, so the
+            // revived block is already counted
+            self.stats.peak_in_use = self.stats.peak_in_use.max(self.in_use());
+        }
+        st.refs += 1;
+    }
+
+    /// Drop one reference on `id`. At zero references the block either
+    /// stays resident on the cached LRU list (`cacheable`, i.e. a
+    /// prefix-index entry still points at it) or returns to the free
+    /// list immediately.
+    pub fn release(&mut self, id: BlockId, cacheable: bool) {
+        let st = &mut self.states[id as usize];
+        assert!(st.refs > 0, "double free of block {id}");
+        st.refs -= 1;
+        if st.refs == 0 {
+            if cacheable {
+                self.cached.push_back(id);
+            } else {
+                st.filled = 0;
+                self.free.push(id);
+                self.stats.freed += 1;
+            }
+        }
+    }
+
+    /// Record `tokens` tokens as filled into `id` (prefill lands whole
+    /// blocks at once; decode appends one row per step).
+    pub fn fill(&mut self, id: BlockId, tokens: u32) {
+        self.states[id as usize].filled = tokens;
+    }
+
+    /// How the next single-token append to `table` must proceed.
+    pub fn append_need(&self, table: &BlockTable) -> AppendNeed {
+        match table.blocks.last() {
+            None => AppendNeed::NewBlock,
+            Some(&tail) => {
+                let st = &self.states[tail as usize];
+                if st.filled >= table.block_tokens {
+                    AppendNeed::NewBlock
+                } else if st.refs > 1 {
+                    AppendNeed::CopyOnWrite
+                } else {
+                    AppendNeed::InPlace
+                }
+            }
+        }
+    }
+
+    /// Append one token into the exclusively-owned tail block.
+    pub fn append_in_place(&mut self, table: &mut BlockTable) {
+        let tail = *table.blocks.last().expect("in-place append needs a tail");
+        let st = &mut self.states[tail as usize];
+        debug_assert_eq!(st.refs, 1, "in-place append into a shared block");
+        debug_assert!(st.filled < table.block_tokens);
+        st.filled += 1;
+        table.tokens += 1;
+    }
+
+    /// Push a freshly allocated block as the new tail and fill its
+    /// first token.
+    pub fn push_tail(&mut self, table: &mut BlockTable, id: BlockId) {
+        debug_assert_eq!(self.states[id as usize].refs, 1);
+        self.states[id as usize].filled = 1;
+        table.blocks.push(id);
+        table.tokens += 1;
+    }
+
+    /// Copy-on-write append: duplicate the shared tail's contents into
+    /// the freshly allocated `id`, append the token there, and drop
+    /// this table's reference on the shared original (which stays
+    /// `keep_cacheable` for its remaining sharers).
+    pub fn cow_tail(&mut self, table: &mut BlockTable, id: BlockId, keep_cacheable: bool) {
+        let old = *table.blocks.last().expect("COW append needs a tail");
+        debug_assert!(self.states[old as usize].refs > 1, "COW of an exclusive block");
+        let copied = self.states[old as usize].filled;
+        debug_assert!(copied < table.block_tokens);
+        self.states[id as usize].filled = copied + 1;
+        *table.blocks.last_mut().expect("tail checked") = id;
+        table.tokens += 1;
+        self.release(old, keep_cacheable);
+        self.stats.cow_copies += 1;
+    }
+
+    /// Duplicate a table, sharing every block (the branch point of
+    /// speculative decoding): refcounts rise, no bytes move. Appends
+    /// through either table then trigger [`AppendNeed::CopyOnWrite`].
+    pub fn fork(&mut self, table: &BlockTable) -> BlockTable {
+        for &b in &table.blocks {
+            self.retain(b);
+        }
+        table.clone()
+    }
+
+    /// Check the pool's books; panics with the failed invariant.
+    /// `allocated == freed + resident` with resident = in-use + cached,
+    /// and the three state populations exactly tile the capacity.
+    pub fn assert_books(&self) {
+        let resident = self.in_use() + self.cached.len();
+        assert_eq!(
+            self.stats.allocated,
+            self.stats.freed + resident as u64,
+            "pool books: allocated != freed + resident"
+        );
+        assert_eq!(
+            self.free.len() + self.cached.len() + self.in_use(),
+            self.capacity(),
+            "pool states must tile the capacity"
+        );
+        for &b in &self.cached {
+            assert_eq!(self.states[b as usize].refs, 0, "cached block {b} has refs");
+        }
+        for &b in &self.free {
+            assert_eq!(self.states[b as usize].refs, 0, "free block {b} has refs");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_books_balance() {
+        let mut pool = BlockPool::new(4);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        assert_eq!(pool.in_use(), 2);
+        pool.release(a, false);
+        pool.release(b, true); // stays cached
+        assert_eq!((pool.in_use(), pool.cached_count(), pool.free_count()), (0, 1, 3));
+        pool.assert_books();
+        assert_eq!(pool.stats.allocated, 2);
+        assert_eq!(pool.stats.freed, 1);
+    }
+
+    #[test]
+    fn eviction_takes_the_least_recently_released_block() {
+        let mut pool = BlockPool::new(3);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        let c = pool.try_alloc().unwrap();
+        pool.release(b, true);
+        pool.release(a, true);
+        pool.release(c, true);
+        assert_eq!(pool.evict_lru(), Some(b), "b was released first");
+        assert_eq!(pool.evict_lru(), Some(a));
+        // retain revives c off the cached list; nothing evictable left
+        pool.retain(c);
+        assert_eq!(pool.evict_lru(), None);
+        pool.release(c, false);
+        pool.assert_books();
+    }
+
+    #[test]
+    fn shared_tail_append_goes_copy_on_write() {
+        let mut pool = BlockPool::new(4);
+        let mut t = BlockTable::new(4);
+        let b = pool.try_alloc().unwrap();
+        pool.push_tail(&mut t, b);
+        pool.append_in_place(&mut t);
+        assert_eq!((t.tokens, pool.filled(b)), (2, 2));
+
+        let mut fork = pool.fork(&t);
+        assert_eq!(pool.refs(b), 2);
+        assert_eq!(pool.append_need(&fork), AppendNeed::CopyOnWrite);
+        let fresh = pool.try_alloc().unwrap();
+        pool.cow_tail(&mut fork, fresh, false);
+        assert_eq!(pool.stats.cow_copies, 1);
+        assert_eq!(pool.filled(fresh), 3, "copied fill plus the append");
+        assert_eq!(pool.refs(b), 1, "the fork dropped its shared ref");
+        // the original's view is untouched
+        assert_eq!((t.tokens, pool.filled(b)), (2, 2));
+        assert_eq!(pool.append_need(&t), AppendNeed::InPlace);
+        assert_eq!(fork.tokens, 3);
+        pool.assert_books();
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_release_panics() {
+        let mut pool = BlockPool::new(2);
+        let a = pool.try_alloc().unwrap();
+        pool.release(a, false);
+        pool.release(a, false);
+    }
+}

@@ -27,25 +27,62 @@ pub mod analytic;
 pub mod batch;
 pub mod cyclesim;
 pub mod engine;
+pub mod kvpool;
+pub mod prefix;
 pub mod program;
 pub mod report;
 pub mod serve;
 pub mod trace;
 
 pub use analytic::AnalyticBackend;
-pub use batch::{BatchScheduler, CalShape, CompiledBatch, CompiledRequest};
+pub use batch::{BatchScheduler, CalShape, CompiledBatch, CompiledRequest, ServeEntry};
 pub use cyclesim::CycleSimBackend;
 pub use engine::Engine;
+pub use kvpool::{AppendNeed, BlockId, BlockPool, BlockTable, PoolStats};
+pub use prefix::PrefixIndex;
 pub use program::{KernelKind, Program, ProgramCache, ProgramKey};
-pub use report::{BatchReport, Outcome, RunReport};
+pub use report::{BatchReport, Outcome, PoolReport, RunReport};
 pub use serve::{
-    ClusterHealth, IterationEntry, IterationRecord, ServeOptions, ServeReport, SloSummary,
+    ClusterHealth, IterationEntry, IterationRecord, PagedKvOptions, ServeOptions, ServeReport,
+    SloSummary,
 };
 pub use trace::{TraceKind, TraceSpec};
 
 use crate::kernels::flash_attention::FaVariant;
 use crate::kernels::softmax::SoftmaxVariant;
 use crate::model::{Phase, TransformerConfig};
+
+/// Per-request scheduling objective of the paged serve loop (DESIGN.md
+/// §14): what the admission controller and the per-iteration batch
+/// composer optimize this request for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Maximize aggregate tokens/s: FIFO admission, work-proportional
+    /// cluster shares, first in line as a preemption victim. The
+    /// default — a uniformly throughput-policy run schedules exactly
+    /// like the pre-policy loop.
+    #[default]
+    Throughput,
+    /// Minimize this request's latency: jumps the admission queue ahead
+    /// of ready throughput traffic, gets a boosted cluster share, and
+    /// is preempted only when no throughput victim exists.
+    Latency,
+}
+
+/// Deterministic prompt-content signature (DESIGN.md §14). Requests
+/// stay `Copy` and carry no token arrays; instead the signature names a
+/// pure token stream: positions below `head_len` hash from `head_seed`
+/// (shared by every request carrying the same seed — the shareable
+/// prompt head), positions beyond hash from the request id (unique
+/// tail). The default signature (`head_len == 0`) makes the whole
+/// prompt request-unique, i.e. nothing is shareable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PromptSig {
+    /// Seed of the shared head stream.
+    pub head_seed: u64,
+    /// Prompt positions drawn from the shared stream.
+    pub head_len: u32,
+}
 
 /// One inference request: a model configuration, which kernel
 /// optimizations its deployment enables (the paper's baseline/optimized
@@ -75,6 +112,11 @@ pub struct Request {
     /// as [`Outcome::TimedOut`] (keeping partial progress) once the
     /// clock passes `arrival_cycles + deadline`. `None` = no deadline.
     pub deadline_cycles: Option<u64>,
+    /// Scheduling objective in the paged serve loop (admission order,
+    /// cluster-share boost, preemption-victim order).
+    pub policy: SchedPolicy,
+    /// Prompt-content signature for paged prefix sharing.
+    pub prompt_sig: PromptSig,
 }
 
 impl Request {
@@ -89,6 +131,8 @@ impl Request {
             arrival_iter: 0,
             arrival_cycles: 0,
             deadline_cycles: None,
+            policy: SchedPolicy::default(),
+            prompt_sig: PromptSig::default(),
         }
     }
 
@@ -118,6 +162,19 @@ impl Request {
     /// Set a completion deadline, in cycles after arrival.
     pub fn with_deadline(mut self, cycles: u64) -> Self {
         self.deadline_cycles = Some(cycles);
+        self
+    }
+
+    /// Set the scheduling objective for the paged serve loop.
+    pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Mark the first `head_len` prompt tokens as drawn from the shared
+    /// stream `head_seed` (prefix-shareable with same-seed requests).
+    pub fn with_shared_head(mut self, head_seed: u64, head_len: u32) -> Self {
+        self.prompt_sig = PromptSig { head_seed, head_len: head_len.min(self.cfg.seq) };
         self
     }
 

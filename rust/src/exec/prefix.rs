@@ -1,0 +1,244 @@
+//! Prefix sharing for the paged KV tier (DESIGN.md §14): deterministic
+//! prompt-token materialization and the radix-tree index that lets
+//! requests with a common prompt head share physical cache blocks and
+//! skip the redundant part of prefill.
+//!
+//! Requests carry no literal token arrays (they stay `Copy`); instead a
+//! [`super::PromptSig`] names a deterministic token *stream*: position
+//! `i` of the prompt is a pure hash of `(head_seed, i)` inside the
+//! shared head and of `(request id, i)` beyond it. Two requests whose
+//! signatures share a `head_seed` therefore materialize byte-identical
+//! head tokens — shareable — while their tails are unique by id.
+//!
+//! The index keys whole blocks only: a chunk of `block_tokens` tokens
+//! hashes to one fingerprint (salted by model and block geometry, so
+//! unrelated models never collide), and a lookup walks the tree chunk
+//! by chunk, returning the physical blocks of the longest fully-matched
+//! chunk path. Partial-block sharing is deliberately out of scope — a
+//! shared block is immutable while shared, which is what keeps the
+//! serve loop's appends copy-free (copy-on-write remains at the pool
+//! level for forked tables, e.g. future speculative decoding).
+
+use super::kvpool::BlockId;
+use super::Request;
+use crate::testkit::mix;
+
+/// Domain separation for unique (non-shared) prompt tail tokens.
+const UNIQ_STREAM: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Token at position `i` of `req`'s prompt: from the shared-head stream
+/// while `i < head_len`, from the request-unique stream beyond.
+pub fn prompt_token(req: &Request, i: u32) -> u32 {
+    let sig = req.prompt_sig;
+    if i < sig.head_len {
+        mix(sig.head_seed, i as u64) as u32
+    } else {
+        mix(mix(UNIQ_STREAM, req.id), i as u64) as u32
+    }
+}
+
+/// Materialize the first `len` prompt tokens of `req`.
+pub fn prompt_tokens(req: &Request, len: u32) -> Vec<u32> {
+    (0..len).map(|i| prompt_token(req, i)).collect()
+}
+
+/// Fingerprint of one whole-block token chunk (FNV-1a over the model
+/// name, the block geometry, and the chunk's tokens). Salting with the
+/// geometry keeps indexes of different block sizes disjoint.
+fn chunk_fp(model: &str, block_tokens: u32, chunk: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for b in model.bytes() {
+        eat(b);
+    }
+    for b in block_tokens.to_le_bytes() {
+        eat(b);
+    }
+    for &t in chunk {
+        for b in t.to_le_bytes() {
+            eat(b);
+        }
+    }
+    h
+}
+
+/// Fingerprints of every *full* block-sized chunk of `req`'s prompt
+/// (the partial tail chunk is never shareable and never indexed).
+pub fn chunk_fingerprints(req: &Request, block_tokens: u32) -> Vec<u64> {
+    let bt = block_tokens.max(1);
+    let full = req.cfg.seq / bt;
+    (0..full)
+        .map(|c| {
+            let toks = (c * bt..(c + 1) * bt)
+                .map(|i| prompt_token(req, i))
+                .collect::<Vec<_>>();
+            chunk_fp(req.cfg.name, bt, &toks)
+        })
+        .collect()
+}
+
+/// One radix-tree node: a chunk fingerprint, the physical block that
+/// holds the chunk, and the continuations seen after it.
+#[derive(Clone, Debug)]
+struct Node {
+    fp: u64,
+    block: BlockId,
+    children: Vec<Node>,
+}
+
+/// The prefix index: a radix tree over whole-block chunk fingerprints,
+/// mapping every indexed prompt head to the physical blocks that hold
+/// it. First insert wins per path position — concurrent identical
+/// prompts register one canonical block per chunk; a loser's duplicate
+/// block simply stays unindexed and is discarded when its table frees.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixIndex {
+    roots: Vec<Node>,
+}
+
+impl PrefixIndex {
+    /// An empty index.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Longest indexed chunk-path matching `fps`, as the physical
+    /// blocks along it (in prompt order). The caller must `retain`
+    /// every returned block before using it.
+    pub fn lookup(&self, fps: &[u64]) -> Vec<BlockId> {
+        let mut out = Vec::new();
+        let mut level = &self.roots;
+        for fp in fps {
+            match level.iter().find(|n| n.fp == *fp) {
+                Some(n) => {
+                    out.push(n.block);
+                    level = &n.children;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Register `blocks` as the physical home of the chunk path `fps`.
+    /// Existing nodes keep their canonical block; the returned vector
+    /// holds the canonical block per position (callers use it to learn
+    /// which of their own blocks actually joined the index).
+    pub fn insert(&mut self, fps: &[u64], blocks: &[BlockId]) -> Vec<BlockId> {
+        assert_eq!(fps.len(), blocks.len(), "one block per chunk");
+        let mut canonical = Vec::with_capacity(fps.len());
+        let mut level = &mut self.roots;
+        for (fp, &block) in fps.iter().zip(blocks) {
+            let pos = match level.iter().position(|n| n.fp == *fp) {
+                Some(p) => p,
+                None => {
+                    level.push(Node { fp: *fp, block, children: Vec::new() });
+                    level.len() - 1
+                }
+            };
+            canonical.push(level[pos].block);
+            level = &mut level[pos].children;
+        }
+        canonical
+    }
+
+    /// Purge every subtree rooted at a node holding `block` — called
+    /// when the pool evicts the block, so the index never points at
+    /// reclaimed storage. Descendant chunks become unreachable (their
+    /// prefix is gone) and their blocks age out of the pool's LRU list.
+    pub fn remove_block(&mut self, block: BlockId) {
+        fn prune(nodes: &mut Vec<Node>, block: BlockId) {
+            nodes.retain(|n| n.block != block);
+            for n in nodes {
+                prune(&mut n.children, block);
+            }
+        }
+        prune(&mut self.roots, block);
+    }
+
+    /// Is `block` currently the canonical home of any indexed chunk?
+    /// (Release-time cacheability: only indexed blocks stay resident.)
+    pub fn contains_block(&self, block: BlockId) -> bool {
+        fn walk(nodes: &[Node], block: BlockId) -> bool {
+            nodes.iter().any(|n| n.block == block || walk(&n.children, block))
+        }
+        walk(&self.roots, block)
+    }
+
+    /// Total indexed chunks (tree nodes).
+    pub fn len(&self) -> usize {
+        fn count(nodes: &[Node]) -> usize {
+            nodes.iter().map(|n| 1 + count(&n.children)).sum()
+        }
+        count(&self.roots)
+    }
+
+    /// True when nothing is indexed.
+    pub fn is_empty(&self) -> bool {
+        self.roots.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::PromptSig;
+    use crate::model::GPT2_SMALL;
+
+    fn req_with(id: u64, seq: u32, sig: PromptSig) -> Request {
+        let mut cfg = GPT2_SMALL;
+        cfg.seq = seq;
+        let mut r = Request::new(id, cfg);
+        r.prompt_sig = sig;
+        r
+    }
+
+    #[test]
+    fn shared_heads_materialize_identical_tokens_and_unique_tails() {
+        let sig = PromptSig { head_seed: 77, head_len: 32 };
+        let a = req_with(1, 64, sig);
+        let b = req_with(2, 64, sig);
+        let (ta, tb) = (prompt_tokens(&a, 64), prompt_tokens(&b, 64));
+        assert_eq!(ta[..32], tb[..32], "shared head must be byte-identical");
+        assert_ne!(ta[32..], tb[32..], "tails must be request-unique");
+        // fingerprints agree exactly on the shared whole blocks
+        let (fa, fb) = (chunk_fingerprints(&a, 16), chunk_fingerprints(&b, 16));
+        assert_eq!(fa.len(), 4);
+        assert_eq!(fa[..2], fb[..2]);
+        assert_ne!(fa[2..], fb[2..]);
+    }
+
+    #[test]
+    fn lookup_returns_the_longest_indexed_path() {
+        let mut idx = PrefixIndex::new();
+        idx.insert(&[10, 20, 30], &[0, 1, 2]);
+        assert_eq!(idx.lookup(&[10, 20, 30, 40]), vec![0, 1, 2]);
+        assert_eq!(idx.lookup(&[10, 99]), vec![0]);
+        assert_eq!(idx.lookup(&[99]), Vec::<BlockId>::new());
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn first_insert_wins_and_reports_the_canonical_blocks() {
+        let mut idx = PrefixIndex::new();
+        idx.insert(&[10, 20], &[0, 1]);
+        let canonical = idx.insert(&[10, 20, 30], &[5, 6, 7]);
+        assert_eq!(canonical, vec![0, 1, 7], "existing nodes keep their block");
+        assert_eq!(idx.lookup(&[10, 20, 30]), vec![0, 1, 7]);
+        assert!(idx.contains_block(7) && !idx.contains_block(5));
+    }
+
+    #[test]
+    fn remove_block_prunes_the_whole_subtree() {
+        let mut idx = PrefixIndex::new();
+        idx.insert(&[10, 20, 30], &[0, 1, 2]);
+        idx.insert(&[10, 21], &[0, 3]);
+        idx.remove_block(1);
+        assert_eq!(idx.lookup(&[10, 20, 30]), vec![0], "subtree under 1 is gone");
+        assert_eq!(idx.lookup(&[10, 21]), vec![0, 3], "sibling branch survives");
+        assert!(!idx.contains_block(2), "descendants unreachable");
+    }
+}

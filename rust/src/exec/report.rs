@@ -1,5 +1,6 @@
 //! The unified result types every backend returns.
 
+use super::SchedPolicy;
 use crate::sim::{ClusterStats, CLOCK_HZ};
 
 /// How a served request left the system (continuous-batching scope;
@@ -79,6 +80,16 @@ pub struct RunReport {
     /// this report's results are untrusted (batch-execute scope; the
     /// serve loop retries instead of surfacing this).
     pub failed: bool,
+    /// Scheduling objective the request was served under.
+    pub policy: SchedPolicy,
+    /// The request's decode-token target (0 for prefill-only), so the
+    /// token books are auditable from the report alone.
+    pub token_target: u32,
+    /// Prompt tokens whose prefill this request skipped via paged
+    /// prefix hits (cumulative over resumes; zero off the paged path).
+    pub prefix_hit_tokens: u32,
+    /// Times the paged loop preempted this request (evict-and-requeue).
+    pub preemptions: u32,
 }
 
 impl RunReport {
@@ -119,6 +130,45 @@ impl RunReport {
             self.tokens as f64 / (self.cycles / CLOCK_HZ)
         }
     }
+}
+
+/// Page-pool section of a paged serve run's report (DESIGN.md §14):
+/// the block pool's lifetime books plus the sharing/eviction/preemption
+/// counters. Present on [`super::ServeReport`] only when the run used
+/// the paged KV tier; `ServeReport::assert_consistent` re-checks the
+/// books (`allocated == freed + resident`) on every run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolReport {
+    /// Total blocks in the pool.
+    pub capacity_blocks: usize,
+    /// Bytes per block.
+    pub block_bytes: u64,
+    /// Blocks allocated over the run.
+    pub allocated: u64,
+    /// Blocks returned to the free list (discarded or evicted).
+    pub freed: u64,
+    /// Blocks still resident at the end (in use + prefix-cached).
+    pub resident: u64,
+    /// Cached blocks reclaimed by LRU eviction under pressure.
+    pub evictions: u64,
+    /// Copy-on-write tail duplications.
+    pub cow_copies: u64,
+    /// Whole-request preemptions (evict-and-requeue).
+    pub preemptions: u32,
+    /// Preempted requests re-admitted with their token books intact.
+    pub resumes: u32,
+    /// Prefix-index hits (whole blocks reused across requests).
+    pub prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped through those hits.
+    pub prefix_hit_tokens: u64,
+    /// High-water mark of blocks referenced by live requests.
+    pub peak_blocks_in_use: usize,
+    /// Requests shed at admission because their lifetime block need
+    /// exceeds the whole pool (they could never run to completion).
+    pub shed_unfittable: u32,
+    /// Admissions deferred because the pool was exhausted by live
+    /// requests (retried on a later iteration).
+    pub deferrals: u32,
 }
 
 /// Result of executing a [`super::CompiledBatch`]: one report per

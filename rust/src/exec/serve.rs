@@ -38,11 +38,15 @@
 //! end of the prefill iteration. Each decode iteration produces one
 //! more token at KV length `prompt + generated`.
 
-use super::batch::BatchScheduler;
+use super::batch::{BatchScheduler, ServeEntry};
+use super::kvpool::{AppendNeed, BlockId, BlockPool, BlockTable};
+use super::prefix::{chunk_fingerprints, PrefixIndex};
 use super::program::ProgramCache;
-use super::report::{Outcome, RunReport};
-use super::{Backend, ExecMode, Request};
+use super::report::{Outcome, PoolReport, RunReport};
+use super::{Backend, ExecMode, Request, SchedPolicy};
+use crate::coordinator::BlockGeometry;
 use crate::model::Phase;
+use std::collections::VecDeque;
 
 /// One live request's share of an iteration, for the record log.
 #[derive(Clone, Debug)]
@@ -73,6 +77,49 @@ pub struct IterationRecord {
     pub attempts: u32,
     /// Clusters quarantined or offline while this iteration planned.
     pub quarantined: Vec<usize>,
+}
+
+/// Configuration of the paged KV-cache tier (DESIGN.md §14): a shared
+/// pool of fixed-size byte blocks replaces the legacy per-request
+/// all-or-nothing KV residency. `None` on [`ServeOptions::paging`]
+/// keeps the legacy unpaged path bit-identical to before.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PagedKvOptions {
+    /// Bytes per pool block (whole-model K+V cache; each model converts
+    /// this into its own token capacity).
+    pub block_bytes: u64,
+    /// Total pool bytes; `pool_bytes / block_bytes` blocks are shared
+    /// by every live request.
+    pub pool_bytes: u64,
+    /// Enable radix-tree prefix sharing: requests whose prompts share a
+    /// head reuse each other's cached blocks and skip that much
+    /// prefill.
+    pub share_prefix: bool,
+}
+
+impl Default for PagedKvOptions {
+    fn default() -> Self {
+        PagedKvOptions {
+            block_bytes: 1 << 20,
+            pool_bytes: 64 << 20,
+            share_prefix: false,
+        }
+    }
+}
+
+impl PagedKvOptions {
+    /// Blocks in the pool.
+    pub fn capacity_blocks(&self) -> usize {
+        (self.pool_bytes / self.block_bytes.max(1)).max(1) as usize
+    }
+
+    /// The differential-oracle configuration: blocks so large every
+    /// request's whole lifetime cache is one block, a pool deep enough
+    /// to never evict or defer, and no sharing. A run under this
+    /// configuration must be bit-identical to the legacy unpaged path.
+    pub fn unbounded() -> Self {
+        PagedKvOptions { block_bytes: 1 << 30, pool_bytes: 1 << 40, share_prefix: false }
+    }
 }
 
 /// Admission, deadline, retry and degradation policy for the resilient
@@ -113,6 +160,10 @@ pub struct ServeOptions {
     /// Ready-backlog pressure at which the loop degrades to analytic
     /// estimates ([`ExecMode::Analytic`]).
     pub degrade_analytic_at: usize,
+    /// Paged KV-cache tier (DESIGN.md §14): `Some` runs decode requests
+    /// against the shared block pool with prefix sharing, LRU eviction
+    /// and preemption; `None` keeps the legacy unpaged KV path.
+    pub paging: Option<PagedKvOptions>,
 }
 
 impl Default for ServeOptions {
@@ -129,6 +180,7 @@ impl Default for ServeOptions {
             quarantine_iters: 3,
             degrade_sampled_at: usize::MAX,
             degrade_analytic_at: usize::MAX,
+            paging: None,
         }
     }
 }
@@ -162,6 +214,12 @@ pub struct SloSummary {
     /// Fraction of submitted requests that completed within the SLO
     /// targets (completed fraction when no targets are set).
     pub attainment: f64,
+    /// SLO attainment over throughput-policy requests only (1.0 when
+    /// the run had none).
+    pub attainment_throughput: f64,
+    /// SLO attainment over latency-policy requests only (1.0 when the
+    /// run had none).
+    pub attainment_latency: f64,
     /// Requests that retired normally.
     pub completed: u32,
     /// Requests the admission controller shed.
@@ -223,6 +281,9 @@ pub struct ServeReport {
     pub slo: SloSummary,
     /// Per-cluster health history (failures, quarantine, offline).
     pub health: Vec<ClusterHealth>,
+    /// Page-pool books and sharing/eviction/preemption counters; `None`
+    /// off the paged path.
+    pub pool: Option<PoolReport>,
 }
 
 impl ServeReport {
@@ -252,8 +313,15 @@ impl ServeReport {
     ///   counts sum to `per_request.len()`;
     /// - shed requests never executed: zero tokens, energy, TTFT and
     ///   decode latency — they appear in counts but not throughput;
-    /// - retried work grants no extra tokens: every request's `tokens`
-    ///   is bounded by prefill + its decode target.
+    /// - retried, preempted or prefix-shared work grants no extra
+    ///   tokens: every request's `tokens` is bounded by its decode
+    ///   target (so prefix-shared prompt tokens are never
+    ///   double-counted in tokens/s), and a completed request produced
+    ///   exactly its target;
+    /// - paged runs balance the page-pool books: blocks allocated =
+    ///   freed + resident, every resume had a preemption, and the
+    ///   pool's prefix/preemption counters are attributed to requests
+    ///   exactly once.
     pub fn assert_consistent(&self) {
         let by_outcome = |o: Outcome| {
             self.per_request.iter().filter(|r| r.outcome == o).count() as u32
@@ -291,6 +359,51 @@ impl ServeReport {
                     r.request_id
                 );
             }
+            assert!(
+                r.tokens <= r.token_target,
+                "request {} produced {} tokens past its target {}",
+                r.request_id,
+                r.tokens,
+                r.token_target
+            );
+            if r.outcome == Outcome::Completed {
+                assert_eq!(
+                    r.tokens, r.token_target,
+                    "completed request {} must produce exactly its target",
+                    r.request_id
+                );
+            }
+        }
+        if let Some(p) = &self.pool {
+            assert_eq!(
+                p.allocated,
+                p.freed + p.resident,
+                "pool books: blocks allocated must equal freed + resident"
+            );
+            assert!(p.evictions <= p.freed, "evictions are a subset of frees");
+            assert!(
+                p.resumes <= p.preemptions,
+                "every resume must follow a preemption"
+            );
+            let hit_tokens: u64 =
+                self.per_request.iter().map(|r| r.prefix_hit_tokens as u64).sum();
+            assert_eq!(
+                hit_tokens, p.prefix_hit_tokens,
+                "prefix-hit savings must be attributed to requests exactly once"
+            );
+            let preemptions: u64 =
+                self.per_request.iter().map(|r| r.preemptions as u64).sum();
+            assert_eq!(
+                preemptions, p.preemptions as u64,
+                "preemptions must be attributed to requests exactly once"
+            );
+        } else {
+            assert!(
+                self.per_request
+                    .iter()
+                    .all(|r| r.prefix_hit_tokens == 0 && r.preemptions == 0),
+                "unpaged runs cannot report prefix hits or preemptions"
+            );
         }
     }
 }
@@ -302,6 +415,24 @@ struct LiveReq {
     prefilled: bool,
     /// Tokens produced so far (the prefill's first token included).
     generated: u32,
+    /// The request has completed a prefill at least once (stays set
+    /// across preemptions, so a resume's re-prefill never re-grants the
+    /// first token or resets TTFT).
+    ever_prefilled: bool,
+    /// Paged KV block table (decode requests on the paged path only).
+    table: Option<BlockTable>,
+    /// Prompt tokens skipped in the *current* prefill via prefix hits.
+    skip_tokens: u32,
+    /// Generated-KV tokens a resumed prefill must rebuild (set at
+    /// preemption to the tokens generated so far; zero otherwise).
+    restore_tokens: u32,
+    /// This iteration preempted the request: its table is already
+    /// freed; it moves to the preempted queue instead of retiring.
+    preempt_pending: bool,
+    /// Times the request was preempted.
+    preemptions: u32,
+    /// Cumulative prompt tokens skipped via prefix hits (over resumes).
+    prefix_hit_tokens: u32,
     admit_clock: u64,
     /// TTFT/deadline reference: the open-loop arrival clock when the
     /// request carries one, else the admission clock (legacy traffic).
@@ -338,6 +469,13 @@ impl LiveReq {
             req,
             prefilled: false,
             generated: 0,
+            ever_prefilled: false,
+            table: None,
+            skip_tokens: 0,
+            restore_tokens: 0,
+            preempt_pending: false,
+            preemptions: 0,
+            prefix_hit_tokens: 0,
             admit_clock,
             arrival_ref,
             deadline_clock,
@@ -355,10 +493,15 @@ impl LiveReq {
         }
     }
 
-    /// Phase this request runs next.
+    /// Phase this request runs next. A prefill spans the prompt plus
+    /// any generated KV a preemption discarded (`restore_tokens`),
+    /// minus the head prefix sharing let it skip (`skip_tokens`); on
+    /// the legacy path both are zero and this is the plain prompt.
     fn phase(&self) -> Phase {
         if !self.prefilled {
-            Phase::Prefill { prompt: self.req.cfg.seq }
+            let span = (self.req.cfg.seq + self.restore_tokens)
+                .saturating_sub(self.skip_tokens);
+            Phase::Prefill { prompt: span.max(1) }
         } else {
             Phase::Decode { kv_len: self.req.cfg.seq + self.generated }
         }
@@ -398,6 +541,10 @@ impl LiveReq {
             decode_token_cycles,
             outcome,
             retries: self.retries,
+            policy: self.req.policy,
+            token_target: self.req.decode_tokens,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            preemptions: self.preemptions,
             ..Default::default()
         }
     }
@@ -416,6 +563,189 @@ struct Health {
 impl Health {
     fn available(&self, iter: u32) -> bool {
         !self.offline && self.quarantined_until.is_none_or(|u| iter >= u)
+    }
+}
+
+/// Runtime state of the paged KV tier inside one resilient serve run.
+struct PagedState {
+    pool: BlockPool,
+    index: PrefixIndex,
+    geom: BlockGeometry,
+    share_prefix: bool,
+    block_bytes: u64,
+    preemptions: u32,
+    resumes: u32,
+    prefix_hits: u64,
+    prefix_hit_tokens: u64,
+    shed_unfittable: u32,
+    deferrals: u32,
+}
+
+/// Outcome of a paged admission attempt.
+enum Admit {
+    /// Blocks reserved (or none needed); the request may go live.
+    Ok,
+    /// The pool is exhausted by live requests; retry next iteration.
+    Defer,
+    /// The request's lifetime block need exceeds the whole pool — it
+    /// could never complete and is shed.
+    Unfittable,
+}
+
+impl PagedState {
+    fn new(opts: &PagedKvOptions) -> Self {
+        PagedState {
+            pool: BlockPool::new(opts.capacity_blocks()),
+            index: PrefixIndex::new(),
+            geom: BlockGeometry::new(opts.block_bytes),
+            share_prefix: opts.share_prefix,
+            block_bytes: opts.block_bytes,
+            preemptions: 0,
+            resumes: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
+            shed_unfittable: 0,
+            deferrals: 0,
+        }
+    }
+
+    /// Reserve the blocks `lr` needs to (re)enter the live set: a
+    /// prefix-index lookup first (shared head blocks join the table for
+    /// free and shrink the prefill), then fresh blocks from the free
+    /// list, evicting cached blocks LRU as needed. On `Defer`
+    /// everything is rolled back. Prefill-only requests hold no table.
+    fn try_admit(&mut self, lr: &mut LiveReq) -> Admit {
+        if lr.req.decode_tokens == 0 {
+            return Admit::Ok;
+        }
+        let cfg = &lr.req.cfg;
+        let bt = self.geom.block_tokens(cfg);
+        let lifetime = self.geom.blocks_for(cfg, cfg.seq + lr.req.decode_tokens);
+        if lifetime > self.pool.capacity() as u64 {
+            self.shed_unfittable += 1;
+            return Admit::Unfittable;
+        }
+        let total_tokens = cfg.seq + lr.restore_tokens;
+        let need_total = (total_tokens as u64).div_ceil(bt as u64) as usize;
+        let mut matched: Vec<BlockId> = Vec::new();
+        if self.share_prefix {
+            matched = self.index.lookup(&chunk_fingerprints(&lr.req, bt));
+            // at least one token always prefills (the last prompt
+            // position predicts the first output token)
+            let max_match = ((total_tokens - 1) / bt) as usize;
+            matched.truncate(max_match.min(need_total));
+        }
+        for &b in &matched {
+            self.pool.retain(b);
+        }
+        let mut fresh: Vec<BlockId> = Vec::new();
+        while matched.len() + fresh.len() < need_total {
+            if let Some(b) = self.pool.try_alloc() {
+                fresh.push(b);
+            } else if let Some(evicted) = self.pool.evict_lru() {
+                self.index.remove_block(evicted);
+            } else {
+                // exhausted by live tables: roll back and defer
+                for b in fresh {
+                    self.pool.release(b, false);
+                }
+                for &b in matched.iter().rev() {
+                    let cacheable = self.index.contains_block(b);
+                    self.pool.release(b, cacheable);
+                }
+                self.deferrals += 1;
+                return Admit::Defer;
+            }
+        }
+        let skip = matched.len() as u32 * bt;
+        self.prefix_hits += matched.len() as u64;
+        self.prefix_hit_tokens += skip as u64;
+        lr.prefix_hit_tokens += skip;
+        lr.skip_tokens = skip;
+        let mut table = BlockTable::new(bt);
+        table.blocks = matched.iter().copied().chain(fresh.iter().copied()).collect();
+        // prefill fills the fresh blocks' accounting up front (their
+        // contents land during the prefill iteration)
+        for (pos, &b) in table.blocks.iter().enumerate().skip(matched.len()) {
+            let fill = if pos + 1 == need_total {
+                total_tokens - (need_total as u32 - 1) * bt
+            } else {
+                bt
+            };
+            self.pool.fill(b, fill);
+        }
+        table.tokens = total_tokens as u64;
+        lr.table = Some(table);
+        Admit::Ok
+    }
+
+    /// Drop every reference `table` holds; blocks still backing a
+    /// prefix-index entry stay resident on the LRU cached list, the
+    /// rest return to the free list.
+    fn release_table(&mut self, table: &BlockTable) {
+        for &b in &table.blocks {
+            let cacheable = self.index.contains_block(b);
+            self.pool.release(b, cacheable);
+        }
+    }
+
+    /// Evict-and-requeue `lr`: free its whole table (prompt blocks stay
+    /// prefix-cached, so a resume can re-match them), remember how much
+    /// generated KV the resume must rebuild, and flag it for the
+    /// preempted queue. Token books are preserved verbatim.
+    fn preempt(&mut self, lr: &mut LiveReq) {
+        if let Some(table) = lr.table.take() {
+            self.release_table(&table);
+        }
+        lr.restore_tokens = lr.generated;
+        lr.skip_tokens = 0;
+        lr.prefilled = false;
+        lr.preempt_pending = true;
+        lr.preemptions += 1;
+        self.preemptions += 1;
+    }
+}
+
+/// Preemption victim among `live`, excluding `me` and anything already
+/// finished, tableless or preempted: throughput-policy requests first
+/// (latency requests are preempted only when no other victim exists),
+/// latest-admitted first within a policy class (LIFO keeps the oldest
+/// investments running).
+fn pick_victim(live: &[LiveReq], me: usize) -> Option<usize> {
+    let candidate = |policy: SchedPolicy| {
+        live.iter()
+            .enumerate()
+            .rev()
+            .find(|(i, lr)| {
+                *i != me
+                    && lr.table.is_some()
+                    && !lr.preempt_pending
+                    && !lr.done()
+                    && lr.req.policy == policy
+            })
+            .map(|(i, _)| i)
+    };
+    candidate(SchedPolicy::Throughput).or_else(|| candidate(SchedPolicy::Latency))
+}
+
+/// Acquire one block for a mid-decode append, applying pressure in
+/// order: free list → LRU eviction of prefix-cached blocks → preempt a
+/// victim request (whose released blocks then feed the next round).
+/// Admission's lifetime bound guarantees this terminates with a block:
+/// the appender's total need fits the pool, and every block outside its
+/// own table is free, evictable, or held by a preemptable request.
+fn acquire_block(pg: &mut PagedState, live: &mut [LiveReq], me: usize) -> BlockId {
+    loop {
+        if let Some(b) = pg.pool.try_alloc() {
+            return b;
+        }
+        if let Some(evicted) = pg.pool.evict_lru() {
+            pg.index.remove_block(evicted);
+            continue;
+        }
+        let victim = pick_victim(live, me)
+            .expect("lifetime admission bound guarantees an acquirable block");
+        pg.preempt(&mut live[victim]);
     }
 }
 
@@ -447,8 +777,12 @@ pub(crate) fn run_resilient(
 ) -> ServeReport {
     // admit in arrival order, stable by submission id
     waiting.sort_by_key(|r| (r.arrival_iter, r.arrival_cycles, r.id));
-    let mut waiting = std::collections::VecDeque::from(waiting);
+    let mut waiting = VecDeque::from(waiting);
     let mut live: Vec<LiveReq> = Vec::new();
+    // evict-and-requeued requests, awaiting re-admission with their
+    // token books intact (paged path only)
+    let mut preempted: VecDeque<LiveReq> = VecDeque::new();
+    let mut paging: Option<PagedState> = opts.paging.as_ref().map(PagedState::new);
     let mut report = ServeReport { backend: primary.name(), ..Default::default() };
     let mut health = vec![Health::default(); scheduler.clusters];
     let mut clock: u64 = 0;
@@ -486,15 +820,76 @@ pub(crate) fn run_resilient(
             }
         });
 
+        // preempted requests expire against their deadlines while queued
+        let mut pi = 0;
+        while pi < preempted.len() {
+            if preempted[pi].expired(clock) {
+                let lr = preempted.remove(pi).expect("index checked");
+                report.slo.timed_out += 1;
+                report.per_request.push(lr.retire(clock, backend_name, Outcome::TimedOut));
+            } else {
+                pi += 1;
+            }
+        }
+
         // ---- admit --------------------------------------------------------
         let cap = opts.max_live.max(1).min(healthy.len().max(1));
-        while live.len() < cap {
-            match waiting.front() {
-                Some(r) if r.arrival_iter <= iter && r.arrival_cycles <= clock => {
-                    let r = waiting.pop_front().expect("front checked");
-                    live.push(LiveReq::new(r, clock, opts.deadline_cycles));
+        // preempted requests re-enter ahead of new arrivals (their
+        // progress is already paid for); latency-policy ones jump the
+        // preempted queue itself
+        while live.len() < cap && !preempted.is_empty() {
+            let pos = preempted
+                .iter()
+                .position(|lr| lr.req.policy == SchedPolicy::Latency)
+                .unwrap_or(0);
+            let mut lr = preempted.remove(pos).expect("position checked");
+            let pg = paging.as_mut().expect("preemption only exists on the paged path");
+            match pg.try_admit(&mut lr) {
+                Admit::Ok => {
+                    lr.preempt_pending = false;
+                    pg.resumes += 1;
+                    live.push(lr);
                 }
-                _ => break,
+                Admit::Defer => {
+                    preempted.insert(pos, lr);
+                    break;
+                }
+                // a resume is never unfittable: its lifetime block need
+                // was bounded at first admission and never grows
+                Admit::Unfittable => unreachable!("resume lifetime check cannot fail"),
+            }
+        }
+        while live.len() < cap {
+            // policy-aware pick: the first ready latency-policy request
+            // jumps the queue; otherwise strict arrival order (so a
+            // uniformly throughput-policy run admits exactly like the
+            // pre-policy loop)
+            let ready_at = |r: &Request| r.arrival_iter <= iter && r.arrival_cycles <= clock;
+            let pick = waiting
+                .iter()
+                .position(|r| ready_at(r) && r.policy == SchedPolicy::Latency)
+                .or_else(|| match waiting.front() {
+                    Some(r) if ready_at(r) => Some(0),
+                    _ => None,
+                });
+            let Some(pick) = pick else { break };
+            let r = waiting.remove(pick).expect("position checked");
+            let mut lr = LiveReq::new(r, clock, opts.deadline_cycles);
+            match paging.as_mut() {
+                Some(pg) => match pg.try_admit(&mut lr) {
+                    Admit::Ok => live.push(lr),
+                    Admit::Defer => {
+                        // pool exhausted by live tables: put it back and
+                        // retry once the live set drains
+                        waiting.insert(pick, r);
+                        break;
+                    }
+                    Admit::Unfittable => {
+                        report.slo.shed += 1;
+                        report.per_request.push(lr.retire(clock, backend_name, Outcome::Shed));
+                    }
+                },
+                None => live.push(lr),
             }
         }
 
@@ -536,6 +931,13 @@ pub(crate) fn run_resilient(
                 .push(LiveReq::new(r, clock, None).retire(clock, backend_name, Outcome::Shed));
         }
 
+        if live.is_empty() && !preempted.is_empty() {
+            // every request is parked in the preempted queue and none
+            // could resume this iteration: sit it out (bounded by
+            // max_iters; the final drain reports them if never resumed)
+            iter += 1;
+            continue;
+        }
         if live.is_empty() {
             match waiting.front() {
                 // idle gap in the arrival schedule: fast-forward
@@ -562,7 +964,8 @@ pub(crate) fn run_resilient(
         }
 
         // ---- degradation ladder -------------------------------------------
-        let pressure = live.len() + waiting.iter().filter(|r| ready(r)).count();
+        let pressure =
+            live.len() + preempted.len() + waiting.iter().filter(|r| ready(r)).count();
         let desired = if pressure >= opts.degrade_analytic_at {
             ExecMode::Analytic
         } else if pressure >= opts.degrade_sampled_at {
@@ -618,9 +1021,15 @@ pub(crate) fn run_resilient(
                 break (None, None); // everything failed into quarantine
             }
             let runnable = live.len().min(avail.len());
-            let entries: Vec<(Request, Phase)> =
-                live[..runnable].iter().map(|lr| (lr.req, lr.phase())).collect();
-            let batch = scheduler.compile_phased_on(&entries, cache, &avail);
+            let entries: Vec<ServeEntry> = live[..runnable]
+                .iter()
+                .map(|lr| ServeEntry {
+                    req: lr.req,
+                    phase: lr.phase(),
+                    kv_block_tokens: lr.table.as_ref().map(|t| t.block_tokens),
+                })
+                .collect();
+            let batch = scheduler.compile_entries_on(&entries, cache, &avail);
             let exec = match fallback {
                 Some(ref mut fb) if use_fallback => fb.execute(&batch),
                 _ => primary.execute(&batch),
@@ -679,10 +1088,14 @@ pub(crate) fn run_resilient(
             (0..scheduler.clusters).filter(|&c| !health[c].available(iter)).collect();
         if let (Some(batch), Some(exec)) = (batch, exec) {
             let mut entries_log = Vec::with_capacity(batch.requests.len());
-            for ((lr, cr), r) in live
+            // live indices that produced a decode token this iteration
+            // and hold a block table: their KV grows by one row below
+            let mut appended: Vec<usize> = Vec::new();
+            for (idx, ((lr, cr), r)) in live
                 .iter_mut()
                 .zip(&batch.requests)
                 .zip(&exec.per_request)
+                .enumerate()
             {
                 lr.last_clusters = cr.clusters.len();
                 entries_log.push(IterationEntry {
@@ -696,9 +1109,27 @@ pub(crate) fn run_resilient(
                 }
                 if !lr.prefilled {
                     lr.prefilled = true;
-                    lr.ttft_cycles = (clock - lr.arrival_ref) as f64;
-                    if lr.req.decode_tokens > 0 {
-                        lr.generated = 1; // the prefill's first token
+                    if !lr.ever_prefilled {
+                        lr.ever_prefilled = true;
+                        lr.ttft_cycles = (clock - lr.arrival_ref) as f64;
+                        if lr.req.decode_tokens > 0 {
+                            lr.generated = 1; // the prefill's first token
+                        }
+                    }
+                    // a resume's re-prefill rebuilds discarded KV only:
+                    // TTFT stays, no token is re-granted
+                    lr.restore_tokens = 0;
+                    // register the prompt's whole blocks so later
+                    // same-head arrivals can share them (first insert
+                    // wins; a loser's duplicate simply stays unindexed)
+                    if let Some(pg) = paging.as_mut() {
+                        if pg.share_prefix {
+                            if let Some(table) = lr.table.as_ref() {
+                                let fps = chunk_fingerprints(&lr.req, table.block_tokens);
+                                let n = fps.len().min(table.blocks.len());
+                                pg.index.insert(&fps[..n], &table.blocks[..n]);
+                            }
+                        }
                     }
                 } else {
                     lr.generated += 1;
@@ -708,6 +1139,36 @@ pub(crate) fn run_resilient(
                     // tokens_per_s and TTFT are measured on
                     lr.decode_cycles += iter_cycles_total;
                     lr.decode_iters += 1;
+                    if lr.table.is_some() {
+                        appended.push(idx);
+                    }
+                }
+            }
+
+            // ---- paged append: each decode token extends its table ----
+            if let Some(pg) = paging.as_mut() {
+                for &idx in &appended {
+                    // take the table out so acquire_block may preempt
+                    // other live entries without aliasing it
+                    let Some(mut table) = live[idx].table.take() else { continue };
+                    match pg.pool.append_need(&table) {
+                        AppendNeed::InPlace => pg.pool.append_in_place(&mut table),
+                        AppendNeed::NewBlock => {
+                            let fresh = acquire_block(pg, &mut live, idx);
+                            pg.pool.push_tail(&mut table, fresh);
+                        }
+                        // structurally unreachable from this loop (only
+                        // whole, full blocks are ever shared, and a full
+                        // tail classifies as NewBlock) — kept live for
+                        // forked tables, e.g. speculative decoding
+                        AppendNeed::CopyOnWrite => {
+                            let fresh = acquire_block(pg, &mut live, idx);
+                            let tail = *table.blocks.last().expect("COW implies a tail");
+                            let keep = pg.index.contains_block(tail);
+                            pg.pool.cow_tail(&mut table, fresh, keep);
+                        }
+                    }
+                    live[idx].table = Some(table);
                 }
             }
             match level {
@@ -728,11 +1189,26 @@ pub(crate) fn run_resilient(
 
         // ---- retire -------------------------------------------------------
         let mut still_live = Vec::with_capacity(live.len());
-        for lr in live {
-            if lr.done() {
+        for mut lr in live {
+            if lr.preempt_pending {
+                // evicted-and-requeued this iteration; its table is
+                // already freed. Expired ones retire instead of queuing.
+                if lr.expired(clock) {
+                    report.slo.timed_out += 1;
+                    report.per_request.push(lr.retire(clock, backend_name, Outcome::TimedOut));
+                } else {
+                    preempted.push_back(lr);
+                }
+            } else if lr.done() {
+                if let (Some(pg), Some(table)) = (paging.as_mut(), lr.table.take()) {
+                    pg.release_table(&table);
+                }
                 report.slo.completed += 1;
                 report.per_request.push(lr.retire(clock, backend_name, Outcome::Completed));
             } else if lr.expired(clock) {
+                if let (Some(pg), Some(table)) = (paging.as_mut(), lr.table.take()) {
+                    pg.release_table(&table);
+                }
                 report.slo.timed_out += 1;
                 report.per_request.push(lr.retire(clock, backend_name, Outcome::TimedOut));
             } else {
@@ -748,7 +1224,16 @@ pub(crate) fn run_resilient(
     // requests as-is, and requests never admitted with zero progress —
     // nothing submitted may vanish from the report
     let backend_name = report.backend;
-    for lr in live {
+    for mut lr in live {
+        if let (Some(pg), Some(table)) = (paging.as_mut(), lr.table.take()) {
+            pg.release_table(&table);
+        }
+        report.slo.unfinished += 1;
+        report.per_request.push(lr.retire(clock, backend_name, Outcome::Unfinished));
+    }
+    for lr in preempted {
+        // never resumed before the bound hit; tables were freed at
+        // preemption, progress is reported as-is
         report.slo.unfinished += 1;
         report.per_request.push(lr.retire(clock, backend_name, Outcome::Unfinished));
     }
@@ -757,6 +1242,25 @@ pub(crate) fn run_resilient(
         report.per_request.push(
             LiveReq::new(r, clock, None).retire(clock, backend_name, Outcome::Unfinished),
         );
+    }
+    if let Some(pg) = &paging {
+        pg.pool.assert_books();
+        report.pool = Some(PoolReport {
+            capacity_blocks: pg.pool.capacity(),
+            block_bytes: pg.block_bytes,
+            allocated: pg.pool.stats.allocated,
+            freed: pg.pool.stats.freed,
+            resident: (pg.pool.in_use() + pg.pool.cached_count()) as u64,
+            evictions: pg.pool.stats.evictions,
+            cow_copies: pg.pool.stats.cow_copies,
+            preemptions: pg.preemptions,
+            resumes: pg.resumes,
+            prefix_hits: pg.prefix_hits,
+            prefix_hit_tokens: pg.prefix_hit_tokens,
+            peak_blocks_in_use: pg.pool.stats.peak_in_use,
+            shed_unfittable: pg.shed_unfittable,
+            deferrals: pg.deferrals,
+        });
     }
     report.iterations = executed;
     report.total_cycles = clock;
@@ -808,20 +1312,37 @@ fn finish_slo(report: &mut ServeReport, opts: &ServeOptions) {
     let total = report.per_request.len();
     if total == 0 {
         report.slo.attainment = 1.0;
+        report.slo.attainment_throughput = 1.0;
+        report.slo.attainment_latency = 1.0;
         return;
     }
-    let attained = report
-        .per_request
-        .iter()
-        .filter(|r| {
-            r.outcome == Outcome::Completed
-                && opts
-                    .ttft_slo_cycles
-                    .is_none_or(|s| r.ttft_cycles <= s as f64 || r.ttft_cycles == 0.0)
-                && opts
-                    .token_slo_cycles
-                    .is_none_or(|s| r.decode_token_cycles <= s as f64)
-        })
-        .count();
+    let meets = |r: &RunReport| {
+        r.outcome == Outcome::Completed
+            && opts
+                .ttft_slo_cycles
+                .is_none_or(|s| r.ttft_cycles <= s as f64 || r.ttft_cycles == 0.0)
+            && opts
+                .token_slo_cycles
+                .is_none_or(|s| r.decode_token_cycles <= s as f64)
+    };
+    let attained = report.per_request.iter().filter(|r| meets(r)).count();
     report.slo.attainment = attained as f64 / total as f64;
+    // per-policy attainment: how each scheduling class fared (1.0 for a
+    // class the run had no requests in)
+    let class = |policy: SchedPolicy| {
+        let (mut n, mut ok) = (0usize, 0usize);
+        for r in report.per_request.iter().filter(|r| r.policy == policy) {
+            n += 1;
+            if meets(r) {
+                ok += 1;
+            }
+        }
+        if n == 0 {
+            1.0
+        } else {
+            ok as f64 / n as f64
+        }
+    };
+    report.slo.attainment_throughput = class(SchedPolicy::Throughput);
+    report.slo.attainment_latency = class(SchedPolicy::Latency);
 }

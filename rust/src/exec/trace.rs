@@ -147,6 +147,39 @@ impl TraceSpec {
         }
         out
     }
+
+    /// [`Self::mixed_traffic`] dressed for the paged KV tier (DESIGN.md
+    /// §14): the same request stream (models, prompts, arrival clocks,
+    /// deadlines — byte-identical apart from the added stamps), plus
+    ///
+    /// - a shared prompt head per GPT-2 class (half the prompt, seeded
+    ///   per class from the trace seed), so same-class requests have
+    ///   real whole-block prefix hits while their tails stay unique;
+    /// - every `latency_every`-th request stamped
+    ///   [`super::SchedPolicy::Latency`] (0 = never), so SLO attainment
+    ///   under pressure is reportable per policy class.
+    ///
+    /// ViT requests are left unstamped: prefill-only, no KV to page.
+    pub fn mixed_traffic_paged(
+        &self,
+        prompt: u32,
+        tokens: u32,
+        deadline_cycles: Option<u64>,
+        latency_every: usize,
+    ) -> Vec<Request> {
+        let mut out = self.mixed_traffic(prompt, tokens, deadline_cycles);
+        for (i, req) in out.iter_mut().enumerate() {
+            match i % 3 {
+                0 => *req = req.with_shared_head(mix(self.seed, 1), req.cfg.seq / 2),
+                1 => *req = req.with_shared_head(mix(self.seed, 2), req.cfg.seq / 2),
+                _ => {}
+            }
+            if latency_every > 0 && (i + 1) % latency_every == 0 {
+                *req = req.with_policy(super::SchedPolicy::Latency);
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -226,5 +259,33 @@ mod tests {
     fn mixed_traffic_without_deadline_leaves_requests_open() {
         let reqs = TraceSpec::poisson(3, 1_000.0, 1).mixed_traffic(32, 2, None);
         assert!(reqs.iter().all(|r| r.deadline_cycles.is_none()));
+    }
+
+    #[test]
+    fn paged_traffic_shares_heads_per_class_and_stamps_policy() {
+        use crate::exec::SchedPolicy;
+        let spec = TraceSpec::bursty(12, 20_000.0, 2);
+        let base = spec.mixed_traffic(64, 4, None);
+        let paged = spec.mixed_traffic_paged(64, 4, None, 4);
+        assert_eq!(base.len(), paged.len());
+        for (b, p) in base.iter().zip(&paged) {
+            assert_eq!(b.arrival_cycles, p.arrival_cycles, "stream timing unchanged");
+            assert_eq!((b.cfg.name, b.cfg.seq, b.decode_tokens), (p.cfg.name, p.cfg.seq, p.decode_tokens));
+        }
+        // each GPT-2 class shares one head seed; classes differ
+        assert_eq!(paged[0].prompt_sig.head_seed, paged[3].prompt_sig.head_seed);
+        assert_eq!(paged[1].prompt_sig.head_seed, paged[4].prompt_sig.head_seed);
+        assert_ne!(paged[0].prompt_sig.head_seed, paged[1].prompt_sig.head_seed);
+        assert_eq!(paged[0].prompt_sig.head_len, 32, "half the short prompt");
+        assert_eq!(paged[1].prompt_sig.head_len, 64, "half the long prompt");
+        assert_eq!(paged[2].prompt_sig.head_len, 0, "ViT stays unshared");
+        // every 4th request runs latency-policy, the rest throughput
+        assert_eq!(paged[3].policy, SchedPolicy::Latency);
+        assert_eq!(paged[7].policy, SchedPolicy::Latency);
+        assert_eq!(paged[0].policy, SchedPolicy::Throughput);
+        assert!(spec
+            .mixed_traffic_paged(64, 4, None, 0)
+            .iter()
+            .all(|r| r.policy == SchedPolicy::Throughput));
     }
 }

@@ -41,8 +41,8 @@ use vexp::energy::power::{cluster_energy_pj, power_mw};
 use vexp::energy::AreaModel;
 use vexp::error::Result;
 use vexp::exec::{
-    AnalyticBackend, Backend, CycleSimBackend, Engine, Outcome, Request, ServeOptions,
-    TraceKind, TraceSpec,
+    AnalyticBackend, Backend, CycleSimBackend, Engine, Outcome, PagedKvOptions, Request,
+    SchedPolicy, ServeOptions, TraceKind, TraceSpec,
 };
 use vexp::kernels::flash_attention::{run_flash_attention, FaVariant};
 use vexp::kernels::softmax::{run_softmax, SoftmaxVariant};
@@ -72,6 +72,19 @@ const USAGE: &str = "usage: vexp <info|exp|softmax|flashattention|e2e|serve|benc
                       slow=P:FACTOR,stall=P:CYCLES,fail=P,offline=N\n\
        --slo T:U      SLO targets, TTFT ms : per-token us (default 5:1000)\n\
        --deadline MS  per-request deadline, ms after arrival (default 25)\n\
+       --policy P     scheduling objective stamped on every trace\n\
+                      request, P = throughput | latency (default\n\
+                      throughput; latency jumps the admission queue,\n\
+                      gets a boosted cluster share and is preempted\n\
+                      last)\n\
+       --kv-block KB  run the paged KV tier (DESIGN.md \u{a7}14) with\n\
+                      KB-KiB cache blocks (default 1024 when any\n\
+                      paging flag is set)\n\
+       --kv-pool KB   total paged KV pool size in KiB (default 65536);\n\
+                      small pools force LRU eviction and preemption\n\
+       --share-prefix enable radix-tree prefix sharing: same-class\n\
+                      requests share prompt-head blocks and skip that\n\
+                      much prefill\n\
      bench options:\n\
        --json PATH    write the measured sweep as JSON\n\
        --small        single tiny configuration (CI smoke)\n\
@@ -332,6 +345,10 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     let mut slo_ttft_ms: f64 = 5.0;
     let mut slo_token_us: f64 = 1000.0;
     let mut deadline_ms: f64 = 25.0;
+    let mut policy = SchedPolicy::Throughput;
+    let mut share_prefix = false;
+    let mut kv_block_kb: Option<u64> = None;
+    let mut kv_pool_kb: Option<u64> = None;
     // first trace-only flag seen, to reject it if --trace never shows up
     let mut trace_only: Option<&'static str> = None;
 
@@ -379,6 +396,28 @@ fn serve_cmd(args: &[String]) -> Result<()> {
                 deadline_ms = flag_f64(it.next(), "serve: --deadline")?;
                 trace_only.get_or_insert("--deadline");
             }
+            "--policy" => {
+                policy = match flag_val(it.next(), "serve: --policy")? {
+                    "throughput" => SchedPolicy::Throughput,
+                    "latency" => SchedPolicy::Latency,
+                    other => {
+                        vexp::bail!("serve: --policy must be throughput|latency, got {other:?}")
+                    }
+                };
+                trace_only.get_or_insert("--policy");
+            }
+            "--share-prefix" => {
+                share_prefix = true;
+                trace_only.get_or_insert("--share-prefix");
+            }
+            "--kv-block" => {
+                kv_block_kb = Some(flag_u64(it.next(), "serve: --kv-block")?);
+                trace_only.get_or_insert("--kv-block");
+            }
+            "--kv-pool" => {
+                kv_pool_kb = Some(flag_u64(it.next(), "serve: --kv-pool")?);
+                trace_only.get_or_insert("--kv-pool");
+            }
             other => vexp::bail!("serve: unknown flag {other}"),
         }
     }
@@ -391,6 +430,17 @@ fn serve_cmd(args: &[String]) -> Result<()> {
                  the degradation fallback instead)"
             );
         }
+        // any paging flag arms the paged KV tier with defaults for the
+        // others (1 MiB blocks, 64 MiB pool, sharing off)
+        let paging = if kv_block_kb.is_some() || kv_pool_kb.is_some() || share_prefix {
+            Some(PagedKvOptions {
+                block_bytes: kv_block_kb.unwrap_or(1024) * 1024,
+                pool_bytes: kv_pool_kb.unwrap_or(65536) * 1024,
+                share_prefix,
+            })
+        } else {
+            None
+        };
         return serve_trace_cmd(TraceServeCfg {
             kind,
             requests,
@@ -403,6 +453,8 @@ fn serve_cmd(args: &[String]) -> Result<()> {
             prompt,
             tokens,
             iters,
+            policy,
+            paging,
         });
     }
     if let Some(flag) = trace_only {
@@ -495,6 +547,8 @@ struct TraceServeCfg {
     prompt: u32,
     tokens: u32,
     iters: u32,
+    policy: SchedPolicy,
+    paging: Option<PagedKvOptions>,
 }
 
 /// Trace-driven resilient serving (DESIGN.md §12): seeded open-loop
@@ -514,7 +568,21 @@ fn serve_trace_cmd(cfg: TraceServeCfg) -> Result<()> {
 
     let arrivals = spec.arrivals();
     let mut engine = Engine::new();
-    for r in spec.mixed_traffic(cfg.prompt, cfg.tokens, Some(deadline)) {
+    // the paged tier gets the prefix-shareable, policy-stamped stream
+    // (DESIGN.md §14); the legacy tier keeps the plain mix
+    let latency_every = if cfg.policy == SchedPolicy::Latency { 1 } else { 0 };
+    let traffic = if cfg.paging.is_some() {
+        spec.mixed_traffic_paged(cfg.prompt, cfg.tokens, Some(deadline), latency_every)
+    } else {
+        let mut t = spec.mixed_traffic(cfg.prompt, cfg.tokens, Some(deadline));
+        if cfg.policy == SchedPolicy::Latency {
+            for r in &mut t {
+                *r = r.with_policy(SchedPolicy::Latency);
+            }
+        }
+        t
+    };
+    for r in traffic {
         engine.submit_request(r); // ids are 0..requests, in trace order
     }
 
@@ -530,6 +598,7 @@ fn serve_trace_cmd(cfg: TraceServeCfg) -> Result<()> {
         quarantine_iters: 3,
         degrade_sampled_at: 4,
         degrade_analytic_at: 10,
+        paging: cfg.paging,
     };
 
     let armed = cfg.faults != FaultSpec::off();
@@ -591,6 +660,11 @@ fn serve_trace_cmd(cfg: TraceServeCfg) -> Result<()> {
     );
     println!("  attainment {:.1}% of all requests", s.attainment * 100.0);
     println!(
+        "  attainment by policy: throughput {:.1}%, latency {:.1}%",
+        s.attainment_throughput * 100.0,
+        s.attainment_latency * 100.0
+    );
+    println!(
         "  outcomes: {} completed, {} shed, {} timed out, {} unfinished",
         s.completed, s.shed, s.timed_out, s.unfinished
     );
@@ -602,6 +676,25 @@ fn serve_trace_cmd(cfg: TraceServeCfg) -> Result<()> {
         "  iterations: {} full, {} sampled, {} analytic ({} total, {} cycles)",
         s.full_iters, s.sampled_iters, s.analytic_iters, report.iterations, report.total_cycles
     );
+    if let Some(p) = &report.pool {
+        report.assert_consistent(); // paged books must balance on every run
+        println!(
+            "paged KV pool: {} blocks x {} KiB (peak in use {}, resident at exit {})",
+            p.capacity_blocks,
+            p.block_bytes / 1024,
+            p.peak_blocks_in_use,
+            p.resident
+        );
+        println!(
+            "  blocks: {} allocated, {} freed, evictions {}, cow copies {}",
+            p.allocated, p.freed, p.evictions, p.cow_copies
+        );
+        println!("  prefix hits {} ({} tokens saved)", p.prefix_hits, p.prefix_hit_tokens);
+        println!(
+            "  preemptions {} ({} resumed), shed unfittable {}, deferrals {}",
+            p.preemptions, p.resumes, p.shed_unfittable, p.deferrals
+        );
+    }
     for h in &report.health {
         if h.failures > 0 || h.offline || h.quarantined_iters > 0 {
             println!(
@@ -862,6 +955,82 @@ fn bench_cmd(args: &[String]) -> Result<()> {
         });
     }
 
+    // --- paged KV serving under memory pressure (DESIGN.md §14) -----------
+    // A bursty shared-prefix trace on a pool sized to force evictions;
+    // the "reference" leg is the same serve on the reference
+    // interpreter, asserted cycle-identical to the fast decoded path.
+    {
+        let (requests, prompt, toks, pool_kb): (usize, u32, u32, u64) =
+            if small { (6, 32, 4, 4096) } else { (12, 64, 8, 8192) };
+        let block_kb: u64 = 256;
+        let spec = TraceSpec::bursty(requests, 50_000.0, 9);
+        let run_paged = |reference: bool| -> (vexp::exec::ServeReport, f64) {
+            let mut engine = Engine::new();
+            for r in spec.mixed_traffic_paged(prompt, toks, None, 3) {
+                engine.submit_request(r);
+            }
+            let opts = ServeOptions {
+                max_iters: 512,
+                paging: Some(PagedKvOptions {
+                    block_bytes: block_kb * 1024,
+                    pool_bytes: pool_kb * 1024,
+                    share_prefix: true,
+                }),
+                ..ServeOptions::default()
+            };
+            let mut backend = CycleSimBackend::new(CLUSTERS);
+            backend.system.reference_interp = reference;
+            let t0 = std::time::Instant::now();
+            let report = engine.serve_resilient(&mut backend, None, &opts);
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            report.assert_consistent();
+            (report, wall_ms)
+        };
+        let (fast, fast_ms) = run_paged(false);
+        let ref_ms = if fast_only {
+            0.0
+        } else {
+            let (reference, ref_ms) = run_paged(true);
+            assert_eq!(
+                fast.total_cycles, reference.total_cycles,
+                "paged serve: decoded vs reference interpreter cycles diverge"
+            );
+            for (f, r) in fast.per_request.iter().zip(&reference.per_request) {
+                assert_eq!(
+                    (f.request_id, f.tokens, f.outcome),
+                    (r.request_id, r.tokens, r.outcome),
+                    "paged serve: per-request books diverge across executors"
+                );
+            }
+            ref_ms
+        };
+        let pool = fast.pool.as_ref().expect("paged run must report its pool");
+        println!(
+            "paged serve requests={requests} prompt={prompt} tokens={toks}: \
+             {} cycles, evictions {}, prefix hits {} ({} tokens saved), \
+             preemptions {}",
+            fast.total_cycles,
+            pool.evictions,
+            pool.prefix_hits,
+            pool.prefix_hit_tokens,
+            pool.preemptions
+        );
+        rows.push(BenchRow {
+            kernel: "paged-serve",
+            variant: "burst-shared-prefix",
+            dims: vec![
+                ("requests", requests as u64),
+                ("prompt", prompt as u64),
+                ("tokens", toks as u64),
+                ("kv_block_kb", block_kb),
+                ("pool_kb", pool_kb),
+            ],
+            cycles: fast.total_cycles,
+            wall_ms_fast: fast_ms,
+            wall_ms_reference: ref_ms,
+        });
+    }
+
     // --- report -----------------------------------------------------------
     println!(
         "{:16} {:26} {:>12} {:>12} {:>12} {:>9}",
@@ -1048,6 +1217,13 @@ mod tests {
             &["serve", "--deadline", "0"],
             &["serve", "--requests", "10"], // trace-only flag without --trace
             &["serve", "--seed", "-7"],
+            &["serve", "--policy"],
+            &["serve", "--policy", "wat"],
+            &["serve", "--trace", "burst", "--policy", "wat"],
+            &["serve", "--kv-block"],
+            &["serve", "--trace", "burst", "--kv-block", "0"],
+            &["serve", "--trace", "burst", "--kv-pool", "0"],
+            &["serve", "--share-prefix"], // trace-only flag without --trace
             &["bench", "--json"],
             &["bench", "--wat"],
         ];

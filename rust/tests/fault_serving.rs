@@ -318,6 +318,7 @@ fn transient_failure_triggers_retry_and_quarantine_without_double_count() {
     ));
     let opts = ServeOptions { max_attempts: 3, quarantine_iters: 1, ..Default::default() };
     let report = engine.serve_resilient(&mut backend, None, &opts);
+    report.assert_consistent();
 
     assert_eq!(report.per_request.len(), 1);
     let r = &report.per_request[0];
@@ -342,6 +343,7 @@ fn admission_control_sheds_over_queue_depth() {
     let mut backend = AnalyticBackend::new();
     let opts = ServeOptions { max_live: 1, max_queue: 0, ..Default::default() };
     let report = engine.serve_resilient(&mut backend, None, &opts);
+    report.assert_consistent();
 
     assert_eq!(report.slo.shed, 5, "1 admitted, 0 allowed to wait, 5 shed");
     assert_eq!(report.slo.completed, 1);
@@ -363,6 +365,7 @@ fn deadline_expiry_times_out_with_partial_progress() {
     let mut backend = AnalyticBackend::new();
     let opts = ServeOptions { deadline_cycles: Some(1), ..Default::default() };
     let report = engine.serve_resilient(&mut backend, None, &opts);
+    report.assert_consistent();
 
     let r = &report.per_request[0];
     assert_eq!(r.outcome, Outcome::TimedOut);
@@ -385,6 +388,7 @@ fn overload_walks_the_degradation_ladder_and_recovers() {
         ..Default::default()
     };
     let report = engine.serve_resilient(&mut primary, Some(&mut fallback), &opts);
+    report.assert_consistent();
 
     let s = &report.slo;
     assert!(s.analytic_iters >= 1, "pressure 3 must reach the analytic tier");
@@ -403,6 +407,7 @@ fn sampled_degradation_works_without_a_fallback_backend() {
     let mut primary = CycleSimBackend::new(4);
     let opts = ServeOptions { degrade_sampled_at: 2, ..Default::default() };
     let report = engine.serve_resilient(&mut primary, None, &opts);
+    report.assert_consistent();
     assert!(report.slo.sampled_iters >= 1);
     assert_eq!(
         report.slo.full_iters + report.slo.sampled_iters + report.slo.analytic_iters,
@@ -420,6 +425,7 @@ fn serve_mixed(plan: Option<FaultPlan>) -> (ServeReport, Vec<u64>) {
     let mut backend = CycleSimBackend::new(4);
     backend.system.faults = plan;
     let report = engine.serve_continuous_bounded(&mut backend, 32);
+    report.assert_consistent();
     let sums = backend
         .system
         .clusters
@@ -471,8 +477,11 @@ fn chaos_trace_run(seed: u64) -> ServeReport {
         quarantine_iters: 2,
         degrade_sampled_at: 3,
         degrade_analytic_at: 5,
+        paging: None,
     };
-    engine.serve_resilient(&mut primary, Some(&mut fallback), &opts)
+    let report = engine.serve_resilient(&mut primary, Some(&mut fallback), &opts);
+    report.assert_consistent();
+    report
 }
 
 #[test]

@@ -1,0 +1,453 @@
+//! Integration wall for the paged KV-cache subsystem (DESIGN.md §14).
+//!
+//! Four layers of evidence, mirroring the tier-1 differential style of
+//! the kernel tests:
+//!
+//! 1. **Pool books** — property test: under random alloc / append /
+//!    release / evict / fork traffic the refcounted block pool never
+//!    double-frees, never leaks, and its three state populations always
+//!    tile the capacity exactly.
+//! 2. **Prefix index vs naive oracle** — the radix tree's lookup /
+//!    first-insert-wins / subtree-prune semantics match a brute-force
+//!    prefix-map reference on random chunk paths.
+//! 3. **Giant-block bit-identity** — serving a trace through the paged
+//!    tier with one effectively unbounded block is bit-identical to the
+//!    legacy unpaged loop (cycles, SPM checksums, per-request books) on
+//!    BOTH simulator paths (decoded fast path and reference
+//!    interpreter). The legacy loop is the differential oracle.
+//! 4. **Pressure semantics** — a tight pool forces real preemptions
+//!    that resume and complete with the same token books as an
+//!    unbounded run, and a shared-prefix burst trace shows nonzero
+//!    evictions and nonzero prefix-hit savings with per-policy SLO
+//!    attainment.
+
+use vexp::exec::{
+    AnalyticBackend, AppendNeed, BlockPool, BlockTable, CycleSimBackend, Engine, Outcome,
+    PagedKvOptions, PrefixIndex, Request, SchedPolicy, ServeOptions, ServeReport, TraceSpec,
+};
+use vexp::model::GPT2_SMALL;
+use vexp::sim::spm_checksum;
+use vexp::testkit::{forall, Rng};
+
+// ---------------------------------------------------------------------------
+// 1. block-pool books under random traffic
+// ---------------------------------------------------------------------------
+
+/// Drive a pool with random table traffic, checking the books after
+/// every single operation. Each table owns exactly one reference per
+/// entry of its block vector, so releasing each entry once at teardown
+/// must balance the books to the empty-pool state.
+#[test]
+fn pool_books_balance_under_random_alloc_release_evict_fork() {
+    forall(60, |rng| {
+        let cap = rng.range(2, 12) as usize;
+        let block_tokens = rng.range(1, 6) as u32;
+        let mut pool = BlockPool::new(cap);
+        let mut tables: Vec<BlockTable> = Vec::new();
+
+        let steps = rng.range(30, 150);
+        for _ in 0..steps {
+            match rng.range(0, 100) {
+                // start a new table with one freshly allocated block
+                0..=24 => {
+                    if let Some(id) = pool.try_alloc() {
+                        let mut t = BlockTable::new(block_tokens);
+                        pool.push_tail(&mut t, id);
+                        tables.push(t);
+                    }
+                }
+                // append one token to a random table, honoring the
+                // pool's own append classification
+                25..=54 => {
+                    if !tables.is_empty() {
+                        let i = rng.range(0, tables.len() as u64) as usize;
+                        match pool.append_need(&tables[i]) {
+                            AppendNeed::InPlace => pool.append_in_place(&mut tables[i]),
+                            AppendNeed::NewBlock => {
+                                if let Some(id) = pool.try_alloc() {
+                                    pool.push_tail(&mut tables[i], id);
+                                }
+                            }
+                            AppendNeed::CopyOnWrite => {
+                                if let Some(id) = pool.try_alloc() {
+                                    pool.cow_tail(&mut tables[i], id, rng.bool());
+                                }
+                            }
+                        }
+                    }
+                }
+                // drop a random table, releasing each block exactly once
+                55..=74 => {
+                    if !tables.is_empty() {
+                        let i = rng.range(0, tables.len() as u64) as usize;
+                        let t = tables.swap_remove(i);
+                        let cacheable = rng.bool();
+                        for &b in &t.blocks {
+                            pool.release(b, cacheable);
+                        }
+                    }
+                }
+                // reclaim the LRU cached block (may be a no-op)
+                75..=84 => {
+                    let _ = pool.evict_lru();
+                }
+                // fork a random table (refcounts rise, no allocation)
+                _ => {
+                    if !tables.is_empty() {
+                        let i = rng.range(0, tables.len() as u64) as usize;
+                        let forked = pool.fork(&tables[i]);
+                        tables.push(forked);
+                    }
+                }
+            }
+
+            pool.assert_books();
+            for t in &tables {
+                for &b in &t.blocks {
+                    if pool.refs(b) == 0 {
+                        return Err(format!("live table references zero-ref block {b}"));
+                    }
+                }
+            }
+        }
+
+        // teardown: drop every table, then drain the cached list; the
+        // pool must return to its pristine all-free state with
+        // perfectly balanced lifetime counters.
+        for t in tables.drain(..) {
+            for &b in &t.blocks {
+                pool.release(b, false);
+            }
+        }
+        while pool.evict_lru().is_some() {}
+        pool.assert_books();
+        if pool.free_count() != cap {
+            return Err(format!("teardown left {} of {cap} blocks free", pool.free_count()));
+        }
+        if pool.stats.allocated != pool.stats.freed {
+            return Err(format!(
+                "lifetime books unbalanced: {} allocated vs {} freed",
+                pool.stats.allocated, pool.stats.freed
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. prefix index vs a naive prefix-map oracle
+// ---------------------------------------------------------------------------
+
+/// Brute-force reference for [`PrefixIndex`]: a map from every chunk
+/// path-prefix to its canonical block. Insert registers all prefixes
+/// first-insert-wins; remove deletes every path with a prefix homed on
+/// the removed block (the subtree); lookup walks prefixes in order.
+#[derive(Default)]
+struct NaivePrefix {
+    paths: std::collections::HashMap<Vec<u64>, u32>,
+}
+
+impl NaivePrefix {
+    fn insert(&mut self, fps: &[u64], blocks: &[u32]) -> Vec<u32> {
+        let mut canonical = Vec::with_capacity(fps.len());
+        for i in 1..=fps.len() {
+            let entry = self.paths.entry(fps[..i].to_vec()).or_insert(blocks[i - 1]);
+            canonical.push(*entry);
+        }
+        canonical
+    }
+
+    fn lookup(&self, fps: &[u64]) -> Vec<u32> {
+        let mut out = Vec::new();
+        for i in 1..=fps.len() {
+            match self.paths.get(&fps[..i]) {
+                Some(&b) => out.push(b),
+                None => break,
+            }
+        }
+        out
+    }
+
+    fn remove_block(&mut self, block: u32) {
+        // O(n^2): a path dies if ANY of its prefixes is homed on `block`
+        let doomed: Vec<Vec<u64>> = self
+            .paths
+            .keys()
+            .filter(|path| {
+                (1..=path.len()).any(|j| self.paths.get(&path[..j]) == Some(&block))
+            })
+            .cloned()
+            .collect();
+        for path in doomed {
+            self.paths.remove(&path);
+        }
+    }
+
+    fn contains_block(&self, block: u32) -> bool {
+        self.paths.values().any(|&b| b == block)
+    }
+}
+
+#[test]
+fn prefix_index_matches_the_naive_oracle_on_random_paths() {
+    forall(80, |rng| {
+        let mut idx = PrefixIndex::new();
+        let mut oracle = NaivePrefix::default();
+        let mut next_block: u32 = 0;
+
+        // small fingerprint alphabet to force heavy path sharing
+        let rand_path = |rng: &mut Rng| -> Vec<u64> {
+            let len = rng.range(1, 5) as usize;
+            (0..len).map(|_| rng.range(0, 5)).collect()
+        };
+
+        for _ in 0..rng.range(20, 80) {
+            match rng.range(0, 10) {
+                // insert a random path with fresh blocks
+                0..=5 => {
+                    let fps = rand_path(rng);
+                    let blocks: Vec<u32> =
+                        (0..fps.len()).map(|_| { next_block += 1; next_block }).collect();
+                    let got = idx.insert(&fps, &blocks);
+                    let want = oracle.insert(&fps, &blocks);
+                    if got != want {
+                        return Err(format!("insert canonical {got:?} != oracle {want:?}"));
+                    }
+                }
+                // remove a (possibly absent) block, pruning its subtree
+                6..=7 => {
+                    let b = rng.range(0, (next_block as u64).max(1)) as u32;
+                    idx.remove_block(b);
+                    oracle.remove_block(b);
+                }
+                // probe lookup on a random path
+                _ => {
+                    let fps = rand_path(rng);
+                    let got = idx.lookup(&fps);
+                    let want = oracle.lookup(&fps);
+                    if got != want {
+                        return Err(format!("lookup({fps:?}) {got:?} != oracle {want:?}"));
+                    }
+                }
+            }
+
+            if idx.len() != oracle.paths.len() {
+                return Err(format!(
+                    "node count {} != oracle path count {}",
+                    idx.len(),
+                    oracle.paths.len()
+                ));
+            }
+            let probe = rng.range(0, (next_block as u64).max(1)) as u32;
+            if idx.contains_block(probe) != oracle.contains_block(probe) {
+                return Err(format!("contains_block({probe}) disagrees with oracle"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 3. giant-block differential: paged tier vs legacy unpaged loop
+// ---------------------------------------------------------------------------
+
+/// Serve the same mixed burst trace through `serve_resilient`, with or
+/// without paging, on the cycle simulator, and hand back the report
+/// plus every cluster's SPM checksum.
+fn serve_burst_trace(
+    paging: Option<PagedKvOptions>,
+    reference: bool,
+) -> (ServeReport, Vec<u64>) {
+    let spec = TraceSpec::bursty(6, 40_000.0, 5);
+    let mut engine = Engine::with_clusters(4);
+    for r in spec.mixed_traffic(32, 3, None) {
+        engine.submit_request(r);
+    }
+    let mut backend = CycleSimBackend::new(4);
+    backend.system.reference_interp = reference;
+    let opts = ServeOptions { max_iters: 256, paging, ..ServeOptions::default() };
+    let report = engine.serve_resilient(&mut backend, None, &opts);
+    report.assert_consistent();
+    let sums = backend.system.clusters.iter().map(|c| spm_checksum(&c.spm)).collect();
+    (report, sums)
+}
+
+/// With one effectively unbounded block per table, the paged tier must
+/// reduce *bit-exactly* to the legacy loop: same iteration count, same
+/// total cycles, same SPM bytes, same per-request books — on both the
+/// decoded fast path and the reference interpreter. The legacy loop is
+/// the subsystem's differential oracle.
+#[test]
+fn giant_block_paged_serve_is_bit_identical_to_legacy_on_both_sim_paths() {
+    for reference in [false, true] {
+        let (legacy, legacy_sums) = serve_burst_trace(None, reference);
+        let (paged, paged_sums) =
+            serve_burst_trace(Some(PagedKvOptions::unbounded()), reference);
+
+        assert!(legacy.pool.is_none(), "legacy run must not carry a pool report");
+        assert_eq!(
+            legacy.iterations, paged.iterations,
+            "iteration count diverged (reference_interp={reference})"
+        );
+        assert_eq!(
+            legacy.total_cycles, paged.total_cycles,
+            "total cycles diverged (reference_interp={reference})"
+        );
+        assert_eq!(legacy_sums, paged_sums, "SPM bytes diverged (reference_interp={reference})");
+
+        assert_eq!(legacy.per_request.len(), paged.per_request.len());
+        for (l, p) in legacy.per_request.iter().zip(&paged.per_request) {
+            assert_eq!(l.request_id, p.request_id);
+            assert_eq!(l.outcome, p.outcome, "request {} outcome", l.request_id);
+            assert_eq!(l.tokens, p.tokens, "request {} tokens", l.request_id);
+            assert_eq!(
+                l.cycles.to_bits(),
+                p.cycles.to_bits(),
+                "request {} cycles diverged bitwise",
+                l.request_id
+            );
+            assert_eq!(
+                l.ttft_cycles.to_bits(),
+                p.ttft_cycles.to_bits(),
+                "request {} TTFT diverged bitwise",
+                l.request_id
+            );
+            assert_eq!(
+                l.energy_pj.to_bits(),
+                p.energy_pj.to_bits(),
+                "request {} energy diverged bitwise",
+                l.request_id
+            );
+        }
+
+        // the unbounded pool must have been pure bookkeeping: no
+        // pressure events of any kind
+        let pool = paged.pool.as_ref().expect("paged run must carry a pool report");
+        assert_eq!(pool.evictions, 0, "unbounded pool must never evict");
+        assert_eq!(pool.preemptions, 0, "unbounded pool must never preempt");
+        assert_eq!(pool.deferrals, 0, "unbounded pool must never defer");
+        assert_eq!(pool.shed_unfittable, 0, "unbounded pool must never shed");
+        assert_eq!(pool.cow_copies, 0, "serve loop never forks tables");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4a. preempt-then-resume with identical token books
+// ---------------------------------------------------------------------------
+
+/// Four decode-heavy requests against a pool sized so every request's
+/// lifetime fits alone but concurrent decode growth cannot: appends
+/// must preempt victims (no cached blocks exist — prefix sharing is
+/// off), and every preempted request must resume and still complete
+/// with exactly its token target, matching an unbounded-pool run.
+#[test]
+fn preemption_resumes_and_completes_with_identical_token_books() {
+    // GPT-2 Small KV is 36 864 B/token: a 128 KiB block holds 3 tokens.
+    // seq=8 admits at 3 blocks; lifetime 8+30 tokens = 13 of 14 blocks.
+    let run = |paging: PagedKvOptions| -> ServeReport {
+        let mut engine = Engine::with_clusters(4);
+        for i in 0..4u64 {
+            let mut cfg = GPT2_SMALL;
+            cfg.seq = 8;
+            engine.submit_request(Request::new(i, cfg).with_tokens(30));
+        }
+        let mut backend = AnalyticBackend::new();
+        let opts =
+            ServeOptions { max_iters: 2048, paging: Some(paging), ..ServeOptions::default() };
+        let report = engine.serve_resilient(&mut backend, None, &opts);
+        report.assert_consistent();
+        report
+    };
+
+    let tight = run(PagedKvOptions {
+        block_bytes: 128 * 1024,
+        pool_bytes: 14 * 128 * 1024,
+        share_prefix: false,
+    });
+    let roomy = run(PagedKvOptions::unbounded());
+
+    let pool = tight.pool.as_ref().expect("paged run must carry a pool report");
+    assert!(pool.preemptions > 0, "tight pool must force preemption");
+    assert!(pool.resumes > 0, "preempted requests must resume");
+    assert!(pool.resumes <= pool.preemptions);
+    assert_eq!(pool.shed_unfittable, 0, "every lifetime fits the pool");
+
+    assert_eq!(tight.per_request.len(), roomy.per_request.len());
+    for (t, r) in tight.per_request.iter().zip(&roomy.per_request) {
+        assert_eq!(t.request_id, r.request_id);
+        assert_eq!(t.outcome, Outcome::Completed, "request {}", t.request_id);
+        assert_eq!(r.outcome, Outcome::Completed, "request {}", r.request_id);
+        assert_eq!(
+            (t.tokens, t.token_target),
+            (r.tokens, r.token_target),
+            "token books must survive preemption (request {})",
+            t.request_id
+        );
+        assert_eq!(t.tokens, 30, "completion means the full target");
+    }
+    let preempted_reqs =
+        tight.per_request.iter().filter(|r| r.preemptions > 0).count();
+    assert!(preempted_reqs > 0, "per-request books must attribute the preemptions");
+    assert!(roomy.per_request.iter().all(|r| r.preemptions == 0));
+}
+
+// ---------------------------------------------------------------------------
+// 4b. memory pressure: evictions, prefix hits, per-policy attainment
+// ---------------------------------------------------------------------------
+
+/// A shared-prefix burst trace against a 16-block pool: completed
+/// requests park their indexed prompt blocks on the LRU cached list,
+/// and more distinct indexed blocks are created over the run than the
+/// pool can hold — so allocation pressure MUST evict; same-class
+/// requests admitted after a class-mate's prefill MUST hit the prefix
+/// index and skip whole prompt blocks.
+#[test]
+fn pressure_trace_shows_evictions_prefix_hits_and_policy_attainment() {
+    let spec = TraceSpec::bursty(6, 50_000.0, 9);
+    let mut engine = Engine::with_clusters(4);
+    let traffic = spec.mixed_traffic_paged(32, 4, None, 4);
+    assert!(
+        traffic.iter().any(|r| r.policy == SchedPolicy::Latency),
+        "trace must carry a latency-class request"
+    );
+    for r in traffic {
+        engine.submit_request(r);
+    }
+    let mut backend = AnalyticBackend::new();
+    let opts = ServeOptions {
+        max_iters: 1024,
+        paging: Some(PagedKvOptions {
+            block_bytes: 256 * 1024, // 7 GPT-2 tokens per block
+            pool_bytes: 4 * 1024 * 1024, // 16 blocks
+            share_prefix: true,
+        }),
+        ..ServeOptions::default()
+    };
+    let report = engine.serve_resilient(&mut backend, None, &opts);
+    report.assert_consistent();
+
+    let pool = report.pool.as_ref().expect("paged run must carry a pool report");
+    assert_eq!(pool.capacity_blocks, 16);
+    assert_eq!(pool.block_bytes, 256 * 1024);
+    assert!(pool.evictions > 0, "pressure trace must evict cached blocks");
+    assert!(pool.prefix_hits > 0, "same-class prompts must hit the prefix index");
+    assert!(pool.prefix_hit_tokens > 0, "prefix hits must skip real prompt tokens");
+    // whole-block sharing: every hit skips a multiple of 7 tokens
+    assert_eq!(pool.prefix_hit_tokens % 7, 0, "hits are whole blocks only");
+    assert_eq!(pool.shed_unfittable, 0, "every request lifetime fits 16 blocks");
+
+    // no deadline, fittable lifetimes, ample iteration budget: the
+    // loop must finish everything despite the churn
+    for r in &report.per_request {
+        assert_eq!(r.outcome, Outcome::Completed, "request {}", r.request_id);
+    }
+    let hit_reqs = report.per_request.iter().filter(|r| r.prefix_hit_tokens > 0).count();
+    assert!(hit_reqs > 0, "per-request books must attribute the prefix savings");
+
+    // both policy classes are present and fully attained (no deadline
+    // and no SLO bound means completion is the only criterion)
+    assert!(report.per_request.iter().any(|r| r.policy == SchedPolicy::Latency));
+    assert!(report.per_request.iter().any(|r| r.policy == SchedPolicy::Throughput));
+    assert_eq!(report.slo.attainment_throughput, 1.0);
+    assert_eq!(report.slo.attainment_latency, 1.0);
+}

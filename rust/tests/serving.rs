@@ -67,6 +67,7 @@ fn continuous_batching_retires_joins_and_reports_metrics() {
 
     let mut backend = AnalyticBackend::new();
     let report = engine.serve_continuous(&mut backend);
+    report.assert_consistent();
     assert_eq!(report.per_request.len(), 3, "every request retires");
     assert_eq!(engine.pending(), 0);
 
@@ -118,6 +119,7 @@ fn continuous_batching_on_the_cycle_sim_backend() {
     let id = engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(3));
     let mut backend = CycleSimBackend::new(4);
     let report = engine.serve_continuous(&mut backend);
+    report.assert_consistent();
     assert_eq!(report.per_request.len(), 1);
     let r = &report.per_request[0];
     assert_eq!(r.request_id, id);
@@ -141,6 +143,7 @@ fn decode_program_is_cached_across_iterations() {
     engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(4));
     let mut backend = AnalyticBackend::new();
     let report = engine.serve_continuous(&mut backend);
+    report.assert_consistent();
     assert_eq!(report.iterations, 4, "1 prefill + 3 decode iterations");
     // one prefill program + one decode program; every later iteration
     // hits the cache even though the KV length grows
@@ -240,6 +243,7 @@ fn serve_continuous_with_empty_queue_is_empty() {
     let mut engine = Engine::new();
     let mut backend = AnalyticBackend::new();
     let report = engine.serve_continuous(&mut backend);
+    report.assert_consistent();
     assert_eq!(report.iterations, 0);
     assert_eq!(report.total_cycles, 0);
     assert!(report.per_request.is_empty());
@@ -253,6 +257,7 @@ fn safety_bound_reports_unfinished_requests() {
     engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(1000));
     let mut backend = AnalyticBackend::new();
     let report = engine.serve_continuous_bounded(&mut backend, 3);
+    report.assert_consistent();
     assert_eq!(report.iterations, 3);
     assert_eq!(report.per_request.len(), 1, "unfinished request still reported");
     let r = &report.per_request[0];
@@ -270,6 +275,7 @@ fn safety_bound_reports_never_admitted_requests_with_zero_progress() {
     let b = engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(5));
     let mut backend = AnalyticBackend::new();
     let report = engine.serve_continuous_bounded(&mut backend, 1);
+    report.assert_consistent();
     assert_eq!(report.iterations, 1);
     assert_eq!(report.per_request.len(), 2, "both requests reported");
     let ra = report.per_request.iter().find(|r| r.request_id == a).unwrap();
@@ -285,6 +291,7 @@ fn arrival_gaps_fast_forward_without_counting_iterations() {
     engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(1).arriving_at(100));
     let mut backend = AnalyticBackend::new();
     let report = engine.serve_continuous(&mut backend);
+    report.assert_consistent();
     assert_eq!(report.iterations, 1, "only the prefill iteration executed");
     assert_eq!(report.per_request.len(), 1);
     assert_eq!(report.per_request[0].tokens, 1);
