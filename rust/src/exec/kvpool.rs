@@ -160,10 +160,13 @@ impl BlockPool {
     }
 
     /// Take an additional reference on `id` — a prefix hit pulling a
-    /// cached (or already shared) block into another table.
-    pub fn retain(&mut self, id: BlockId) {
-        let st = &mut self.states[id as usize];
-        if st.refs == 0 {
+    /// cached (or already shared) block into another table. Returns the
+    /// cached-list position the block was revived from, or `None` if it
+    /// was already referenced; a caller rolling an admission back can
+    /// hand the position to [`BlockPool::release_revived`] to restore
+    /// the LRU order exactly.
+    pub fn retain(&mut self, id: BlockId) -> Option<usize> {
+        let revived = if self.states[id as usize].refs == 0 {
             // revive from the cached list
             let pos = self
                 .cached
@@ -174,8 +177,26 @@ impl BlockPool {
             // in_use is derived from the free/cached lists, so the
             // revived block is already counted
             self.stats.peak_in_use = self.stats.peak_in_use.max(self.in_use());
-        }
-        st.refs += 1;
+            Some(pos)
+        } else {
+            None
+        };
+        self.states[id as usize].refs += 1;
+        revived
+    }
+
+    /// Undo a reviving [`BlockPool::retain`]: drop the sole reference
+    /// and reinsert the block into the cached LRU list at the position
+    /// it was revived from (clamped to the list's current length).
+    /// Undoing a sequence of retains in reverse order restores the
+    /// pre-retain LRU order exactly, so a rolled-back admission leaves
+    /// no eviction-order side effects.
+    pub fn release_revived(&mut self, id: BlockId, pos: usize) {
+        let st = &mut self.states[id as usize];
+        assert_eq!(st.refs, 1, "release_revived undoes a sole reviving retain");
+        st.refs = 0;
+        let pos = pos.min(self.cached.len());
+        self.cached.insert(pos, id);
     }
 
     /// Drop one reference on `id`. At zero references the block either
@@ -346,6 +367,33 @@ mod tests {
         assert_eq!((t.tokens, pool.filled(b)), (2, 2));
         assert_eq!(pool.append_need(&t), AppendNeed::InPlace);
         assert_eq!(fork.tokens, 3);
+        pool.assert_books();
+    }
+
+    #[test]
+    fn defer_rollback_restores_cached_lru_order() {
+        let mut pool = BlockPool::new(3);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        let c = pool.try_alloc().unwrap();
+        pool.release(a, true);
+        pool.release(b, true);
+        pool.release(c, true); // cached LRU: [a, b, c]
+
+        // an admission revives b then a; a second retain of an
+        // already-referenced block reports no position
+        let pb = pool.retain(b);
+        let pa = pool.retain(a);
+        assert_eq!((pb, pa), (Some(1), Some(0)));
+        assert_eq!(pool.retain(a), None);
+        pool.release(a, true); // drop the extra reference again
+
+        // rollback in reverse retain order restores [a, b, c] exactly
+        pool.release_revived(a, 0);
+        pool.release_revived(b, 1);
+        assert_eq!(pool.evict_lru(), Some(a), "a must still be the LRU victim");
+        assert_eq!(pool.evict_lru(), Some(b));
+        assert_eq!(pool.evict_lru(), Some(c));
         pool.assert_books();
     }
 

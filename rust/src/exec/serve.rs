@@ -635,9 +635,10 @@ impl PagedState {
             let max_match = ((total_tokens - 1) / bt) as usize;
             matched.truncate(max_match.min(need_total));
         }
-        for &b in &matched {
-            self.pool.retain(b);
-        }
+        // remember each matched block's cached-list revival position so
+        // a Defer rollback can restore the LRU order exactly
+        let revived: Vec<(BlockId, Option<usize>)> =
+            matched.iter().map(|&b| (b, self.pool.retain(b))).collect();
         let mut fresh: Vec<BlockId> = Vec::new();
         while matched.len() + fresh.len() < need_total {
             if let Some(b) = self.pool.try_alloc() {
@@ -645,13 +646,19 @@ impl PagedState {
             } else if let Some(evicted) = self.pool.evict_lru() {
                 self.index.remove_block(evicted);
             } else {
-                // exhausted by live tables: roll back and defer
+                // exhausted by live tables: roll back and defer. The
+                // retains are undone in reverse order, reinserting
+                // revived blocks at their recorded positions, so a
+                // deferred admission leaves the cached LRU order — and
+                // with it the future eviction order — untouched.
                 for b in fresh {
                     self.pool.release(b, false);
                 }
-                for &b in matched.iter().rev() {
-                    let cacheable = self.index.contains_block(b);
-                    self.pool.release(b, cacheable);
+                for &(b, pos) in revived.iter().rev() {
+                    match pos {
+                        Some(p) => self.pool.release_revived(b, p),
+                        None => self.pool.release(b, self.index.contains_block(b)),
+                    }
                 }
                 self.deferrals += 1;
                 return Admit::Defer;
@@ -732,8 +739,10 @@ fn pick_victim(live: &[LiveReq], me: usize) -> Option<usize> {
 /// order: free list → LRU eviction of prefix-cached blocks → preempt a
 /// victim request (whose released blocks then feed the next round).
 /// Admission's lifetime bound guarantees this terminates with a block:
-/// the appender's total need fits the pool, and every block outside its
-/// own table is free, evictable, or held by a preemptable request.
+/// the appender's total need fits the pool, completed requests released
+/// their tables before the append pass (and never append themselves),
+/// so every block outside the appender's own table is free, evictable,
+/// or held by a preemptable live request.
 fn acquire_block(pg: &mut PagedState, live: &mut [LiveReq], me: usize) -> BlockId {
     loop {
         if let Some(b) = pg.pool.try_alloc() {
@@ -833,7 +842,14 @@ pub(crate) fn run_resilient(
         }
 
         // ---- admit --------------------------------------------------------
-        let cap = opts.max_live.max(1).min(healthy.len().max(1));
+        // no healthy cluster means no admission at all: a request
+        // admitted now could not execute, yet its TTFT clock would
+        // start and its pool blocks would sit reserved
+        let cap = if healthy.is_empty() {
+            0
+        } else {
+            opts.max_live.max(1).min(healthy.len())
+        };
         // preempted requests re-enter ahead of new arrivals (their
         // progress is already paid for); latency-policy ones jump the
         // preempted queue itself
@@ -1139,7 +1155,11 @@ pub(crate) fn run_resilient(
                     // tokens_per_s and TTFT are measured on
                     lr.decode_cycles += iter_cycles_total;
                     lr.decode_iters += 1;
-                    if lr.table.is_some() {
+                    // a request that just produced its final token never
+                    // appends: its KV is never read again, so a dead
+                    // append must not consume blocks, evict cached
+                    // prefixes or preempt live requests
+                    if lr.table.is_some() && !lr.done() {
                         appended.push(idx);
                     }
                 }
@@ -1147,6 +1167,17 @@ pub(crate) fn run_resilient(
 
             // ---- paged append: each decode token extends its table ----
             if let Some(pg) = paging.as_mut() {
+                // completed requests release their tables before any
+                // append applies pressure: their KV is never read
+                // again, and since pick_victim excludes them, holding
+                // on would strand their blocks until the retire phase
+                // — under a full pool with nothing cached that left
+                // acquire_block without a victim and panicked
+                for lr in live.iter_mut().filter(|lr| lr.done()) {
+                    if let Some(table) = lr.table.take() {
+                        pg.release_table(&table);
+                    }
+                }
                 for &idx in &appended {
                     // take the table out so acquire_block may preempt
                     // other live entries without aliasing it

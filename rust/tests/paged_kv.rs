@@ -391,6 +391,50 @@ fn preemption_resumes_and_completes_with_identical_token_books() {
     assert!(roomy.per_request.iter().all(|r| r.preemptions == 0));
 }
 
+/// Regression: a request that just produced its final token must apply
+/// no allocation pressure. GPT-2 Small KV is 36 864 B/token, so a
+/// 147 456 B block holds exactly 4 tokens. Request A (seq=8, target 2)
+/// admits at 2 full blocks, request B (seq=4, target 4) at 1 full
+/// block; the 4-block pool leaves one block free. On their shared
+/// second iteration A produces its final token and B's tail is full, so
+/// B needs a fresh block while nothing is cached and the only other
+/// block-holder (A) has just completed. A's table must be released (and
+/// its dead tail append skipped) before B's append lands — previously
+/// this configuration panicked inside `acquire_block` because
+/// completed requests held their blocks until retirement yet were
+/// excluded from victim selection.
+#[test]
+fn completed_requests_release_blocks_before_appends_under_pressure() {
+    let mut engine = Engine::with_clusters(4);
+    let mut a = GPT2_SMALL;
+    a.seq = 8;
+    let mut b = GPT2_SMALL;
+    b.seq = 4;
+    engine.submit_request(Request::new(0, a).with_tokens(2));
+    engine.submit_request(Request::new(1, b).with_tokens(4));
+    let mut backend = AnalyticBackend::new();
+    let opts = ServeOptions {
+        max_iters: 64,
+        paging: Some(PagedKvOptions {
+            block_bytes: 4 * 36_864,
+            pool_bytes: 16 * 36_864,
+            share_prefix: false,
+        }),
+        ..ServeOptions::default()
+    };
+    let report = engine.serve_resilient(&mut backend, None, &opts);
+    report.assert_consistent();
+    for r in &report.per_request {
+        assert_eq!(r.outcome, Outcome::Completed, "request {}", r.request_id);
+    }
+    let pool = report.pool.as_ref().expect("paged run must carry a pool report");
+    // releasing the completed request's table absorbs the pressure;
+    // nothing live ever needed to be preempted or deferred
+    assert_eq!(pool.preemptions, 0, "done-release must absorb the pressure");
+    assert_eq!(pool.deferrals, 0);
+    assert_eq!(pool.resident, 0, "all blocks return once both requests retire");
+}
+
 // ---------------------------------------------------------------------------
 // 4b. memory pressure: evictions, prefix hits, per-policy attainment
 // ---------------------------------------------------------------------------
