@@ -5,7 +5,7 @@
 //! decode cost over KV length) and a continuously-batched serving
 //! summary (TTFT / per-token latency / tokens/s).
 use vexp::coordinator::CLUSTERS;
-use vexp::exec::{AnalyticBackend, Backend, CycleSimBackend, Engine, Request};
+use vexp::exec::{AnalyticBackend, Backend, CycleSimBackend, Engine, Request, ServeOptions};
 use vexp::model::config::{ALL_MODELS, GPT2_SMALL, GPT3_XL, VIT_BASE};
 use vexp::model::Phase;
 use vexp::sim::SamplePolicy;
@@ -69,7 +69,7 @@ fn main() {
     engine.submit_request(Request::new(0, gpt2).with_tokens(16));
     engine.submit_request(Request::new(0, VIT_BASE).arriving_at(1));
     engine.submit_request(Request::new(0, gpt2).with_tokens(8).arriving_at(2));
-    let report = engine.serve_continuous(&mut backend);
+    let report = engine.serve(&mut backend, None, &ServeOptions::default());
     println!();
     println!(
         "Continuous batching (3 tenants, analytic backend): {} iterations, {} tokens, {:.1} tok/s",
@@ -105,7 +105,7 @@ fn main() {
     let mut gpt3 = GPT3_XL;
     gpt3.seq = 512;
     engine.submit_request(Request::new(0, gpt3).with_tokens(16));
-    let report = engine.serve_continuous(&mut sim);
+    let report = engine.serve(&mut sim, None, &ServeOptions::default());
     let wall_s = t0.elapsed().as_secs_f64();
     for r in &report.per_request {
         println!(

@@ -4,18 +4,18 @@
 use super::batch::{BatchScheduler, CompiledBatch};
 use super::program::ProgramCache;
 use super::report::BatchReport;
-use super::serve::{run_continuous, run_resilient, ServeOptions, ServeReport};
+use super::serve::{run_resilient, ServeOptions, ServeReport};
 use super::{Backend, Request};
 use crate::coordinator::CLUSTERS;
 use crate::model::TransformerConfig;
 
-/// Default iteration safety bound for [`Engine::serve_continuous`].
+/// Default iteration safety bound of [`ServeOptions::default`].
 pub const DEFAULT_MAX_ITERS: u32 = 4096;
 
 /// Collects concurrent requests, compiles them once through the shared
 /// [`ProgramCache`], and hands the packed batch to a backend — either
-/// as one drained batch ([`Engine::serve`]) or as a continuously
-/// batched autoregressive run ([`Engine::serve_continuous`]).
+/// as one drained batch ([`Engine::execute_batch`]) or as a
+/// continuously batched autoregressive run ([`Engine::serve`]).
 ///
 /// ```
 /// use vexp::exec::Engine;
@@ -84,59 +84,37 @@ impl Engine {
     }
 
     /// Compile the pending requests and execute them on `backend` as
-    /// one batch (the calibration-slice scope).
-    pub fn serve(&mut self, backend: &mut dyn Backend) -> BatchReport {
+    /// one batch (the calibration-slice scope; formerly the batch-mode
+    /// `serve`, renamed when [`Engine::serve`] became the serving-loop
+    /// entry point).
+    pub fn execute_batch(&mut self, backend: &mut dyn Backend) -> BatchReport {
         let batch = self.compile_batch();
         backend.execute(&batch)
     }
 
     /// Drain the queue into a **continuously batched** autoregressive
-    /// run (DESIGN.md §10): requests join at their arrival iteration,
-    /// prefill once, decode one token per iteration against their
-    /// growing KV-cache, and retire at their token target while the
-    /// cluster shares rebalance every iteration. Returns per-request
-    /// time-to-first-token, per-token latency, tokens/s and energy.
+    /// serving run — the single entry point for every serving scenario
+    /// (DESIGN.md §10/§12/§14/§15). Requests join at their arrival
+    /// iteration, prefill once (or chunk by chunk), decode against
+    /// their growing KV-cache (one token per iteration, or a
+    /// draft/verify round under speculative decoding), and retire at
+    /// their token target while the cluster shares rebalance every
+    /// iteration.
+    ///
+    /// Everything beyond the plain loop is opted into through `opts`
+    /// (see the [`ServeOptions`] builder): admission control, deadlines
+    /// and degradation (§12), the paged KV block pool with prefix
+    /// sharing and preemption (§14), speculative decoding and chunked
+    /// prefill (§15). `ServeOptions::default()` reproduces the plain
+    /// continuous-batching loop bit-identically; `fallback` (used once
+    /// the degradation ladder reaches [`super::ExecMode::Analytic`] and
+    /// the primary cannot switch itself) may be `None`.
     ///
     /// When the backend runs the raw-speed simulation tier (tile memo +
     /// [`crate::sim::SamplePolicy`], DESIGN.md §11), each retired
     /// report's `error_bound_cycles` accumulates the per-iteration
     /// sampling bounds, so end-to-end serving numbers stay auditable.
-    pub fn serve_continuous(&mut self, backend: &mut dyn Backend) -> ServeReport {
-        self.serve_continuous_bounded(backend, DEFAULT_MAX_ITERS)
-    }
-
-    /// [`Engine::serve_continuous`] with an explicit iteration bound.
-    pub fn serve_continuous_bounded(
-        &mut self,
-        backend: &mut dyn Backend,
-        max_iters: u32,
-    ) -> ServeReport {
-        let reqs = std::mem::take(&mut self.queue);
-        run_continuous(self.scheduler, &mut self.cache, reqs, backend, max_iters)
-    }
-
-    /// The **resilient** serving loop (DESIGN.md §12): continuous
-    /// batching plus bounded retries with re-planning around
-    /// quarantined/offline clusters, admission control (live-set and
-    /// queue-depth bounds, projected-TTFT shedding), per-request
-    /// deadlines, and graceful degradation under overload. `fallback`
-    /// executes iterations once the degradation ladder reaches
-    /// [`super::ExecMode::Analytic`] and the primary backend cannot
-    /// switch itself. The returned [`ServeReport`] carries the SLO
-    /// summary (tail percentiles, attainment, shed/retry counts) and
-    /// per-cluster health history.
-    ///
-    /// With [`super::serve::ServeOptions::paging`] set, decode KV runs
-    /// on the paged block-pool tier (DESIGN.md §14): admission reserves
-    /// block tables from a shared fixed pool (deferring or shedding
-    /// unfittable requests), prompt heads shared via
-    /// [`super::PromptSig`] skip prefill through the radix prefix
-    /// index, allocation pressure walks LRU eviction → whole-request
-    /// preemption (evict-and-requeue, token books preserved), and each
-    /// request's [`super::SchedPolicy`] steers admission order, cluster
-    /// shares and victim choice. The report then carries a
-    /// [`super::PoolReport`] and per-policy SLO attainment.
-    pub fn serve_resilient(
+    pub fn serve(
         &mut self,
         primary: &mut dyn Backend,
         fallback: Option<&mut dyn Backend>,
@@ -144,6 +122,34 @@ impl Engine {
     ) -> ServeReport {
         let reqs = std::mem::take(&mut self.queue);
         run_resilient(self.scheduler, &mut self.cache, reqs, primary, fallback, opts)
+    }
+
+    /// Plain continuous batching at the default iteration bound.
+    #[deprecated(note = "use `serve(backend, None, &ServeOptions::default())`")]
+    pub fn serve_continuous(&mut self, backend: &mut dyn Backend) -> ServeReport {
+        self.serve(backend, None, &ServeOptions::default())
+    }
+
+    /// Plain continuous batching with an explicit iteration bound.
+    #[deprecated(note = "use `serve(backend, None, &ServeOptions::legacy(max_iters))`")]
+    pub fn serve_continuous_bounded(
+        &mut self,
+        backend: &mut dyn Backend,
+        max_iters: u32,
+    ) -> ServeReport {
+        self.serve(backend, None, &ServeOptions::legacy(max_iters))
+    }
+
+    /// The resilient serving loop, now the behavior of [`Engine::serve`]
+    /// itself (same signature).
+    #[deprecated(note = "use `serve` — identical signature and behavior")]
+    pub fn serve_resilient(
+        &mut self,
+        primary: &mut dyn Backend,
+        fallback: Option<&mut dyn Backend>,
+        opts: &ServeOptions,
+    ) -> ServeReport {
+        self.serve(primary, fallback, opts)
     }
 }
 

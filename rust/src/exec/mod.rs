@@ -43,8 +43,8 @@ pub use prefix::PrefixIndex;
 pub use program::{KernelKind, Program, ProgramCache, ProgramKey};
 pub use report::{BatchReport, Outcome, PoolReport, RunReport};
 pub use serve::{
-    ClusterHealth, IterationEntry, IterationRecord, PagedKvOptions, ServeOptions, ServeReport,
-    SloSummary,
+    ClusterHealth, DecodeSummary, IterationEntry, IterationRecord, PagedKvOptions, ServeOptions,
+    ServeReport, SloSummary, SpecDecodeOptions,
 };
 pub use trace::{TraceKind, TraceSpec};
 

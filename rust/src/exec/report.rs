@@ -90,6 +90,21 @@ pub struct RunReport {
     pub prefix_hit_tokens: u32,
     /// Times the paged loop preempted this request (evict-and-requeue).
     pub preemptions: u32,
+    /// Speculative draft/verify rounds this request ran (DESIGN.md §15;
+    /// zero outside speculative serving).
+    pub spec_rounds: u32,
+    /// Draft tokens proposed for this request across all rounds.
+    pub drafted_tokens: u32,
+    /// Draft tokens verify passes committed for this request (each
+    /// pass's own guaranteed token is not counted here).
+    pub accepted_tokens: u32,
+    /// This request's own cycles across draft-model sub-iterations.
+    pub draft_cycles: f64,
+    /// This request's own cycles across target-model verify passes.
+    pub verify_cycles: f64,
+    /// Prefill chunks this request ran under an active chunked-prefill
+    /// option (DESIGN.md §15; zero otherwise, 1 for an unsplit prompt).
+    pub prefill_chunks: u32,
 }
 
 impl RunReport {

@@ -37,6 +37,17 @@
 //! prompt position predicts it), so time-to-first-token is arrival →
 //! end of the prefill iteration. Each decode iteration produces one
 //! more token at KV length `prompt + generated`.
+//!
+//! Two decode scenarios (DESIGN.md §15) reshape the per-iteration work
+//! without touching the books above: **speculative decoding**
+//! ([`SpecDecodeOptions`]) runs `k` draft-model sub-iterations against
+//! a fork of the request's KV table, then verifies in one
+//! prefill-shaped target pass that commits the accepted run (rejected
+//! tails roll back by releasing the fork); **chunked prefill**
+//! ([`ServeOptions::chunked_prefill`]) splits a long prompt across
+//! several iterations so co-scheduled requests' barriers — and with
+//! them TTFT — stay short. Both reduce bit-identically to the plain
+//! loop at `k == 0` / chunk ≥ prompt.
 
 use super::batch::{BatchScheduler, ServeEntry};
 use super::kvpool::{AppendNeed, BlockId, BlockPool, BlockTable};
@@ -45,7 +56,8 @@ use super::program::ProgramCache;
 use super::report::{Outcome, PoolReport, RunReport};
 use super::{Backend, ExecMode, Request, SchedPolicy};
 use crate::coordinator::BlockGeometry;
-use crate::model::Phase;
+use crate::model::{Phase, TransformerConfig};
+use crate::testkit::{mix, Rng};
 use std::collections::VecDeque;
 
 /// One live request's share of an iteration, for the record log.
@@ -122,6 +134,49 @@ impl PagedKvOptions {
     }
 }
 
+/// Speculative-decoding configuration (DESIGN.md §15): a small draft
+/// model proposes `k` tokens per decode iteration against a fork of the
+/// request's KV table; the target model then verifies them in one
+/// prefill-shaped pass. Acceptance is decided by a seeded deterministic
+/// model — one stream per (request, round) — so a run is a pure
+/// function of (trace, seed), independent of the backend, and
+/// differential-testable across simulator paths. `k == 0` reduces
+/// bit-identically to plain one-token-per-iteration decode.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecDecodeOptions {
+    /// The draft model. Its sequence capacity is overridden per request
+    /// by the target request's prompt length.
+    pub draft: TransformerConfig,
+    /// Draft depth: tokens proposed per decode iteration.
+    pub k: u32,
+    /// Seed of the deterministic acceptance model.
+    pub seed: u64,
+    /// Per-token acceptance probability of the seeded model.
+    pub accept: f64,
+}
+
+impl SpecDecodeOptions {
+    /// Speculate with `draft` proposing `k` tokens per iteration, under
+    /// the default acceptance model (seeded, p = 0.7).
+    pub fn new(draft: TransformerConfig, k: u32) -> Self {
+        SpecDecodeOptions { draft, k, seed: 0x5bec, accept: 0.7 }
+    }
+
+    /// Re-seed the acceptance model.
+    #[must_use]
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the per-token acceptance probability.
+    #[must_use]
+    pub fn accept(mut self, p: f64) -> Self {
+        self.accept = p;
+        self
+    }
+}
+
 /// Admission, deadline, retry and degradation policy for the resilient
 /// serve loop. [`ServeOptions::default`] turns every resilience knob
 /// off (unbounded admission, no deadlines, no degradation), which makes
@@ -164,6 +219,15 @@ pub struct ServeOptions {
     /// against the shared block pool with prefix sharing, LRU eviction
     /// and preemption; `None` keeps the legacy unpaged KV path.
     pub paging: Option<PagedKvOptions>,
+    /// Speculative decoding (DESIGN.md §15): `Some` drafts and verifies
+    /// `k` tokens per decode iteration; `None` keeps plain decode.
+    pub speculative: Option<SpecDecodeOptions>,
+    /// Chunked prefill (DESIGN.md §15): split prompts into chunks of at
+    /// most this many tokens (rounded up to whole KV blocks on the
+    /// paged path), interleaved with decode iterations so one long
+    /// prompt no longer stalls every co-scheduled request's TTFT for a
+    /// full prefill barrier; `None` prefills whole prompts at once.
+    pub chunk_tokens: Option<u32>,
 }
 
 impl Default for ServeOptions {
@@ -181,6 +245,8 @@ impl Default for ServeOptions {
             degrade_sampled_at: usize::MAX,
             degrade_analytic_at: usize::MAX,
             paging: None,
+            speculative: None,
+            chunk_tokens: None,
         }
     }
 }
@@ -190,6 +256,107 @@ impl ServeOptions {
     /// off) with an explicit iteration bound.
     pub fn legacy(max_iters: u32) -> Self {
         ServeOptions { max_iters, ..Default::default() }
+    }
+
+    /// Builder entry point: the [`Default`] policy, refined through the
+    /// chained setters below instead of a ~15-field struct literal.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the iteration safety bound.
+    #[must_use]
+    pub fn max_iters(mut self, n: u32) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Bound the concurrently live request set.
+    #[must_use]
+    pub fn max_live(mut self, n: usize) -> Self {
+        self.max_live = n;
+        self
+    }
+
+    /// Bound the ready waiting queue (newest arrivals beyond it shed).
+    #[must_use]
+    pub fn max_queue(mut self, n: usize) -> Self {
+        self.max_queue = n;
+        self
+    }
+
+    /// Set the TTFT service-level objective in cycles.
+    #[must_use]
+    pub fn ttft_slo(mut self, cycles: u64) -> Self {
+        self.ttft_slo_cycles = Some(cycles);
+        self
+    }
+
+    /// Set the per-token latency SLO in cycles.
+    #[must_use]
+    pub fn token_slo(mut self, cycles: u64) -> Self {
+        self.token_slo_cycles = Some(cycles);
+        self
+    }
+
+    /// Set the default per-request deadline (cycles after arrival).
+    #[must_use]
+    pub fn deadline(mut self, cycles: u64) -> Self {
+        self.deadline_cycles = Some(cycles);
+        self
+    }
+
+    /// Shed ready waiting requests whose projected TTFT already
+    /// exceeds the TTFT SLO.
+    #[must_use]
+    pub fn shed_over_projected_ttft(mut self, shed: bool) -> Self {
+        self.shed_over_projected_ttft = shed;
+        self
+    }
+
+    /// Bound execution attempts per iteration.
+    #[must_use]
+    pub fn max_attempts(mut self, n: u32) -> Self {
+        self.max_attempts = n;
+        self
+    }
+
+    /// Set how many iterations a transiently-failed cluster sits out.
+    #[must_use]
+    pub fn quarantine_iters(mut self, n: u32) -> Self {
+        self.quarantine_iters = n;
+        self
+    }
+
+    /// Set the ready-backlog pressure thresholds of the degradation
+    /// ladder (sampled simulation, then analytic estimates).
+    #[must_use]
+    pub fn degrade_at(mut self, sampled: usize, analytic: usize) -> Self {
+        self.degrade_sampled_at = sampled;
+        self.degrade_analytic_at = analytic;
+        self
+    }
+
+    /// Run the paged KV-cache tier (DESIGN.md §14).
+    #[must_use]
+    pub fn paging(mut self, paging: PagedKvOptions) -> Self {
+        self.paging = Some(paging);
+        self
+    }
+
+    /// Run speculative decoding (DESIGN.md §15).
+    #[must_use]
+    pub fn speculative(mut self, spec: SpecDecodeOptions) -> Self {
+        self.speculative = Some(spec);
+        self
+    }
+
+    /// Split prefills into chunks of at most `tokens` tokens
+    /// (DESIGN.md §15).
+    #[must_use]
+    pub fn chunked_prefill(mut self, tokens: u32) -> Self {
+        self.chunk_tokens = Some(tokens);
+        self
     }
 }
 
@@ -243,6 +410,30 @@ pub struct SloSummary {
     pub analytic_iters: u32,
 }
 
+/// Decode-scenario summary of a serve run (DESIGN.md §15): speculative
+/// draft/verify books and chunked-prefill counts, aggregated from the
+/// per-request reports. All-zero for a plain run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecodeSummary {
+    /// Speculative draft/verify rounds executed.
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all rounds.
+    pub drafted_tokens: u64,
+    /// Draft tokens committed by verify passes (beyond each pass's own
+    /// guaranteed token).
+    pub accepted_tokens: u64,
+    /// `accepted_tokens / drafted_tokens` (0 when nothing was drafted).
+    pub acceptance_rate: f64,
+    /// Cycles spent in draft-model sub-iterations (per-request shares).
+    pub draft_cycles: f64,
+    /// Cycles spent in target-model verify passes (per-request shares).
+    pub verify_cycles: f64,
+    /// Prefill chunks executed under an active chunk option.
+    pub prefill_chunks: u64,
+    /// Requests whose prefill ran in more than one chunk.
+    pub chunked_requests: u32,
+}
+
 /// One cluster's health history over a serve run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ClusterHealth {
@@ -279,6 +470,8 @@ pub struct ServeReport {
     pub log: Vec<IterationRecord>,
     /// Tail-latency / robustness summary.
     pub slo: SloSummary,
+    /// Decode-scenario (speculative / chunked-prefill) summary.
+    pub decode: DecodeSummary,
     /// Per-cluster health history (failures, quarantine, offline).
     pub health: Vec<ClusterHealth>,
     /// Page-pool books and sharing/eviction/preemption counters; `None`
@@ -373,7 +566,45 @@ impl ServeReport {
                     r.request_id
                 );
             }
+            assert!(
+                r.accepted_tokens <= r.drafted_tokens,
+                "request {} accepted more draft tokens than it drafted",
+                r.request_id
+            );
+            if r.drafted_tokens > 0 {
+                assert!(
+                    r.spec_rounds > 0,
+                    "request {} drafted tokens outside a speculative round",
+                    r.request_id
+                );
+            }
         }
+        // decode-scenario books are attributed to requests exactly once
+        let sum = |f: fn(&RunReport) -> u64| self.per_request.iter().map(f).sum::<u64>();
+        assert_eq!(
+            sum(|r| r.spec_rounds as u64),
+            self.decode.spec_rounds,
+            "speculative rounds must sum to the aggregate"
+        );
+        assert_eq!(
+            sum(|r| r.drafted_tokens as u64),
+            self.decode.drafted_tokens,
+            "drafted tokens must sum to the aggregate"
+        );
+        assert_eq!(
+            sum(|r| r.accepted_tokens as u64),
+            self.decode.accepted_tokens,
+            "accepted tokens must sum to the aggregate"
+        );
+        assert_eq!(
+            sum(|r| r.prefill_chunks as u64),
+            self.decode.prefill_chunks,
+            "prefill chunks must sum to the aggregate"
+        );
+        assert!(
+            self.decode.accepted_tokens <= self.decode.drafted_tokens,
+            "aggregate acceptance cannot exceed drafting"
+        );
         if let Some(p) = &self.pool {
             assert_eq!(
                 p.allocated,
@@ -433,6 +664,34 @@ struct LiveReq {
     preemptions: u32,
     /// Cumulative prompt tokens skipped via prefix hits (over resumes).
     prefix_hit_tokens: u32,
+    /// Prompt-span tokens covered by earlier chunk iterations of the
+    /// current prefill (chunked prefill only; reset on completion and
+    /// at preemption, whose resume restarts the prefill).
+    prefill_done: u32,
+    /// Cumulative prefill chunks executed under an active chunk option.
+    chunks: u32,
+    /// Phase planned for this iteration (a prefill chunk or a
+    /// speculative verify pass); `None` falls back to [`LiveReq::phase`].
+    planned: Option<Phase>,
+    /// Draft depth planned this iteration (0 = plain decode).
+    spec_drafted: u32,
+    /// Tokens this iteration's verify pass commits: the accepted draft
+    /// prefix plus the pass's own token, bounded by the target.
+    spec_commit: u32,
+    /// KV table forked for this iteration's drafts (paged path only;
+    /// always released — the rejected-tail rollback — before commit
+    /// appends apply allocation pressure).
+    spec_fork: Option<BlockTable>,
+    /// Cumulative speculative rounds.
+    spec_rounds: u32,
+    /// Cumulative draft tokens proposed for this request.
+    drafted_tokens: u32,
+    /// Cumulative draft tokens committed for this request.
+    accepted_tokens: u32,
+    /// This request's own cycles across draft sub-iterations.
+    draft_cycles: f64,
+    /// This request's own cycles across verify passes.
+    verify_cycles: f64,
     admit_clock: u64,
     /// TTFT/deadline reference: the open-loop arrival clock when the
     /// request carries one, else the admission clock (legacy traffic).
@@ -476,6 +735,17 @@ impl LiveReq {
             preempt_pending: false,
             preemptions: 0,
             prefix_hit_tokens: 0,
+            prefill_done: 0,
+            chunks: 0,
+            planned: None,
+            spec_drafted: 0,
+            spec_commit: 0,
+            spec_fork: None,
+            spec_rounds: 0,
+            drafted_tokens: 0,
+            accepted_tokens: 0,
+            draft_cycles: 0.0,
+            verify_cycles: 0.0,
             admit_clock,
             arrival_ref,
             deadline_clock,
@@ -545,6 +815,12 @@ impl LiveReq {
             token_target: self.req.decode_tokens,
             prefix_hit_tokens: self.prefix_hit_tokens,
             preemptions: self.preemptions,
+            spec_rounds: self.spec_rounds,
+            drafted_tokens: self.drafted_tokens,
+            accepted_tokens: self.accepted_tokens,
+            draft_cycles: self.draft_cycles,
+            verify_cycles: self.verify_cycles,
+            prefill_chunks: self.chunks,
             ..Default::default()
         }
     }
@@ -701,12 +977,19 @@ impl PagedState {
     /// generated KV the resume must rebuild, and flag it for the
     /// preempted queue. Token books are preserved verbatim.
     fn preempt(&mut self, lr: &mut LiveReq) {
+        debug_assert!(
+            lr.spec_fork.is_none(),
+            "forks are released before any preemption pressure"
+        );
         if let Some(table) = lr.table.take() {
             self.release_table(&table);
         }
         lr.restore_tokens = lr.generated;
         lr.skip_tokens = 0;
         lr.prefilled = false;
+        // a resume restarts the prefill from scratch: mid-prompt chunk
+        // progress is discarded with the table
+        lr.prefill_done = 0;
         lr.preempt_pending = true;
         lr.preemptions += 1;
         self.preemptions += 1;
@@ -756,18 +1039,6 @@ fn acquire_block(pg: &mut PagedState, live: &mut [LiveReq], me: usize) -> BlockI
             .expect("lifetime admission bound guarantees an acquirable block");
         pg.preempt(&mut live[victim]);
     }
-}
-
-/// Plain continuous batching: the resilient loop with every resilience
-/// knob off (bit-identical to the pre-robustness behavior).
-pub(crate) fn run_continuous(
-    scheduler: BatchScheduler,
-    cache: &mut ProgramCache,
-    waiting: Vec<Request>,
-    backend: &mut dyn Backend,
-    max_iters: u32,
-) -> ServeReport {
-    run_resilient(scheduler, cache, waiting, backend, None, &ServeOptions::legacy(max_iters))
 }
 
 /// Drive the resilient continuous-batching loop until every request
@@ -1026,9 +1297,217 @@ pub(crate) fn run_resilient(
         }
         let use_fallback = level == ExecMode::Analytic && fallback.is_some();
 
+        // ---- plan decode scenarios (DESIGN.md §15) ------------------------
+        // Per-iteration plans: the phase each runnable request executes
+        // this iteration (a prefill chunk, a speculative verify pass,
+        // or — planned `None` — its plain phase), the draft depth of
+        // speculating requests, and, on the paged path, the forked
+        // table their drafts append against.
+        let mut iter_cycles_total = 0.0f64;
+        let runnable_planned = live.len().min(healthy.len());
+        for lr in live.iter_mut() {
+            lr.planned = None;
+            lr.spec_drafted = 0;
+            lr.spec_commit = 0;
+        }
+        for lr in live[..runnable_planned].iter_mut() {
+            if !lr.prefilled {
+                let Some(ct) = opts.chunk_tokens else { continue };
+                let span = (lr.req.cfg.seq + lr.restore_tokens)
+                    .saturating_sub(lr.skip_tokens)
+                    .max(1);
+                // chunk boundaries align up to whole KV blocks on the
+                // paged path, so prefix-index insertion after the last
+                // chunk still fingerprints whole blocks
+                let unit = match paging.as_ref() {
+                    Some(pg) => {
+                        let bt = pg.geom.block_tokens(&lr.req.cfg);
+                        ct.max(1).div_ceil(bt) * bt
+                    }
+                    None => ct.max(1),
+                };
+                let left = span - lr.prefill_done;
+                if left > unit {
+                    lr.planned = Some(Phase::Prefill { prompt: unit });
+                } else if lr.prefill_done > 0 {
+                    // final chunk of a split prefill; an unsplit prompt
+                    // (prefill_done == 0) keeps its default phase
+                    lr.planned = Some(Phase::Prefill { prompt: left });
+                }
+            } else if let Some(spec) = &opts.speculative {
+                let remaining = lr.req.decode_tokens.saturating_sub(lr.generated);
+                // depth caps one short of the remaining target: the
+                // verify pass itself yields a token, so drafting the
+                // final token would be dead work
+                if spec.k == 0 || remaining < 2 {
+                    continue;
+                }
+                let d = spec.k.min(remaining - 1);
+                // seeded acceptance: one stream per (request, round),
+                // independent of the backend. Accepted tokens are the
+                // leading run of successes — as in real speculative
+                // decoding, the first mismatch voids the drafted tail.
+                let mut draw =
+                    Rng::new(mix(mix(spec.seed, lr.req.id), lr.spec_rounds as u64));
+                let mut accepted = 0u32;
+                for _ in 0..d {
+                    if draw.chance(spec.accept) {
+                        accepted += 1;
+                    } else {
+                        break;
+                    }
+                }
+                lr.spec_rounds += 1;
+                // paged path: drafts append against a fork of the live
+                // table (copy-on-write isolates its shared tail). If
+                // the free list cannot back the fork, skip speculation
+                // this iteration — plain decode, deterministically —
+                // rather than apply eviction or preemption pressure
+                // for discardable draft state.
+                let mut forked_ok = true;
+                if let Some(pg) = paging.as_mut() {
+                    match lr.table.as_ref() {
+                        Some(table) => {
+                            let mut fork = pg.pool.fork(table);
+                            for _ in 0..d {
+                                let ok = match pg.pool.append_need(&fork) {
+                                    AppendNeed::InPlace => {
+                                        pg.pool.append_in_place(&mut fork);
+                                        true
+                                    }
+                                    AppendNeed::NewBlock => match pg.pool.try_alloc() {
+                                        Some(b) => {
+                                            pg.pool.push_tail(&mut fork, b);
+                                            true
+                                        }
+                                        None => false,
+                                    },
+                                    AppendNeed::CopyOnWrite => match pg.pool.try_alloc() {
+                                        Some(b) => {
+                                            let tail = *fork
+                                                .blocks
+                                                .last()
+                                                .expect("COW implies a tail");
+                                            let keep = pg.index.contains_block(tail);
+                                            pg.pool.cow_tail(&mut fork, b, keep);
+                                            true
+                                        }
+                                        None => false,
+                                    },
+                                };
+                                if !ok {
+                                    forked_ok = false;
+                                    break;
+                                }
+                            }
+                            if forked_ok {
+                                lr.spec_fork = Some(fork);
+                            } else {
+                                pg.release_table(&fork);
+                            }
+                        }
+                        None => forked_ok = false,
+                    }
+                }
+                if !forked_ok {
+                    continue;
+                }
+                lr.spec_drafted = d;
+                lr.drafted_tokens += d;
+                lr.spec_commit = (accepted + 1).min(remaining);
+                // the target re-scores the drafted positions in one
+                // prefill-shaped sweep
+                lr.planned = Some(Phase::Prefill { prompt: d });
+            }
+        }
+
+        // ---- speculative draft sub-iterations -----------------------------
+        // Each draft step is one batched execution of the draft model
+        // over the speculating requests — real barrier time, energy and
+        // fault surface, but no progress books of its own: progress is
+        // granted only by the verify pass below.
+        if let Some(spec) = &opts.speculative {
+            let max_d = live[..runnable_planned]
+                .iter()
+                .map(|lr| lr.spec_drafted)
+                .max()
+                .unwrap_or(0);
+            for step in 0..max_d {
+                let avail: Vec<usize> = (0..scheduler.clusters)
+                    .filter(|&c| health[c].available(iter))
+                    .collect();
+                if avail.is_empty() {
+                    break;
+                }
+                let drafting: Vec<usize> = live[..runnable_planned]
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, lr)| step < lr.spec_drafted)
+                    .map(|(i, _)| i)
+                    .collect();
+                if drafting.is_empty() {
+                    break;
+                }
+                let entries: Vec<ServeEntry> = drafting
+                    .iter()
+                    .map(|&i| {
+                        let lr = &live[i];
+                        let mut req = lr.req;
+                        req.cfg = spec.draft;
+                        req.cfg.seq = lr.req.cfg.seq;
+                        ServeEntry {
+                            req,
+                            phase: Phase::Decode {
+                                kv_len: lr.req.cfg.seq + lr.generated + step,
+                            },
+                            // the draft's own KV is sized by the draft
+                            // model, not carved from the target's block
+                            // table: price it with the legacy rule
+                            kv_block_tokens: None,
+                        }
+                    })
+                    .collect();
+                let batch = scheduler.compile_entries_on(&entries, cache, &avail);
+                let exec = match fallback {
+                    Some(ref mut fb) if use_fallback => fb.execute(&batch),
+                    _ => primary.execute(&batch),
+                };
+                let makespan =
+                    exec.per_request.iter().map(|r| r.cycles).fold(0.0f64, f64::max);
+                clock += makespan as u64;
+                iter_cycles_total += makespan;
+                report.slo.faults_injected += exec.faults_injected;
+                for (&i, r) in drafting.iter().zip(&exec.per_request) {
+                    let lr = &mut live[i];
+                    lr.energy_pj += r.energy_pj;
+                    lr.softmax_cycles += r.softmax_cycles;
+                    lr.gemm_cycles += r.gemm_cycles;
+                    lr.attn_cycles += r.attn_cycles;
+                    lr.dma_cycles += r.dma_cycles;
+                    lr.error_bound_cycles += r.error_bound_cycles;
+                    lr.draft_cycles += r.cycles;
+                }
+                // draft faults feed the same health machinery; there is
+                // no draft retry — a failed step simply cost time, and
+                // the verify pass never trusts draft output anyway
+                for &c in &exec.offline_clusters {
+                    if !health[c].offline {
+                        health[c].offline = true;
+                    }
+                }
+                for &c in &exec.failed_clusters {
+                    if !health[c].offline {
+                        health[c].failures += 1;
+                        health[c].quarantined_until =
+                            Some(iter + 1 + opts.quarantine_iters);
+                        report.slo.quarantine_events += 1;
+                    }
+                }
+            }
+        }
+
         // ---- execute with bounded retries ---------------------------------
         let mut attempts = 0u32;
-        let mut iter_cycles_total = 0.0f64;
         let (batch, exec) = loop {
             attempts += 1;
             let avail: Vec<usize> =
@@ -1041,7 +1520,7 @@ pub(crate) fn run_resilient(
                 .iter()
                 .map(|lr| ServeEntry {
                     req: lr.req,
-                    phase: lr.phase(),
+                    phase: lr.planned.unwrap_or_else(|| lr.phase()),
                     kv_block_tokens: lr.table.as_ref().map(|t| t.block_tokens),
                 })
                 .collect();
@@ -1099,14 +1578,33 @@ pub(crate) fn run_resilient(
             report.slo.retries += 1;
         };
 
+        // ---- speculative rollback -----------------------------------------
+        // Forks are iteration-scoped: every fork is released before any
+        // commit append applies allocation pressure. Rejected draft
+        // tails return to the pool here — a copy-on-write tail frees,
+        // shared blocks drop a reference — and the accepted prefix
+        // re-lands in the *original* table through the ordinary append
+        // path below. Releasing first also preserves acquire_block's
+        // termination guarantee: no block is held by discardable draft
+        // state when eviction/preemption pressure is applied.
+        if let Some(pg) = paging.as_mut() {
+            for lr in live.iter_mut() {
+                if let Some(fork) = lr.spec_fork.take() {
+                    pg.release_table(&fork);
+                }
+            }
+        }
+
         // ---- account per request ------------------------------------------
         let quarantined: Vec<usize> =
             (0..scheduler.clusters).filter(|&c| !health[c].available(iter)).collect();
         if let (Some(batch), Some(exec)) = (batch, exec) {
             let mut entries_log = Vec::with_capacity(batch.requests.len());
-            // live indices that produced a decode token this iteration
-            // and hold a block table: their KV grows by one row below
-            let mut appended: Vec<usize> = Vec::new();
+            // live indices that produced decode tokens this iteration
+            // and hold a block table, with how many KV rows to append:
+            // one for plain decode, the committed run for a verified
+            // speculative round
+            let mut appended: Vec<(usize, u32)> = Vec::new();
             for (idx, ((lr, cr), r)) in live
                 .iter_mut()
                 .zip(&batch.requests)
@@ -1124,6 +1622,29 @@ pub(crate) fn run_resilient(
                     continue; // attempts exhausted: no progress granted
                 }
                 if !lr.prefilled {
+                    // the executed phase says how much of the prompt
+                    // span this iteration covered: the whole remainder
+                    // on the plain path, one chunk under chunked
+                    // prefill
+                    let span = (lr.req.cfg.seq + lr.restore_tokens)
+                        .saturating_sub(lr.skip_tokens)
+                        .max(1);
+                    let step = match cr.phase {
+                        Phase::Prefill { prompt } => prompt,
+                        Phase::Decode { .. } => {
+                            unreachable!("unprefilled requests run prefill phases")
+                        }
+                    };
+                    if opts.chunk_tokens.is_some() {
+                        lr.chunks += 1;
+                    }
+                    lr.prefill_done += step;
+                    if lr.prefill_done < span {
+                        // mid-prompt chunk: no first token yet, TTFT
+                        // keeps running, the decode entry below waits
+                        continue;
+                    }
+                    lr.prefill_done = 0;
                     lr.prefilled = true;
                     if !lr.ever_prefilled {
                         lr.ever_prefilled = true;
@@ -1147,6 +1668,26 @@ pub(crate) fn run_resilient(
                             }
                         }
                     }
+                } else if lr.spec_drafted > 0 {
+                    // speculative verify pass: commit the accepted
+                    // draft prefix plus the pass's own token. Observed
+                    // per-token latency spreads the whole iteration
+                    // barrier (drafts + verify attempts) over the
+                    // committed run — that ratio *is* the speculative
+                    // speedup, on the same clock TTFT is measured on.
+                    let committed = lr.spec_commit.max(1);
+                    lr.generated += committed;
+                    lr.accepted_tokens += committed - 1;
+                    lr.verify_cycles += r.cycles;
+                    lr.decode_cycles += iter_cycles_total;
+                    lr.decode_iters += committed;
+                    // the final token never appends (its KV is never
+                    // read again), but every committed token before it
+                    // must land in the table
+                    let grow = if lr.done() { committed - 1 } else { committed };
+                    if lr.table.is_some() && grow > 0 {
+                        appended.push((idx, grow));
+                    }
                 } else {
                     lr.generated += 1;
                     // observed inter-token time is the iteration barrier
@@ -1160,7 +1701,7 @@ pub(crate) fn run_resilient(
                     // append must not consume blocks, evict cached
                     // prefixes or preempt live requests
                     if lr.table.is_some() && !lr.done() {
-                        appended.push(idx);
+                        appended.push((idx, 1));
                     }
                 }
             }
@@ -1178,25 +1719,32 @@ pub(crate) fn run_resilient(
                         pg.release_table(&table);
                     }
                 }
-                for &idx in &appended {
+                for &(idx, grow) in &appended {
                     // take the table out so acquire_block may preempt
                     // other live entries without aliasing it
                     let Some(mut table) = live[idx].table.take() else { continue };
-                    match pg.pool.append_need(&table) {
-                        AppendNeed::InPlace => pg.pool.append_in_place(&mut table),
-                        AppendNeed::NewBlock => {
-                            let fresh = acquire_block(pg, &mut live, idx);
-                            pg.pool.push_tail(&mut table, fresh);
-                        }
-                        // structurally unreachable from this loop (only
-                        // whole, full blocks are ever shared, and a full
-                        // tail classifies as NewBlock) — kept live for
-                        // forked tables, e.g. speculative decoding
-                        AppendNeed::CopyOnWrite => {
-                            let fresh = acquire_block(pg, &mut live, idx);
-                            let tail = *table.blocks.last().expect("COW implies a tail");
-                            let keep = pg.index.contains_block(tail);
-                            pg.pool.cow_tail(&mut table, fresh, keep);
+                    for _ in 0..grow {
+                        match pg.pool.append_need(&table) {
+                            AppendNeed::InPlace => pg.pool.append_in_place(&mut table),
+                            AppendNeed::NewBlock => {
+                                let fresh = acquire_block(pg, &mut live, idx);
+                                pg.pool.push_tail(&mut table, fresh);
+                            }
+                            // structurally unreachable from this loop:
+                            // only whole, full blocks are ever shared
+                            // (a full tail classifies as NewBlock), and
+                            // draft forks — whose first append CoWs a
+                            // partial shared tail on the *fork* side —
+                            // are all released above, so the original
+                            // tail is back to one reference by now.
+                            // Kept live as the safety path regardless.
+                            AppendNeed::CopyOnWrite => {
+                                let fresh = acquire_block(pg, &mut live, idx);
+                                let tail =
+                                    *table.blocks.last().expect("COW implies a tail");
+                                let keep = pg.index.contains_block(tail);
+                                pg.pool.cow_tail(&mut table, fresh, keep);
+                            }
                         }
                     }
                     live[idx].table = Some(table);
@@ -1293,6 +1841,24 @@ pub(crate) fn run_resilient(
             deferrals: pg.deferrals,
         });
     }
+    // decode-scenario aggregate: sum the per-request books (keeping
+    // them attributable to requests exactly once, like the pool books)
+    for r in &report.per_request {
+        report.decode.spec_rounds += r.spec_rounds as u64;
+        report.decode.drafted_tokens += r.drafted_tokens as u64;
+        report.decode.accepted_tokens += r.accepted_tokens as u64;
+        report.decode.draft_cycles += r.draft_cycles;
+        report.decode.verify_cycles += r.verify_cycles;
+        report.decode.prefill_chunks += r.prefill_chunks as u64;
+        if r.prefill_chunks > 1 {
+            report.decode.chunked_requests += 1;
+        }
+    }
+    report.decode.acceptance_rate = if report.decode.drafted_tokens == 0 {
+        0.0
+    } else {
+        report.decode.accepted_tokens as f64 / report.decode.drafted_tokens as f64
+    };
     report.iterations = executed;
     report.total_cycles = clock;
     report.health = (0..scheduler.clusters)

@@ -1,6 +1,6 @@
 //! Open-loop arrival traces for trace-driven serving (DESIGN.md §12).
 //!
-//! The resilient serve loop ([`super::Engine::serve_resilient`]) admits
+//! The serve loop ([`super::Engine::serve`]) admits
 //! requests no earlier than their `arrival_cycles`, so serving
 //! experiments need an *open-loop* arrival process — one whose timing
 //! does not depend on how fast the server happens to drain its queue.

@@ -42,11 +42,12 @@ use vexp::energy::AreaModel;
 use vexp::error::Result;
 use vexp::exec::{
     AnalyticBackend, Backend, CycleSimBackend, Engine, Outcome, PagedKvOptions, Request,
-    SchedPolicy, ServeOptions, TraceKind, TraceSpec,
+    SchedPolicy, ServeOptions, SpecDecodeOptions, TraceKind, TraceSpec,
 };
 use vexp::kernels::flash_attention::{run_flash_attention, FaVariant};
 use vexp::kernels::softmax::{run_softmax, SoftmaxVariant};
-use vexp::model::config::{ALL_MODELS, GPT2_SMALL, GPT3_XL, VIT_BASE};
+use vexp::model::config::{by_short_name, ALL_MODELS, GPT2_SMALL, GPT3_XL, VIT_BASE};
+use vexp::model::TransformerConfig;
 use vexp::runtime::pjrt::Input;
 use vexp::runtime::Runtime;
 use vexp::sim::{FaultPlan, FaultSpec};
@@ -85,6 +86,14 @@ const USAGE: &str = "usage: vexp <info|exp|softmax|flashattention|e2e|serve|benc
        --share-prefix enable radix-tree prefix sharing: same-class\n\
                       requests share prompt-head blocks and skip that\n\
                       much prefill\n\
+       --speculative D:K  speculative decoding (DESIGN.md \u{a7}15): draft\n\
+                      model D = gpt2|gpt3|vit-base|vit-huge proposes K\n\
+                      tokens per decode iteration; the target model\n\
+                      verifies them in one prefill-shaped pass (K = 0\n\
+                      reduces to plain decode)\n\
+       --chunk-prefill N  split prompts into N-token prefill chunks\n\
+                      interleaved with decode iterations (rounded up\n\
+                      to whole KV blocks on the paged tier)\n\
      bench options:\n\
        --json PATH    write the measured sweep as JSON\n\
        --small        single tiny configuration (CI smoke)\n\
@@ -349,6 +358,8 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     let mut share_prefix = false;
     let mut kv_block_kb: Option<u64> = None;
     let mut kv_pool_kb: Option<u64> = None;
+    let mut speculative: Option<(TransformerConfig, u32)> = None;
+    let mut chunk_prefill: Option<u32> = None;
     // first trace-only flag seen, to reject it if --trace never shows up
     let mut trace_only: Option<&'static str> = None;
 
@@ -418,6 +429,15 @@ fn serve_cmd(args: &[String]) -> Result<()> {
                 kv_pool_kb = Some(flag_u64(it.next(), "serve: --kv-pool")?);
                 trace_only.get_or_insert("--kv-pool");
             }
+            "--speculative" => {
+                speculative =
+                    Some(parse_speculative(flag_val(it.next(), "serve: --speculative")?)?);
+                trace_only.get_or_insert("--speculative");
+            }
+            "--chunk-prefill" => {
+                chunk_prefill = Some(flag_u32(it.next(), "serve: --chunk-prefill")?);
+                trace_only.get_or_insert("--chunk-prefill");
+            }
             other => vexp::bail!("serve: unknown flag {other}"),
         }
     }
@@ -455,6 +475,8 @@ fn serve_cmd(args: &[String]) -> Result<()> {
             iters,
             policy,
             paging,
+            speculative,
+            chunk_prefill,
         });
     }
     if let Some(flag) = trace_only {
@@ -488,10 +510,10 @@ fn serve_cmd(args: &[String]) -> Result<()> {
 
     let report = if analytic {
         let mut backend = AnalyticBackend::new();
-        engine.serve_continuous_bounded(&mut backend, iters)
+        engine.serve(&mut backend, None, &ServeOptions::legacy(iters))
     } else {
         let mut backend = CycleSimBackend::new(CLUSTERS);
-        engine.serve_continuous_bounded(&mut backend, iters)
+        engine.serve(&mut backend, None, &ServeOptions::legacy(iters))
     };
 
     println!(
@@ -534,6 +556,24 @@ fn serve_cmd(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--speculative DRAFT:K`: a draft-model short name and the
+/// per-iteration draft depth (`K = 0` is allowed — it reduces to plain
+/// decode, which is exactly what the reduction tests pin down).
+fn parse_speculative(s: &str) -> Result<(TransformerConfig, u32)> {
+    let Some((model, k)) = s.split_once(':') else {
+        vexp::bail!("serve: --speculative wants DRAFT:K (e.g. gpt2:4), got {s:?}")
+    };
+    let Some(cfg) = by_short_name(model) else {
+        vexp::bail!(
+            "serve: --speculative draft model must be gpt2|gpt3|vit-base|vit-huge, got {model:?}"
+        )
+    };
+    match k.parse::<u32>() {
+        Ok(k) => Ok((cfg, k)),
+        Err(_) => vexp::bail!("serve: --speculative K must be an unsigned integer, got {k:?}"),
+    }
+}
+
 /// Parsed configuration of `vexp serve --trace ...`.
 struct TraceServeCfg {
     kind: TraceKind,
@@ -549,6 +589,8 @@ struct TraceServeCfg {
     iters: u32,
     policy: SchedPolicy,
     paging: Option<PagedKvOptions>,
+    speculative: Option<(TransformerConfig, u32)>,
+    chunk_prefill: Option<u32>,
 }
 
 /// Trace-driven resilient serving (DESIGN.md §12): seeded open-loop
@@ -586,20 +628,26 @@ fn serve_trace_cmd(cfg: TraceServeCfg) -> Result<()> {
         engine.submit_request(r); // ids are 0..requests, in trace order
     }
 
-    let opts = ServeOptions {
-        max_iters: cfg.iters,
-        max_live: 6,
-        max_queue: 4,
-        ttft_slo_cycles: Some(ttft_slo),
-        token_slo_cycles: Some(token_slo),
-        deadline_cycles: Some(deadline),
-        shed_over_projected_ttft: true,
-        max_attempts: 3,
-        quarantine_iters: 3,
-        degrade_sampled_at: 4,
-        degrade_analytic_at: 10,
-        paging: cfg.paging,
-    };
+    let mut opts = ServeOptions::new()
+        .max_iters(cfg.iters)
+        .max_live(6)
+        .max_queue(4)
+        .ttft_slo(ttft_slo)
+        .token_slo(token_slo)
+        .deadline(deadline)
+        .shed_over_projected_ttft(true)
+        .degrade_at(4, 10);
+    if let Some(p) = cfg.paging {
+        opts = opts.paging(p);
+    }
+    if let Some((draft, k)) = cfg.speculative {
+        // the acceptance stream shares the trace seed, so one --seed
+        // reproduces the whole run (trace, faults, acceptance)
+        opts = opts.speculative(SpecDecodeOptions::new(draft, k).seed(cfg.seed));
+    }
+    if let Some(n) = cfg.chunk_prefill {
+        opts = opts.chunked_prefill(n);
+    }
 
     let armed = cfg.faults != FaultSpec::off();
     let mut primary = CycleSimBackend::new(CLUSTERS);
@@ -617,7 +665,7 @@ fn serve_trace_cmd(cfg: TraceServeCfg) -> Result<()> {
         cfg.seed,
         if armed { format!("{:?}", cfg.faults) } else { "off".to_string() }
     );
-    let report = engine.serve_resilient(&mut primary, Some(&mut fallback), &opts);
+    let report = engine.serve(&mut primary, Some(&mut fallback), &opts);
 
     println!(
         "{:>3} {:12} {:>12} {:>7} {:>10} {:>10} {:>12} {:>8}",
@@ -672,6 +720,25 @@ fn serve_trace_cmd(cfg: TraceServeCfg) -> Result<()> {
         "  resilience: retries {}, faults injected {}, quarantine events {}",
         s.retries, s.faults_injected, s.quarantine_events
     );
+    let d = &report.decode;
+    if cfg.speculative.is_some() || d.spec_rounds > 0 {
+        println!(
+            "  speculative: rounds {}, drafted {}, accepted {} ({:.1}% acceptance), \
+             draft/verify cycles {:.0}/{:.0}",
+            d.spec_rounds,
+            d.drafted_tokens,
+            d.accepted_tokens,
+            d.acceptance_rate * 100.0,
+            d.draft_cycles,
+            d.verify_cycles
+        );
+    }
+    if cfg.chunk_prefill.is_some() || d.prefill_chunks > 0 {
+        println!(
+            "  chunked prefill: {} chunks across {} requests",
+            d.prefill_chunks, d.chunked_requests
+        );
+    }
     println!(
         "  iterations: {} full, {} sampled, {} analytic ({} total, {} cycles)",
         s.full_iters, s.sampled_iters, s.analytic_iters, report.iterations, report.total_cycles
@@ -913,7 +980,7 @@ fn bench_cmd(args: &[String]) -> Result<()> {
             let mut engine = Engine::new();
             engine.submit_request(Request::new(0, gpt3).with_tokens(toks));
             let t0 = std::time::Instant::now();
-            let report = engine.serve_continuous(backend);
+            let report = engine.serve(backend, None, &ServeOptions::default());
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
             let bound: f64 =
                 report.per_request.iter().map(|r| r.error_bound_cycles).sum();
@@ -969,19 +1036,15 @@ fn bench_cmd(args: &[String]) -> Result<()> {
             for r in spec.mixed_traffic_paged(prompt, toks, None, 3) {
                 engine.submit_request(r);
             }
-            let opts = ServeOptions {
-                max_iters: 512,
-                paging: Some(PagedKvOptions {
-                    block_bytes: block_kb * 1024,
-                    pool_bytes: pool_kb * 1024,
-                    share_prefix: true,
-                }),
-                ..ServeOptions::default()
-            };
+            let opts = ServeOptions::new().max_iters(512).paging(PagedKvOptions {
+                block_bytes: block_kb * 1024,
+                pool_bytes: pool_kb * 1024,
+                share_prefix: true,
+            });
             let mut backend = CycleSimBackend::new(CLUSTERS);
             backend.system.reference_interp = reference;
             let t0 = std::time::Instant::now();
-            let report = engine.serve_resilient(&mut backend, None, &opts);
+            let report = engine.serve(&mut backend, None, &opts);
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
             report.assert_consistent();
             (report, wall_ms)
@@ -1028,6 +1091,104 @@ fn bench_cmd(args: &[String]) -> Result<()> {
             cycles: fast.total_cycles,
             wall_ms_fast: fast_ms,
             wall_ms_reference: ref_ms,
+        });
+    }
+
+    // --- §15 decode-scenario matrix: {GPT-2, GPT-3} x {plain, spec, chunked}
+    // Every cell serves the same request mix through the unified
+    // `Engine::serve` API under one decode scenario; the "reference" leg
+    // re-runs the cell on the reference interpreter and must stay
+    // cycle-identical (the §15 differential contract).
+    {
+        let (requests, prompt, toks): (u64, u32, u32) =
+            if small { (2, 32, 6) } else { (3, 64, 8) };
+        let mut matrix_cycles = 0u64;
+        let (mut matrix_fast_ms, mut matrix_ref_ms) = (0.0f64, 0.0f64);
+        let (mut drafted, mut accepted, mut chunks) = (0u64, 0u64, 0u64);
+        for (mname, model) in [("gpt2", GPT2_SMALL), ("gpt3", GPT3_XL)] {
+            for scenario in ["plain", "speculative", "chunked"] {
+                let run_cell = |reference: bool| -> (vexp::exec::ServeReport, f64) {
+                    let mut cfg = model;
+                    cfg.seq = prompt;
+                    let mut engine = Engine::new();
+                    for i in 0..requests {
+                        engine.submit_request(Request::new(i, cfg).with_tokens(toks));
+                    }
+                    let mut opts = ServeOptions::new().max_iters(256);
+                    match scenario {
+                        "speculative" => {
+                            opts = opts
+                                .speculative(SpecDecodeOptions::new(GPT2_SMALL, 3).seed(15));
+                        }
+                        "chunked" => opts = opts.chunked_prefill(prompt / 2),
+                        _ => {}
+                    }
+                    let mut backend = CycleSimBackend::new(CLUSTERS);
+                    backend.system.reference_interp = reference;
+                    let t0 = std::time::Instant::now();
+                    let report = engine.serve(&mut backend, None, &opts);
+                    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    report.assert_consistent();
+                    (report, wall_ms)
+                };
+                let (fast, fast_ms) = run_cell(false);
+                assert!(
+                    fast.per_request.iter().all(|r| r.outcome == Outcome::Completed),
+                    "scenario {mname}/{scenario}: every request must complete"
+                );
+                match scenario {
+                    "speculative" => assert!(
+                        fast.decode.drafted_tokens > 0,
+                        "scenario {mname}/{scenario}: no tokens drafted"
+                    ),
+                    "chunked" => assert!(
+                        fast.decode.prefill_chunks >= 2 * requests,
+                        "scenario {mname}/{scenario}: prompts were not split"
+                    ),
+                    _ => {}
+                }
+                if !fast_only {
+                    let (reference, ref_ms) = run_cell(true);
+                    assert_eq!(
+                        fast.total_cycles, reference.total_cycles,
+                        "scenario {mname}/{scenario}: decoded vs reference \
+                         interpreter cycles diverge"
+                    );
+                    for (f, r) in fast.per_request.iter().zip(&reference.per_request) {
+                        assert_eq!(
+                            (f.request_id, f.tokens, f.drafted_tokens, f.accepted_tokens),
+                            (r.request_id, r.tokens, r.drafted_tokens, r.accepted_tokens),
+                            "scenario {mname}/{scenario}: per-request books \
+                             diverge across executors"
+                        );
+                    }
+                    matrix_ref_ms += ref_ms;
+                }
+                matrix_cycles += fast.total_cycles;
+                matrix_fast_ms += fast_ms;
+                drafted += fast.decode.drafted_tokens;
+                accepted += fast.decode.accepted_tokens;
+                chunks += fast.decode.prefill_chunks;
+            }
+        }
+        println!(
+            "serve scenarios 2 models x 3 scenarios, prompt={prompt} tokens={toks}: \
+             {matrix_cycles} cycles, drafted {drafted}, accepted {accepted}, \
+             prefill chunks {chunks}"
+        );
+        rows.push(BenchRow {
+            kernel: "serve-scenarios",
+            variant: "matrix",
+            dims: vec![
+                ("models", 2),
+                ("scenarios", 3),
+                ("requests", requests),
+                ("prompt", prompt as u64),
+                ("tokens", toks as u64),
+            ],
+            cycles: matrix_cycles,
+            wall_ms_fast: matrix_fast_ms,
+            wall_ms_reference: matrix_ref_ms,
         });
     }
 
@@ -1224,6 +1385,13 @@ mod tests {
             &["serve", "--trace", "burst", "--kv-block", "0"],
             &["serve", "--trace", "burst", "--kv-pool", "0"],
             &["serve", "--share-prefix"], // trace-only flag without --trace
+            &["serve", "--speculative"],
+            &["serve", "--trace", "burst", "--speculative", "gpt2"], // missing :K
+            &["serve", "--trace", "burst", "--speculative", "nope:3"],
+            &["serve", "--trace", "burst", "--speculative", "gpt2:many"],
+            &["serve", "--speculative", "gpt2:2"], // trace-only flag without --trace
+            &["serve", "--trace", "burst", "--chunk-prefill", "0"],
+            &["serve", "--chunk-prefill", "64"], // trace-only flag without --trace
             &["bench", "--json"],
             &["bench", "--wat"],
         ];

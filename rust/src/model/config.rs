@@ -68,6 +68,19 @@ pub const VIT_HUGE: TransformerConfig = TransformerConfig {
 /// The four model configurations the paper evaluates (§V-D).
 pub const ALL_MODELS: [TransformerConfig; 4] = [GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE];
 
+/// Look up an evaluated configuration by CLI-friendly short name
+/// (case-insensitive): `gpt2`, `gpt3`, `vit-base`, `vit-huge` (plus
+/// the obvious aliases). `None` for anything else.
+pub fn by_short_name(name: &str) -> Option<TransformerConfig> {
+    match name.to_ascii_lowercase().as_str() {
+        "gpt2" | "gpt-2" | "gpt2-small" => Some(GPT2_SMALL),
+        "gpt3" | "gpt-3" | "gpt3-xl" => Some(GPT3_XL),
+        "vit" | "vit-base" | "vit-b" => Some(VIT_BASE),
+        "vit-huge" | "vit-h" => Some(VIT_HUGE),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -6,5 +6,5 @@
 pub mod config;
 pub mod workload;
 
-pub use config::{TransformerConfig, GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE};
+pub use config::{by_short_name, TransformerConfig, GPT2_SMALL, GPT3_XL, VIT_BASE, VIT_HUGE};
 pub use workload::{LayerOps, Phase, WorkloadOps};

@@ -176,8 +176,8 @@ fn batched_serving_reports_per_request_with_cache_hits() {
     }
 }
 
-/// The engine facade: submit → serve drains the queue and reuses the
-/// cache across batches.
+/// The engine facade: submit → execute_batch drains the queue and
+/// reuses the cache across batches.
 #[test]
 fn engine_serves_consecutive_batches_through_one_cache() {
     let mut engine = Engine::new();
@@ -185,7 +185,7 @@ fn engine_serves_consecutive_batches_through_one_cache() {
 
     engine.submit(VIT_BASE);
     engine.submit(VIT_BASE);
-    let first = engine.serve(&mut sim);
+    let first = engine.execute_batch(&mut sim);
     assert_eq!(first.per_request.len(), 2);
     assert_eq!(engine.pending(), 0);
     assert_eq!(first.cache_misses, 1);
@@ -193,7 +193,7 @@ fn engine_serves_consecutive_batches_through_one_cache() {
 
     // a second batch of the same shape compiles nothing new
     engine.submit(VIT_BASE);
-    let second = engine.serve(&mut sim);
+    let second = engine.execute_batch(&mut sim);
     assert_eq!(second.per_request.len(), 1);
     assert_eq!(second.cache_misses, 0);
     assert_eq!(second.cache_hits, 1);

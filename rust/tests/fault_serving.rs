@@ -317,7 +317,7 @@ fn transient_failure_triggers_retry_and_quarantine_without_double_count() {
         }],
     ));
     let opts = ServeOptions { max_attempts: 3, quarantine_iters: 1, ..Default::default() };
-    let report = engine.serve_resilient(&mut backend, None, &opts);
+    let report = engine.serve(&mut backend, None, &opts);
     report.assert_consistent();
 
     assert_eq!(report.per_request.len(), 1);
@@ -342,7 +342,7 @@ fn admission_control_sheds_over_queue_depth() {
     }
     let mut backend = AnalyticBackend::new();
     let opts = ServeOptions { max_live: 1, max_queue: 0, ..Default::default() };
-    let report = engine.serve_resilient(&mut backend, None, &opts);
+    let report = engine.serve(&mut backend, None, &opts);
     report.assert_consistent();
 
     assert_eq!(report.slo.shed, 5, "1 admitted, 0 allowed to wait, 5 shed");
@@ -364,7 +364,7 @@ fn deadline_expiry_times_out_with_partial_progress() {
     engine.submit_request(gpt(32, 50));
     let mut backend = AnalyticBackend::new();
     let opts = ServeOptions { deadline_cycles: Some(1), ..Default::default() };
-    let report = engine.serve_resilient(&mut backend, None, &opts);
+    let report = engine.serve(&mut backend, None, &opts);
     report.assert_consistent();
 
     let r = &report.per_request[0];
@@ -387,7 +387,7 @@ fn overload_walks_the_degradation_ladder_and_recovers() {
         degrade_analytic_at: 3,
         ..Default::default()
     };
-    let report = engine.serve_resilient(&mut primary, Some(&mut fallback), &opts);
+    let report = engine.serve(&mut primary, Some(&mut fallback), &opts);
     report.assert_consistent();
 
     let s = &report.slo;
@@ -406,7 +406,7 @@ fn sampled_degradation_works_without_a_fallback_backend() {
     engine.submit_request(gpt(32, 2));
     let mut primary = CycleSimBackend::new(4);
     let opts = ServeOptions { degrade_sampled_at: 2, ..Default::default() };
-    let report = engine.serve_resilient(&mut primary, None, &opts);
+    let report = engine.serve(&mut primary, None, &opts);
     report.assert_consistent();
     assert!(report.slo.sampled_iters >= 1);
     assert_eq!(
@@ -424,7 +424,7 @@ fn serve_mixed(plan: Option<FaultPlan>) -> (ServeReport, Vec<u64>) {
     engine.submit_request(Request::new(0, vit));
     let mut backend = CycleSimBackend::new(4);
     backend.system.faults = plan;
-    let report = engine.serve_continuous_bounded(&mut backend, 32);
+    let report = engine.serve(&mut backend, None, &ServeOptions::legacy(32));
     report.assert_consistent();
     let sums = backend
         .system
@@ -465,21 +465,17 @@ fn chaos_trace_run(seed: u64) -> ServeReport {
     let mut primary = CycleSimBackend::new(4);
     primary.system.faults = Some(FaultPlan::new(FaultSpec::chaos(), seed, 4));
     let mut fallback = AnalyticBackend::new();
-    let opts = ServeOptions {
-        max_iters: 64,
-        max_live: 2,
-        max_queue: 2,
-        ttft_slo_cycles: Some(5_000_000),
-        token_slo_cycles: Some(1_000_000),
-        deadline_cycles: None,
-        shed_over_projected_ttft: true,
-        max_attempts: 3,
-        quarantine_iters: 2,
-        degrade_sampled_at: 3,
-        degrade_analytic_at: 5,
-        paging: None,
-    };
-    let report = engine.serve_resilient(&mut primary, Some(&mut fallback), &opts);
+    let opts = ServeOptions::new()
+        .max_iters(64)
+        .max_live(2)
+        .max_queue(2)
+        .ttft_slo(5_000_000)
+        .token_slo(1_000_000)
+        .shed_over_projected_ttft(true)
+        .max_attempts(3)
+        .quarantine_iters(2)
+        .degrade_at(3, 5);
+    let report = engine.serve(&mut primary, Some(&mut fallback), &opts);
     report.assert_consistent();
     report
 }

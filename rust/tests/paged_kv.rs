@@ -251,7 +251,7 @@ fn prefix_index_matches_the_naive_oracle_on_random_paths() {
 // 3. giant-block differential: paged tier vs legacy unpaged loop
 // ---------------------------------------------------------------------------
 
-/// Serve the same mixed burst trace through `serve_resilient`, with or
+/// Serve the same mixed burst trace through `Engine::serve`, with or
 /// without paging, on the cycle simulator, and hand back the report
 /// plus every cluster's SPM checksum.
 fn serve_burst_trace(
@@ -266,7 +266,7 @@ fn serve_burst_trace(
     let mut backend = CycleSimBackend::new(4);
     backend.system.reference_interp = reference;
     let opts = ServeOptions { max_iters: 256, paging, ..ServeOptions::default() };
-    let report = engine.serve_resilient(&mut backend, None, &opts);
+    let report = engine.serve(&mut backend, None, &opts);
     report.assert_consistent();
     let sums = backend.system.clusters.iter().map(|c| spm_checksum(&c.spm)).collect();
     (report, sums)
@@ -327,7 +327,7 @@ fn giant_block_paged_serve_is_bit_identical_to_legacy_on_both_sim_paths() {
         assert_eq!(pool.preemptions, 0, "unbounded pool must never preempt");
         assert_eq!(pool.deferrals, 0, "unbounded pool must never defer");
         assert_eq!(pool.shed_unfittable, 0, "unbounded pool must never shed");
-        assert_eq!(pool.cow_copies, 0, "serve loop never forks tables");
+        assert_eq!(pool.cow_copies, 0, "no speculation configured, so no fork ever CoWs");
     }
 }
 
@@ -354,7 +354,7 @@ fn preemption_resumes_and_completes_with_identical_token_books() {
         let mut backend = AnalyticBackend::new();
         let opts =
             ServeOptions { max_iters: 2048, paging: Some(paging), ..ServeOptions::default() };
-        let report = engine.serve_resilient(&mut backend, None, &opts);
+        let report = engine.serve(&mut backend, None, &opts);
         report.assert_consistent();
         report
     };
@@ -422,7 +422,7 @@ fn completed_requests_release_blocks_before_appends_under_pressure() {
         }),
         ..ServeOptions::default()
     };
-    let report = engine.serve_resilient(&mut backend, None, &opts);
+    let report = engine.serve(&mut backend, None, &opts);
     report.assert_consistent();
     for r in &report.per_request {
         assert_eq!(r.outcome, Outcome::Completed, "request {}", r.request_id);
@@ -467,7 +467,7 @@ fn pressure_trace_shows_evictions_prefix_hits_and_policy_attainment() {
         }),
         ..ServeOptions::default()
     };
-    let report = engine.serve_resilient(&mut backend, None, &opts);
+    let report = engine.serve(&mut backend, None, &opts);
     report.assert_consistent();
 
     let pool = report.pool.as_ref().expect("paged run must carry a pool report");

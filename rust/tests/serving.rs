@@ -5,7 +5,7 @@
 //! engine queue semantics the batching loop builds on.
 
 use vexp::coordinator::CLUSTERS;
-use vexp::exec::{AnalyticBackend, Backend, CycleSimBackend, Engine, Request, ServeReport};
+use vexp::exec::{AnalyticBackend, Backend, CycleSimBackend, Engine, Request, ServeOptions, ServeReport};
 use vexp::model::{Phase, TransformerConfig, GPT2_SMALL, VIT_BASE};
 
 /// A small GPT-2 shape (short prompt) to keep simulated prefills cheap.
@@ -66,7 +66,7 @@ fn continuous_batching_retires_joins_and_reports_metrics() {
     assert_eq!((a, b, c), (0, 1, 2));
 
     let mut backend = AnalyticBackend::new();
-    let report = engine.serve_continuous(&mut backend);
+    let report = engine.serve(&mut backend, None, &ServeOptions::default());
     report.assert_consistent();
     assert_eq!(report.per_request.len(), 3, "every request retires");
     assert_eq!(engine.pending(), 0);
@@ -118,7 +118,7 @@ fn continuous_batching_on_the_cycle_sim_backend() {
     let mut engine = Engine::with_clusters(4);
     let id = engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(3));
     let mut backend = CycleSimBackend::new(4);
-    let report = engine.serve_continuous(&mut backend);
+    let report = engine.serve(&mut backend, None, &ServeOptions::default());
     report.assert_consistent();
     assert_eq!(report.per_request.len(), 1);
     let r = &report.per_request[0];
@@ -142,7 +142,7 @@ fn decode_program_is_cached_across_iterations() {
     let mut engine = Engine::with_clusters(4);
     engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(4));
     let mut backend = AnalyticBackend::new();
-    let report = engine.serve_continuous(&mut backend);
+    let report = engine.serve(&mut backend, None, &ServeOptions::default());
     report.assert_consistent();
     assert_eq!(report.iterations, 4, "1 prefill + 3 decode iterations");
     // one prefill program + one decode program; every later iteration
@@ -239,10 +239,10 @@ fn phased_batch_executes_on_the_cycle_sim_backend() {
 }
 
 #[test]
-fn serve_continuous_with_empty_queue_is_empty() {
+fn serve_with_empty_queue_is_empty() {
     let mut engine = Engine::new();
     let mut backend = AnalyticBackend::new();
-    let report = engine.serve_continuous(&mut backend);
+    let report = engine.serve(&mut backend, None, &ServeOptions::default());
     report.assert_consistent();
     assert_eq!(report.iterations, 0);
     assert_eq!(report.total_cycles, 0);
@@ -256,7 +256,7 @@ fn safety_bound_reports_unfinished_requests() {
     let mut engine = Engine::with_clusters(4);
     engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(1000));
     let mut backend = AnalyticBackend::new();
-    let report = engine.serve_continuous_bounded(&mut backend, 3);
+    let report = engine.serve(&mut backend, None, &ServeOptions::legacy(3));
     report.assert_consistent();
     assert_eq!(report.iterations, 3);
     assert_eq!(report.per_request.len(), 1, "unfinished request still reported");
@@ -274,7 +274,7 @@ fn safety_bound_reports_never_admitted_requests_with_zero_progress() {
     let a = engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(5));
     let b = engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(5));
     let mut backend = AnalyticBackend::new();
-    let report = engine.serve_continuous_bounded(&mut backend, 1);
+    let report = engine.serve(&mut backend, None, &ServeOptions::legacy(1));
     report.assert_consistent();
     assert_eq!(report.iterations, 1);
     assert_eq!(report.per_request.len(), 2, "both requests reported");
@@ -290,7 +290,7 @@ fn arrival_gaps_fast_forward_without_counting_iterations() {
     let mut engine = Engine::new();
     engine.submit_request(Request::new(0, tiny_gpt2(64)).with_tokens(1).arriving_at(100));
     let mut backend = AnalyticBackend::new();
-    let report = engine.serve_continuous(&mut backend);
+    let report = engine.serve(&mut backend, None, &ServeOptions::default());
     report.assert_consistent();
     assert_eq!(report.iterations, 1, "only the prefill iteration executed");
     assert_eq!(report.per_request.len(), 1);

@@ -1,0 +1,506 @@
+//! Integration wall for speculative decoding + chunked prefill
+//! (DESIGN.md §15), served through the unified `Engine::serve` API.
+//!
+//! Four layers of evidence, mirroring the differential style of the
+//! paged-KV wall:
+//!
+//! 1. **Cross-path bit-identity** — a speculative run and a chunked run
+//!    are pure functions of (trace, options): the decoded fast path and
+//!    the reference interpreter must agree bit-exactly on cycles, SPM
+//!    bytes, and every per-request book.
+//! 2. **Reduction guarantees** — `k = 0` and an effectively unbounded
+//!    chunk size reduce bit-identically to the plain serve loop on both
+//!    simulator paths; only the chunk *counter* may differ.
+//! 3. **Seeded acceptance model** — the token books of a speculative
+//!    run match a plain run for any (k, seed, accept), and the
+//!    acceptance extremes (`accept` 0 and 1) pin the draft/accept
+//!    counters exactly.
+//! 4. **Fork lifecycle under the paged tier** — pool books balance
+//!    across fork / commit / rollback under random acceptance and real
+//!    memory pressure, and fork-side copy-on-write is actually
+//!    exercised and counted.
+//!
+//! Plus the serving-shape claims: chunked prefill strictly improves a
+//! co-scheduled short request's TTFT, and the {GPT-2, GPT-3, ViT} x
+//! {plain, speculative, chunked} scenario matrix completes.
+
+use vexp::exec::{
+    AnalyticBackend, CycleSimBackend, Engine, Outcome, PagedKvOptions, Request, ServeOptions,
+    ServeReport, SpecDecodeOptions, TraceSpec,
+};
+use vexp::model::{GPT2_SMALL, GPT3_XL, VIT_BASE};
+use vexp::sim::spm_checksum;
+use vexp::testkit::forall;
+
+// ---------------------------------------------------------------------------
+// shared drivers
+// ---------------------------------------------------------------------------
+
+/// Serve the standard mixed burst trace on the cycle simulator with the
+/// given options, returning the report plus every cluster's SPM
+/// checksum. The run is a pure function of (trace, options, path), so
+/// two calls with the same arguments must agree bit-exactly.
+fn serve_mixed_trace(
+    opts: impl Fn(ServeOptions) -> ServeOptions,
+    reference: bool,
+) -> (ServeReport, Vec<u64>) {
+    let spec = TraceSpec::bursty(6, 40_000.0, 5);
+    let mut engine = Engine::with_clusters(4);
+    for r in spec.mixed_traffic(32, 4, None) {
+        engine.submit_request(r);
+    }
+    let mut backend = CycleSimBackend::new(4);
+    backend.system.reference_interp = reference;
+    let opts = opts(ServeOptions::new().max_iters(256));
+    let report = engine.serve(&mut backend, None, &opts);
+    report.assert_consistent();
+    let sums = backend.system.clusters.iter().map(|c| spm_checksum(&c.spm)).collect();
+    (report, sums)
+}
+
+/// Assert two serve reports of the same trace are bit-identical in
+/// every field the §15 contract covers (cycle books, energy, token
+/// books, speculative books, chunk books).
+fn assert_reports_bit_identical(a: &ServeReport, b: &ServeReport, what: &str) {
+    assert_eq!(a.iterations, b.iterations, "{what}: iteration count");
+    assert_eq!(a.total_cycles, b.total_cycles, "{what}: total cycles");
+    assert_eq!(a.per_request.len(), b.per_request.len(), "{what}: request count");
+    for (x, y) in a.per_request.iter().zip(&b.per_request) {
+        let id = x.request_id;
+        assert_eq!(x.request_id, y.request_id, "{what}: request order");
+        assert_eq!(x.outcome, y.outcome, "{what}: request {id} outcome");
+        assert_eq!(x.tokens, y.tokens, "{what}: request {id} tokens");
+        assert_eq!(
+            x.cycles.to_bits(),
+            y.cycles.to_bits(),
+            "{what}: request {id} cycles diverged bitwise"
+        );
+        assert_eq!(
+            x.ttft_cycles.to_bits(),
+            y.ttft_cycles.to_bits(),
+            "{what}: request {id} TTFT diverged bitwise"
+        );
+        assert_eq!(
+            x.energy_pj.to_bits(),
+            y.energy_pj.to_bits(),
+            "{what}: request {id} energy diverged bitwise"
+        );
+        assert_eq!(
+            (x.spec_rounds, x.drafted_tokens, x.accepted_tokens),
+            (y.spec_rounds, y.drafted_tokens, y.accepted_tokens),
+            "{what}: request {id} speculative books"
+        );
+        assert_eq!(
+            x.draft_cycles.to_bits(),
+            y.draft_cycles.to_bits(),
+            "{what}: request {id} draft cycles diverged bitwise"
+        );
+        assert_eq!(
+            x.verify_cycles.to_bits(),
+            y.verify_cycles.to_bits(),
+            "{what}: request {id} verify cycles diverged bitwise"
+        );
+        assert_eq!(x.prefill_chunks, y.prefill_chunks, "{what}: request {id} chunk books");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. cross-path bit-identity
+// ---------------------------------------------------------------------------
+
+/// Acceptance draws come from the seeded model, not the backend, so a
+/// speculative run must be bit-identical between the decoded fast path
+/// and the reference interpreter — cycles, SPM bytes, and books alike —
+/// while actually drafting and verifying real tokens.
+#[test]
+fn speculative_serve_is_bit_identical_across_sim_paths() {
+    let with_spec =
+        |o: ServeOptions| o.speculative(SpecDecodeOptions::new(GPT2_SMALL, 3).seed(21));
+    let (fast, fast_sums) = serve_mixed_trace(with_spec, false);
+    let (refr, ref_sums) = serve_mixed_trace(with_spec, true);
+
+    assert_reports_bit_identical(&fast, &refr, "speculative fast-vs-reference");
+    assert_eq!(fast_sums, ref_sums, "SPM bytes diverged between simulator paths");
+
+    // real speculation happened on this trace
+    let d = &fast.decode;
+    assert!(d.spec_rounds > 0, "trace must run speculative rounds");
+    assert!(d.drafted_tokens > 0, "rounds must draft tokens");
+    assert!(d.accepted_tokens <= d.drafted_tokens);
+    assert!(d.draft_cycles > 0.0, "draft sub-iterations must cost cycles");
+    assert!(d.verify_cycles > 0.0, "verify passes must cost cycles");
+    // only decode-bearing GPT-2 requests are eligible; ViT never drafts
+    for r in &fast.per_request {
+        if r.model == "ViT-Base" {
+            assert_eq!(r.drafted_tokens, 0, "prefill-only requests must not speculate");
+        }
+        assert_eq!(r.outcome, Outcome::Completed, "request {}", r.request_id);
+    }
+}
+
+/// Chunked prefill reshapes iterations but stays a pure function of the
+/// options: both simulator paths agree bit-exactly, and long prompts
+/// really do split into multiple chunks.
+#[test]
+fn chunked_prefill_is_bit_identical_across_sim_paths() {
+    let with_chunks = |o: ServeOptions| o.chunked_prefill(8);
+    let (fast, fast_sums) = serve_mixed_trace(with_chunks, false);
+    let (refr, ref_sums) = serve_mixed_trace(with_chunks, true);
+
+    assert_reports_bit_identical(&fast, &refr, "chunked fast-vs-reference");
+    assert_eq!(fast_sums, ref_sums, "SPM bytes diverged between simulator paths");
+
+    let d = &fast.decode;
+    assert!(d.chunked_requests > 0, "32/64-token prompts must split at chunk 8");
+    assert!(
+        d.prefill_chunks > fast.per_request.len() as u64,
+        "chunking must add chunks beyond one-per-request ({} chunks)",
+        d.prefill_chunks
+    );
+    for r in &fast.per_request {
+        assert_eq!(r.outcome, Outcome::Completed, "request {}", r.request_id);
+        assert!(r.prefill_chunks >= 1, "every prefilled request books >= 1 chunk");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. reduction guarantees: k = 0 and chunk = infinity are plain serving
+// ---------------------------------------------------------------------------
+
+/// `k = 0` must change nothing at all, and a chunk size larger than any
+/// prompt must change nothing but the chunk counter — bit-for-bit, on
+/// both simulator paths. The plain loop is the differential oracle.
+#[test]
+fn spec_k0_and_giant_chunk_reduce_bitwise_to_plain_on_both_sim_paths() {
+    for reference in [false, true] {
+        let (plain, plain_sums) = serve_mixed_trace(|o| o, reference);
+        let (k0, k0_sums) = serve_mixed_trace(
+            |o| o.speculative(SpecDecodeOptions::new(GPT2_SMALL, 0).seed(21)),
+            reference,
+        );
+        let (giant, giant_sums) = serve_mixed_trace(|o| o.chunked_prefill(1 << 20), reference);
+
+        assert_reports_bit_identical(&plain, &k0, "k=0 vs plain");
+        assert_eq!(plain_sums, k0_sums, "k=0 SPM bytes (reference_interp={reference})");
+        assert_eq!(k0.decode.spec_rounds, 0, "k=0 must never open a round");
+        assert_eq!(k0.decode.drafted_tokens, 0);
+
+        // the giant-chunk run books exactly one chunk per prefilled
+        // request; everything else is bitwise plain
+        assert_eq!(plain.iterations, giant.iterations, "giant-chunk iterations");
+        assert_eq!(plain.total_cycles, giant.total_cycles, "giant-chunk total cycles");
+        assert_eq!(plain_sums, giant_sums, "giant-chunk SPM (reference_interp={reference})");
+        for (p, g) in plain.per_request.iter().zip(&giant.per_request) {
+            let id = p.request_id;
+            assert_eq!(p.outcome, g.outcome, "request {id} outcome");
+            assert_eq!(p.tokens, g.tokens, "request {id} tokens");
+            assert_eq!(p.cycles.to_bits(), g.cycles.to_bits(), "request {id} cycles");
+            assert_eq!(p.ttft_cycles.to_bits(), g.ttft_cycles.to_bits(), "request {id} TTFT");
+            assert_eq!(p.energy_pj.to_bits(), g.energy_pj.to_bits(), "request {id} energy");
+            assert_eq!(g.prefill_chunks, 1, "request {id}: one unsplit chunk");
+        }
+        assert_eq!(giant.decode.chunked_requests, 0, "nothing actually split");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. the seeded acceptance model
+// ---------------------------------------------------------------------------
+
+/// Property: for any (k, seed, accept), speculation is an execution
+/// strategy, not a semantics change — every request ends with exactly
+/// the token books of a plain run.
+#[test]
+fn speculative_token_books_match_plain_for_any_k_seed_accept() {
+    forall(12, |rng| {
+        let k = rng.range(1, 6) as u32;
+        let seed = rng.next_u64();
+        let accept = rng.f64(0.0, 1.0);
+        let tokens = rng.range(2, 11) as u32;
+
+        let run = |spec: Option<SpecDecodeOptions>| -> ServeReport {
+            let mut engine = Engine::with_clusters(4);
+            for i in 0..3u64 {
+                let mut cfg = GPT2_SMALL;
+                cfg.seq = 16;
+                engine.submit_request(Request::new(i, cfg).with_tokens(tokens));
+            }
+            let mut backend = AnalyticBackend::new();
+            let mut opts = ServeOptions::new().max_iters(512);
+            if let Some(s) = spec {
+                opts = opts.speculative(s);
+            }
+            let report = engine.serve(&mut backend, None, &opts);
+            report.assert_consistent();
+            report
+        };
+
+        let plain = run(None);
+        let spec = run(Some(SpecDecodeOptions::new(GPT2_SMALL, k).seed(seed).accept(accept)));
+
+        if plain.per_request.len() != spec.per_request.len() {
+            return Err("request counts diverged".into());
+        }
+        for (p, s) in plain.per_request.iter().zip(&spec.per_request) {
+            let books =
+                |r: &vexp::exec::RunReport| (r.request_id, r.tokens, r.token_target, r.outcome);
+            if books(p) != books(s) {
+                return Err(format!(
+                    "token books diverged (k={k} accept={accept:.2}): {:?} vs {:?}",
+                    books(p),
+                    books(s)
+                ));
+            }
+            if s.outcome != Outcome::Completed {
+                return Err(format!("request {} did not complete", s.request_id));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance extremes pin the books exactly: `accept(1.0)` commits
+/// every draft (the drafted and accepted counters coincide), and
+/// `accept(0.0)` rejects every draft (rounds still run, nothing is
+/// accepted) — both still completing every request.
+#[test]
+fn acceptance_extremes_pin_the_draft_books() {
+    let run = |accept: f64| -> ServeReport {
+        let mut engine = Engine::with_clusters(4);
+        for i in 0..2u64 {
+            let mut cfg = GPT2_SMALL;
+            cfg.seq = 16;
+            engine.submit_request(Request::new(i, cfg).with_tokens(9));
+        }
+        let mut backend = AnalyticBackend::new();
+        let opts = ServeOptions::new()
+            .max_iters(256)
+            .speculative(SpecDecodeOptions::new(GPT2_SMALL, 3).seed(7).accept(accept));
+        let report = engine.serve(&mut backend, None, &opts);
+        report.assert_consistent();
+        report
+    };
+
+    let all = run(1.0);
+    assert!(all.decode.drafted_tokens > 0, "accept=1 must draft");
+    assert_eq!(
+        all.decode.accepted_tokens, all.decode.drafted_tokens,
+        "accept=1 must commit every draft"
+    );
+    assert_eq!(all.decode.acceptance_rate, 1.0);
+
+    let none = run(0.0);
+    assert!(none.decode.spec_rounds > 0, "accept=0 still runs rounds");
+    assert!(none.decode.drafted_tokens > 0, "accept=0 still drafts");
+    assert_eq!(none.decode.accepted_tokens, 0, "accept=0 must reject every draft");
+    assert_eq!(none.decode.acceptance_rate, 0.0);
+
+    // rejection costs strictly more rounds per token than full
+    // acceptance on the same trace
+    assert!(none.decode.spec_rounds > all.decode.spec_rounds);
+    for r in all.per_request.iter().chain(&none.per_request) {
+        assert_eq!(r.outcome, Outcome::Completed, "request {}", r.request_id);
+        assert_eq!(r.tokens, 9, "speculation must not change the token count");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. fork lifecycle on the paged tier
+// ---------------------------------------------------------------------------
+
+/// Property: under a tight pool — where draft forks, their appends,
+/// commits, rollbacks, preemptions, and done-releases all compete for
+/// the same 14 blocks — the pool books must balance after every run,
+/// for any (k, seed, accept), and every request must still complete
+/// with its full token target.
+#[test]
+fn pool_books_balance_across_fork_commit_rollback() {
+    forall(10, |rng| {
+        let k = rng.range(1, 5) as u32;
+        let seed = rng.next_u64();
+        let accept = rng.f64(0.0, 1.0);
+
+        let mut engine = Engine::with_clusters(4);
+        for i in 0..4u64 {
+            let mut cfg = GPT2_SMALL;
+            cfg.seq = 8;
+            engine.submit_request(Request::new(i, cfg).with_tokens(12));
+        }
+        let mut backend = AnalyticBackend::new();
+        // GPT-2 Small KV is 36 864 B/token: a 128 KiB block holds 3
+        // tokens; 14 blocks fit any one lifetime but not four at once.
+        let opts = ServeOptions::new()
+            .max_iters(2048)
+            .paging(PagedKvOptions {
+                block_bytes: 128 * 1024,
+                pool_bytes: 14 * 128 * 1024,
+                share_prefix: false,
+            })
+            .speculative(SpecDecodeOptions::new(GPT2_SMALL, k).seed(seed).accept(accept));
+        let report = engine.serve(&mut backend, None, &opts);
+        report.assert_consistent(); // includes allocated == freed + resident
+
+        let pool = report.pool.as_ref().ok_or("paged run must carry a pool report")?;
+        if pool.allocated != pool.freed {
+            return Err(format!(
+                "lifetime books unbalanced after retirement: {} allocated vs {} freed",
+                pool.allocated, pool.freed
+            ));
+        }
+        if report.decode.spec_rounds == 0 {
+            return Err("tight-pool run must still open speculative rounds".into());
+        }
+        for r in &report.per_request {
+            if r.outcome != Outcome::Completed || r.tokens != 12 {
+                return Err(format!(
+                    "request {} ended {:?} with {} of 12 tokens",
+                    r.request_id, r.outcome, r.tokens
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A draft fork shares its target's partially-filled tail block, so the
+/// fork's very first append must copy-on-write — the counter the
+/// unpaged-equivalence test pins to zero must go strictly positive the
+/// moment speculation is on.
+#[test]
+fn draft_forks_exercise_copy_on_write_on_shared_tails() {
+    let mut engine = Engine::with_clusters(4);
+    for i in 0..2u64 {
+        let mut cfg = GPT2_SMALL;
+        cfg.seq = 8;
+        engine.submit_request(Request::new(i, cfg).with_tokens(6));
+    }
+    let mut backend = AnalyticBackend::new();
+    let opts = ServeOptions::new()
+        .max_iters(256)
+        .paging(PagedKvOptions::unbounded())
+        .speculative(SpecDecodeOptions::new(GPT2_SMALL, 2).seed(3));
+    let report = engine.serve(&mut backend, None, &opts);
+    report.assert_consistent();
+
+    let pool = report.pool.as_ref().expect("paged run must carry a pool report");
+    assert!(report.decode.spec_rounds > 0, "speculation must run");
+    assert!(
+        pool.cow_copies > 0,
+        "a fork's first append into the shared tail must copy-on-write"
+    );
+    assert_eq!(pool.preemptions, 0, "an unbounded pool never preempts");
+    assert_eq!(pool.allocated, pool.freed, "fork blocks must all be released");
+    for r in &report.per_request {
+        assert_eq!(r.outcome, Outcome::Completed, "request {}", r.request_id);
+        assert_eq!(r.tokens, 6);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serving-shape claims
+// ---------------------------------------------------------------------------
+
+/// The point of chunked prefill: a short request co-scheduled with a
+/// long prompt no longer waits out the long prompt's monolithic prefill
+/// iteration, so its TTFT must strictly improve versus the plain loop.
+#[test]
+fn chunked_prefill_improves_cosched_short_request_ttft() {
+    let run = |chunk: Option<u32>| -> ServeReport {
+        let mut engine = Engine::with_clusters(4);
+        let mut long = GPT2_SMALL;
+        long.seq = 512;
+        let mut short = GPT2_SMALL;
+        short.seq = 16;
+        engine.submit_request(Request::new(0, long).with_tokens(4));
+        engine.submit_request(Request::new(1, short).with_tokens(4));
+        let mut backend = AnalyticBackend::new();
+        let mut opts = ServeOptions::new().max_iters(512);
+        if let Some(c) = chunk {
+            opts = opts.chunked_prefill(c);
+        }
+        let report = engine.serve(&mut backend, None, &opts);
+        report.assert_consistent();
+        report
+    };
+
+    let plain = run(None);
+    let chunked = run(Some(32));
+
+    let ttft = |report: &ServeReport, id: u64| {
+        report
+            .per_request
+            .iter()
+            .find(|r| r.request_id == id)
+            .expect("request in report")
+            .ttft_cycles
+    };
+    // the short request's own prefill fits one chunk either way; only
+    // the iteration barrier around it changes
+    assert!(
+        ttft(&chunked, 1) < ttft(&plain, 1),
+        "chunking must shrink the short request's TTFT: {} !< {}",
+        ttft(&chunked, 1),
+        ttft(&plain, 1)
+    );
+    // the long prompt really ran chunked: 512 tokens at chunk 32
+    let long = chunked.per_request.iter().find(|r| r.request_id == 0).unwrap();
+    assert_eq!(long.prefill_chunks, 16, "512-token prompt at chunk 32");
+    for r in plain.per_request.iter().chain(&chunked.per_request) {
+        assert_eq!(r.outcome, Outcome::Completed, "request {}", r.request_id);
+    }
+}
+
+/// The acceptance-criterion matrix: {GPT-2, GPT-3, ViT} x {plain,
+/// speculative, chunked} all complete under the one `Engine::serve`
+/// entry point, with the expected books in each cell.
+#[test]
+fn scenario_matrix_completes_under_unified_serve() {
+    for (model_name, model) in [("gpt2", GPT2_SMALL), ("gpt3", GPT3_XL), ("vit", VIT_BASE)] {
+        for scenario in ["plain", "speculative", "chunked"] {
+            let mut engine = Engine::with_clusters(4);
+            for i in 0..2u64 {
+                let mut cfg = model;
+                cfg.seq = 64.min(cfg.seq);
+                let tokens = if model_name == "vit" { 0 } else { 5 };
+                engine.submit_request(Request::new(i, cfg).with_tokens(tokens));
+            }
+            let mut backend = AnalyticBackend::new();
+            let opts = match scenario {
+                "speculative" => ServeOptions::new()
+                    .max_iters(256)
+                    .speculative(SpecDecodeOptions::new(GPT2_SMALL, 3).seed(15)),
+                "chunked" => ServeOptions::new().max_iters(256).chunked_prefill(16),
+                _ => ServeOptions::new().max_iters(256),
+            };
+            let report = engine.serve(&mut backend, None, &opts);
+            report.assert_consistent();
+
+            for r in &report.per_request {
+                assert_eq!(
+                    r.outcome,
+                    Outcome::Completed,
+                    "{model_name}/{scenario}: request {}",
+                    r.request_id
+                );
+            }
+            match scenario {
+                "speculative" if model_name != "vit" => assert!(
+                    report.decode.drafted_tokens > 0,
+                    "{model_name}/speculative must draft"
+                ),
+                "speculative" => assert_eq!(
+                    report.decode.drafted_tokens, 0,
+                    "prefill-only ViT must not draft"
+                ),
+                "chunked" => assert!(
+                    report.decode.prefill_chunks >= report.per_request.len() as u64,
+                    "{model_name}/chunked books at least one chunk per request"
+                ),
+                _ => {
+                    assert_eq!(report.decode.spec_rounds, 0);
+                    assert_eq!(report.decode.prefill_chunks, 0);
+                }
+            }
+        }
+    }
+}
